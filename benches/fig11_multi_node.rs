@@ -1,0 +1,42 @@
+//! Bench: Figure 11 — decode throughput across 2 and 4 NUMA nodes:
+//! llama.cpp (`-numa distribute`) vs ArcLight cross-NUMA TP under both
+//! synchronization modes (§3.4).
+//!
+//!     cargo bench --bench fig11_multi_node
+
+use arclight::model::ModelConfig;
+use arclight::numa::Topology;
+use arclight::report::{figures::fig11, render_table};
+
+fn main() {
+    let topo = Topology::kunpeng920();
+    let cfg = ModelConfig::qwen3_4b();
+    let t0 = std::time::Instant::now();
+    for nodes in [2usize, 4] {
+        let series = fig11(&cfg, &topo, nodes, 4);
+        print!(
+            "{}",
+            render_table(
+                &format!("Figure 11 (N={nodes}): decode tok/s (Qwen3-4B Q4_0, prompt 15, gen 256)"),
+                "threads",
+                &series
+            )
+        );
+        let best = |s: &arclight::report::FigureSeries| s.ys.iter().cloned().fold(0.0, f64::max);
+        let llama = best(&series[0]);
+        let sync_a = best(&series[1]);
+        let sync_b = best(&series[2]);
+        println!(
+            "  N={nodes}: ArcLight-TP(SyncB) vs llama.cpp: +{:.0}%  |  SyncB − SyncA: +{:.1} tok/s\n",
+            (sync_b / llama - 1.0) * 100.0,
+            sync_b - sync_a
+        );
+        // paper shapes: TP wins; async subgraphs add a few tok/s
+        assert!(sync_b > llama * 1.15, "TP must beat llama.cpp distribute (N={nodes})");
+        assert!(sync_b >= sync_a, "Sync B must not lose to Sync A");
+        // llama.cpp stops scaling at full thread count (the cross-NUMA wall)
+        let llama_full = *series[0].ys.last().unwrap();
+        assert!(llama_full < llama * 1.05, "llama.cpp should saturate below its peak");
+    }
+    println!("sweep time: {:.1} s", t0.elapsed().as_secs_f64());
+}

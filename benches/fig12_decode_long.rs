@@ -1,0 +1,41 @@
+//! Bench: Figure 12 (appendix A.2) — decode throughput with a
+//! 300-token prompt on 2 and 4 NUMA nodes. Decode is slightly slower
+//! than with short prompts (longer KV stream per step) but the TP
+//! advantage persists.
+//!
+//!     cargo bench --bench fig12_decode_long
+
+use arclight::baseline::Strategy;
+use arclight::model::ModelConfig;
+use arclight::numa::Topology;
+use arclight::report::figures::{decode_tok_s, fig12};
+use arclight::report::render_table;
+use arclight::sched::SyncMode;
+
+fn main() {
+    let topo = Topology::kunpeng920();
+    let cfg = ModelConfig::qwen3_4b();
+    let t0 = std::time::Instant::now();
+    for nodes in [2usize, 4] {
+        let series = fig12(&cfg, &topo, nodes, 4);
+        print!(
+            "{}",
+            render_table(
+                &format!("Figure 12 (N={nodes}): decode tok/s, prompt 300 (Qwen3-4B Q4_0)"),
+                "threads",
+                &series
+            )
+        );
+    }
+
+    // appendix A.2: long-prompt decode ≤ short-prompt decode
+    let short = decode_tok_s(&cfg, Strategy::arclight_tp(4, SyncMode::SyncB), 192, &topo, 15, 256, 4);
+    let long = decode_tok_s(&cfg, Strategy::arclight_tp(4, SyncMode::SyncB), 192, &topo, 300, 256, 4);
+    println!(
+        "\nArcLight-TP4 decode: prompt 15 → {:.1} tok/s, prompt 300 → {:.1} tok/s",
+        short.tok_per_s, long.tok_per_s
+    );
+    assert!(long.tok_per_s < short.tok_per_s, "longer KV stream must cost throughput");
+    assert!(long.tok_per_s > short.tok_per_s * 0.7, "the cost should be mild");
+    println!("sweep time: {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,47 @@
+//! Bench: Figure 13 (appendix A.2) — prefill throughput with a
+//! 300-token prompt on 2 and 4 NUMA nodes. ArcLight still wins, but by
+//! less than in decode: prefill is compute-bound, and TP addresses the
+//! memory-access wall.
+//!
+//!     cargo bench --bench fig13_prefill
+
+use arclight::baseline::Strategy;
+use arclight::model::ModelConfig;
+use arclight::numa::Topology;
+use arclight::report::figures::{decode_tok_s, fig13, prefill_tok_s};
+use arclight::report::render_table;
+use arclight::sched::SyncMode;
+
+fn main() {
+    let topo = Topology::kunpeng920();
+    let cfg = ModelConfig::qwen3_4b();
+    let t0 = std::time::Instant::now();
+    for nodes in [2usize, 4] {
+        let series = fig13(&cfg, &topo, nodes);
+        print!(
+            "{}",
+            render_table(
+                &format!("Figure 13 (N={nodes}): prefill tok/s, prompt 300 (Qwen3-4B Q4_0)"),
+                "threads",
+                &series
+            )
+        );
+    }
+
+    // the paper's A.2 observation: prefill gain < decode gain
+    let d_l = decode_tok_s(&cfg, Strategy::llama_distribute(4), 192, &topo, 300, 128, 4);
+    let d_a = decode_tok_s(&cfg, Strategy::arclight_tp(4, SyncMode::SyncB), 192, &topo, 300, 128, 4);
+    let p_l = prefill_tok_s(&cfg, Strategy::llama_distribute(4), 192, &topo, 300);
+    let p_a = prefill_tok_s(&cfg, Strategy::arclight_tp(4, SyncMode::SyncB), 192, &topo, 300);
+    let decode_gain = d_a.tok_per_s / d_l.tok_per_s;
+    let prefill_gain = p_a.tok_per_s / p_l.tok_per_s;
+    println!(
+        "\nTP gain at N=4: decode ×{decode_gain:.2}, prefill ×{prefill_gain:.2} (paper: prefill advantage 'less pronounced')"
+    );
+    assert!(p_a.tok_per_s > p_l.tok_per_s, "ArcLight should still win prefill");
+    assert!(
+        prefill_gain < decode_gain,
+        "prefill is compute-bound: its TP gain must be smaller"
+    );
+    println!("sweep time: {:.1} s", t0.elapsed().as_secs_f64());
+}

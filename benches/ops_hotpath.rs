@@ -1,0 +1,133 @@
+//! Real wall-clock microbenchmarks of the operator hot paths (the §Perf
+//! targets): Q4_0 GEMV/GEMM, fused attention, RMSNorm, and the end-to-end
+//! decode step of the real engine on the small model.
+//!
+//! These are host-machine numbers (1 core in this environment), used for
+//! the optimization loop — the paper-figure numbers come from the
+//! simulated testbed instead.
+//!
+//!     cargo bench --bench ops_hotpath
+
+use std::time::Instant;
+
+use arclight::baseline::Strategy;
+use arclight::frontend::{Engine, EngineOptions, Sampler};
+use arclight::model::ModelConfig;
+use arclight::numa::Topology;
+use arclight::ops;
+use arclight::quant::quantize_matrix_q4_0;
+use arclight::util::stats::{fmt_duration, Summary};
+use arclight::util::Rng;
+
+/// warmup + timed iterations; returns per-iteration seconds.
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    for _ in 0..3 {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.add(t0.elapsed().as_secs_f64());
+    }
+    let p50 = s.p50();
+    println!("{name:42} {:>12}/iter  (min {:>12})", fmt_duration(p50), fmt_duration(s.min()));
+    p50
+}
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    let mut v = vec![0.0; n];
+    r.fill_normal(&mut v, 1.0);
+    v
+}
+
+fn main() {
+    println!("== operator hot paths (host wall-clock) ==\n");
+
+    // --- Q4_0 GEMV: the decode inner loop -----------------------------------
+    let (n, k) = (2048usize, 2048usize);
+    let w = rand_vec(n * k, 1);
+    let wq = quantize_matrix_q4_0(&w, n, k);
+    let x = rand_vec(k, 2);
+    let mut out = vec![0.0f32; n];
+    let t = bench(&format!("q4_0 gemv {n}x{k}"), 20, || {
+        ops::gemm::gemm_q4_0(&x, &wq, &mut out, 1, k, n, 0, n);
+    });
+    let bytes = wq.len() as f64;
+    let gbs = bytes / t / 1e9;
+    let gflops = 2.0 * (n * k) as f64 / t / 1e9;
+    println!("{:42} {gbs:>8.2} GB/s weight stream, {gflops:>6.2} GFLOP/s", "");
+
+    // --- f32 GEMV reference --------------------------------------------------
+    let mut out_f = vec![0.0f32; n];
+    let tf = bench(&format!("f32 gemv {n}x{k}"), 20, || {
+        ops::gemm::gemm_f32(&x, &w, &mut out_f, 1, k, n, 0, n);
+    });
+    println!("{:42} q4/f32 time ratio: {:.2} (q4 moves 7.1x fewer bytes)", "", t / tf);
+
+    // --- prefill GEMM (m = 16) ----------------------------------------------
+    let m = 16usize;
+    let xm = rand_vec(m * k, 3);
+    let mut outm = vec![0.0f32; m * n];
+    let tm = bench(&format!("q4_0 gemm {m}x{k} · {n}x{k}ᵀ"), 10, || {
+        ops::gemm::gemm_q4_0(&xm, &wq, &mut outm, m, k, n, 0, n);
+    });
+    println!("{:42} {:>8.2} GFLOP/s", "", 2.0 * (m * n * k) as f64 / tm / 1e9);
+
+    // --- fused attention over the KV cache -----------------------------------
+    let (heads, kvh, hd, max_seq, kv_len) = (16usize, 8usize, 64usize, 512usize, 384usize);
+    let q = rand_vec(heads * hd, 4);
+    let kc = rand_vec(kvh * max_seq * hd, 5);
+    let vc = rand_vec(kvh * max_seq * hd, 6);
+    let mut ao = vec![0.0f32; heads * hd];
+    bench(&format!("attention decode H={heads} kv_len={kv_len}"), 20, || {
+        ops::attention::attention(&q, &kc, &vc, &mut ao, 1, heads, kvh, hd, max_seq, kv_len - 1, 0, heads);
+    });
+
+    // --- RMSNorm -------------------------------------------------------------
+    let d = 2048usize;
+    let xr = rand_vec(d, 7);
+    let g = rand_vec(d, 8);
+    let mut outn = vec![0.0f32; d];
+    bench(&format!("rmsnorm d={d}"), 50, || {
+        ops::norm::rmsnorm(&xr, &g, &mut outn, d, 1e-6, 0, 1);
+    });
+
+    // --- end-to-end decode step (real engine, small model) -------------------
+    println!("\n== end-to-end decode (small-25m, real engine) ==\n");
+    for threads in [1usize, 2, 4] {
+        let opts = EngineOptions {
+            strategy: Strategy::arclight_single(),
+            threads,
+            topo: Topology::kunpeng920(),
+            prefill_rows: None,
+            seed: 0,
+        };
+        let mut engine = Engine::new_synthetic(ModelConfig::small_25m(), &opts).unwrap();
+        engine.prefill(&[1, 2, 3, 4]);
+        let mut step = 0usize;
+        let t = bench(&format!("decode step, {threads} worker(s)"), 12, || {
+            let logits = engine.decode_step((step % 200) as i32 + 5);
+            step += 1;
+            std::hint::black_box(&logits);
+            if engine.position() > 400 {
+                engine.reset();
+                engine.prefill(&[1, 2, 3, 4]);
+            }
+        });
+        println!("{:42} {:>8.1} tok/s", "", 1.0 / t);
+    }
+
+    // --- generation sanity ----------------------------------------------------
+    let opts = EngineOptions {
+        strategy: Strategy::arclight_single(),
+        threads: 2,
+        topo: Topology::kunpeng920(),
+        prefill_rows: None,
+        seed: 0,
+    };
+    let mut engine = Engine::new_synthetic(ModelConfig::small_25m(), &opts).unwrap();
+    let res = engine.generate(&[1, 2, 3, 4, 5], 32, &Sampler::greedy());
+    println!("\ngenerate 32 tokens: {:.1} tok/s decode", res.decode_tok_per_s());
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate Table 1 (core→memory bandwidth matrix, GB/s).
+//!
+//! Paper reference values (Kunpeng-920, 4 nodes):
+//!     102  26  24  23
+//!      26 103  23  22
+//!      24  23 103  26
+//!      23  22  26 101
+//!
+//!     cargo bench --bench table1_membw
+
+use arclight::numa::topology::KUNPENG920_BW;
+use arclight::numa::Topology;
+use arclight::report::table1::{bandwidth_table, render};
+
+fn main() {
+    let topo = Topology::kunpeng920();
+    let t0 = std::time::Instant::now();
+    let table = bandwidth_table(&topo, topo.cores_per_node, 1.0);
+    let elapsed = t0.elapsed();
+    print!("{}", render(&table));
+
+    // paper-vs-measured deviation
+    let mut worst = 0.0f64;
+    for i in 0..4 {
+        for j in 0..4 {
+            let dev = (table[i][j] - KUNPENG920_BW[i][j]).abs() / KUNPENG920_BW[i][j];
+            worst = worst.max(dev);
+        }
+    }
+    println!("\nmax deviation from the paper's measurements: {:.2}%", worst * 100.0);
+    println!("local/remote ratio (node 0): {:.1}x (paper: ~4x)", table[0][0] / table[0][3]);
+    println!("regeneration time: {:.1} ms", elapsed.as_secs_f64() * 1e3);
+    assert!(worst < 0.02, "bandwidth model drifted from Table 1");
+}

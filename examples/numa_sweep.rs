@@ -1,0 +1,57 @@
+//! NUMA strategy sweep on the simulated 192-core testbed: the paper's
+//! Figure-11-style comparison with per-strategy traffic anatomy.
+//!
+//!     cargo run --release --example numa_sweep
+
+use arclight::baseline::Strategy;
+use arclight::model::ModelConfig;
+use arclight::numa::Topology;
+use arclight::report::figures::decode_tok_s;
+use arclight::sched::SyncMode;
+
+fn main() {
+    let topo = Topology::kunpeng920();
+    let cfg = ModelConfig::qwen3_4b();
+    println!(
+        "Qwen3-4B Q4_0 on the simulated Kunpeng-920 (4 nodes × 48 cores), prompt 15, gen 256\n"
+    );
+    println!(
+        "{:26} {:>8} {:>12} {:>10}",
+        "strategy", "threads", "decode tok/s", "remote %"
+    );
+    let runs: Vec<(Strategy, usize)> = vec![
+        (Strategy::llama_isolate(), 48),
+        (Strategy::arclight_single(), 48),
+        (Strategy::llama_distribute(2), 96),
+        (Strategy::arclight_tp(2, SyncMode::SyncA), 96),
+        (Strategy::arclight_tp(2, SyncMode::SyncB), 96),
+        // llama.cpp's best multi-node operating point is *below* full
+        // thread count (the cross-NUMA wall): sweep to find it
+        (Strategy::llama_distribute(4), 96),
+        (Strategy::llama_distribute(4), 144),
+        (Strategy::llama_distribute(4), 192),
+        (Strategy::arclight_tp(4, SyncMode::SyncA), 192),
+        (Strategy::arclight_tp(4, SyncMode::SyncB), 192),
+    ];
+    let mut best_llama: f64 = 0.0;
+    let mut best_arc: f64 = 0.0;
+    for (s, t) in runs {
+        let p = decode_tok_s(&cfg, s, t, &topo, 15, 256, 4);
+        println!(
+            "{:26} {:>8} {:>12.1} {:>9.1}%",
+            p.strategy,
+            p.threads,
+            p.tok_per_s,
+            p.remote_fraction * 100.0
+        );
+        if p.strategy.starts_with("llama") {
+            best_llama = best_llama.max(p.tok_per_s);
+        } else {
+            best_arc = best_arc.max(p.tok_per_s);
+        }
+    }
+    println!(
+        "\nArcLight best vs llama.cpp best: +{:.0}% (paper reports up to +46%)",
+        (best_arc / best_llama - 1.0) * 100.0
+    );
+}

@@ -1,0 +1,93 @@
+"""ALF (ArcLight Format) weight files — the repo's GGUF stand-in.
+
+Layout (little-endian):
+
+    magic   : 4 bytes  b"ALF1"
+    version : u32      (currently 1)
+    meta_len: u64      length of the JSON metadata blob
+    meta    : meta_len bytes of UTF-8 JSON:
+                {"config": {...model geometry...},
+                 "tensors": [{"name", "dtype", "shape", "offset", "nbytes"}]}
+    pad     : zero padding so the data region starts 64-byte aligned
+    data    : tensor payloads, each 64-byte aligned, offsets relative to
+              the start of the data region
+
+Dtypes: "f32" (raw little-endian floats) and "q4_0" (ggml block stream:
+per 32 elements, f16 scale + 16 nibble bytes — see quantize.py). For
+q4_0 the logical shape is [N, K]; nbytes = N * K/32 * 18.
+
+The Rust loader lives in ``rust/src/model/alf.rs`` and must accept
+exactly what this writer emits (covered by the golden integration test).
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"ALF1"
+VERSION = 1
+ALIGN = 64
+
+
+def _align(n: int) -> int:
+    return (n + ALIGN - 1) // ALIGN * ALIGN
+
+
+def write_alf(path: str, config: dict, tensors: list[tuple[str, str, tuple, bytes]]) -> None:
+    """Write an ALF file. ``tensors`` = [(name, dtype, shape, payload)]."""
+    table = []
+    offset = 0
+    for name, dtype, shape, payload in tensors:
+        offset = _align(offset)
+        table.append({"name": name, "dtype": dtype, "shape": list(shape),
+                      "offset": offset, "nbytes": len(payload)})
+        offset += len(payload)
+
+    meta = json.dumps({"config": config, "tensors": table}).encode()
+    header_len = len(MAGIC) + 4 + 8 + len(meta)
+    data_start = _align(header_len)
+
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", VERSION))
+        f.write(struct.pack("<Q", len(meta)))
+        f.write(meta)
+        f.write(b"\x00" * (data_start - header_len))
+        pos = 0
+        for (name, dtype, shape, payload), entry in zip(tensors, table):
+            pad = entry["offset"] - pos
+            f.write(b"\x00" * pad)
+            f.write(payload)
+            pos = entry["offset"] + len(payload)
+
+
+def read_alf(path: str) -> tuple[dict, dict[str, dict]]:
+    """Read an ALF file → (config, {name: {dtype, shape, data(bytes)}}).
+
+    Mirror of the Rust loader; used by tests to round-trip."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    if raw[:4] != MAGIC:
+        raise ValueError("not an ALF file")
+    version = struct.unpack_from("<I", raw, 4)[0]
+    if version != VERSION:
+        raise ValueError(f"unsupported ALF version {version}")
+    meta_len = struct.unpack_from("<Q", raw, 8)[0]
+    meta = json.loads(raw[16:16 + meta_len].decode())
+    data_start = _align(16 + meta_len)
+    out = {}
+    for t in meta["tensors"]:
+        lo = data_start + t["offset"]
+        out[t["name"]] = {
+            "dtype": t["dtype"],
+            "shape": tuple(t["shape"]),
+            "data": raw[lo:lo + t["nbytes"]],
+        }
+    return meta["config"], out
+
+
+def f32_payload(arr: np.ndarray) -> bytes:
+    return np.ascontiguousarray(arr, dtype="<f4").tobytes()

@@ -1,0 +1,159 @@
+"""AOT entry point: lower the L2 model to HLO-text artifacts for Rust.
+
+Run once by ``make artifacts`` (never on the request path):
+
+  artifacts/decode.hlo.txt   — one autoregressive step (dynamic position)
+  artifacts/prefill.hlo.txt  — prompt ingestion at a fixed prompt length
+  artifacts/tiny.alf         — the tiny model's weights (ALF format)
+  artifacts/manifest.json    — geometry + the exact flattened argument
+                               order of both HLO entry points, so the Rust
+                               runtime can feed PJRT literals positionally
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published ``xla`` crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import alf
+from . import model as M
+from .quantize import pack_q4_0_bytes
+
+PROMPT_LEN = 16
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(x) -> str:
+    return {"float32": "f32", "uint8": "u8", "int32": "i32"}[str(x.dtype)]
+
+
+def flat_args(tree) -> list[dict]:
+    """Flatten a pytree the same way jax.jit will, recording name/shape/dtype."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "".join(
+            f".{p.key}" if hasattr(p, "key") else f".{p.idx}" for p in path
+        ).lstrip(".")
+        out.append({"name": name, "dtype": _dtype_name(leaf),
+                    "shape": list(np.shape(leaf))})
+    return out
+
+
+def params_to_alf_tensors(params: dict, cfg: M.ModelConfig) -> list:
+    """Serialize the parameter pytree into ALF tensor records.
+
+    Q4_0 weights ({"qs", "d"} dicts) are re-packed into the ggml block
+    stream; everything else is raw f32.
+    """
+    tensors = []
+
+    def emit(name: str, node):
+        if isinstance(node, dict) and set(node) == {"qs", "d"}:
+            qs = np.asarray(node["qs"])
+            d16 = np.asarray(node["d"]).astype(np.float16)
+            n, nb, _ = qs.shape
+            tensors.append((name, "q4_0", (n, nb * 32),
+                            pack_q4_0_bytes(qs, d16)))
+        elif isinstance(node, dict):
+            for k in sorted(node):
+                emit(f"{name}.{k}" if name else k, node[k])
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                emit(f"{name}.{i}", v)
+        else:
+            arr = np.asarray(node)
+            tensors.append((name, "f32", arr.shape, alf.f32_payload(arr)))
+
+    emit("", params)
+    return tensors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--prompt-len", type=int, default=PROMPT_LEN)
+    ap.add_argument("--seed", type=int, default=SEED)
+    args = ap.parse_args()
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+
+    cfg = M.TINY
+    params = M.init_params(cfg, seed=args.seed)
+
+    # --- weights -----------------------------------------------------------
+    alf.write_alf(os.path.join(out, "tiny.alf"), cfg.to_dict(),
+                  params_to_alf_tensors(params, cfg))
+
+    # --- decode step -------------------------------------------------------
+    decode = M.make_decode_fn(cfg)
+    kv_spec = jax.ShapeDtypeStruct(
+        (cfg.n_layers, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim), jnp.float32)
+    tok_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered_dec = jax.jit(decode).lower(params, tok_spec, tok_spec, kv_spec, kv_spec)
+    with open(os.path.join(out, "decode.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_dec))
+
+    # --- prefill -----------------------------------------------------------
+    prefill = M.make_prefill_fn(cfg, args.prompt_len)
+    toks_spec = jax.ShapeDtypeStruct((args.prompt_len,), jnp.int32)
+    lowered_pre = jax.jit(prefill).lower(params, toks_spec)
+    with open(os.path.join(out, "prefill.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_pre))
+
+    # --- manifest ----------------------------------------------------------
+    manifest = {
+        "config": cfg.to_dict(),
+        "seed": args.seed,
+        "prompt_len": args.prompt_len,
+        "weights_file": "tiny.alf",
+        "decode": {
+            "args": (flat_args(params)
+                     + [{"name": "token", "dtype": "i32", "shape": []},
+                        {"name": "pos", "dtype": "i32", "shape": []},
+                        {"name": "k_caches", "dtype": "f32", "shape": list(kv_spec.shape)},
+                        {"name": "v_caches", "dtype": "f32", "shape": list(kv_spec.shape)}]),
+            "outputs": [
+                {"name": "logits", "dtype": "f32", "shape": [cfg.vocab]},
+                {"name": "k_caches", "dtype": "f32", "shape": list(kv_spec.shape)},
+                {"name": "v_caches", "dtype": "f32", "shape": list(kv_spec.shape)},
+            ],
+        },
+        "prefill": {
+            "args": (flat_args(params)
+                     + [{"name": "tokens", "dtype": "i32", "shape": [args.prompt_len]}]),
+            "outputs": [
+                {"name": "logits", "dtype": "f32", "shape": [cfg.vocab]},
+                {"name": "k_caches", "dtype": "f32", "shape": list(kv_spec.shape)},
+                {"name": "v_caches", "dtype": "f32", "shape": list(kv_spec.shape)},
+            ],
+        },
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    print(f"artifacts written to {out}")
+
+
+if __name__ == "__main__":
+    main()

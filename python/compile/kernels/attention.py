@@ -1,0 +1,120 @@
+"""Pallas tiled-attention kernel (Layer 1).
+
+A flash-attention-style kernel with online softmax: the KV sequence is
+processed in tiles, keeping a running (max, sum, weighted-V) triple per
+query row so the full score matrix never materializes. On the paper's CPU
+this is the "FlashAttention" operator of §2.7; on TPU the KV tiles stream
+HBM→VMEM via BlockSpec while the running stats live in VMEM scratch.
+
+Grid: (heads, Tk/block_k). The per-head query block (decode: one row,
+prefill: the whole query) stays resident; each grid step folds one KV tile
+into the running softmax.
+
+The query offset (absolute position of query row 0 in the KV sequence) is
+a *dynamic* scalar operand so a single lowered module serves every decode
+position — it rides in as a (1,)-shaped int32 array. ``interpret=True``
+as everywhere in this repo (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                 *, scale: float, causal: bool, block_k: int):
+    """Fold one KV tile into the online-softmax state of one head.
+
+    off_ref: [1]          int32 — absolute position of query row 0
+    q_ref  : [Tq, D]      query rows for this head
+    k_ref  : [block_k, D] KV tile
+    v_ref  : [block_k, D]
+    o_ref  : [Tq, D]      output (written on the last KV step)
+    m_ref  : [Tq]    scratch — running row max
+    l_ref  : [Tq]    scratch — running row sum
+    acc_ref: [Tq, D] scratch — running weighted V
+    """
+    kk = pl.program_id(1)
+    tq = q_ref.shape[0]
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full((tq,), NEG_INF, jnp.float32)
+        l_ref[...] = jnp.zeros((tq,), jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [Tq, bk]
+
+    if causal:
+        qpos = jnp.arange(tq, dtype=jnp.int32)[:, None] + off_ref[0]
+        kpos = jnp.arange(block_k, dtype=jnp.int32)[None, :] + kk * block_k
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    # Guard fully-masked rows: exp(NEG_INF - NEG_INF) would be exp(0)=1.
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    correction = jnp.exp(m_prev - m_cur)
+    correction = jnp.where(m_prev <= NEG_INF / 2, 0.0, correction)
+
+    l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * correction[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(kk == pl.num_programs(1) - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_k"))
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, q_offset=0,
+              block_k: int = 128) -> jnp.ndarray:
+    """Tiled attention. q: [H, Tq, D]; k, v: [H, Tk, D] → [H, Tq, D] f32.
+
+    KV heads must already be broadcast to H (GQA replication happens in
+    the model layer, which on TPU is a zero-copy reshape-view).
+    ``q_offset`` (python int or traced int32 scalar) anchors causal
+    masking for decode (Tq=1 at position Tk-1) and chunked prefill.
+    """
+    h, tq, dim = q.shape
+    tk = k.shape[1]
+    bk = min(block_k, tk)
+    if tk % bk:
+        bk = tk
+    scale = 1.0 / (dim ** 0.5)
+    off = jnp.asarray(q_offset, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_attn_kernel, scale=scale, causal=causal, block_k=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(h, tk // bk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda hh, kk: (0,)),
+            pl.BlockSpec((None, tq, dim), lambda hh, kk: (hh, 0, 0)),
+            pl.BlockSpec((None, bk, dim), lambda hh, kk: (hh, kk, 0)),
+            pl.BlockSpec((None, bk, dim), lambda hh, kk: (hh, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, tq, dim), lambda hh, kk: (hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, tq, dim), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq, dim), jnp.float32),
+        ],
+        interpret=True,
+    )(off, q, k, v)

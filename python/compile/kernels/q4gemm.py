@@ -1,0 +1,105 @@
+"""Pallas Q4_0 GEMM kernel — the paper's compute hot-spot (Layer 1).
+
+ArcLight's decode path is dominated by quantized GEMV/GEMM: every matmul
+reads a Q4_0 weight stream (18 bytes per 32 elements) exactly once and is
+bandwidth-bound. On the paper's CPU the insight is "keep the weight stream
+node-local and fuse dequantization into the inner loop". On TPU (Pallas)
+the same insight becomes:
+
+  * the packed nibbles + scales are streamed HBM→VMEM once per (n, k)
+    tile via ``BlockSpec`` (VMEM plays the role of the node-local buffer),
+  * dequantization happens in-register immediately before the MXU
+    contraction (never materializing the f32 weight in HBM),
+  * the K loop is a grid dimension accumulating into the output tile in
+    f32.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel runs through the Pallas interpreter and lowers
+to plain HLO — numerically identical, structurally the TPU schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QK4_0 = 32
+
+
+def _q4_gemm_kernel(x_ref, qs_ref, d_ref, o_ref, *, block_k: int):
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/block_k).
+
+    x_ref  : [bm, block_k]              f32   activation tile
+    qs_ref : [bn, block_k//32, 16]      uint8 packed nibbles
+    d_ref  : [bn, block_k//32]          f32   per-block scales
+    o_ref  : [bm, bn]                   f32   accumulator tile
+    """
+    kk = pl.program_id(2)
+
+    # In-register dequantization: low nibbles are elements 0..16 of each
+    # block, high nibbles 16..32 (ggml Q4_0 layout).
+    qs = qs_ref[...]
+    lo = (qs & 0x0F).astype(jnp.int32) - 8
+    hi = (qs >> 4).astype(jnp.int32) - 8
+    blocks = jnp.concatenate([lo, hi], axis=-1).astype(jnp.float32)
+    blocks = blocks * d_ref[...][..., None]
+    w = blocks.reshape(qs.shape[0], qs.shape[1] * QK4_0)  # [bn, block_k]
+
+    # MXU contraction in f32 (on TPU this would be bf16 in / f32 acc).
+    acc = jnp.dot(x_ref[...], w.T, preferred_element_type=jnp.float32)
+
+    # K-grid accumulation: zero-init on the first K step.
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def q4_gemm(x: jnp.ndarray, qs: jnp.ndarray, d: jnp.ndarray,
+            block_m: int = 8, block_n: int = 64, block_k: int = 256) -> jnp.ndarray:
+    """y = x @ dequant_q4_0(qs, d).T via the Pallas kernel.
+
+    x  : [M, K] float32
+    qs : [N, K//32, 16] uint8
+    d  : [N, K//32] float32 (scales, already widened from f16)
+    →  : [M, N] float32
+
+    Tile sizes are clamped to the problem so small test shapes work; the
+    defaults are the TPU-oriented schedule (see DESIGN.md
+    §Hardware-Adaptation).
+    """
+    m, k = x.shape
+    n = qs.shape[0]
+    if qs.shape[1] * QK4_0 != k:
+        raise ValueError(f"K mismatch: x has {k}, qs has {qs.shape[1] * QK4_0}")
+
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    # Tiles must divide evenly (static grid); fall back to full extent.
+    if m % bm:
+        bm = m
+    if n % bn:
+        bn = n
+    if k % bk or bk % QK4_0:
+        bk = k
+
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_q4_gemm_kernel, block_k=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // QK4_0, 16), lambda i, j, kk: (j, kk, 0)),
+            pl.BlockSpec((bn, bk // QK4_0), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, qs, d)

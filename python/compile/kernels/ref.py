@@ -1,0 +1,78 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1).
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` ops only. pytest (``python/tests``) sweeps
+shapes/dtypes with hypothesis and asserts ``allclose`` between kernel and
+oracle — this file is the correctness ground truth for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QK4_0 = 32
+
+
+def dequant_q4_0(qs: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
+    """Dequantize ggml Q4_0 ([N, K/32, 16] uint8 + [N, K/32] scale) → f32 [N, K]."""
+    lo = (qs & 0x0F).astype(jnp.int32) - 8
+    hi = (qs >> 4).astype(jnp.int32) - 8
+    blocks = jnp.concatenate([lo, hi], axis=-1).astype(jnp.float32)
+    blocks = blocks * d.astype(jnp.float32)[..., None]
+    return blocks.reshape(qs.shape[0], qs.shape[1] * QK4_0)
+
+
+def q4_gemm(x: jnp.ndarray, qs: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ dequant(W).T  — x: [M, K] f32, W: Q4_0 [N, K] → y: [M, N] f32."""
+    w = dequant_q4_0(qs, d)
+    return x @ w.T
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMS normalization over the last axis with learned gain ``g``."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * (1.0 / jnp.sqrt(ms + eps)) * g).astype(x.dtype)
+
+
+def softmax(x: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float = 1_000_000.0) -> jnp.ndarray:
+    """Rotary position embedding, NeoX/Qwen half-split style.
+
+    x: [..., T, D] with even D; pos: [T] int32 positions.
+    Pairs are (x[..., :D/2], x[..., D/2:]) — matching Qwen3/HF rotate_half.
+    """
+    half = x.shape[-1] // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]  # [T, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, q_offset: int = 0) -> jnp.ndarray:
+    """Multi-head scaled-dot-product attention reference.
+
+    q: [H, Tq, D]; k, v: [H, Tk, D] (KV heads already broadcast to H).
+    ``q_offset`` is the absolute position of q[.., 0, ..] within the kv
+    sequence (decode: Tq == 1, q_offset == Tk - 1).
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    if causal:
+        tq, tk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(tq)[:, None] + q_offset
+        kpos = jnp.arange(tk)[None, :]
+        mask = kpos <= qpos
+        scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    probs = softmax(scores)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)

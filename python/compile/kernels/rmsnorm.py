@@ -1,0 +1,42 @@
+"""Pallas RMSNorm kernel (Layer 1).
+
+Row-wise RMS normalization with a learned gain. Trivially memory-bound;
+included so the whole per-layer normalize→project→attend chain lowers
+through Pallas and the VMEM residency story in DESIGN.md
+§Hardware-Adaptation covers the full decode hot path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * g_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm over the last axis. x: [T, D] (or [D]), g: [D]."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    t, d = x.shape
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((None, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, g)
+    return out[0] if squeeze else out

@@ -1,0 +1,210 @@
+"""Layer 2 — Qwen3-architecture decoder in JAX, calling the Pallas kernels.
+
+This is the paper's "frontend model definition" expressed as a pure JAX
+function over an explicit parameter pytree, so it can be AOT-lowered once
+(``aot.py``) and executed from the Rust runtime via PJRT. The same
+architecture is independently implemented by the Rust engine
+(``rust/src/model``); the two are cross-checked by the golden integration
+tests through identical ALF weight bytes.
+
+Architecture (Qwen3, the paper's eval model):
+  token emb → L × [RMSNorm → GQA attn (per-head QK-norm, RoPE) → residual
+              → RMSNorm → SwiGLU MLP → residual] → RMSNorm → LM head.
+All seven projection matrices per layer plus the LM head are Q4_0
+quantized (paper §4: Qwen3-4B in Q4_0) and contracted by the Pallas
+``q4_gemm`` kernel; attention runs through the Pallas tiled-attention
+kernel; the layer norms through the Pallas ``rmsnorm`` kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.attention import attention
+from .kernels.q4gemm import q4_gemm
+from .kernels.rmsnorm import rmsnorm
+from .quantize import quantize_q4_0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of a Qwen3-family decoder.
+
+    ``dim``, ``n_heads*head_dim`` and ``ffn_dim`` must be multiples of 32
+    (the Q4_0 block size along contraction axes).
+    """
+
+    dim: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 16
+    ffn_dim: int = 128
+    vocab: int = 512
+    max_seq: int = 64
+    rope_theta: float = 1_000_000.0
+    norm_eps: float = 1e-6
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def validate(self) -> None:
+        for name, val in (("dim", self.dim), ("q_dim", self.q_dim),
+                          ("ffn_dim", self.ffn_dim)):
+            if val % 32:
+                raise ValueError(f"{name}={val} not a multiple of 32 (Q4_0)")
+        if self.n_heads % self.n_kv_heads:
+            raise ValueError("n_heads must be a multiple of n_kv_heads (GQA)")
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+# Tiny geometry used for the AOT artifacts + golden tests. Small enough
+# that PJRT round-trips are fast, large enough that every code path
+# (GQA replication, multi-layer KV, Q4_0 blocks) is exercised.
+TINY = ModelConfig()
+
+
+def _qw(rng: np.random.Generator, n: int, k: int, scale: float):
+    """Generate and Q4_0-quantize an [n, k] projection."""
+    w = (rng.standard_normal((n, k)) * scale).astype(np.float32)
+    qs, d = quantize_q4_0(w)
+    return {"qs": jnp.asarray(qs), "d": jnp.asarray(d.astype(np.float32))}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Deterministic synthetic weights (the paper's throughput results do
+    not depend on weight values; numerics tests only need stability)."""
+    cfg.validate()
+    rng = np.random.default_rng(seed)
+    s_in = 1.0 / np.sqrt(cfg.dim)
+    s_ffn = 1.0 / np.sqrt(cfg.ffn_dim)
+    s_qd = 1.0 / np.sqrt(cfg.q_dim)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "attn_norm": jnp.asarray(1.0 + 0.1 * rng.standard_normal(cfg.dim).astype(np.float32)),
+            "wq": _qw(rng, cfg.q_dim, cfg.dim, s_in),
+            "wk": _qw(rng, cfg.kv_dim, cfg.dim, s_in),
+            "wv": _qw(rng, cfg.kv_dim, cfg.dim, s_in),
+            "wo": _qw(rng, cfg.dim, cfg.q_dim, s_qd),
+            "q_norm": jnp.asarray(1.0 + 0.1 * rng.standard_normal(cfg.head_dim).astype(np.float32)),
+            "k_norm": jnp.asarray(1.0 + 0.1 * rng.standard_normal(cfg.head_dim).astype(np.float32)),
+            "mlp_norm": jnp.asarray(1.0 + 0.1 * rng.standard_normal(cfg.dim).astype(np.float32)),
+            "w_gate": _qw(rng, cfg.ffn_dim, cfg.dim, s_in),
+            "w_up": _qw(rng, cfg.ffn_dim, cfg.dim, s_in),
+            "w_down": _qw(rng, cfg.dim, cfg.ffn_dim, s_ffn),
+        })
+    return {
+        "tok_emb": jnp.asarray((rng.standard_normal((cfg.vocab, cfg.dim)) * 0.02).astype(np.float32)),
+        "layers": layers,
+        "final_norm": jnp.asarray(1.0 + 0.1 * rng.standard_normal(cfg.dim).astype(np.float32)),
+        "lm_head": _qw(rng, cfg.vocab, cfg.dim, s_in),
+    }
+
+
+def _per_head_norm(x: jnp.ndarray, g: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Qwen3 QK-norm: RMSNorm over head_dim for each head. x: [..., H, D]."""
+    return ref.rmsnorm(x, g, eps)
+
+
+def _attn_block(layer: dict, cfg: ModelConfig, h: jnp.ndarray,
+                pos0, k_cache: jnp.ndarray, v_cache: jnp.ndarray):
+    """Shared attention block. h: [T, dim]; caches: [KV, max_seq, hd].
+
+    ``pos0`` is the absolute position of h[0] (0 for prefill, the current
+    step for decode). Returns (out [T, dim], k_cache, v_cache).
+    """
+    t = h.shape[0]
+    rep = cfg.n_heads // cfg.n_kv_heads
+    positions = jnp.arange(t, dtype=jnp.int32) + pos0
+
+    q = q4_gemm(h, layer["wq"]["qs"], layer["wq"]["d"]).reshape(t, cfg.n_heads, cfg.head_dim)
+    k = q4_gemm(h, layer["wk"]["qs"], layer["wk"]["d"]).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+    v = q4_gemm(h, layer["wv"]["qs"], layer["wv"]["d"]).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+
+    q = _per_head_norm(q, layer["q_norm"], cfg.norm_eps)
+    k = _per_head_norm(k, layer["k_norm"], cfg.norm_eps)
+
+    # RoPE over the sequence axis (ref.rope expects [..., T, D]).
+    q = ref.rope(q.transpose(1, 0, 2), positions, cfg.rope_theta)  # [H, T, hd]
+    k = ref.rope(k.transpose(1, 0, 2), positions, cfg.rope_theta)  # [KV, T, hd]
+    v = v.transpose(1, 0, 2)                                       # [KV, T, hd]
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos0, 0))
+
+    kq = jnp.repeat(k_cache, rep, axis=0)  # GQA broadcast → [H, max_seq, hd]
+    vq = jnp.repeat(v_cache, rep, axis=0)
+    o = attention(q, kq, vq, causal=True, q_offset=pos0,
+                  block_k=min(128, cfg.max_seq))           # [H, T, hd]
+    o = o.transpose(1, 0, 2).reshape(t, cfg.q_dim)
+    out = q4_gemm(o, layer["wo"]["qs"], layer["wo"]["d"])
+    return out, k_cache, v_cache
+
+
+def _mlp_block(layer: dict, h: jnp.ndarray) -> jnp.ndarray:
+    gate = q4_gemm(h, layer["w_gate"]["qs"], layer["w_gate"]["d"])
+    up = q4_gemm(h, layer["w_up"]["qs"], layer["w_up"]["d"])
+    return q4_gemm(ref.silu(gate) * up, layer["w_down"]["qs"], layer["w_down"]["d"])
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray, pos0,
+            k_caches: jnp.ndarray, v_caches: jnp.ndarray):
+    """Forward ``tokens`` ([T] int32) starting at absolute position ``pos0``.
+
+    k_caches/v_caches: [L, KV, max_seq, hd]. Returns
+    (logits [T, vocab], k_caches, v_caches).
+    """
+    x = params["tok_emb"][tokens]  # [T, dim]
+    new_k, new_v = [], []
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["attn_norm"], cfg.norm_eps)
+        attn_out, kc, vc = _attn_block(layer, cfg, h, pos0,
+                                       k_caches[li], v_caches[li])
+        x = x + attn_out
+        h = rmsnorm(x, layer["mlp_norm"], cfg.norm_eps)
+        x = x + _mlp_block(layer, h)
+        new_k.append(kc)
+        new_v.append(vc)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = q4_gemm(x, params["lm_head"]["qs"], params["lm_head"]["d"])
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def make_decode_fn(cfg: ModelConfig):
+    """decode(params, token [i32 scalar], pos [i32 scalar], k, v) →
+    (logits [vocab], k, v) — one autoregressive step."""
+
+    def decode(params, token, pos, k_caches, v_caches):
+        logits, kc, vc = forward(params, cfg, token.reshape(1), pos,
+                                 k_caches, v_caches)
+        return logits[0], kc, vc
+
+    return decode
+
+
+def make_prefill_fn(cfg: ModelConfig, prompt_len: int):
+    """prefill(params, tokens [prompt_len]) → (logits_last [vocab], k, v).
+
+    Caches start from zero; prompt length is static at AOT time."""
+
+    def prefill(params, tokens):
+        k0 = jnp.zeros((cfg.n_layers, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim), jnp.float32)
+        v0 = jnp.zeros_like(k0)
+        logits, kc, vc = forward(params, cfg, tokens, 0, k0, v0)
+        return logits[prompt_len - 1], kc, vc
+
+    return prefill

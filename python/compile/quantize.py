@@ -1,0 +1,84 @@
+"""Q4_0 block quantization (llama.cpp/ggml-compatible layout).
+
+A Q4_0 block covers 32 consecutive elements along the contraction (K)
+axis and is stored as:
+
+    d  : float16 scale (2 bytes)
+    qs : 16 bytes; element ``i`` (0 <= i < 16) lives in the low nibble of
+         byte ``i`` and element ``i + 16`` in the high nibble of byte ``i``.
+
+Dequantization: ``x[i] = (q[i] - 8) * float32(d)``.
+
+The quantization rule mirrors ggml's ``quantize_row_q4_0`` exactly: the
+scale is derived from the signed value with the largest magnitude so that
+it maps to the nibble 0 (i.e. -8 after bias removal), which keeps the
+codebook symmetric around the data's dominant sign.
+
+The Rust side (``rust/src/quant``) implements the same layout; the two are
+cross-checked through the ALF weight files and the PJRT golden tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+QK4_0 = 32  # elements per block
+BLOCK_BYTES = 18  # 2 (f16 scale) + 16 (nibbles)
+
+
+def quantize_q4_0(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Quantize ``x`` ([..., K], K % 32 == 0, float32) to Q4_0.
+
+    Returns ``(qs, d)`` where ``qs`` is uint8 [..., K/32, 16] (packed
+    nibbles) and ``d`` is float16 [..., K/32] (per-block scales).
+    """
+    x = np.asarray(x, dtype=np.float32)
+    k = x.shape[-1]
+    if k % QK4_0 != 0:
+        raise ValueError(f"K={k} is not a multiple of {QK4_0}")
+    blocks = x.reshape(*x.shape[:-1], k // QK4_0, QK4_0)
+
+    # ggml: pick the signed value with max |x|, scale = max / -8.
+    amax_idx = np.abs(blocks).argmax(axis=-1, keepdims=True)
+    maxv = np.take_along_axis(blocks, amax_idx, axis=-1)[..., 0]
+    d = (maxv / -8.0).astype(np.float16)
+    d32 = d.astype(np.float32)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        inv_d = np.where(d32 != 0.0, 1.0 / d32, 0.0)
+
+    q = blocks * inv_d[..., None] + 8.5
+    q = np.clip(q, 0.0, 15.0).astype(np.uint8)
+
+    lo = q[..., :16]
+    hi = q[..., 16:]
+    qs = (lo | (hi << 4)).astype(np.uint8)
+    return qs, d
+
+
+def dequantize_q4_0(qs: np.ndarray, d: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`quantize_q4_0` → float32 [..., K]."""
+    lo = (qs & 0x0F).astype(np.int32) - 8
+    hi = (qs >> 4).astype(np.int32) - 8
+    blocks = np.concatenate([lo, hi], axis=-1).astype(np.float32)
+    blocks = blocks * d.astype(np.float32)[..., None]
+    return blocks.reshape(*qs.shape[:-2], qs.shape[-2] * QK4_0)
+
+
+def pack_q4_0_bytes(qs: np.ndarray, d: np.ndarray) -> bytes:
+    """Serialize a 2-D quantized weight ([N, K/32, 16] + [N, K/32]) into
+    the ALF/ggml on-disk stream: per block, f16 scale then 16 nibble bytes,
+    row-major over (N, K/32)."""
+    n, nb, _ = qs.shape
+    out = np.zeros((n, nb, BLOCK_BYTES), dtype=np.uint8)
+    out[..., :2] = d.astype("<f2").view(np.uint8).reshape(n, nb, 2)
+    out[..., 2:] = qs
+    return out.tobytes()
+
+
+def unpack_q4_0_bytes(raw: bytes, n: int, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Inverse of :func:`pack_q4_0_bytes`."""
+    nb = k // QK4_0
+    arr = np.frombuffer(raw, dtype=np.uint8).reshape(n, nb, BLOCK_BYTES)
+    d = arr[..., :2].copy().view("<f2").reshape(n, nb)
+    qs = arr[..., 2:].copy()
+    return qs, d

@@ -1,0 +1,154 @@
+"""Layer-1 Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and tile parameters; every comparison is an
+``assert_allclose`` against the reference implementation.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.q4gemm import q4_gemm
+from compile.kernels.rmsnorm import rmsnorm
+from compile.quantize import quantize_q4_0
+
+
+def _qweights(n, k, seed=0, scale=1.0):
+    w = (np.random.default_rng(seed).standard_normal((n, k)) * scale).astype(np.float32)
+    qs, d = quantize_q4_0(w)
+    return jnp.asarray(qs), jnp.asarray(d.astype(np.float32))
+
+
+def _x(m, k, seed=1):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal((m, k)).astype(np.float32))
+
+
+class TestQ4Gemm:
+    def test_basic(self):
+        x = _x(4, 128)
+        qs, d = _qweights(96, 128)
+        assert_allclose(np.asarray(q4_gemm(x, qs, d)),
+                        np.asarray(ref.q4_gemm(x, qs, d)), rtol=1e-5, atol=1e-4)
+
+    def test_gemv_decode_shape(self):
+        """M=1 is the decode hot path."""
+        x = _x(1, 256)
+        qs, d = _qweights(64, 256)
+        assert_allclose(np.asarray(q4_gemm(x, qs, d)),
+                        np.asarray(ref.q4_gemm(x, qs, d)), rtol=1e-5, atol=1e-4)
+
+    def test_k_accumulation_across_grid(self):
+        """K larger than block_k exercises the K-grid accumulate path."""
+        x = _x(2, 1024)
+        qs, d = _qweights(32, 1024)
+        out = q4_gemm(x, qs, d, block_k=256)
+        assert_allclose(np.asarray(out), np.asarray(ref.q4_gemm(x, qs, d)),
+                        rtol=1e-5, atol=1e-3)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        m=st.sampled_from([1, 3, 8]),
+        n=st.sampled_from([16, 64, 96]),
+        k=st.sampled_from([32, 128, 320]),
+        bm=st.sampled_from([2, 8]),
+        bn=st.sampled_from([16, 64]),
+        bk=st.sampled_from([32, 128]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_property_tiles(self, m, n, k, bm, bn, bk, seed):
+        x = _x(m, k, seed=seed)
+        qs, d = _qweights(n, k, seed=seed + 1)
+        out = q4_gemm(x, qs, d, block_m=bm, block_n=bn, block_k=bk)
+        assert_allclose(np.asarray(out), np.asarray(ref.q4_gemm(x, qs, d)),
+                        rtol=1e-4, atol=1e-3)
+
+    def test_scale_extremes(self):
+        qs, d = _qweights(32, 64, scale=1e-4)
+        x = _x(2, 64)
+        assert_allclose(np.asarray(q4_gemm(x, qs, d)),
+                        np.asarray(ref.q4_gemm(x, qs, d)), rtol=1e-4, atol=1e-7)
+
+
+class TestAttention:
+    def _qkv(self, h, tq, tk, d, seed=0):
+        rng = np.random.default_rng(seed)
+        return (jnp.asarray(rng.standard_normal((h, tq, d)).astype(np.float32)),
+                jnp.asarray(rng.standard_normal((h, tk, d)).astype(np.float32)),
+                jnp.asarray(rng.standard_normal((h, tk, d)).astype(np.float32)))
+
+    def test_noncausal(self):
+        q, k, v = self._qkv(4, 8, 64, 16)
+        assert_allclose(np.asarray(attention(q, k, v, causal=False, block_k=16)),
+                        np.asarray(ref.attention(q, k, v, causal=False)),
+                        rtol=1e-5, atol=1e-5)
+
+    def test_causal_prefill(self):
+        q, k, v = self._qkv(2, 32, 32, 8, seed=3)
+        assert_allclose(np.asarray(attention(q, k, v, causal=True, q_offset=0, block_k=8)),
+                        np.asarray(ref.attention(q, k, v, causal=True)),
+                        rtol=1e-5, atol=1e-5)
+
+    def test_decode_single_row(self):
+        q, k, v = self._qkv(4, 1, 64, 16, seed=4)
+        assert_allclose(
+            np.asarray(attention(q, k, v, causal=True, q_offset=63, block_k=16)),
+            np.asarray(ref.attention(q, k, v, causal=True, q_offset=63)),
+            rtol=1e-5, atol=1e-5)
+
+    def test_garbage_beyond_position_is_masked(self):
+        """Cache slots past the current position must not leak in."""
+        q, k, v = self._qkv(2, 1, 32, 8, seed=5)
+        k = k.at[:, 10:].set(1e5)
+        v = v.at[:, 10:].set(1e5)
+        out = attention(q, k, v, causal=True, q_offset=9, block_k=8)
+        expect = ref.attention(q[:, :, :], k[:, :10], v[:, :10],
+                               causal=True, q_offset=9)
+        assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        h=st.sampled_from([1, 4]),
+        tq=st.sampled_from([1, 5, 16]),
+        tk=st.sampled_from([16, 48]),
+        dim=st.sampled_from([8, 32]),
+        bk=st.sampled_from([8, 16, 48]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_property(self, h, tq, tk, dim, bk, seed):
+        q, k, v = self._qkv(h, tq, tk, dim, seed=seed)
+        off = tk - tq
+        assert_allclose(
+            np.asarray(attention(q, k, v, causal=True, q_offset=off, block_k=bk)),
+            np.asarray(ref.attention(q, k, v, causal=True, q_offset=off)),
+            rtol=1e-4, atol=1e-4)
+
+
+class TestRmsNorm:
+    def test_2d(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((7, 96)).astype(np.float32))
+        g = jnp.asarray(rng.standard_normal(96).astype(np.float32))
+        assert_allclose(np.asarray(rmsnorm(x, g)), np.asarray(ref.rmsnorm(x, g)),
+                        rtol=1e-5, atol=1e-6)
+
+    def test_1d(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+        g = jnp.asarray(np.ones(64, np.float32))
+        out = rmsnorm(x, g)
+        assert out.shape == (64,)
+        assert_allclose(np.asarray(out), np.asarray(ref.rmsnorm(x, g)),
+                        rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(t=st.sampled_from([1, 4, 33]), d=st.sampled_from([16, 64, 200]),
+           seed=st.integers(0, 2**31))
+    def test_property(self, t, d, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+        g = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+        assert_allclose(np.asarray(rmsnorm(x, g)), np.asarray(ref.rmsnorm(x, g)),
+                        rtol=1e-4, atol=1e-5)

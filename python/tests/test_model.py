@@ -1,0 +1,97 @@
+"""Layer-2 model tests: shapes, KV-cache consistency, determinism."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = M.TINY
+    params = M.init_params(cfg, seed=0)
+    return cfg, params
+
+
+class TestConfig:
+    def test_tiny_is_valid(self):
+        M.TINY.validate()
+
+    def test_rejects_bad_block_multiple(self):
+        with pytest.raises(ValueError):
+            M.ModelConfig(dim=48).validate()
+
+    def test_rejects_bad_gqa(self):
+        with pytest.raises(ValueError):
+            M.ModelConfig(n_heads=4, n_kv_heads=3).validate()
+
+    def test_derived_dims(self):
+        cfg = M.ModelConfig(n_heads=8, n_kv_heads=2, head_dim=16)
+        assert cfg.q_dim == 128 and cfg.kv_dim == 32
+
+
+class TestForward:
+    def test_prefill_shapes(self, setup):
+        cfg, params = setup
+        pre = M.make_prefill_fn(cfg, prompt_len=8)
+        logits, kc, vc = pre(params, jnp.arange(8, dtype=jnp.int32))
+        assert logits.shape == (cfg.vocab,)
+        assert kc.shape == (cfg.n_layers, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+        assert vc.shape == kc.shape
+
+    def test_decode_shapes(self, setup):
+        cfg, params = setup
+        dec = M.make_decode_fn(cfg)
+        kv = jnp.zeros((cfg.n_layers, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim))
+        logits, kc, vc = dec(params, jnp.int32(5), jnp.int32(0), kv, kv)
+        assert logits.shape == (cfg.vocab,)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_decode_matches_prefill(self, setup):
+        """prefill(t..8) + decode(tok9) == prefill(t..9): the KV cache is
+        exact, not approximate."""
+        cfg, params = setup
+        toks = jnp.asarray(np.arange(8) + 3, jnp.int32)
+        pre8 = M.make_prefill_fn(cfg, prompt_len=8)
+        _, kc, vc = pre8(params, toks)
+        dec = M.make_decode_fn(cfg)
+        l_dec, _, _ = dec(params, jnp.int32(42), jnp.int32(8), kc, vc)
+
+        pre9 = M.make_prefill_fn(cfg, prompt_len=9)
+        l_ref, _, _ = pre9(params, jnp.concatenate([toks, jnp.asarray([42], jnp.int32)]))
+        assert_allclose(np.asarray(l_dec), np.asarray(l_ref), rtol=1e-4, atol=1e-4)
+
+    def test_multi_step_decode_consistency(self, setup):
+        cfg, params = setup
+        toks = jnp.asarray([1, 2, 3, 4], jnp.int32)
+        pre = M.make_prefill_fn(cfg, prompt_len=4)
+        _, kc, vc = pre(params, toks)
+        dec = M.make_decode_fn(cfg)
+        seq = [9, 11, 13]
+        for i, t in enumerate(seq):
+            _, kc, vc = dec(params, jnp.int32(t), jnp.int32(4 + i), kc, vc)
+        # final step vs full prefill
+        l_dec, _, _ = dec(params, jnp.int32(17), jnp.int32(7), kc, vc)
+        full = M.make_prefill_fn(cfg, prompt_len=8)
+        l_ref, _, _ = full(params, jnp.asarray([1, 2, 3, 4, 9, 11, 13, 17], jnp.int32))
+        assert_allclose(np.asarray(l_dec), np.asarray(l_ref), rtol=1e-4, atol=1e-4)
+
+    def test_causality(self, setup):
+        """Changing a future token cannot change an earlier position's KV."""
+        cfg, params = setup
+        pre = M.make_prefill_fn(cfg, prompt_len=6)
+        a = jnp.asarray([1, 2, 3, 4, 5, 6], jnp.int32)
+        b = jnp.asarray([1, 2, 3, 4, 5, 99], jnp.int32)
+        _, ka, _ = pre(params, a)
+        _, kb, _ = pre(params, b)
+        assert_allclose(np.asarray(ka[:, :, :5]), np.asarray(kb[:, :, :5]),
+                        rtol=1e-6, atol=1e-6)
+
+    def test_deterministic_params(self):
+        p1 = M.init_params(M.TINY, seed=7)
+        p2 = M.init_params(M.TINY, seed=7)
+        assert np.array_equal(np.asarray(p1["tok_emb"]), np.asarray(p2["tok_emb"]))
+        assert np.array_equal(np.asarray(p1["layers"][0]["wq"]["qs"]),
+                              np.asarray(p2["layers"][0]["wq"]["qs"]))

@@ -1,0 +1,101 @@
+"""Q4_0 quantizer unit + property tests (ggml-compatible layout)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import (
+    QK4_0,
+    dequantize_q4_0,
+    pack_q4_0_bytes,
+    quantize_q4_0,
+    unpack_q4_0_bytes,
+)
+
+
+def rand(shape, seed=0, scale=1.0):
+    return (np.random.default_rng(seed).standard_normal(shape) * scale).astype(np.float32)
+
+
+class TestQuantizeShape:
+    def test_output_shapes(self):
+        qs, d = quantize_q4_0(rand((8, 96)))
+        assert qs.shape == (8, 3, 16) and qs.dtype == np.uint8
+        assert d.shape == (8, 3) and d.dtype == np.float16
+
+    def test_rejects_bad_k(self):
+        with pytest.raises(ValueError):
+            quantize_q4_0(rand((4, 33)))
+
+    def test_1d_input(self):
+        qs, d = quantize_q4_0(rand((64,)))
+        assert qs.shape == (2, 16) and d.shape == (2,)
+
+
+class TestQuantizeNumerics:
+    def test_roundtrip_error_bound(self):
+        """Error per element is bounded by one quantization step.
+
+        Q4_0's codebook spans [-8d, +7d]: values near +8|d| clamp to the
+        +7d code, so the worst case is a full step (not half)."""
+        x = rand((16, 256), seed=1)
+        qs, d = quantize_q4_0(x)
+        y = dequantize_q4_0(qs, d)
+        step = np.abs(d.astype(np.float32))[..., None]
+        err = np.abs((x - y).reshape(16, -1, QK4_0))
+        assert np.all(err <= step * 1.0 + 1e-6)
+
+    def test_zeros_block(self):
+        qs, d = quantize_q4_0(np.zeros((1, 32), np.float32))
+        assert np.all(d == 0)
+        assert np.allclose(dequantize_q4_0(qs, d), 0)
+
+    def test_extreme_negative_maps_to_zero_nibble(self):
+        """ggml rule: the max-|x| value defines the scale as max/-8."""
+        x = np.zeros((1, 32), np.float32)
+        x[0, 5] = -16.0
+        qs, d = quantize_q4_0(x)
+        assert np.isclose(float(d[0, 0]), 2.0)  # -16 / -8
+        y = dequantize_q4_0(qs, d)
+        assert np.isclose(y[0, 5], -16.0)
+
+    def test_positive_max_gives_negative_scale(self):
+        x = np.zeros((1, 32), np.float32)
+        x[0, 0] = 8.0
+        qs, d = quantize_q4_0(x)
+        assert float(d[0, 0]) == -1.0
+        assert np.isclose(dequantize_q4_0(qs, d)[0, 0], 8.0)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(1, 8),
+           st.sampled_from([32, 64, 160]),
+           st.floats(1e-3, 1e3))
+    def test_roundtrip_property(self, seed, n, k, scale):
+        x = rand((n, k), seed=seed, scale=scale)
+        qs, d = quantize_q4_0(x)
+        y = dequantize_q4_0(qs, d)
+        step = np.abs(d.astype(np.float32))[..., None]
+        err = np.abs((x - y).reshape(n, -1, QK4_0))
+        # one step (asymmetric codebook) plus f16 rounding slack
+        assert np.all(err <= step * 1.0 + np.abs(step) * 1e-2 + 1e-6)
+
+
+class TestPackBytes:
+    def test_block_stream_layout(self):
+        """Per block: 2-byte f16 scale then 16 nibble bytes (18 total)."""
+        x = rand((2, 64), seed=2)
+        qs, d = quantize_q4_0(x)
+        raw = pack_q4_0_bytes(qs, d)
+        assert len(raw) == 2 * 2 * 18
+        first_scale = np.frombuffer(raw[:2], "<f2")[0]
+        assert first_scale == d[0, 0]
+        assert raw[2:18] == qs[0, 0].tobytes()
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31), st.integers(1, 6), st.sampled_from([32, 96]))
+    def test_pack_unpack_roundtrip(self, seed, n, k):
+        x = rand((n, k), seed=seed)
+        qs, d = quantize_q4_0(x)
+        qs2, d2 = unpack_q4_0_bytes(pack_q4_0_bytes(qs, d), n, k)
+        assert np.array_equal(qs, qs2)
+        assert np.array_equal(d, d2)

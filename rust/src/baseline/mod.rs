@@ -1,0 +1,172 @@
+//! Execution strategies: ArcLight and the llama.cpp comparator.
+//!
+//! The paper benches `llama-cli ... -numa isolate|distribute` (appendix
+//! A.3) against ArcLight with cross-NUMA TP. Both run the *same* model
+//! graph code here; a [`Strategy`] only decides
+//!
+//! * where tensors are placed (NUMA-aware vs UMA/first-touch),
+//! * how threads are bound to cores (`isolate` fills node 0,
+//!   `distribute` spreads evenly),
+//! * whether the graph contains TP subgraphs, and
+//! * the synchronization discipline (Sync A/B vs llama.cpp's global
+//!   barrier after every operator).
+
+use crate::memory::PlanMode;
+use crate::model::{BuildSpec, ModelConfig};
+use crate::numa::{Core, Topology};
+use crate::sched::SyncMode;
+use crate::threads::Organization;
+
+/// llama.cpp's `-numa` flag (appendix A.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LlamaNuma {
+    /// All threads on one node (single-node baseline).
+    Isolate,
+    /// Threads evenly bound across `n` nodes; memory left to the OS.
+    Distribute(usize),
+}
+
+/// A complete execution strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// ArcLight: NUMA-aware placement; TP across `nodes` when > 1.
+    ArcLight { nodes: usize, sync: SyncMode },
+    /// The llama.cpp comparator.
+    LlamaCpp { numa: LlamaNuma },
+}
+
+impl Strategy {
+    pub fn arclight_single() -> Self {
+        Strategy::ArcLight { nodes: 1, sync: SyncMode::SyncB }
+    }
+
+    pub fn arclight_tp(nodes: usize, sync: SyncMode) -> Self {
+        Strategy::ArcLight { nodes, sync }
+    }
+
+    pub fn llama_isolate() -> Self {
+        Strategy::LlamaCpp { numa: LlamaNuma::Isolate }
+    }
+
+    pub fn llama_distribute(nodes: usize) -> Self {
+        Strategy::LlamaCpp { numa: LlamaNuma::Distribute(nodes) }
+    }
+
+    /// Human name used in benchmark tables.
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::ArcLight { nodes: 1, .. } => "arclight".into(),
+            Strategy::ArcLight { nodes, sync: SyncMode::SyncA } => format!("arclight-tp{nodes}-syncA"),
+            Strategy::ArcLight { nodes, sync: SyncMode::SyncB } => format!("arclight-tp{nodes}-syncB"),
+            Strategy::LlamaCpp { numa: LlamaNuma::Isolate } => "llama.cpp-isolate".into(),
+            Strategy::LlamaCpp { numa: LlamaNuma::Distribute(n) } => format!("llama.cpp-distribute{n}"),
+        }
+    }
+
+    /// Number of NUMA nodes the strategy spans.
+    pub fn nodes_used(&self) -> usize {
+        match self {
+            Strategy::ArcLight { nodes, .. } => *nodes,
+            Strategy::LlamaCpp { numa: LlamaNuma::Isolate } => 1,
+            Strategy::LlamaCpp { numa: LlamaNuma::Distribute(n) } => *n,
+        }
+    }
+
+    /// The build spec for this strategy on a machine with `total_nodes`.
+    pub fn build_spec(&self, cfg: ModelConfig, total_nodes: usize) -> BuildSpec {
+        let mut spec = match self {
+            Strategy::ArcLight { nodes, .. } => BuildSpec::arclight(cfg, *nodes),
+            Strategy::LlamaCpp { numa } => {
+                let nodes = match numa {
+                    LlamaNuma::Isolate => 1,
+                    LlamaNuma::Distribute(n) => *n,
+                };
+                BuildSpec::llama_cpp(cfg, nodes, total_nodes)
+            }
+        };
+        spec.n_nodes = total_nodes;
+        spec.plan_mode = PlanMode::DoubleBuffered;
+        spec
+    }
+
+    /// Bind `threads` workers to simulated cores.
+    pub fn bind_cores(&self, topo: &Topology, threads: usize) -> Vec<Core> {
+        match self {
+            Strategy::ArcLight { nodes, .. } => topo.bind_cores(threads, *nodes > 1, *nodes),
+            Strategy::LlamaCpp { numa: LlamaNuma::Isolate } => topo.bind_cores(threads, false, 1),
+            Strategy::LlamaCpp { numa: LlamaNuma::Distribute(n) } => topo.bind_cores(threads, true, *n),
+        }
+    }
+
+    /// Thread organizations: (single view, TP view).
+    pub fn organizations(&self, cores: &[Core]) -> (Organization, Organization) {
+        let single = Organization::single(cores);
+        let tp = match self {
+            Strategy::ArcLight { nodes, .. } if *nodes > 1 => Organization::by_node(cores),
+            _ => Organization::single(cores),
+        };
+        (single, tp)
+    }
+
+    pub fn sync(&self) -> SyncMode {
+        match self {
+            Strategy::ArcLight { sync, .. } => *sync,
+            // llama.cpp has only the global-barrier discipline
+            Strategy::LlamaCpp { .. } => SyncMode::SyncA,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_distinct() {
+        let all = [
+            Strategy::arclight_single(),
+            Strategy::arclight_tp(4, SyncMode::SyncA),
+            Strategy::arclight_tp(4, SyncMode::SyncB),
+            Strategy::llama_isolate(),
+            Strategy::llama_distribute(4),
+        ];
+        let names: std::collections::BTreeSet<String> = all.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), all.len());
+    }
+
+    #[test]
+    fn arclight_tp_groups_by_node() {
+        let topo = Topology::kunpeng920();
+        let s = Strategy::arclight_tp(4, SyncMode::SyncB);
+        let cores = s.bind_cores(&topo, 64);
+        let (_, tp) = s.organizations(&cores);
+        assert_eq!(tp.n_groups(), 4);
+    }
+
+    #[test]
+    fn llama_distribute_spreads_but_one_group() {
+        let topo = Topology::kunpeng920();
+        let s = Strategy::llama_distribute(4);
+        let cores = s.bind_cores(&topo, 64);
+        assert_eq!(cores.iter().filter(|c| c.node == 3).count(), 16);
+        let (_, tp) = s.organizations(&cores);
+        assert_eq!(tp.n_groups(), 1); // no subgraphs in llama.cpp
+        assert_eq!(s.sync(), SyncMode::SyncA);
+    }
+
+    #[test]
+    fn isolate_uses_node0_only() {
+        let topo = Topology::kunpeng920();
+        let cores = Strategy::llama_isolate().bind_cores(&topo, 48);
+        assert!(cores.iter().all(|c| c.node == 0));
+    }
+
+    #[test]
+    fn build_specs_differ_in_placement() {
+        use crate::numa::Placement;
+        let arc = Strategy::arclight_single().build_spec(ModelConfig::tiny(), 4);
+        let llama = Strategy::llama_isolate().build_spec(ModelConfig::tiny(), 4);
+        assert_eq!(arc.act_placement, Placement::Node(0));
+        assert_eq!(llama.act_placement, Placement::Interleaved(4));
+    }
+}

@@ -1,0 +1,318 @@
+//! The inference engine: graphs + thread pool + executor + decode loop.
+//!
+//! `Engine` is the real-execution object behind the CLI, the examples
+//! and the serving layer. It owns the worker pool (created once, before
+//! inference — §2.4), the model graphs and the weight storage, and
+//! exposes the frontend API: `prefill`, `decode_step`, `generate`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::baseline::Strategy;
+use crate::model::synth;
+use crate::model::{AlfFile, ModelConfig, ModelGraphs};
+use crate::numa::Topology;
+use crate::sched::{ExecParams, RealExecutor};
+use crate::threads::ThreadPool;
+
+use super::sampler::Sampler;
+
+/// Construction options.
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    pub strategy: Strategy,
+    pub threads: usize,
+    pub topo: Topology,
+    /// Build a one-pass prefill graph for prompts of exactly this
+    /// length (other lengths fall back to token-by-token prefill).
+    pub prefill_rows: Option<usize>,
+    /// Synthetic weight seed when no ALF file is given.
+    pub seed: u64,
+}
+
+impl EngineOptions {
+    pub fn quick(strategy: Strategy, threads: usize) -> Self {
+        EngineOptions {
+            strategy,
+            threads,
+            topo: Topology::kunpeng920(),
+            prefill_rows: None,
+            seed: 0,
+        }
+    }
+}
+
+/// Timing + output of one generation call.
+#[derive(Clone, Debug)]
+pub struct GenerationResult {
+    pub tokens: Vec<i32>,
+    pub prefill_seconds: f64,
+    pub decode_seconds: f64,
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+}
+
+impl GenerationResult {
+    pub fn decode_tok_per_s(&self) -> f64 {
+        if self.decode_seconds == 0.0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / self.decode_seconds
+        }
+    }
+
+    pub fn prefill_tok_per_s(&self) -> f64 {
+        if self.prefill_seconds == 0.0 {
+            0.0
+        } else {
+            self.prefill_tokens as f64 / self.prefill_seconds
+        }
+    }
+}
+
+/// The real-execution engine.
+pub struct Engine {
+    pub graphs: ModelGraphs,
+    executor: RealExecutor,
+    pos: usize,
+}
+
+impl Engine {
+    /// Build with synthetic weights.
+    pub fn new_synthetic(cfg: ModelConfig, opts: &EngineOptions) -> Result<Engine> {
+        let mut e = Self::build(cfg, opts)?;
+        synth::fill_synthetic(&e.graphs, opts.seed)?;
+        e.reset();
+        Ok(e)
+    }
+
+    /// Build from an ALF weight file (geometry read from the file).
+    pub fn from_alf(path: &std::path::Path, opts: &EngineOptions) -> Result<Engine> {
+        let alf = AlfFile::open(path)?;
+        let cfg = ModelConfig::from_json(&alf.config)
+            .map_err(|e| anyhow::anyhow!("bad ALF config: {e}"))?;
+        let mut e = Self::build(cfg, opts)?;
+        synth::load_alf(&e.graphs, &alf)?;
+        e.reset();
+        Ok(e)
+    }
+
+    fn build(cfg: ModelConfig, opts: &EngineOptions) -> Result<Engine> {
+        if opts.threads == 0 {
+            bail!("at least one thread required");
+        }
+        if opts.threads < opts.strategy.nodes_used() {
+            bail!(
+                "strategy {} spans {} NUMA nodes but only {} thread(s) were given",
+                opts.strategy.name(),
+                opts.strategy.nodes_used(),
+                opts.threads
+            );
+        }
+        let total_nodes = opts.topo.n_nodes();
+        let mut spec = opts.strategy.build_spec(cfg, total_nodes);
+        if let Some(rows) = opts.prefill_rows {
+            spec = spec.with_prefill(rows);
+        }
+        let graphs = ModelGraphs::build(spec);
+        let pool = graphs.pool.clone().expect("real engine needs buffers");
+
+        let cores = opts.strategy.bind_cores(&opts.topo, opts.threads);
+        let (single, tp) = opts.strategy.organizations(&cores);
+        let threads = Arc::new(ThreadPool::new(cores));
+        let executor = RealExecutor::new(
+            pool,
+            threads,
+            Arc::new(single),
+            Arc::new(tp),
+            opts.strategy.sync(),
+        );
+        Ok(Engine { graphs, executor, pos: 0 })
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.graphs.cfg
+    }
+
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Clear the KV cache and rewind to position 0.
+    pub fn reset(&mut self) {
+        synth::reset_kv(&self.graphs);
+        self.pos = 0;
+    }
+
+    fn write_tokens(&self, graph: &crate::graph::Graph, id: crate::tensor::TensorId, toks: &[i32]) {
+        let buf = graph.buf(id);
+        assert_eq!(buf.len, toks.len() * 4);
+        let pool = self.executor.pool.clone();
+        unsafe {
+            let dst = pool.arena(buf.arena).bytes_mut(buf.off, buf.len);
+            for (i, t) in toks.iter().enumerate() {
+                dst[i * 4..(i + 1) * 4].copy_from_slice(&t.to_le_bytes());
+            }
+        }
+    }
+
+    fn read_logits(&self, graph: &crate::graph::Graph, id: crate::tensor::TensorId) -> Vec<f32> {
+        let buf = graph.buf(id);
+        unsafe {
+            self.executor.pool.arena(buf.arena).f32s(buf.off, buf.len / 4).to_vec()
+        }
+    }
+
+    /// One decode step: ingest `token` at the current position, return
+    /// the next-token logits.
+    pub fn decode_step(&mut self, token: i32) -> Vec<f32> {
+        assert!(self.pos < self.cfg().max_seq, "KV cache full");
+        let graph = self.graphs.decode.clone();
+        self.write_tokens(&graph, self.graphs.decode_tokens, &[token]);
+        let params = ExecParams { pos: self.pos, rows: 1 };
+        self.executor.run(&graph, params);
+        self.pos += 1;
+        self.read_logits(&graph, self.graphs.decode_logits)
+    }
+
+    /// Ingest a prompt; returns logits for the position after the last
+    /// prompt token. Uses the one-pass prefill graph when its shape
+    /// matches, decode steps otherwise.
+    pub fn prefill(&mut self, tokens: &[i32]) -> Vec<f32> {
+        assert!(!tokens.is_empty());
+        assert!(self.pos + tokens.len() <= self.cfg().max_seq, "prompt exceeds KV capacity");
+        if let (Some(pg), Some(ptoks), Some(plogits)) =
+            (&self.graphs.prefill, self.graphs.prefill_tokens, self.graphs.prefill_logits)
+        {
+            let rows = pg.meta(ptoks).numel();
+            if rows == tokens.len() && self.pos == 0 {
+                let pg = pg.clone();
+                self.write_tokens(&pg, ptoks, tokens);
+                let params = ExecParams { pos: 0, rows };
+                self.executor.run(&pg, params);
+                self.pos = rows;
+                return self.read_logits(&pg, plogits);
+            }
+        }
+        let mut logits = Vec::new();
+        for &t in tokens {
+            logits = self.decode_step(t);
+        }
+        logits
+    }
+
+    /// Autoregressive generation with timing (the paper's benchmark
+    /// loop: prompt ingestion, then `max_new` greedy/top-k steps).
+    pub fn generate(&mut self, prompt: &[i32], max_new: usize, sampler: &Sampler) -> GenerationResult {
+        let t0 = Instant::now();
+        let mut logits = self.prefill(prompt);
+        let prefill_seconds = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let mut tokens = Vec::with_capacity(max_new);
+        for step in 0..max_new {
+            let next = sampler.sample(&logits, step);
+            tokens.push(next);
+            if self.pos >= self.cfg().max_seq {
+                break;
+            }
+            if step + 1 < max_new {
+                logits = self.decode_step(next);
+            }
+        }
+        let decode_seconds = t1.elapsed().as_secs_f64();
+        GenerationResult {
+            decode_tokens: tokens.len(),
+            prefill_tokens: prompt.len(),
+            tokens,
+            prefill_seconds,
+            decode_seconds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numa::Topology;
+
+    fn tiny_engine(strategy: Strategy, threads: usize, prefill: Option<usize>) -> Engine {
+        let opts = EngineOptions {
+            strategy,
+            threads,
+            topo: Topology::uniform(4, 4, 100.0, 25.0),
+            prefill_rows: prefill,
+            seed: 42,
+        };
+        Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
+    }
+
+    #[test]
+    fn decode_produces_finite_logits() {
+        let mut e = tiny_engine(Strategy::arclight_single(), 2, None);
+        let logits = e.decode_step(5);
+        assert_eq!(logits.len(), 512);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert_eq!(e.position(), 1);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut e1 = tiny_engine(Strategy::arclight_single(), 1, None);
+        let mut e4 = tiny_engine(Strategy::arclight_single(), 4, None);
+        let a = e1.decode_step(7);
+        let b = e4.decode_step(7);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn prefill_graph_matches_stepwise_prefill() {
+        let mut fast = tiny_engine(Strategy::arclight_single(), 2, Some(5));
+        let mut slow = tiny_engine(Strategy::arclight_single(), 2, None);
+        let prompt = [1, 2, 3, 4, 5];
+        let a = fast.prefill(&prompt);
+        let b = slow.prefill(&prompt);
+        assert_eq!(fast.position(), 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn tp_matches_single_node() {
+        let mut single = tiny_engine(Strategy::arclight_single(), 2, None);
+        let mut tp = tiny_engine(
+            Strategy::arclight_tp(2, crate::sched::SyncMode::SyncB),
+            4,
+            None,
+        );
+        let prompt = [3, 1, 4, 1, 5];
+        let a = single.prefill(&prompt);
+        let b = tp.prefill(&prompt);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_resettable() {
+        let mut e = tiny_engine(Strategy::arclight_single(), 2, None);
+        let prompt = [10, 20, 30];
+        let r1 = e.generate(&prompt, 8, &Sampler::greedy());
+        e.reset();
+        let r2 = e.generate(&prompt, 8, &Sampler::greedy());
+        assert_eq!(r1.tokens, r2.tokens);
+        assert_eq!(r1.decode_tokens, 8);
+    }
+
+    #[test]
+    fn llama_strategy_also_decodes() {
+        let mut e = tiny_engine(Strategy::llama_distribute(2), 4, None);
+        let logits = e.decode_step(9);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+}

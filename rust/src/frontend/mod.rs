@@ -1,0 +1,12 @@
+//! Decoding frontend (paper §2.1): weight loading, the autoregressive
+//! decode loop, sampling, and a byte-level tokenizer. The frontend sits
+//! on the engine's streamlined API (graphs + executor) and never touches
+//! operator internals.
+
+pub mod engine;
+pub mod sampler;
+pub mod tokenizer;
+
+pub use engine::{Engine, EngineOptions, GenerationResult};
+pub use sampler::Sampler;
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,107 @@
+//! Token sampling: greedy and top-k/temperature (the paper benches with
+//! `--top-k 1`, i.e. greedy — deterministic throughput runs).
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub enum Sampler {
+    /// Argmax (the paper's benchmark setting).
+    Greedy,
+    /// Top-k with temperature; deterministic given the seed.
+    TopK { k: usize, temperature: f32, rng_seed: u64 },
+}
+
+impl Sampler {
+    pub fn greedy() -> Self {
+        Sampler::Greedy
+    }
+
+    pub fn top_k(k: usize, temperature: f32, seed: u64) -> Self {
+        assert!(k >= 1 && temperature > 0.0);
+        Sampler::TopK { k, temperature, rng_seed: seed }
+    }
+
+    /// Pick the next token. `step` keeps Top-K deterministic per
+    /// position without carrying mutable state.
+    pub fn sample(&self, logits: &[f32], step: usize) -> i32 {
+        match self {
+            Sampler::Greedy => argmax(logits) as i32,
+            Sampler::TopK { k, temperature, rng_seed } => {
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                let kk = (*k).min(logits.len());
+                idx.select_nth_unstable_by(kk - 1, |&a, &b| {
+                    logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                idx.truncate(kk);
+                // softmax over the top-k at the given temperature
+                let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+                let weights: Vec<f32> =
+                    idx.iter().map(|&i| ((logits[i] - m) / temperature).exp()).collect();
+                let total: f32 = weights.iter().sum();
+                let mut rng = Rng::new(rng_seed.wrapping_add(step as u64));
+                let mut r = rng.next_f32() * total;
+                for (i, w) in idx.iter().zip(&weights) {
+                    if r <= *w {
+                        return *i as i32;
+                    }
+                    r -= w;
+                }
+                idx[0] as i32
+            }
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let s = Sampler::greedy();
+        assert_eq!(s.sample(&[0.1, 3.0, -1.0, 2.9], 0), 1);
+    }
+
+    #[test]
+    fn top1_equals_greedy() {
+        let s = Sampler::top_k(1, 1.0, 42);
+        let logits = [0.5, 2.0, 1.0, -3.0];
+        assert_eq!(s.sample(&logits, 0), 1);
+        assert_eq!(s.sample(&logits, 9), 1);
+    }
+
+    #[test]
+    fn topk_is_deterministic_per_step() {
+        let s = Sampler::top_k(3, 0.8, 7);
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        assert_eq!(s.sample(&logits, 5), s.sample(&logits, 5));
+    }
+
+    #[test]
+    fn topk_only_returns_topk_tokens() {
+        let s = Sampler::top_k(2, 1.0, 1);
+        let logits = [10.0, -50.0, 9.5, -50.0];
+        for step in 0..50 {
+            let t = s.sample(&logits, step);
+            assert!(t == 0 || t == 2, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let s = Sampler::top_k(4, 0.05, 3);
+        let logits = [1.0, 2.0, 3.0, 4.0];
+        let hits = (0..100).filter(|&st| s.sample(&logits, st) == 3).count();
+        assert!(hits > 95, "{hits}");
+    }
+}

@@ -1,0 +1,67 @@
+//! Byte-level tokenizer.
+//!
+//! The paper benchmarks with Qwen3's BPE vocabulary, but tokenization is
+//! orthogonal to every system under study (throughput is tokens/s for
+//! *any* token stream). A byte-level scheme keeps the repo dependency-
+//! free while remaining a real, lossless tokenizer: token `b` is byte
+//! `b`, with BOS/EOS appended at 256/257.
+
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+
+/// Lossless byte tokenizer (vocab must be ≥ 258).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn vocab_floor() -> usize {
+        258
+    }
+
+    pub fn encode(&self, text: &str, add_bos: bool) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        if add_bos {
+            out.push(BOS);
+        }
+        out.extend(text.bytes().map(|b| b as i32));
+        out
+    }
+
+    /// Decode ignores special tokens and re-assembles UTF-8 losslessly
+    /// (invalid sequences become U+FFFD).
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let toks = t.encode("hello", true);
+        assert_eq!(toks[0], BOS);
+        assert_eq!(toks.len(), 6);
+        assert_eq!(t.decode(&toks), "hello");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer;
+        let s = "héllo ∞ 中文";
+        assert_eq!(t.decode(&t.encode(s, false)), s);
+    }
+
+    #[test]
+    fn specials_skipped_in_decode() {
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&[BOS, 104, 105, EOS]), "hi");
+    }
+}

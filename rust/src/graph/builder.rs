@@ -1,0 +1,576 @@
+//! The graph builder: tensor-operation interfaces that append nodes to
+//! the static execution list as they are called (appendix A.1).
+//!
+//! Every interface takes and returns [`TensorBundle`]s, so the same
+//! model-definition code builds the single graph (bundles of width 1)
+//! and the TP parallel subgraphs (width G) — the paper's
+//! `tensor_ptrs` design. Activation buffers are carved from the
+//! NUMA-local arenas with layer-parity double buffering (§2.3).
+
+use crate::memory::{MemoryPool, PlanMode};
+use crate::numa::{NodeId, Placement};
+use crate::tensor::{DType, TensorBundle, TensorId};
+
+use super::node::{OpKind, TensorMeta};
+use super::{ExecEntry, Graph};
+
+/// Builder state. `sim_only = true` skips buffer allocation entirely —
+/// used for paper-scale geometries that exist only inside the
+/// virtual-time simulator.
+pub struct GraphBuilder {
+    pub graph: Graph,
+    pool: Option<MemoryPool>,
+    plan_mode: PlanMode,
+    sim_only: bool,
+    /// NUMA node of each TP group (group g's activations live here).
+    group_nodes: Vec<NodeId>,
+    /// Placement for single-mode activations (ArcLight: Node(0);
+    /// llama.cpp baseline: Interleaved).
+    act_placement: Placement,
+    /// Bump marks for layer-parity rewinding: `marks[node][parity]`.
+    /// Captured lazily on the first `enter_layer` of each parity, so
+    /// activations allocated before the layer loop (the embedding
+    /// output feeding the residual stream) are never reclaimed.
+    layer_marks: Vec<[Option<usize>; 2]>,
+    cur_layer: usize,
+    /// Peak activation bytes per (node, parity) — footprint reporting.
+    peaks: Vec<[usize; 2]>,
+}
+
+impl GraphBuilder {
+    pub fn new(pool: Option<MemoryPool>, group_nodes: Vec<NodeId>, act_placement: Placement) -> Self {
+        let n_nodes = pool.as_ref().map(|p| p.n_nodes()).unwrap_or_else(|| {
+            group_nodes.iter().copied().max().unwrap_or(0) + 1
+        });
+        GraphBuilder {
+            graph: Graph::default(),
+            pool,
+            plan_mode: PlanMode::DoubleBuffered,
+            sim_only: false,
+            group_nodes,
+            act_placement,
+            layer_marks: vec![[None; 2]; n_nodes],
+            cur_layer: 0,
+            peaks: vec![[0; 2]; n_nodes],
+        }
+    }
+
+    /// Simulator-only builder: no real memory, placements only.
+    pub fn sim(group_nodes: Vec<NodeId>, act_placement: Placement) -> Self {
+        let mut b = GraphBuilder::new(None, group_nodes, act_placement);
+        b.sim_only = true;
+        b
+    }
+
+    pub fn with_plan_mode(mut self, mode: PlanMode) -> Self {
+        self.plan_mode = mode;
+        self
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.group_nodes.len().max(1)
+    }
+
+    pub fn group_node(&self, g: usize) -> NodeId {
+        self.group_nodes.get(g).copied().unwrap_or(0)
+    }
+
+    pub fn finish(self) -> (Graph, Option<MemoryPool>) {
+        debug_assert!(self.graph.check_topological().is_ok());
+        (self.graph, self.pool)
+    }
+
+    /// Peak activation footprint in bytes across all nodes/parities.
+    pub fn activation_footprint(&self) -> usize {
+        self.peaks.iter().map(|p| p[0] + p[1]).sum()
+    }
+
+    // ---- leaves ------------------------------------------------------------
+
+    fn push_meta(&mut self, meta: TensorMeta) -> TensorId {
+        let id = TensorId(self.graph.tensors.len() as u32);
+        self.graph.tensors.push(meta);
+        id
+    }
+
+    /// A weight/KV/input leaf allocated in the weight arena of its
+    /// primary node (no exec entry; data filled by the weight loader).
+    pub fn leaf(
+        &mut self,
+        name: &str,
+        dtype: DType,
+        shape: Vec<usize>,
+        placement: Placement,
+    ) -> TensorId {
+        let buf = if self.sim_only {
+            None
+        } else {
+            let node = placement.node_of_row(0, self.n_pool_nodes());
+            let bytes = dtype.tensor_bytes(&shape);
+            let pool = self.pool.as_mut().expect("pool");
+            let arena = pool.weight_arena(node);
+            Some(pool.alloc(arena, bytes))
+        };
+        self.push_meta(TensorMeta {
+            name: name.into(),
+            dtype,
+            shape,
+            op: OpKind::Leaf,
+            src: vec![],
+            placement,
+            buf,
+            group: None,
+        })
+    }
+
+    /// A KV-cache leaf in the KV arena (persistent across steps).
+    pub fn kv_leaf(&mut self, name: &str, shape: Vec<usize>, placement: Placement) -> TensorId {
+        let buf = if self.sim_only {
+            None
+        } else {
+            let node = placement.node_of_row(0, self.n_pool_nodes());
+            let bytes = DType::F32.tensor_bytes(&shape);
+            let pool = self.pool.as_mut().expect("pool");
+            let arena = pool.kv_arena(node);
+            Some(pool.alloc(arena, bytes))
+        };
+        self.push_meta(TensorMeta {
+            name: name.into(),
+            dtype: DType::F32,
+            shape,
+            op: OpKind::Leaf,
+            src: vec![],
+            placement,
+            buf,
+            group: None,
+        })
+    }
+
+    /// Import a leaf (same buffer) from another graph — prefill and
+    /// decode graphs share weight and cache storage.
+    pub fn import_leaf(&mut self, meta: &TensorMeta) -> TensorId {
+        assert!(meta.op.is_leaf());
+        self.push_meta(meta.clone())
+    }
+
+    fn n_pool_nodes(&self) -> usize {
+        self.pool.as_ref().map(|p| p.n_nodes()).unwrap_or(self.layer_marks.len())
+    }
+
+    // ---- layer parity ------------------------------------------------------
+
+    /// Enter layer `i`: rewind the parity-`i%2` activation arenas to
+    /// their base marks (layer `i-2`'s activations are dead — Fig. 4).
+    /// The mark for each parity is captured on first entry, protecting
+    /// pre-loop activations (the embedding output) from reclamation.
+    pub fn enter_layer(&mut self, layer: usize) {
+        self.cur_layer = layer;
+        if self.plan_mode != PlanMode::DoubleBuffered {
+            return;
+        }
+        let parity = layer & 1;
+        if let Some(pool) = self.pool.as_mut() {
+            for node in 0..pool.n_nodes() {
+                let arena = pool.act_arena(node, parity);
+                match self.layer_marks[node][parity] {
+                    Some(mark) => pool.arena_mut(arena).rewind(mark),
+                    None => self.layer_marks[node][parity] = Some(pool.arena(arena).used()),
+                }
+            }
+        }
+    }
+
+    fn parity(&self) -> usize {
+        self.cur_layer & 1
+    }
+
+    // ---- activations -------------------------------------------------------
+
+    /// Allocate an activation tensor and append its node. `group = None`
+    /// → single mode (executes on the whole pool, placed per the default
+    /// activation placement); `group = Some(g)` → subgraph g, placed on
+    /// that group's node.
+    #[allow(clippy::too_many_arguments)]
+    fn push_op(
+        &mut self,
+        name: String,
+        dtype: DType,
+        shape: Vec<usize>,
+        op: OpKind,
+        src: Vec<TensorId>,
+        group: Option<usize>,
+        alias: Option<crate::memory::BufRef>,
+    ) -> TensorId {
+        let placement = match group {
+            Some(g) => Placement::Node(self.group_node(g)),
+            None => self.act_placement.clone(),
+        };
+        let buf = if self.sim_only {
+            None
+        } else if let Some(a) = alias {
+            Some(a)
+        } else {
+            let node = placement.node_of_row(0, self.n_pool_nodes());
+            let bytes = dtype.tensor_bytes(&shape);
+            let parity = self.parity();
+            let pool = self.pool.as_mut().expect("pool");
+            let arena = pool.act_arena(node, parity);
+            let r = pool.alloc(arena, bytes);
+            let used = pool.arena(arena).used();
+            self.peaks[node][parity] = self.peaks[node][parity].max(used);
+            Some(r)
+        };
+        self.push_meta(TensorMeta { name, dtype, shape, op, src, placement, buf, group })
+    }
+
+    fn push_entry(&mut self, ids: Vec<TensorId>) {
+        self.graph.exec.push(ExecEntry { bundle: TensorBundle::new(ids) });
+    }
+
+    // ---- op interfaces (bundle-level, the paper's module API) -------------
+
+    /// Elementwise/unary helper: apply `op` pairing each part of `x`
+    /// (and optionally `y`) — Serial mode at width 1, Parallel mode at
+    /// width G.
+    fn zip_op(
+        &mut self,
+        tag: &str,
+        op: OpKind,
+        dtype: DType,
+        out_shape_of: impl Fn(&Graph, TensorId) -> Vec<usize>,
+        srcs: Vec<&TensorBundle>,
+    ) -> TensorBundle {
+        let width = srcs[0].width();
+        for s in &srcs {
+            assert_eq!(s.width(), width, "bundle width mismatch in {tag}");
+        }
+        let mut out = Vec::with_capacity(width);
+        for part in 0..width {
+            let src: Vec<TensorId> = srcs.iter().map(|b| b.get(part)).collect();
+            let shape = out_shape_of(&self.graph, src[0]);
+            let group = if width > 1 { Some(part) } else { self.graph.meta(src[0]).group };
+            let name = format!("{tag}.{}.{part}", self.graph.tensors.len());
+            let id = self.push_op(name, dtype, shape, op.clone(), src, group, None);
+            out.push(id);
+        }
+        self.push_entry(out.clone());
+        TensorBundle::new(out)
+    }
+
+    /// Embedding lookup: tokens [rows] i32 × table [vocab, d] → [rows, d].
+    pub fn embed(&mut self, table: &TensorBundle, tokens: &TensorBundle) -> TensorBundle {
+        let d = self.graph.meta(table.single()).row_len();
+        let rows = self.graph.meta(tokens.single()).numel();
+        let src = vec![table.single(), tokens.single()];
+        let id = self.push_op(
+            format!("embed.{}", self.graph.tensors.len()),
+            DType::F32,
+            vec![rows, d],
+            OpKind::Embed,
+            src,
+            None,
+            None,
+        );
+        self.push_entry(vec![id]);
+        TensorBundle::one(id)
+    }
+
+    /// RMSNorm: x [rows, d] × gain [d] → [rows, d].
+    pub fn rmsnorm(&mut self, x: &TensorBundle, g: &TensorBundle, eps: f32) -> TensorBundle {
+        self.zip_op(
+            "rmsnorm",
+            OpKind::RmsNorm { eps },
+            DType::F32,
+            |gr, x| gr.meta(x).shape.clone(),
+            vec![x, g],
+        )
+    }
+
+    /// Per-head RMSNorm (QK-norm).
+    pub fn rmsnorm_heads(
+        &mut self,
+        x: &TensorBundle,
+        g: &TensorBundle,
+        heads: usize,
+        head_dim: usize,
+        eps: f32,
+    ) -> TensorBundle {
+        self.zip_op(
+            "qknorm",
+            OpKind::RmsNormHeads { eps, heads, head_dim },
+            DType::F32,
+            |gr, x| gr.meta(x).shape.clone(),
+            vec![x, g],
+        )
+    }
+
+    /// Matmul: x [rows, k] × w [n, k] → [rows, n]. In TP mode both
+    /// bundles have width G and part g runs on group g (Parallel mode).
+    pub fn matmul(&mut self, x: &TensorBundle, w: &TensorBundle) -> TensorBundle {
+        assert_eq!(x.width(), w.width(), "matmul bundle widths");
+        let mut out = Vec::with_capacity(x.width());
+        for (part, (xs, ws)) in x.zip(w).enumerate() {
+            let rows = self.graph.meta(xs).rows();
+            let n = self.graph.meta(ws).rows();
+            let k = self.graph.meta(ws).row_len();
+            assert_eq!(
+                self.graph.meta(xs).row_len(),
+                k,
+                "matmul K mismatch: {} vs {}",
+                self.graph.meta(xs).name,
+                self.graph.meta(ws).name
+            );
+            let group = if x.width() > 1 { Some(part) } else { self.graph.meta(xs).group };
+            let name = format!("matmul.{}.{part}", self.graph.tensors.len());
+            let id = self.push_op(name, DType::F32, vec![rows, n], OpKind::MatMul,
+                                  vec![xs, ws], group, None);
+            out.push(id);
+        }
+        self.push_entry(out.clone());
+        TensorBundle::new(out)
+    }
+
+    /// RoPE on [rows, heads*head_dim].
+    pub fn rope(&mut self, x: &TensorBundle, heads: usize, head_dim: usize, theta: f32) -> TensorBundle {
+        self.zip_op(
+            "rope",
+            OpKind::Rope { theta, heads, head_dim },
+            DType::F32,
+            |gr, x| gr.meta(x).shape.clone(),
+            vec![x],
+        )
+    }
+
+    /// Store new K/V rows into the cache; output aliases the cache.
+    pub fn store_kv(
+        &mut self,
+        kv: &TensorBundle,
+        cache: &TensorBundle,
+        kv_heads: usize,
+        head_dim: usize,
+        max_seq: usize,
+    ) -> TensorBundle {
+        assert_eq!(kv.width(), cache.width());
+        let mut out = Vec::with_capacity(kv.width());
+        for (part, (ks, cs)) in kv.zip(cache).enumerate() {
+            let group = if kv.width() > 1 { Some(part) } else { self.graph.meta(ks).group };
+            let alias = self.graph.meta(cs).buf;
+            let shape = self.graph.meta(cs).shape.clone();
+            let placement = self.graph.meta(cs).placement.clone();
+            let name = format!("store_kv.{}.{part}", self.graph.tensors.len());
+            let id = self.push_op(name, DType::F32, shape,
+                                  OpKind::StoreKv { kv_heads, head_dim, max_seq },
+                                  vec![ks, cs], group, alias.or(Some(crate::memory::BufRef { arena: 0, off: 0, len: 0 })));
+            // placement must mirror the cache, not the group default
+            self.graph.meta_mut(id).placement = placement;
+            out.push(id);
+        }
+        self.push_entry(out.clone());
+        TensorBundle::new(out)
+    }
+
+    /// Attention over the cache: q [rows, heads*hd] → [rows, heads*hd].
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention(
+        &mut self,
+        q: &TensorBundle,
+        k_cache: &TensorBundle,
+        v_cache: &TensorBundle,
+        heads: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        max_seq: usize,
+    ) -> TensorBundle {
+        self.zip_op(
+            "attn",
+            OpKind::Attention { heads, kv_heads, head_dim, max_seq },
+            DType::F32,
+            |gr, q| gr.meta(q).shape.clone(),
+            vec![q, k_cache, v_cache],
+        )
+    }
+
+    pub fn silu(&mut self, x: &TensorBundle) -> TensorBundle {
+        self.zip_op("silu", OpKind::Silu, DType::F32, |g, x| g.meta(x).shape.clone(), vec![x])
+    }
+
+    pub fn add(&mut self, a: &TensorBundle, b: &TensorBundle) -> TensorBundle {
+        self.zip_op("add", OpKind::Add, DType::F32, |g, x| g.meta(x).shape.clone(), vec![a, b])
+    }
+
+    pub fn mul(&mut self, a: &TensorBundle, b: &TensorBundle) -> TensorBundle {
+        self.zip_op("mul", OpKind::Mul, DType::F32, |g, x| g.meta(x).shape.clone(), vec![a, b])
+    }
+
+    /// Fused silu(gate)·up.
+    pub fn swiglu(&mut self, gate: &TensorBundle, up: &TensorBundle) -> TensorBundle {
+        self.zip_op("swiglu", OpKind::SwiGlu, DType::F32, |g, x| g.meta(x).shape.clone(), vec![gate, up])
+    }
+
+    /// Take one row of a [rows, d] tensor as [1, d] (prefill extracts
+    /// the last position before the LM head).
+    pub fn slice_row(&mut self, x: &TensorBundle, row: usize) -> TensorBundle {
+        let xid = x.single();
+        let d = self.graph.meta(xid).row_len();
+        let group = self.graph.meta(xid).group;
+        let id = self.push_op(
+            format!("slice_row.{}", self.graph.tensors.len()),
+            DType::F32,
+            vec![1, d],
+            OpKind::SliceRow { row },
+            vec![xid],
+            group,
+            None,
+        );
+        self.push_entry(vec![id]);
+        TensorBundle::one(id)
+    }
+
+    /// **Scatter** (§3.3): copy a single tensor into each group's local
+    /// memory, reconfiguring execution into G parallel subgraphs.
+    pub fn scatter(&mut self, x: &TensorBundle) -> TensorBundle {
+        let xid = x.single();
+        let g = self.n_groups();
+        if g == 1 {
+            return x.clone();
+        }
+        let shape = self.graph.meta(xid).shape.clone();
+        let mut out = Vec::with_capacity(g);
+        for part in 0..g {
+            let name = format!("scatter.{}.{part}", self.graph.tensors.len());
+            let id = self.push_op(name, DType::F32, shape.clone(), OpKind::Copy,
+                                  vec![xid], Some(part), None);
+            out.push(id);
+        }
+        self.push_entry(out.clone());
+        TensorBundle::new(out)
+    }
+
+    /// **Gather** (§3.3): sum the G partial outputs back into one tensor
+    /// and return the pool to single-group execution.
+    pub fn gather(&mut self, parts: &TensorBundle) -> TensorBundle {
+        if parts.is_single() {
+            return parts.clone();
+        }
+        let shape = self.graph.meta(parts.get(0)).shape.clone();
+        let src: Vec<TensorId> = parts.iter().collect();
+        let id = self.push_op(
+            format!("gather.{}", self.graph.tensors.len()),
+            DType::F32,
+            shape,
+            OpKind::AddN,
+            src,
+            None,
+            None,
+        );
+        self.push_entry(vec![id]);
+        TensorBundle::one(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_pool() -> MemoryPool {
+        MemoryPool::new(2, 1 << 20, 1 << 20, 1 << 20)
+    }
+
+    fn leafy(b: &mut GraphBuilder, name: &str, shape: Vec<usize>) -> TensorBundle {
+        TensorBundle::one(b.leaf(name, DType::F32, shape, Placement::Node(0)))
+    }
+
+    #[test]
+    fn serial_chain_builds_in_order() {
+        let mut b = GraphBuilder::new(Some(small_pool()), vec![0], Placement::Node(0));
+        let x = leafy(&mut b, "x", vec![1, 64]);
+        let g = leafy(&mut b, "g", vec![64]);
+        let w = leafy(&mut b, "w", vec![32, 64]);
+        let h = b.rmsnorm(&x, &g, 1e-6);
+        let y = b.matmul(&h, &w);
+        assert_eq!(b.graph.meta(y.single()).shape, vec![1, 32]);
+        let (graph, _) = b.finish();
+        assert_eq!(graph.exec.len(), 2);
+        assert!(graph.check_topological().is_ok());
+    }
+
+    #[test]
+    fn scatter_parallel_gather_modes() {
+        let mut b = GraphBuilder::new(Some(small_pool()), vec![0, 1], Placement::Node(0));
+        let x = leafy(&mut b, "x", vec![1, 64]);
+        let w0 = b.leaf("w0", DType::F32, vec![32, 64], Placement::Node(0));
+        let w1 = b.leaf("w1", DType::F32, vec![32, 64], Placement::Node(1));
+        let ws = TensorBundle::new(vec![w0, w1]);
+        let xs = b.scatter(&x); // 1 → 2
+        assert_eq!(xs.width(), 2);
+        let ys = b.matmul(&xs, &ws); // parallel
+        assert_eq!(ys.width(), 2);
+        let z = b.gather(&ys); // 2 → 1
+        assert!(z.is_single());
+        // subgraph tensors are placed on their group's node
+        assert_eq!(b.graph.meta(ys.get(0)).placement, Placement::Node(0));
+        assert_eq!(b.graph.meta(ys.get(1)).placement, Placement::Node(1));
+        assert_eq!(b.graph.meta(ys.get(1)).group, Some(1));
+        let (graph, _) = b.finish();
+        assert!(graph.check_topological().is_ok());
+        // exec list: scatter entry (width 2), matmul entry (width 2), gather (1)
+        assert_eq!(graph.exec[0].bundle.width(), 2);
+        assert_eq!(graph.exec[1].bundle.width(), 2);
+        assert_eq!(graph.exec[2].bundle.width(), 1);
+    }
+
+    #[test]
+    fn single_group_scatter_is_identity() {
+        let mut b = GraphBuilder::new(Some(small_pool()), vec![0], Placement::Node(0));
+        let x = leafy(&mut b, "x", vec![1, 8]);
+        let xs = b.scatter(&x);
+        assert_eq!(xs, x);
+        let z = b.gather(&xs);
+        assert_eq!(z, x);
+        assert_eq!(b.graph.exec.len(), 0);
+    }
+
+    #[test]
+    fn layer_parity_reuses_arena_space() {
+        let mut b = GraphBuilder::new(Some(small_pool()), vec![0], Placement::Node(0));
+        let x = leafy(&mut b, "x", vec![1, 64]);
+        let g = leafy(&mut b, "g", vec![64]);
+        b.enter_layer(0);
+        let h0 = b.rmsnorm(&x, &g, 1e-6);
+        let off0 = b.graph.buf(h0.single()).off;
+        b.enter_layer(1);
+        let _h1 = b.rmsnorm(&h0, &g, 1e-6);
+        b.enter_layer(2);
+        let h2 = b.rmsnorm(&x, &g, 1e-6);
+        // layer 2 reuses layer 0's arena offsets (parity rewind)
+        assert_eq!(b.graph.buf(h2.single()).off, off0);
+    }
+
+    #[test]
+    fn sim_builder_has_no_buffers() {
+        let mut b = GraphBuilder::sim(vec![0, 1, 2, 3], Placement::Node(0));
+        let x = TensorBundle::one(b.leaf("x", DType::F32, vec![1, 128], Placement::Node(0)));
+        let xs = b.scatter(&x);
+        assert_eq!(xs.width(), 4);
+        assert!(b.graph.meta(xs.get(2)).buf.is_none());
+    }
+
+    #[test]
+    fn matmul_rejects_k_mismatch() {
+        let mut b = GraphBuilder::new(Some(small_pool()), vec![0], Placement::Node(0));
+        let x = leafy(&mut b, "x", vec![1, 64]);
+        let w = leafy(&mut b, "w", vec![32, 128]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.matmul(&x, &w)));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn activation_footprint_reported() {
+        let mut b = GraphBuilder::new(Some(small_pool()), vec![0], Placement::Node(0));
+        let x = leafy(&mut b, "x", vec![4, 256]);
+        let g = leafy(&mut b, "g", vec![256]);
+        b.enter_layer(0);
+        b.rmsnorm(&x, &g, 1e-6);
+        assert!(b.activation_footprint() >= 4 * 256 * 4);
+    }
+}

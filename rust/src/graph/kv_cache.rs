@@ -1,0 +1,125 @@
+//! KV-cache management (paper §2.5: "creation, injection (set) and
+//! retrieval (get)").
+//!
+//! Caches are persistent leaves in the KV arenas. Under TP the cache is
+//! sharded by KV head across NUMA nodes — each subgraph only ever
+//! touches its node-local shard, so decode attention never crosses the
+//! NUMA boundary (§3.2: W_k/W_v are head-partitioned).
+
+use crate::numa::Placement;
+use crate::tensor::{TensorBundle, TensorId};
+
+use super::builder::GraphBuilder;
+
+/// The K and V cache bundles of one transformer layer.
+#[derive(Clone, Debug)]
+pub struct LayerKv {
+    pub k: TensorBundle,
+    pub v: TensorBundle,
+    /// KV heads held by each part (== kv_heads / G).
+    pub heads_per_part: usize,
+}
+
+/// All layers' caches for one model instance.
+pub struct KvCacheSet {
+    pub layers: Vec<LayerKv>,
+    pub max_seq: usize,
+}
+
+impl KvCacheSet {
+    /// Create caches: one leaf per layer per TP part, shaped
+    /// `[kv_heads/G, max_seq, head_dim]`, placed on the part's node.
+    /// With `G == 1` the placement argument overrides (llama.cpp's
+    /// interleaved UMA cache vs ArcLight's node-local cache).
+    pub fn create(
+        b: &mut GraphBuilder,
+        n_layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        max_seq: usize,
+        single_placement: Placement,
+    ) -> KvCacheSet {
+        let g = b.n_groups();
+        assert!(kv_heads % g == 0, "kv_heads {kv_heads} not divisible by {g} groups");
+        let hpp = kv_heads / g;
+        let mut layers = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let mut ks = Vec::with_capacity(g);
+            let mut vs = Vec::with_capacity(g);
+            for part in 0..g {
+                let placement = if g == 1 {
+                    single_placement.clone()
+                } else {
+                    Placement::Node(b.group_node(part))
+                };
+                let shape = vec![hpp, max_seq, head_dim];
+                ks.push(b.kv_leaf(&format!("kv.{l}.k.{part}"), shape.clone(), placement.clone()));
+                vs.push(b.kv_leaf(&format!("kv.{l}.v.{part}"), shape, placement));
+            }
+            layers.push(LayerKv {
+                k: TensorBundle::new(ks),
+                v: TensorBundle::new(vs),
+                heads_per_part: hpp,
+            });
+        }
+        KvCacheSet { layers, max_seq }
+    }
+
+    pub fn layer(&self, l: usize) -> &LayerKv {
+        &self.layers[l]
+    }
+
+    /// Every cache tensor id (weight-loader / reset iteration).
+    pub fn all_ids(&self) -> Vec<TensorId> {
+        self.layers
+            .iter()
+            .flat_map(|l| l.k.iter().chain(l.v.iter()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::MemoryPool;
+    use crate::tensor::DType;
+
+    #[test]
+    fn tp_cache_is_sharded_by_head() {
+        let pool = MemoryPool::new(2, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0, 1], Placement::Node(0));
+        let kv = KvCacheSet::create(&mut b, 2, 4, 16, 32, Placement::Node(0));
+        assert_eq!(kv.layers.len(), 2);
+        assert_eq!(kv.layer(0).k.width(), 2);
+        assert_eq!(kv.layer(0).heads_per_part, 2);
+        let m = b.graph.meta(kv.layer(0).k.get(1));
+        assert_eq!(m.shape, vec![2, 32, 16]);
+        assert_eq!(m.placement, Placement::Node(1));
+        assert_eq!(m.dtype, DType::F32);
+    }
+
+    #[test]
+    fn single_mode_uses_given_placement() {
+        let pool = MemoryPool::new(4, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0], Placement::Node(0));
+        let kv = KvCacheSet::create(&mut b, 1, 4, 8, 16, Placement::Interleaved(4));
+        let m = b.graph.meta(kv.layer(0).k.single());
+        assert_eq!(m.placement, Placement::Interleaved(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn indivisible_heads_rejected() {
+        let pool = MemoryPool::new(2, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0, 1], Placement::Node(0));
+        KvCacheSet::create(&mut b, 1, 3, 8, 16, Placement::Node(0));
+    }
+
+    #[test]
+    fn all_ids_enumerates_every_shard() {
+        let pool = MemoryPool::new(2, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0, 1], Placement::Node(0));
+        let kv = KvCacheSet::create(&mut b, 3, 2, 8, 16, Placement::Node(0));
+        assert_eq!(kv.all_ids().len(), 3 * 2 * 2);
+    }
+}

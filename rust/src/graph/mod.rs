@@ -1,0 +1,94 @@
+//! Forward graph builder (paper §2.5, appendix A.1).
+//!
+//! ArcLight uses a *static* computation graph: the frontend composes
+//! tensor-operation interfaces which append nodes to a sequential
+//! container as they are constructed — model-definition order **is**
+//! topological order, so no sorting pass is needed. The container holds
+//! [`TensorBundle`]s and supports the paper's four construction modes:
+//!
+//! * **Serial** — a 1-bundle follows a 1-bundle (normal ops);
+//! * **Scatter** — a G-bundle follows a 1-bundle (enter a TP region);
+//! * **Parallel** — a G-bundle follows a G-bundle element-wise (ops
+//!   inside a TP region);
+//! * **Gather** — a 1-bundle follows a G-bundle (leave a TP region).
+//!
+//! Graph-level KV-cache management (create/set/get) lives in
+//! [`kv_cache`].
+
+pub mod builder;
+pub mod kv_cache;
+pub mod node;
+
+pub use builder::GraphBuilder;
+pub use kv_cache::KvCacheSet;
+pub use node::{OpKind, TensorMeta};
+
+use crate::memory::BufRef;
+use crate::tensor::{TensorBundle, TensorId};
+
+/// One entry of the static execution list: the bundle of tensors whose
+/// producing ops run "at the same position" — width 1 in single-graph
+/// mode, width G inside a TP region (one per subgraph).
+#[derive(Clone, Debug)]
+pub struct ExecEntry {
+    pub bundle: TensorBundle,
+}
+
+/// The static computation graph: a tensor table plus the execution list.
+#[derive(Default)]
+pub struct Graph {
+    pub tensors: Vec<TensorMeta>,
+    pub exec: Vec<ExecEntry>,
+}
+
+impl Graph {
+    pub fn meta(&self, id: TensorId) -> &TensorMeta {
+        &self.tensors[id.index()]
+    }
+
+    pub fn meta_mut(&mut self, id: TensorId) -> &mut TensorMeta {
+        &mut self.tensors[id.index()]
+    }
+
+    pub fn buf(&self, id: TensorId) -> BufRef {
+        self.meta(id).buf.expect("tensor has no buffer")
+    }
+
+    pub fn find(&self, name: &str) -> Option<TensorId> {
+        self.tensors
+            .iter()
+            .position(|t| t.name == name)
+            .map(|i| TensorId(i as u32))
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// Verify the model-definition-order invariant the paper relies on:
+    /// every source of every executed node appears earlier in the list
+    /// (or is a leaf). Returns the violating node if any.
+    pub fn check_topological(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.tensors.len()];
+        for (i, t) in self.tensors.iter().enumerate() {
+            if matches!(t.op, node::OpKind::Leaf) {
+                seen[i] = true;
+            }
+        }
+        for entry in &self.exec {
+            for id in entry.bundle.iter() {
+                for &src in &self.meta(id).src {
+                    if !seen[src.index()] {
+                        return Err(format!(
+                            "node '{}' uses '{}' before it is produced",
+                            self.meta(id).name,
+                            self.meta(src).name
+                        ));
+                    }
+                }
+                seen[id.index()] = true;
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,137 @@
+//! Tensor headers and operation kinds.
+
+use crate::memory::BufRef;
+use crate::numa::Placement;
+use crate::tensor::{DType, TensorId};
+
+/// The operation producing a tensor (graph node type). Parameters that
+/// are fixed at graph-build time ride in the variant; per-step values
+/// (current position, kv length) come from the scheduler's `ExecParams`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    /// No producer: weights, inputs, KV caches.
+    Leaf,
+    /// src: [emb_table, tokens] → [rows, d] f32.
+    Embed,
+    /// src: [x, gain]; RMS-normalize rows.
+    RmsNorm { eps: f32 },
+    /// src: [x, gain]; per-head RMSNorm (Qwen3 QK-norm).
+    RmsNormHeads { eps: f32, heads: usize, head_dim: usize },
+    /// src: [x, w] → x·wᵀ. Weight may be F32/Q4_0/Q8_0.
+    MatMul,
+    /// src: [x]; rotary embedding at position `pos0 + row`.
+    Rope { theta: f32, heads: usize, head_dim: usize },
+    /// src: [kv_rows, cache-leaf]; writes rows into the cache at the
+    /// current position. Output aliases the cache buffer.
+    StoreKv { kv_heads: usize, head_dim: usize, max_seq: usize },
+    /// src: [q, k_cache, v_cache] → [rows, heads*head_dim].
+    Attention { heads: usize, kv_heads: usize, head_dim: usize, max_seq: usize },
+    /// src: [a] → silu(a).
+    Silu,
+    /// src: [a, b] → a + b.
+    Add,
+    /// src: [a, b] → a * b.
+    Mul,
+    /// src: [gate, up] → silu(gate) * up (fused).
+    SwiGlu,
+    /// src: [x] → copy (Scatter desugars to per-node copies).
+    Copy,
+    /// src: [x ([rows, d])] → x[row] as [1, d] (prefill takes the last
+    /// row before the LM head so logits are computed once, not ×rows).
+    SliceRow { row: usize },
+    /// src: [p_0, ..., p_{G-1}] → Σ p_g (the Gather reduction).
+    AddN,
+}
+
+impl OpKind {
+    pub fn is_leaf(&self) -> bool {
+        matches!(self, OpKind::Leaf)
+    }
+
+    /// Human name for traces and error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Leaf => "leaf",
+            OpKind::Embed => "embed",
+            OpKind::RmsNorm { .. } => "rmsnorm",
+            OpKind::RmsNormHeads { .. } => "rmsnorm_heads",
+            OpKind::MatMul => "matmul",
+            OpKind::Rope { .. } => "rope",
+            OpKind::StoreKv { .. } => "store_kv",
+            OpKind::Attention { .. } => "attention",
+            OpKind::Silu => "silu",
+            OpKind::Add => "add",
+            OpKind::Mul => "mul",
+            OpKind::SwiGlu => "swiglu",
+            OpKind::Copy => "copy",
+            OpKind::SliceRow { .. } => "slice_row",
+            OpKind::AddN => "add_n",
+        }
+    }
+}
+
+/// A tensor header (paper §2.2): metadata + source links + placement +
+/// the data-area reference assigned by the memory manager.
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub op: OpKind,
+    pub src: Vec<TensorId>,
+    /// Which NUMA node(s) own the bytes — drives both arena selection
+    /// (real execution) and the bandwidth cost model (simulation).
+    pub placement: Placement,
+    /// Data area; `None` until the memory planner assigns one (leaf
+    /// inputs of the simulator-only path keep `None`).
+    pub buf: Option<BufRef>,
+    /// TP subgraph index (`None` = single-graph mode / all groups).
+    pub group: Option<usize>,
+}
+
+impl TensorMeta {
+    pub fn bytes(&self) -> usize {
+        self.dtype.tensor_bytes(&self.shape)
+    }
+
+    pub fn rows(&self) -> usize {
+        crate::tensor::rows(&self.shape)
+    }
+
+    pub fn row_len(&self) -> usize {
+        crate::tensor::row_len(&self.shape)
+    }
+
+    pub fn numel(&self) -> usize {
+        crate::tensor::numel(&self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_byte_math() {
+        let m = TensorMeta {
+            name: "w".into(),
+            dtype: DType::Q4_0,
+            shape: vec![4, 64],
+            op: OpKind::Leaf,
+            src: vec![],
+            placement: Placement::Node(0),
+            buf: None,
+            group: None,
+        };
+        assert_eq!(m.bytes(), 4 * 2 * 18);
+        assert_eq!(m.rows(), 4);
+        assert_eq!(m.row_len(), 64);
+    }
+
+    #[test]
+    fn op_names_unique_enough() {
+        assert_eq!(OpKind::MatMul.name(), "matmul");
+        assert!(OpKind::Leaf.is_leaf());
+        assert!(!OpKind::Add.is_leaf());
+    }
+}

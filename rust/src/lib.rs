@@ -1,0 +1,24 @@
+//! # ArcLight-RS
+//!
+//! A reproduction of **"ArcLight: A Lightweight LLM Inference
+//! Architecture for Many-Core CPUs"** — a lightweight, modular LLM
+//! inference engine with NUMA-aware memory management, multi-view
+//! thread scheduling and cross-NUMA tensor parallelism, plus the
+//! simulated many-core platform the evaluation runs on (see DESIGN.md).
+
+pub mod baseline;
+pub mod frontend;
+pub mod graph;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod ops;
+pub mod numa;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod server;
+pub mod tensor;
+pub mod threads;
+pub mod util;

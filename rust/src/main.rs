@@ -1,0 +1,321 @@
+//! ArcLight CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   generate  write a synthetic ALF model file
+//!   run       load a model and generate text (quickstart)
+//!   serve     start the TCP serving API with N engine slots
+//!   report    regenerate the paper's Table 1 / Figures 10–13
+//!   probe     print the simulated machine + bandwidth matrix
+//!   trace     export a Chrome-trace of one simulated decode step
+//!   golden    cross-check the native engine against PJRT artifacts
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use arclight::baseline::Strategy;
+use arclight::frontend::{ByteTokenizer, Engine, EngineOptions, Sampler};
+use arclight::model::{synth, ModelConfig};
+use arclight::numa::Topology;
+use arclight::report;
+use arclight::sched::SyncMode;
+use arclight::server::{BatcherConfig, EngineSlot, Router, ServerHandle};
+
+/// Tiny std-only flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv.get(i + 1).cloned().unwrap_or_else(|| "true".into());
+                flags.insert(key.to_string(), val);
+                i += 2;
+            } else {
+                bail!("unexpected argument '{a}'");
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+fn preset(name: &str) -> Result<ModelConfig> {
+    Ok(match name {
+        "tiny" => ModelConfig::tiny(),
+        "small" | "small-25m" => ModelConfig::small_25m(),
+        "qwen3-4b" => ModelConfig::qwen3_4b(),
+        other => bail!("unknown preset '{other}' (tiny|small|qwen3-4b)"),
+    })
+}
+
+fn strategy(args: &Args) -> Result<Strategy> {
+    let nodes = args.usize("nodes", 1);
+    Ok(match args.str_or("strategy", "arclight") {
+        "arclight" if nodes <= 1 => Strategy::arclight_single(),
+        "arclight" => Strategy::arclight_tp(nodes, sync_mode(args)?),
+        "llama-isolate" => Strategy::llama_isolate(),
+        "llama-distribute" => Strategy::llama_distribute(nodes.max(2)),
+        other => bail!("unknown strategy '{other}'"),
+    })
+}
+
+fn sync_mode(args: &Args) -> Result<SyncMode> {
+    match args.str_or("sync", "b") {
+        "a" | "A" => Ok(SyncMode::SyncA),
+        "b" | "B" => Ok(SyncMode::SyncB),
+        other => bail!("unknown sync mode '{other}'"),
+    }
+}
+
+fn engine_opts(args: &Args) -> Result<EngineOptions> {
+    Ok(EngineOptions {
+        strategy: strategy(args)?,
+        threads: args.usize("threads", 4),
+        topo: Topology::kunpeng920(),
+        prefill_rows: args.get("prefill-rows").and_then(|v| v.parse().ok()),
+        seed: args.usize("seed", 0) as u64,
+    })
+}
+
+fn load_engine(args: &Args) -> Result<Engine> {
+    let opts = engine_opts(args)?;
+    match args.get("model") {
+        Some(path) if path.ends_with(".alf") => Engine::from_alf(&PathBuf::from(path), &opts),
+        Some(name) => Engine::new_synthetic(preset(name)?, &opts),
+        None => Engine::new_synthetic(ModelConfig::small_25m(), &opts),
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = preset(args.str_or("preset", "small"))?;
+    let out = PathBuf::from(args.str_or("out", "model.alf"));
+    let seed = args.usize("seed", 0) as u64;
+    synth::generate_alf(&cfg, seed, &out)?;
+    println!(
+        "wrote {} ({} params, {:.1} MB Q4_0 weights)",
+        out.display(),
+        cfg.n_params(),
+        cfg.q4_weight_bytes() as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut engine = load_engine(args)?;
+    let tok = ByteTokenizer;
+    let prompt_text = args.str_or("prompt", "The many-core machine hummed");
+    let max_new = args.usize("max-new", 64);
+    let prompt = tok.encode(prompt_text, true);
+    let sampler = match args.get("top-k").and_then(|v| v.parse::<usize>().ok()) {
+        None | Some(1) => Sampler::greedy(),
+        Some(k) => Sampler::top_k(k, 0.9, args.usize("seed", 0) as u64),
+    };
+    let res = engine.generate(&prompt, max_new, &sampler);
+    println!("{}", tok.decode(&res.tokens));
+    eprintln!(
+        "prefill: {} tok in {:.3}s ({:.1} tok/s) | decode: {} tok in {:.3}s ({:.1} tok/s)",
+        res.prefill_tokens,
+        res.prefill_seconds,
+        res.prefill_tok_per_s(),
+        res.decode_tokens,
+        res.decode_seconds,
+        res.decode_tok_per_s()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:8763");
+    let slots = args.usize("slots", 2);
+    let router = Router::new(BatcherConfig {
+        queue_capacity: args.usize("queue", 256),
+        max_batch: args.usize("max-batch", 8),
+        batch_window: std::time::Duration::from_millis(args.usize("window-ms", 2) as u64),
+    });
+    let mut slot_threads = Vec::new();
+    for i in 0..slots {
+        let engine = load_engine(args).with_context(|| format!("building slot {i}"))?;
+        let r = router.clone();
+        slot_threads.push(std::thread::spawn(move || EngineSlot::new(engine).serve(r)));
+    }
+    let server = ServerHandle::start(addr, router)?;
+    println!("arclight serving on {} with {slots} slot(s); Ctrl-C to stop", server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_report(args: &Args, which: &str) -> Result<()> {
+    let topo = Topology::kunpeng920();
+    let cfg = preset(args.str_or("preset", "qwen3-4b"))?;
+    let samples = args.usize("samples", 4);
+    match which {
+        "table1" => {
+            let t = report::table1::bandwidth_table(&topo, topo.cores_per_node, 1.0);
+            print!("{}", report::table1::render(&t));
+        }
+        "fig10" => {
+            let series = report::figures::fig10(&cfg, &topo, samples);
+            print!(
+                "{}",
+                report::render_table(
+                    "Figure 10: decode tok/s, single NUMA node (prompt 15, gen 256)",
+                    "threads",
+                    &series
+                )
+            );
+        }
+        "fig11" => {
+            for nodes in [2usize, 4] {
+                let series = report::figures::fig11(&cfg, &topo, nodes, samples);
+                print!(
+                    "{}",
+                    report::render_table(
+                        &format!("Figure 11 (N={nodes}): decode tok/s, multi-NUMA (prompt 15, gen 256)"),
+                        "threads",
+                        &series
+                    )
+                );
+            }
+        }
+        "fig12" => {
+            for nodes in [2usize, 4] {
+                let series = report::figures::fig12(&cfg, &topo, nodes, samples);
+                print!(
+                    "{}",
+                    report::render_table(
+                        &format!("Figure 12 (N={nodes}): decode tok/s, prompt 300"),
+                        "threads",
+                        &series
+                    )
+                );
+            }
+        }
+        "fig13" => {
+            for nodes in [2usize, 4] {
+                let series = report::figures::fig13(&cfg, &topo, nodes);
+                print!(
+                    "{}",
+                    report::render_table(
+                        &format!("Figure 13 (N={nodes}): prefill tok/s, prompt 300"),
+                        "threads",
+                        &series
+                    )
+                );
+            }
+        }
+        "all" => {
+            for f in ["table1", "fig10", "fig11", "fig12", "fig13"] {
+                cmd_report(args, f)?;
+                println!();
+            }
+        }
+        other => bail!("unknown report '{other}' (table1|fig10|fig11|fig12|fig13|all)"),
+    }
+    Ok(())
+}
+
+fn cmd_probe(args: &Args) -> Result<()> {
+    let topo = Topology::kunpeng920();
+    println!(
+        "simulated platform: {} NUMA nodes × {} cores = {} cores",
+        topo.n_nodes(),
+        topo.cores_per_node,
+        topo.n_cores()
+    );
+    println!("core f32 rate: {:.1} GFLOP/s", topo.core_flops / 1e9);
+    let readers = args.usize("readers", topo.cores_per_node);
+    let t = report::table1::bandwidth_table(&topo, readers, 1.0);
+    print!("{}", report::table1::render(&t));
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let topo = Topology::kunpeng920();
+    let cfg = preset(args.str_or("preset", "qwen3-4b"))?;
+    let s = strategy(args)?;
+    let threads = args.usize("threads", 192);
+    let spec = s.build_spec(cfg, topo.n_nodes()).with_sim_only(true);
+    let m = arclight::model::ModelGraphs::build(spec);
+    let cores = s.bind_cores(&topo, threads);
+    let (_, tp) = s.organizations(&cores);
+    let events = arclight::report::trace::trace_pass(
+        &m.decode,
+        &arclight::numa::CostModel::new(topo),
+        &cores,
+        &tp,
+        arclight::sched::ExecParams { pos: args.usize("pos", 100), rows: 1 },
+    );
+    let out = args.str_or("out", "decode_trace.json");
+    std::fs::write(out, arclight::report::trace::to_chrome_json(&events))?;
+    let total: f64 = events.iter().map(|e| e.start_us + e.dur_us).fold(0.0, f64::max);
+    println!(
+        "wrote {} events ({:.2} ms virtual decode step) to {out} — open in chrome://tracing",
+        events.len(),
+        total / 1e3
+    );
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let session = arclight::runtime::PjrtSession::load(&dir)?;
+    let prompt: Vec<i32> = (0..session.manifest.prompt_len as i32).collect();
+    let pjrt_tokens = session.generate(&prompt, 8)?;
+
+    let opts = EngineOptions {
+        strategy: Strategy::arclight_single(),
+        threads: 2,
+        topo: Topology::kunpeng920(),
+        prefill_rows: Some(prompt.len()),
+        seed: 0,
+    };
+    let mut engine = Engine::from_alf(&dir.join("tiny.alf"), &opts)?;
+    let res = engine.generate(&prompt, 8, &Sampler::greedy());
+    if pjrt_tokens == res.tokens {
+        println!("golden check OK: native engine matches PJRT ({pjrt_tokens:?})");
+        Ok(())
+    } else {
+        bail!("golden mismatch: pjrt {pjrt_tokens:?} vs native {:?}", res.tokens)
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        eprintln!("usage: arclight <generate|run|serve|report|probe|trace|golden> [--flags]");
+        std::process::exit(2);
+    };
+    let rest = Args::parse(&argv[1..])?;
+    match cmd {
+        "generate" => cmd_generate(&rest),
+        "run" => cmd_run(&rest),
+        "serve" => cmd_serve(&rest),
+        "report" => {
+            let which = rest.str_or("figure", "all").to_string();
+            cmd_report(&rest, &which)
+        }
+        "probe" => cmd_probe(&rest),
+        "trace" => cmd_trace(&rest),
+        "golden" => cmd_golden(&rest),
+        other => bail!("unknown command '{other}'"),
+    }
+}

@@ -1,0 +1,208 @@
+//! A NUMA-tagged bump arena.
+//!
+//! Buffers are carved out single-threaded at *plan* time (`&mut self`);
+//! at *execution* time many worker threads read and write disjoint
+//! regions concurrently through raw-pointer views. The partitioner is
+//! responsible for disjointness (each worker owns a distinct row range
+//! of each output tensor); the unsafe accessors document that contract.
+
+use std::cell::UnsafeCell;
+
+use crate::numa::NodeId;
+use crate::util::align_up;
+
+const ALIGN: usize = 64;
+
+/// A reference to a byte range inside one arena.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BufRef {
+    pub arena: usize,
+    pub off: usize,
+    pub len: usize,
+}
+
+impl BufRef {
+    /// Number of f32 elements this buffer holds.
+    pub fn f32_len(&self) -> usize {
+        self.len / 4
+    }
+}
+
+/// Fixed-capacity bump allocator tagged with its home NUMA node.
+pub struct Arena {
+    node: NodeId,
+    used: usize,
+    data: UnsafeCell<Box<[u8]>>,
+}
+
+// Safety: concurrent access goes through the unsafe slice accessors whose
+// callers guarantee disjointness (see module docs).
+unsafe impl Sync for Arena {}
+unsafe impl Send for Arena {}
+
+impl Arena {
+    pub fn new(node: NodeId, capacity: usize) -> Self {
+        Arena {
+            node,
+            used: 0,
+            data: UnsafeCell::new(vec![0u8; capacity].into_boxed_slice()),
+        }
+    }
+
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    pub fn capacity(&self) -> usize {
+        unsafe { (&*self.data.get()).len() }
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    /// Bump-allocate `bytes` (64-byte aligned). Panics on exhaustion:
+    /// pools are sized up front from the model definition.
+    pub fn alloc(&mut self, bytes: usize) -> usize {
+        let off = align_up(self.used, ALIGN);
+        assert!(
+            off + bytes <= self.capacity(),
+            "arena on node {} exhausted: need {} at {}, capacity {}",
+            self.node,
+            bytes,
+            off,
+            self.capacity()
+        );
+        self.used = off + bytes;
+        off
+    }
+
+    /// Recycle the whole arena (activation buffers between steps).
+    pub fn reset(&mut self) {
+        self.used = 0;
+    }
+
+    /// Rewind the bump pointer (double-buffering: layer `i` reclaims the
+    /// space layer `i-2` used; the planner guarantees those tensors are
+    /// dead). Panics if rewinding forward.
+    pub fn rewind(&mut self, to: usize) {
+        assert!(to <= self.used, "rewind {} past used {}", to, self.used);
+        self.used = to;
+    }
+
+    /// Immutable f32 view of `[off, off+len*4)`.
+    ///
+    /// # Safety
+    /// No concurrent writer may overlap the range; `off` must be 4-aligned
+    /// and within capacity.
+    pub unsafe fn f32s(&self, off: usize, len: usize) -> &[f32] {
+        debug_assert!(off % 4 == 0 && off + len * 4 <= self.capacity());
+        let base = (*self.data.get()).as_ptr().add(off) as *const f32;
+        std::slice::from_raw_parts(base, len)
+    }
+
+    /// Mutable f32 view.
+    ///
+    /// # Safety
+    /// The range must be disjoint from every other live view (the op
+    /// partitioner hands each worker a distinct row range).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn f32s_mut(&self, off: usize, len: usize) -> &mut [f32] {
+        debug_assert!(off % 4 == 0 && off + len * 4 <= self.capacity());
+        let base = (*self.data.get()).as_mut_ptr().add(off) as *mut f32;
+        std::slice::from_raw_parts_mut(base, len)
+    }
+
+    /// Immutable byte view (quantized weights).
+    ///
+    /// # Safety
+    /// As [`Arena::f32s`].
+    pub unsafe fn bytes(&self, off: usize, len: usize) -> &[u8] {
+        debug_assert!(off + len <= self.capacity());
+        let base = (*self.data.get()).as_ptr().add(off);
+        std::slice::from_raw_parts(base, len)
+    }
+
+    /// Mutable byte view.
+    ///
+    /// # Safety
+    /// As [`Arena::f32s_mut`].
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn bytes_mut(&self, off: usize, len: usize) -> &mut [u8] {
+        debug_assert!(off + len <= self.capacity());
+        let base = (*self.data.get()).as_mut_ptr().add(off);
+        std::slice::from_raw_parts_mut(base, len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_aligned_and_monotonic() {
+        let mut a = Arena::new(0, 4096);
+        let x = a.alloc(10);
+        let y = a.alloc(10);
+        assert_eq!(x % 64, 0);
+        assert_eq!(y % 64, 0);
+        assert!(y >= x + 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted")]
+    fn alloc_panics_on_exhaustion() {
+        let mut a = Arena::new(0, 128);
+        a.alloc(100);
+        a.alloc(100);
+    }
+
+    #[test]
+    fn views_roundtrip() {
+        let mut a = Arena::new(1, 1024);
+        let off = a.alloc(16 * 4);
+        unsafe {
+            let w = a.f32s_mut(off, 16);
+            for (i, v) in w.iter_mut().enumerate() {
+                *v = i as f32;
+            }
+            let r = a.f32s(off, 16);
+            assert_eq!(r[7], 7.0);
+        }
+    }
+
+    #[test]
+    fn disjoint_concurrent_writes() {
+        let mut a = Arena::new(0, 4096);
+        let off = a.alloc(64 * 4);
+        let a = std::sync::Arc::new(a);
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || unsafe {
+                let s = a.f32s_mut(off + t * 16 * 4, 16);
+                for v in s.iter_mut() {
+                    *v = t as f32;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        unsafe {
+            let all = a.f32s(off, 64);
+            for t in 0..4 {
+                assert!(all[t * 16..(t + 1) * 16].iter().all(|&v| v == t as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn reset_recycles() {
+        let mut a = Arena::new(0, 256);
+        a.alloc(64);
+        a.reset();
+        assert_eq!(a.used(), 0);
+        assert_eq!(a.alloc(64), 0);
+    }
+}

@@ -1,0 +1,96 @@
+//! Serving metrics: latency histograms and token-throughput counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Process-wide serving metrics (shared by server workers).
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_total: AtomicU64,
+    pub requests_failed: AtomicU64,
+    pub tokens_prefilled: AtomicU64,
+    pub tokens_decoded: AtomicU64,
+    latency: Mutex<Summary>,
+    ttft: Mutex<Summary>,
+    start: Mutex<Option<Instant>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { start: Mutex::new(Some(Instant::now())), ..Default::default() }
+    }
+
+    pub fn record_request(&self, prefill_tokens: usize, decode_tokens: usize,
+                          ttft_s: f64, total_s: f64) {
+        self.requests_total.fetch_add(1, Ordering::Relaxed);
+        self.tokens_prefilled.fetch_add(prefill_tokens as u64, Ordering::Relaxed);
+        self.tokens_decoded.fetch_add(decode_tokens as u64, Ordering::Relaxed);
+        self.latency.lock().unwrap().add(total_s);
+        self.ttft.lock().unwrap().add(ttft_s);
+    }
+
+    pub fn record_failure(&self) {
+        self.requests_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Aggregate decode throughput since startup (token/s).
+    pub fn decode_throughput(&self) -> f64 {
+        let elapsed = self
+            .start
+            .lock()
+            .unwrap()
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        if elapsed == 0.0 {
+            return 0.0;
+        }
+        self.tokens_decoded.load(Ordering::Relaxed) as f64 / elapsed
+    }
+
+    /// Render a JSON snapshot (the `/metrics`-style endpoint).
+    pub fn snapshot(&self) -> crate::util::json::Json {
+        use crate::util::json::obj;
+        let mut lat = self.latency.lock().unwrap().clone();
+        let mut ttft = self.ttft.lock().unwrap().clone();
+        obj(vec![
+            ("requests_total", (self.requests_total.load(Ordering::Relaxed) as usize).into()),
+            ("requests_failed", (self.requests_failed.load(Ordering::Relaxed) as usize).into()),
+            ("tokens_prefilled", (self.tokens_prefilled.load(Ordering::Relaxed) as usize).into()),
+            ("tokens_decoded", (self.tokens_decoded.load(Ordering::Relaxed) as usize).into()),
+            ("decode_tok_per_s", self.decode_throughput().into()),
+            ("latency_p50_s", lat.p50().into()),
+            ("latency_p95_s", lat.p95().into()),
+            ("ttft_p50_s", ttft.p50().into()),
+            ("ttft_p95_s", ttft.p95().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_request(15, 256, 0.1, 1.0);
+        m.record_request(15, 128, 0.2, 0.6);
+        m.record_failure();
+        let s = m.snapshot();
+        assert_eq!(s.get("requests_total").unwrap().as_usize(), Some(2));
+        assert_eq!(s.get("requests_failed").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("tokens_decoded").unwrap().as_usize(), Some(384));
+        let p50 = s.get("latency_p50_s").unwrap().as_f64().unwrap();
+        assert!((p50 - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_positive_after_tokens() {
+        let m = Metrics::new();
+        m.record_request(1, 100, 0.0, 0.1);
+        assert!(m.decode_throughput() > 0.0);
+    }
+}

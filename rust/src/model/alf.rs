@@ -1,0 +1,240 @@
+//! ALF (ArcLight Format) weight-file reader/writer — byte-compatible
+//! with `python/compile/alf.py` (the repo's GGUF stand-in).
+//!
+//! Layout: `"ALF1"` magic, u32 version, u64 meta length, JSON metadata
+//! (config + tensor table), zero padding to 64, then 64-byte-aligned
+//! tensor payloads. Q4_0 payloads are the ggml block stream.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::DType;
+use crate::util::align_up;
+use crate::util::json::{obj, Json};
+
+const MAGIC: &[u8; 4] = b"ALF1";
+const VERSION: u32 = 1;
+const ALIGN: usize = 64;
+
+/// One tensor record.
+#[derive(Clone, Debug)]
+pub struct AlfTensor {
+    pub name: String,
+    pub dtype: DType,
+    /// Logical shape (Q4_0: `[N, K]` with K the quantized axis).
+    pub shape: Vec<usize>,
+    /// Byte range within the file's data region.
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// A parsed ALF file, payload held in memory.
+pub struct AlfFile {
+    pub config: Json,
+    pub tensors: BTreeMap<String, AlfTensor>,
+    data: Vec<u8>,
+    data_start: usize,
+}
+
+impl AlfFile {
+    pub fn open(path: impl AsRef<Path>) -> Result<AlfFile> {
+        let raw = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(raw)
+    }
+
+    pub fn parse(raw: Vec<u8>) -> Result<AlfFile> {
+        if raw.len() < 16 || &raw[..4] != MAGIC {
+            bail!("not an ALF file");
+        }
+        let version = u32::from_le_bytes(raw[4..8].try_into()?);
+        if version != VERSION {
+            bail!("unsupported ALF version {version}");
+        }
+        let meta_len = u64::from_le_bytes(raw[8..16].try_into()?) as usize;
+        let meta_str = std::str::from_utf8(&raw[16..16 + meta_len])?;
+        let meta = Json::parse(meta_str).map_err(|e| anyhow::anyhow!("bad ALF metadata: {e}"))?;
+        let data_start = align_up(16 + meta_len, ALIGN);
+
+        let mut tensors = BTreeMap::new();
+        for t in meta.get("tensors").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = t.get("name").and_then(Json::as_str).context("tensor name")?.to_string();
+            let dtype = DType::parse(t.get("dtype").and_then(Json::as_str).unwrap_or(""))
+                .context("tensor dtype")?;
+            let shape: Vec<usize> = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("tensor shape")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let offset = t.get("offset").and_then(Json::as_usize).context("offset")?;
+            let nbytes = t.get("nbytes").and_then(Json::as_usize).context("nbytes")?;
+            if data_start + offset + nbytes > raw.len() {
+                bail!("tensor '{name}' exceeds file size");
+            }
+            let expect = dtype.tensor_bytes(&shape);
+            if expect != nbytes {
+                bail!("tensor '{name}': nbytes {nbytes} != {expect} for {dtype} {shape:?}");
+            }
+            tensors.insert(name.clone(), AlfTensor { name, dtype, shape, offset, nbytes });
+        }
+        let config = meta.get("config").cloned().unwrap_or(Json::Obj(Default::default()));
+        Ok(AlfFile { config, tensors, data: raw, data_start })
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&AlfTensor> {
+        self.tensors.get(name).with_context(|| format!("tensor '{name}' not in ALF"))
+    }
+
+    /// Raw payload bytes of a tensor.
+    pub fn payload(&self, t: &AlfTensor) -> &[u8] {
+        &self.data[self.data_start + t.offset..self.data_start + t.offset + t.nbytes]
+    }
+
+    /// Payload of rows `[r0, r1)` (both dtypes are row-contiguous).
+    pub fn rows(&self, t: &AlfTensor, r0: usize, r1: usize) -> &[u8] {
+        let k = crate::tensor::row_len(&t.shape);
+        let rb = t.dtype.row_bytes(k);
+        let p = self.payload(t);
+        &p[r0 * rb..r1 * rb]
+    }
+
+    /// Column slice `[c0, c1)` of every row, concatenated — used for
+    /// the TP column partition of W_o/W_down (§3.2). For Q4_0, `c0`
+    /// and `c1` must be multiples of 32.
+    pub fn col_slice(&self, t: &AlfTensor, c0: usize, c1: usize) -> Vec<u8> {
+        let k = crate::tensor::row_len(&t.shape);
+        let n = crate::tensor::rows(&t.shape);
+        let rb = t.dtype.row_bytes(k);
+        let b0 = t.dtype.row_bytes(c0);
+        let b1 = t.dtype.row_bytes(c1);
+        let p = self.payload(t);
+        let mut out = Vec::with_capacity(n * (b1 - b0));
+        for r in 0..n {
+            out.extend_from_slice(&p[r * rb + b0..r * rb + b1]);
+        }
+        out
+    }
+
+    /// f32 view of an f32 tensor's payload.
+    pub fn f32s(&self, t: &AlfTensor) -> Vec<f32> {
+        assert_eq!(t.dtype, DType::F32);
+        self.payload(t)
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect()
+    }
+}
+
+/// Write an ALF file (the Rust side of `arclight generate`).
+pub fn write_alf(
+    path: impl AsRef<Path>,
+    config: Json,
+    tensors: &[(String, DType, Vec<usize>, Vec<u8>)],
+) -> Result<()> {
+    let mut table = Vec::new();
+    let mut offset = 0usize;
+    for (name, dtype, shape, payload) in tensors {
+        offset = align_up(offset, ALIGN);
+        table.push(obj(vec![
+            ("name", Json::Str(name.clone())),
+            ("dtype", Json::Str(dtype.to_string())),
+            ("shape", Json::Arr(shape.iter().map(|&s| Json::Num(s as f64)).collect())),
+            ("offset", Json::Num(offset as f64)),
+            ("nbytes", Json::Num(payload.len() as f64)),
+        ]));
+        offset += payload.len();
+    }
+    let meta = obj(vec![("config", config), ("tensors", Json::Arr(table.clone()))]).to_string();
+    let header_len = 16 + meta.len();
+    let data_start = align_up(header_len, ALIGN);
+
+    let mut f = std::fs::File::create(path.as_ref())?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(meta.len() as u64).to_le_bytes())?;
+    f.write_all(meta.as_bytes())?;
+    f.write_all(&vec![0u8; data_start - header_len])?;
+    let mut pos = 0usize;
+    for (i, (_, _, _, payload)) in tensors.iter().enumerate() {
+        let want = table[i].get("offset").and_then(Json::as_usize).unwrap();
+        f.write_all(&vec![0u8; want - pos])?;
+        f.write_all(payload)?;
+        pos = want + payload.len();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_file(dir: &std::path::Path) -> std::path::PathBuf {
+        let path = dir.join("t.alf");
+        let a: Vec<u8> = (0..12u32).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        let q = crate::quant::quantize_matrix_q4_0(&vec![0.5; 2 * 64], 2, 64);
+        write_alf(
+            &path,
+            obj(vec![("dim", 64usize.into())]),
+            &[
+                ("a".into(), DType::F32, vec![3, 4], a),
+                ("w".into(), DType::Q4_0, vec![2, 64], q),
+            ],
+        )
+        .unwrap();
+        path
+    }
+
+    #[test]
+    fn roundtrip_rust_writer_reader() {
+        let dir = std::env::temp_dir().join("alf_test_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = sample_file(&dir);
+        let f = AlfFile::open(&path).unwrap();
+        assert_eq!(f.config.get("dim").unwrap().as_usize(), Some(64));
+        let a = f.tensor("a").unwrap();
+        assert_eq!(f.f32s(a)[5], 5.0);
+        let w = f.tensor("w").unwrap();
+        assert_eq!(f.payload(w).len(), 2 * 2 * 18);
+    }
+
+    #[test]
+    fn row_and_col_slicing() {
+        let dir = std::env::temp_dir().join("alf_test_slice");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = sample_file(&dir);
+        let f = AlfFile::open(&path).unwrap();
+        let w = f.tensor("w").unwrap();
+        // rows 1..2 = second half of the stream
+        assert_eq!(f.rows(w, 1, 2), &f.payload(w)[36..]);
+        // cols 32..64 of each row: block 1 of each row
+        let cs = f.col_slice(w, 32, 64);
+        assert_eq!(cs.len(), 2 * 18);
+        assert_eq!(&cs[..18], &f.payload(w)[18..36]);
+        assert_eq!(&cs[18..], &f.payload(w)[54..72]);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(AlfFile::parse(b"NOPE".to_vec()).is_err());
+        assert!(AlfFile::parse(b"ALF1\x02\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00".to_vec()).is_err());
+    }
+
+    #[test]
+    fn python_compatible_header_math() {
+        // mirror python: header is 16 + meta, data aligned to 64
+        let dir = std::env::temp_dir().join("alf_test_hdr");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = sample_file(&dir);
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(&raw[..4], b"ALF1");
+        let meta_len = u64::from_le_bytes(raw[8..16].try_into().unwrap()) as usize;
+        let ds = align_up(16 + meta_len, 64);
+        // first tensor payload at data_start (offset 0): value 0.0f32
+        assert_eq!(&raw[ds..ds + 4], &0.0f32.to_le_bytes());
+    }
+}

@@ -1,0 +1,180 @@
+//! Qwen3-family model geometry (mirrors `python/compile/model.py`).
+
+use crate::util::json::Json;
+
+/// Decoder geometry. `dim`, `n_heads·head_dim` and `ffn_dim` must be
+/// multiples of 32 (Q4_0 blocks along contraction axes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+    pub norm_eps: f32,
+}
+
+impl ModelConfig {
+    /// The tiny geometry the AOT artifacts are built at (must match
+    /// `python/compile/model.py::TINY`).
+    pub fn tiny() -> Self {
+        ModelConfig {
+            dim: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 16,
+            ffn_dim: 128,
+            vocab: 512,
+            max_seq: 64,
+            rope_theta: 1e6,
+            norm_eps: 1e-6,
+        }
+    }
+
+    /// A ~25M-parameter model for the real-execution serving example.
+    pub fn small_25m() -> Self {
+        ModelConfig {
+            dim: 512,
+            n_layers: 8,
+            n_heads: 8,
+            n_kv_heads: 4,
+            head_dim: 64,
+            ffn_dim: 1408,
+            vocab: 4096,
+            max_seq: 512,
+            rope_theta: 1e6,
+            norm_eps: 1e-6,
+        }
+    }
+
+    /// Qwen3-4B — the paper's evaluation model (§4). Simulator-only in
+    /// this environment (the weights would be ~2.3 GB in Q4_0).
+    pub fn qwen3_4b() -> Self {
+        ModelConfig {
+            dim: 2560,
+            n_layers: 36,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            ffn_dim: 9728,
+            vocab: 151_936,
+            max_seq: 1024,
+            rope_theta: 1e6,
+            norm_eps: 1e-6,
+        }
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [("dim", self.dim), ("q_dim", self.q_dim()), ("ffn_dim", self.ffn_dim)] {
+            if v % 32 != 0 {
+                return Err(format!("{name}={v} is not a multiple of 32 (Q4_0)"));
+            }
+        }
+        if self.n_heads % self.n_kv_heads != 0 {
+            return Err("n_heads must be a multiple of n_kv_heads (GQA)".into());
+        }
+        Ok(())
+    }
+
+    /// Approximate parameter count (for sanity checks / reporting).
+    pub fn n_params(&self) -> usize {
+        let per_layer = self.dim * self.q_dim()      // wq
+            + 2 * self.dim * self.kv_dim()           // wk, wv
+            + self.q_dim() * self.dim                // wo
+            + 3 * self.dim * self.ffn_dim            // gate, up, down
+            + 2 * self.dim + 2 * self.head_dim;      // norms
+        self.vocab * self.dim * 2 + self.n_layers * per_layer + self.dim
+    }
+
+    /// Q4_0 matmul-weight bytes per decode token — the bandwidth-bound
+    /// working set the paper's throughput analysis is built on.
+    pub fn q4_weight_bytes(&self) -> usize {
+        use crate::tensor::DType;
+        let per_layer = DType::Q4_0.tensor_bytes(&[self.q_dim(), self.dim])
+            + 2 * DType::Q4_0.tensor_bytes(&[self.kv_dim(), self.dim])
+            + DType::Q4_0.tensor_bytes(&[self.dim, self.q_dim()])
+            + 2 * DType::Q4_0.tensor_bytes(&[self.ffn_dim, self.dim])
+            + DType::Q4_0.tensor_bytes(&[self.dim, self.ffn_dim]);
+        self.n_layers * per_layer + DType::Q4_0.tensor_bytes(&[self.vocab, self.dim])
+    }
+
+    /// Parse the `config` object of an ALF/manifest JSON.
+    pub fn from_json(j: &Json) -> Result<ModelConfig, String> {
+        let get = |k: &str| -> Result<usize, String> {
+            j.get(k).and_then(Json::as_usize).ok_or_else(|| format!("missing config.{k}"))
+        };
+        Ok(ModelConfig {
+            dim: get("dim")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            n_kv_heads: get("n_kv_heads")?,
+            head_dim: get("head_dim")?,
+            ffn_dim: get("ffn_dim")?,
+            vocab: get("vocab")?,
+            max_seq: get("max_seq")?,
+            rope_theta: j.get("rope_theta").and_then(Json::as_f64).unwrap_or(1e6) as f32,
+            norm_eps: j.get("norm_eps").and_then(Json::as_f64).unwrap_or(1e-6) as f32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        ModelConfig::tiny().validate().unwrap();
+        ModelConfig::small_25m().validate().unwrap();
+        ModelConfig::qwen3_4b().validate().unwrap();
+    }
+
+    #[test]
+    fn qwen3_4b_matches_paper_scale() {
+        let c = ModelConfig::qwen3_4b();
+        // ~4B params, ~2.3 GB in Q4_0 — the numbers in the paper's setup
+        assert!(c.n_params() > 3_500_000_000 && c.n_params() < 4_500_000_000);
+        let gb = c.q4_weight_bytes() as f64 / 1e9;
+        assert!(gb > 1.6 && gb < 2.6, "{gb} GB");
+    }
+
+    #[test]
+    fn small_model_is_servable_scale() {
+        let c = ModelConfig::small_25m();
+        assert!(c.n_params() > 15_000_000 && c.n_params() < 40_000_000);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"dim":64,"n_layers":2,"n_heads":4,"n_kv_heads":2,"head_dim":16,
+                "ffn_dim":128,"vocab":512,"max_seq":64,"rope_theta":1000000.0,
+                "norm_eps":1e-06}"#,
+        )
+        .unwrap();
+        assert_eq!(ModelConfig::from_json(&j).unwrap(), ModelConfig::tiny());
+    }
+
+    #[test]
+    fn invalid_geometry_rejected() {
+        let mut c = ModelConfig::tiny();
+        c.dim = 48;
+        assert!(c.validate().is_err());
+        let mut c2 = ModelConfig::tiny();
+        c2.n_kv_heads = 3;
+        assert!(c2.validate().is_err());
+    }
+}

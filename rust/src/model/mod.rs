@@ -1,0 +1,12 @@
+//! Model definition layer (the paper's decoding frontend §2.1):
+//! weight loading, model definition via the graph builder, and the
+//! Qwen3 architecture the paper evaluates.
+
+pub mod alf;
+pub mod config;
+pub mod qwen3;
+pub mod synth;
+
+pub use alf::AlfFile;
+pub use config::ModelConfig;
+pub use qwen3::{BuildSpec, ModelGraphs, ShardInfo, ShardKind, WeightMode};

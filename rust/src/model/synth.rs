@@ -1,0 +1,279 @@
+//! Weight loading: from ALF files or from the deterministic synthetic
+//! generator (bench geometries, where values are irrelevant but
+//! numerical stability is not).
+//!
+//! Both paths honour the TP shard table: row shards slice the logical
+//! Q4_0 stream by rows, column shards by 32-element blocks, so a TP
+//! build holds byte-identical data to the single-node build — the basis
+//! of the TP-equivalence integration tests.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::DType;
+use crate::util::Rng;
+
+use super::alf::AlfFile;
+use super::config::ModelConfig;
+use super::qwen3::{ModelGraphs, ShardInfo, ShardKind};
+
+/// Logical (dtype, n, k) of a weight by its ALF name. `k == 0` marks a
+/// 1-D f32 vector.
+pub fn logical_shape(cfg: &ModelConfig, name: &str) -> Result<(DType, usize, usize)> {
+    let leaf = name.rsplit('.').next().unwrap_or(name);
+    Ok(match leaf {
+        "tok_emb" => (DType::F32, cfg.vocab, cfg.dim),
+        "lm_head" => (DType::Q4_0, cfg.vocab, cfg.dim),
+        "final_norm" | "attn_norm" | "mlp_norm" => (DType::F32, cfg.dim, 0),
+        "q_norm" | "k_norm" => (DType::F32, cfg.head_dim, 0),
+        "wq" => (DType::Q4_0, cfg.q_dim(), cfg.dim),
+        "wk" | "wv" => (DType::Q4_0, cfg.kv_dim(), cfg.dim),
+        "wo" => (DType::Q4_0, cfg.dim, cfg.q_dim()),
+        "w_gate" | "w_up" => (DType::Q4_0, cfg.ffn_dim, cfg.dim),
+        "w_down" => (DType::Q4_0, cfg.dim, cfg.ffn_dim),
+        _ => bail!("unknown weight '{name}'"),
+    })
+}
+
+/// FNV-1a for per-tensor seeds.
+fn name_seed(global: u64, name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ global.wrapping_mul(0x100_0000_01b3);
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Generate the logical payload of one weight.
+fn synth_payload(cfg: &ModelConfig, name: &str, seed: u64) -> Result<(DType, usize, usize, Vec<u8>)> {
+    let (dtype, n, k) = logical_shape(cfg, name)?;
+    let mut rng = Rng::new(name_seed(seed, name));
+    let leaf = name.rsplit('.').next().unwrap_or(name);
+    let payload = match dtype {
+        DType::F32 if k == 0 => {
+            // norm gains: near 1
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut v, 0.1);
+            v.iter().map(|x| 1.0 + x).flat_map(|x| x.to_le_bytes()).collect()
+        }
+        DType::F32 => {
+            // embedding table
+            let mut v = vec![0.0f32; n * k];
+            rng.fill_normal(&mut v, 0.02);
+            v.iter().flat_map(|x| x.to_le_bytes()).collect()
+        }
+        DType::Q4_0 => {
+            let scale = match leaf {
+                "wo" => 1.0 / (cfg.q_dim() as f32).sqrt(),
+                "w_down" => 1.0 / (cfg.ffn_dim as f32).sqrt(),
+                _ => 1.0 / (cfg.dim as f32).sqrt(),
+            };
+            let mut row = vec![0.0f32; k];
+            let mut out = Vec::with_capacity(DType::Q4_0.tensor_bytes(&[n, k]));
+            for _ in 0..n {
+                rng.fill_normal(&mut row, scale);
+                crate::quant::quantize_row_q4_0(&row, &mut out);
+            }
+            out
+        }
+        _ => bail!("unsupported synth dtype {dtype}"),
+    };
+    Ok((dtype, n, k, payload))
+}
+
+/// Slice a shard out of a logical payload.
+fn shard_bytes(
+    dtype: DType,
+    n: usize,
+    k: usize,
+    payload: &[u8],
+    kind: &ShardKind,
+) -> Vec<u8> {
+    match kind {
+        ShardKind::Full => payload.to_vec(),
+        ShardKind::Rows(r0, r1) => {
+            let rb = dtype.row_bytes(k.max(1));
+            payload[r0 * rb..r1 * rb].to_vec()
+        }
+        ShardKind::Cols(c0, c1) => {
+            let rb = dtype.row_bytes(k);
+            let b0 = dtype.row_bytes(*c0);
+            let b1 = dtype.row_bytes(*c1);
+            let mut out = Vec::with_capacity(n * (b1 - b0));
+            for r in 0..n {
+                out.extend_from_slice(&payload[r * rb + b0..r * rb + b1]);
+            }
+            out
+        }
+    }
+}
+
+fn write_shard(m: &ModelGraphs, id: crate::tensor::TensorId, bytes: &[u8]) {
+    let pool = m.pool.as_ref().expect("real buffers required");
+    let buf = m.decode.buf(id);
+    assert_eq!(buf.len, bytes.len(), "shard size mismatch for {}", m.decode.meta(id).name);
+    unsafe {
+        pool.arena(buf.arena).bytes_mut(buf.off, buf.len).copy_from_slice(bytes);
+    }
+}
+
+/// Fill every weight leaf with deterministic synthetic data.
+pub fn fill_synthetic(m: &ModelGraphs, seed: u64) -> Result<()> {
+    // group shards by logical tensor so each is generated once
+    let mut by_logical: std::collections::BTreeMap<&str, Vec<&(crate::tensor::TensorId, ShardInfo)>> =
+        Default::default();
+    for ws in &m.weights {
+        by_logical.entry(ws.1.logical.as_str()).or_default().push(ws);
+    }
+    for (logical, shards) in by_logical {
+        let (dtype, n, k, payload) = synth_payload(&m.cfg, logical, seed)?;
+        for (id, info) in shards {
+            write_shard(m, *id, &shard_bytes(dtype, n, k, &payload, &info.kind));
+        }
+    }
+    Ok(())
+}
+
+/// Fill every weight leaf from an ALF file (paper path: Qwen3 Q4_0).
+pub fn load_alf(m: &ModelGraphs, alf: &AlfFile) -> Result<()> {
+    for (id, info) in &m.weights {
+        let t = alf.tensor(&info.logical)?;
+        let bytes = match &info.kind {
+            ShardKind::Full => alf.payload(t).to_vec(),
+            ShardKind::Rows(r0, r1) => alf.rows(t, *r0, *r1).to_vec(),
+            ShardKind::Cols(c0, c1) => alf.col_slice(t, *c0, *c1),
+        };
+        write_shard(m, *id, &bytes);
+    }
+    Ok(())
+}
+
+/// Zero all KV caches (between sequences).
+pub fn reset_kv(m: &ModelGraphs) {
+    let pool = m.pool.as_ref().expect("real buffers required");
+    for id in &m.kv_ids {
+        let buf = m.decode.buf(*id);
+        unsafe {
+            pool.arena(buf.arena).bytes_mut(buf.off, buf.len).fill(0);
+        }
+    }
+}
+
+/// Write a synthetic model to an ALF file (the `arclight generate` CLI).
+pub fn generate_alf(cfg: &ModelConfig, seed: u64, path: &std::path::Path) -> Result<()> {
+    use crate::util::json::{obj, Json};
+    let mut names = vec!["tok_emb".to_string()];
+    for l in 0..cfg.n_layers {
+        for s in ["attn_norm", "wq", "wk", "wv", "wo", "q_norm", "k_norm",
+                  "mlp_norm", "w_gate", "w_up", "w_down"] {
+            names.push(format!("layers.{l}.{s}"));
+        }
+    }
+    names.push("final_norm".into());
+    names.push("lm_head".into());
+
+    let mut tensors = Vec::new();
+    for name in names {
+        let (dtype, n, k, payload) = synth_payload(cfg, &name, seed)?;
+        let shape = if k == 0 { vec![n] } else { vec![n, k] };
+        tensors.push((name, dtype, shape, payload));
+    }
+    let config = obj(vec![
+        ("dim", cfg.dim.into()),
+        ("n_layers", cfg.n_layers.into()),
+        ("n_heads", cfg.n_heads.into()),
+        ("n_kv_heads", cfg.n_kv_heads.into()),
+        ("head_dim", cfg.head_dim.into()),
+        ("ffn_dim", cfg.ffn_dim.into()),
+        ("vocab", cfg.vocab.into()),
+        ("max_seq", cfg.max_seq.into()),
+        ("rope_theta", Json::Num(cfg.rope_theta as f64)),
+        ("norm_eps", Json::Num(cfg.norm_eps as f64)),
+    ]);
+    super::alf::write_alf(path, config, &tensors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::qwen3::BuildSpec;
+
+    #[test]
+    fn synthetic_fill_is_deterministic() {
+        let m1 = ModelGraphs::build(BuildSpec::arclight(ModelConfig::tiny(), 1));
+        let m2 = ModelGraphs::build(BuildSpec::arclight(ModelConfig::tiny(), 1));
+        fill_synthetic(&m1, 7).unwrap();
+        fill_synthetic(&m2, 7).unwrap();
+        let id1 = m1.decode.find("layers.0.wq").unwrap();
+        let id2 = m2.decode.find("layers.0.wq").unwrap();
+        let (b1, b2) = (m1.decode.buf(id1), m2.decode.buf(id2));
+        unsafe {
+            let p1 = m1.pool.as_ref().unwrap().arena(b1.arena).bytes(b1.off, b1.len);
+            let p2 = m2.pool.as_ref().unwrap().arena(b2.arena).bytes(b2.off, b2.len);
+            assert_eq!(p1, p2);
+        }
+    }
+
+    #[test]
+    fn tp_shards_equal_logical_slices() {
+        let single = ModelGraphs::build(BuildSpec::arclight(ModelConfig::tiny(), 1));
+        let tp = ModelGraphs::build(BuildSpec::arclight(ModelConfig::tiny(), 2));
+        fill_synthetic(&single, 3).unwrap();
+        fill_synthetic(&tp, 3).unwrap();
+        // wq part 1 == rows 32..64 of the logical wq
+        let full_id = single.decode.find("layers.0.wq").unwrap();
+        let part_id = tp.decode.find("layers.0.wq.1").unwrap();
+        let fb = single.decode.buf(full_id);
+        let pb = tp.decode.buf(part_id);
+        unsafe {
+            let full = single.pool.as_ref().unwrap().arena(fb.arena).bytes(fb.off, fb.len);
+            let part = tp.pool.as_ref().unwrap().arena(pb.arena).bytes(pb.off, pb.len);
+            assert_eq!(&full[full.len() / 2..], part);
+        }
+    }
+
+    #[test]
+    fn generate_alf_then_load_roundtrip() {
+        let dir = std::env::temp_dir().join("arclight_synth_alf");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.alf");
+        let cfg = ModelConfig::tiny();
+        generate_alf(&cfg, 11, &path).unwrap();
+        let alf = AlfFile::open(&path).unwrap();
+        assert_eq!(ModelConfig::from_json(&alf.config).unwrap(), cfg);
+
+        let m = ModelGraphs::build(BuildSpec::arclight(cfg.clone(), 1));
+        load_alf(&m, &alf).unwrap();
+        // loaded bytes equal direct synthesis
+        let m2 = ModelGraphs::build(BuildSpec::arclight(cfg, 1));
+        fill_synthetic(&m2, 11).unwrap();
+        let i1 = m.decode.find("lm_head").unwrap();
+        let i2 = m2.decode.find("lm_head").unwrap();
+        let (b1, b2) = (m.decode.buf(i1), m2.decode.buf(i2));
+        unsafe {
+            assert_eq!(
+                m.pool.as_ref().unwrap().arena(b1.arena).bytes(b1.off, b1.len),
+                m2.pool.as_ref().unwrap().arena(b2.arena).bytes(b2.off, b2.len)
+            );
+        }
+    }
+
+    #[test]
+    fn kv_reset_zeroes() {
+        let m = ModelGraphs::build(BuildSpec::arclight(ModelConfig::tiny(), 1));
+        let id = m.kv_ids[0];
+        let b = m.decode.buf(id);
+        unsafe {
+            m.pool.as_ref().unwrap().arena(b.arena).bytes_mut(b.off, b.len).fill(7);
+        }
+        reset_kv(&m);
+        unsafe {
+            assert!(m.pool.as_ref().unwrap().arena(b.arena).bytes(b.off, b.len).iter().all(|&x| x == 0));
+        }
+    }
+
+    #[test]
+    fn unknown_weight_name_rejected() {
+        assert!(logical_shape(&ModelConfig::tiny(), "layers.0.bogus").is_err());
+    }
+}

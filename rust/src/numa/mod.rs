@@ -1,0 +1,38 @@
+//! NUMA platform model (paper §3.1, Table 1).
+//!
+//! The paper's testbed is a 192-core, 4-node Kunpeng-920 server. This
+//! environment has neither NUMA nor 192 cores, so the many-core platform
+//! is a *deterministic simulator* (DESIGN.md "Hardware substitution"):
+//!
+//! * [`topology::Topology`] — nodes × cores plus the core→memory
+//!   bandwidth matrix measured in the paper's Table 1;
+//! * [`placement::Placement`] — which node owns each byte of a tensor
+//!   (node-local, OS-interleaved, or row-sharded — first-touch and TP
+//!   both resolve to row shards);
+//! * [`cost::CostModel`] — charges each worker's per-op memory traffic
+//!   against the bandwidth matrix (with per-channel contention) and its
+//!   flops against the core's compute rate, yielding *virtual time*.
+//!
+//! The real-execution engine uses the same placements for arena tagging
+//! but measures wall-clock; the simulator uses virtual time. All
+//! strategy comparisons (ArcLight vs llama.cpp, Sync A vs Sync B) run
+//! through identical graph/partition code and differ only in placement
+//! and synchronization — exactly the paper's experimental variable.
+
+pub mod cost;
+pub mod placement;
+pub mod topology;
+
+pub use cost::CostModel;
+pub use placement::Placement;
+pub use topology::Topology;
+
+/// Identifier of a NUMA node (0-based).
+pub type NodeId = usize;
+
+/// A simulated core: global id plus its home node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Core {
+    pub id: usize,
+    pub node: NodeId,
+}

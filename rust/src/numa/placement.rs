@@ -1,0 +1,206 @@
+//! Tensor→NUMA-node placement (paper §2.3, §3.1, Fig. 3 & 7).
+//!
+//! ArcLight binds every buffer to an explicit node ("separate buffers in
+//! the local memory of each NUMA node"); llama.cpp's UMA buffer leaves
+//! placement to the OS, which the paper models as first-touch /
+//! page-interleaved. Both strategies reduce to one of these variants,
+//! and the cost model only ever asks one question: *for a row range of
+//! this tensor, how many bytes live on each node?*
+
+use super::NodeId;
+
+/// Where the bytes of a tensor live.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Placement {
+    /// Entire tensor in one node's local memory (ArcLight's default:
+    /// tensors are bound to the node whose threads consume them).
+    Node(NodeId),
+    /// Pages spread evenly over the first `n` nodes (the OS-managed UMA
+    /// buffer of llama.cpp under `-numa distribute`, or `numactl
+    /// --interleave`). Page granularity is far below row granularity for
+    /// LLM weights, so an even byte split is an accurate model.
+    Interleaved(usize),
+    /// Contiguous row ranges owned by different nodes — what first-touch
+    /// produces when a partitioned operator touches its own slice first
+    /// (llama.cpp weights, Fig. 7) and what TP produces by construction.
+    /// Entries are `(first_row, end_row, node)` sorted by `first_row`,
+    /// covering all rows exactly once.
+    RowShards(Vec<(usize, usize, NodeId)>),
+}
+
+impl Placement {
+    /// Even row-sharding of `rows` across `nodes` nodes (node ids 0..n).
+    pub fn even_shards(rows: usize, nodes: usize) -> Placement {
+        let mut shards = Vec::with_capacity(nodes);
+        for n in 0..nodes {
+            let (s, e) = crate::util::chunk_range(rows, nodes, n);
+            if e > s {
+                shards.push((s, e, n));
+            }
+        }
+        Placement::RowShards(shards)
+    }
+
+    /// Bytes read from each node when a reader scans rows `[r0, r1)` of a
+    /// tensor with `rows` total rows and `row_bytes` bytes per row.
+    /// Returns a small vec of `(node, bytes)`.
+    pub fn bytes_by_node(
+        &self,
+        r0: usize,
+        r1: usize,
+        rows: usize,
+        row_bytes: f64,
+        n_nodes: usize,
+    ) -> Vec<(NodeId, f64)> {
+        debug_assert!(r0 <= r1 && r1 <= rows.max(1));
+        let span = (r1 - r0) as f64;
+        match self {
+            Placement::Node(n) => vec![(*n, span * row_bytes)],
+            Placement::Interleaved(nn) => {
+                let nn = (*nn).max(1).min(n_nodes);
+                let per = span * row_bytes / nn as f64;
+                (0..nn).map(|n| (n, per)).collect()
+            }
+            Placement::RowShards(shards) => {
+                let mut out: Vec<(NodeId, f64)> = Vec::new();
+                for &(s, e, node) in shards {
+                    let lo = r0.max(s);
+                    let hi = r1.min(e);
+                    if hi > lo {
+                        let b = (hi - lo) as f64 * row_bytes;
+                        if let Some(entry) = out.iter_mut().find(|(n, _)| *n == node) {
+                            entry.1 += b;
+                        } else {
+                            out.push((node, b));
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Distribute `total_bytes` of reads across nodes proportionally to
+    /// how much of the tensor each node holds — used for accesses that
+    /// are not row-aligned (column stripes, random-row gathers).
+    pub fn spread_bytes(&self, total_bytes: f64, n_nodes: usize) -> Vec<(NodeId, f64)> {
+        match self {
+            Placement::Node(n) => vec![(*n, total_bytes)],
+            Placement::Interleaved(nn) => {
+                let nn = (*nn).max(1).min(n_nodes);
+                let per = total_bytes / nn as f64;
+                (0..nn).map(|n| (n, per)).collect()
+            }
+            Placement::RowShards(shards) => {
+                let total_rows: usize = shards.iter().map(|&(s, e, _)| e - s).sum();
+                if total_rows == 0 {
+                    return vec![(0, total_bytes)];
+                }
+                let mut out: Vec<(NodeId, f64)> = Vec::new();
+                for &(s, e, node) in shards {
+                    let b = total_bytes * (e - s) as f64 / total_rows as f64;
+                    if let Some(entry) = out.iter_mut().find(|(n, _)| *n == node) {
+                        entry.1 += b;
+                    } else {
+                        out.push((node, b));
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// The node owning row `r` (Interleaved → the node of the page the
+    /// row's first byte falls on, approximated round-robin by row).
+    pub fn node_of_row(&self, r: usize, n_nodes: usize) -> NodeId {
+        match self {
+            Placement::Node(n) => *n,
+            Placement::Interleaved(nn) => r % (*nn).max(1).min(n_nodes),
+            Placement::RowShards(shards) => shards
+                .iter()
+                .find(|&&(s, e, _)| r >= s && r < e)
+                .map(|&(_, _, n)| n)
+                .unwrap_or(0),
+        }
+    }
+
+    /// True when every byte a reader on `node` touches is node-local —
+    /// the property ArcLight's TP establishes (§3.2: "effectively
+    /// isolating cross-node memory access").
+    pub fn is_local_for(&self, node: NodeId, r0: usize, r1: usize) -> bool {
+        match self {
+            Placement::Node(n) => *n == node,
+            Placement::Interleaved(nn) => *nn == 1 && node == 0,
+            Placement::RowShards(shards) => shards
+                .iter()
+                .filter(|&&(s, e, _)| e > r0 && s < r1)
+                .all(|&(_, _, n)| n == node),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_placement_all_local() {
+        let p = Placement::Node(2);
+        let b = p.bytes_by_node(0, 10, 10, 4.0, 4);
+        assert_eq!(b, vec![(2, 40.0)]);
+        assert!(p.is_local_for(2, 0, 10));
+        assert!(!p.is_local_for(0, 0, 10));
+    }
+
+    #[test]
+    fn interleaved_splits_evenly() {
+        let p = Placement::Interleaved(4);
+        let b = p.bytes_by_node(0, 8, 8, 2.0, 4);
+        assert_eq!(b.len(), 4);
+        for (_, bytes) in &b {
+            assert_eq!(*bytes, 4.0);
+        }
+    }
+
+    #[test]
+    fn even_shards_cover_rows() {
+        let p = Placement::even_shards(10, 4);
+        if let Placement::RowShards(s) = &p {
+            assert_eq!(s.len(), 4);
+            assert_eq!(s[0], (0, 3, 0));
+            assert_eq!(s[3], (8, 10, 3));
+        } else {
+            panic!();
+        }
+        // reading rows 2..9 hits nodes 0..=3
+        let b = p.bytes_by_node(2, 9, 10, 1.0, 4);
+        let total: f64 = b.iter().map(|(_, x)| x).sum();
+        assert_eq!(total, 7.0);
+    }
+
+    #[test]
+    fn shard_locality_check() {
+        let p = Placement::even_shards(8, 2); // rows 0-3 node0, 4-7 node1
+        assert!(p.is_local_for(0, 0, 4));
+        assert!(p.is_local_for(1, 4, 8));
+        assert!(!p.is_local_for(0, 0, 8));
+        assert_eq!(p.node_of_row(5, 2), 1);
+    }
+
+    #[test]
+    fn partial_shard_overlap_accumulates() {
+        let p = Placement::RowShards(vec![(0, 4, 1), (4, 8, 1), (8, 12, 0)]);
+        let b = p.bytes_by_node(2, 10, 12, 1.0, 2);
+        let mut node1 = 0.0;
+        let mut node0 = 0.0;
+        for (n, x) in b {
+            if n == 1 {
+                node1 += x;
+            } else {
+                node0 += x;
+            }
+        }
+        assert_eq!(node1, 6.0);
+        assert_eq!(node0, 2.0);
+    }
+}

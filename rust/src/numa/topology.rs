@@ -1,0 +1,223 @@
+//! Simulated machine topology + the paper's measured bandwidth matrix.
+
+use super::{Core, NodeId};
+
+/// The 4×4 core→memory bandwidth matrix (GB/s) the paper measures on its
+/// Kunpeng-920 testbed (Table 1). Local access ≈ 4× remote.
+pub const KUNPENG920_BW: [[f64; 4]; 4] = [
+    [102.0, 26.0, 24.0, 23.0],
+    [26.0, 103.0, 23.0, 22.0],
+    [24.0, 23.0, 103.0, 26.0],
+    [23.0, 22.0, 26.0, 101.0],
+];
+
+/// Description of a simulated many-core NUMA machine.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// Bandwidth matrix in bytes/second: `bw[core_node][mem_node]` is the
+    /// *aggregate* bandwidth available to all cores of `core_node`
+    /// accessing memory on `mem_node` (shared under contention).
+    pub bw: Vec<Vec<f64>>,
+    /// Cores per node.
+    pub cores_per_node: usize,
+    /// Per-core sustained f32 compute rate (FLOP/s). Kunpeng-920 @2.6 GHz
+    /// with 128-bit NEON FMA ≈ 2.6e9 × 8 ≈ 20 GFLOP/s; we derate to a
+    /// sustained 16 GFLOP/s.
+    pub core_flops: f64,
+    /// Per-core streaming-bandwidth cap (bytes/s): one core cannot keep
+    /// a node's six DDR4 channels busy (limited load/store queues and
+    /// MLP), so aggregate bandwidth scales with threads until the node
+    /// saturates — the rising part of the paper's Fig. 10.
+    pub core_mem_bw: f64,
+    /// Base cost of a barrier among threads of a single node (seconds).
+    pub barrier_local: f64,
+    /// Additional barrier cost per extra participating node (seconds) —
+    /// cross-node cacheline ping-pong is the paper's "data
+    /// synchronization overhead".
+    pub barrier_per_node: f64,
+    /// Per-thread increment of barrier cost (seconds) — linear fan-in.
+    pub barrier_per_thread: f64,
+    /// Fixed per-operator software overhead on every participating
+    /// worker (dispatch, work assignment, first-touch cache warmup).
+    /// Calibrated so absolute decode throughput lands in the regime the
+    /// paper reports (~tens of tok/s on the 4B model).
+    pub op_dispatch: f64,
+    /// Amortization factor for broadcast reads in the single-row decode
+    /// GEMV (many cores pulling the same small activation vector):
+    /// partial dedup via shared caches. 1.0 = every core pays the full
+    /// stream; calibrated against the paper's measured llama.cpp
+    /// cross-NUMA penalty (§3.1/Fig. 7).
+    pub bcast_amort: f64,
+    /// Multiplicative load-imbalance jitter amplitude (deterministic,
+    /// hash-seeded): worker op time *= 1 + U(-j, +j).
+    pub jitter: f64,
+    /// Seed for the deterministic jitter hash.
+    pub jitter_seed: u64,
+}
+
+impl Topology {
+    /// The paper's testbed: 4 nodes × 48 Kunpeng-920 cores, Table-1
+    /// bandwidth matrix.
+    pub fn kunpeng920() -> Self {
+        Topology {
+            bw: KUNPENG920_BW
+                .iter()
+                .map(|row| row.iter().map(|gb| gb * 1e9).collect())
+                .collect(),
+            cores_per_node: 48,
+            core_flops: 16e9,
+            // 102 GB/s node bandwidth saturates at ~40 cores
+            core_mem_bw: 2.6e9,
+            barrier_local: 1.2e-6,
+            barrier_per_node: 2.0e-6,
+            barrier_per_thread: 6.0e-9,
+            op_dispatch: 12.0e-6,
+            bcast_amort: 1.5,
+            jitter: 0.04,
+            jitter_seed: 0x5eed,
+        }
+    }
+
+    /// A uniform synthetic machine: `nodes` NUMA nodes, `cores_per_node`
+    /// cores, `local_gb`/`remote_gb` GB/s bandwidths.
+    pub fn uniform(nodes: usize, cores_per_node: usize, local_gb: f64, remote_gb: f64) -> Self {
+        let bw = (0..nodes)
+            .map(|i| {
+                (0..nodes)
+                    .map(|j| if i == j { local_gb * 1e9 } else { remote_gb * 1e9 })
+                    .collect()
+            })
+            .collect();
+        Topology { bw, ..Topology::kunpeng920() }
+            .with_cores_per_node(cores_per_node)
+    }
+
+    pub fn with_cores_per_node(mut self, c: usize) -> Self {
+        self.cores_per_node = c;
+        self
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.bw.len()
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.n_nodes() * self.cores_per_node
+    }
+
+    pub fn node_of_core(&self, core: usize) -> NodeId {
+        core / self.cores_per_node
+    }
+
+    pub fn core(&self, id: usize) -> Core {
+        Core { id, node: self.node_of_core(id) }
+    }
+
+    /// Aggregate bandwidth (bytes/s) from cores of `cn` to memory of `mn`.
+    pub fn bandwidth(&self, cn: NodeId, mn: NodeId) -> f64 {
+        self.bw[cn][mn]
+    }
+
+    /// Cost of one barrier over `threads` threads spanning `nodes` nodes.
+    pub fn barrier_cost(&self, threads: usize, nodes: usize) -> f64 {
+        if threads <= 1 {
+            return 0.0;
+        }
+        self.barrier_local
+            + self.barrier_per_thread * threads as f64
+            + self.barrier_per_node * nodes.saturating_sub(1) as f64
+    }
+
+    /// The cores of one node, in id order.
+    pub fn cores_of_node(&self, node: NodeId) -> impl Iterator<Item = Core> + '_ {
+        let base = node * self.cores_per_node;
+        (base..base + self.cores_per_node).map(move |id| Core { id, node })
+    }
+
+    /// Pick `n` cores bound like llama.cpp's `-numa isolate` (fill node
+    /// 0 first) or `distribute` (round-robin across nodes, as the paper
+    /// describes llama.cpp's even thread binding).
+    pub fn bind_cores(&self, n: usize, distribute: bool, n_nodes: usize) -> Vec<Core> {
+        let nodes = n_nodes.min(self.n_nodes()).max(1);
+        let mut out = Vec::with_capacity(n);
+        if distribute {
+            // equal share per node, contiguous inside each node
+            for node in 0..nodes {
+                let (s, e) = crate::util::chunk_range(n, nodes, node);
+                for i in 0..(e - s) {
+                    out.push(Core { id: node * self.cores_per_node + i, node });
+                }
+            }
+        } else {
+            for id in 0..n {
+                assert!(id < self.n_cores(), "not enough cores");
+                out.push(self.core(id));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kunpeng_matches_table1() {
+        let t = Topology::kunpeng920();
+        assert_eq!(t.n_nodes(), 4);
+        assert_eq!(t.n_cores(), 192);
+        assert_eq!(t.bandwidth(0, 0), 102e9);
+        assert_eq!(t.bandwidth(1, 3), 22e9);
+        // local ≈ 4× remote, the paper's headline observation
+        let local = t.bandwidth(2, 2);
+        let remote = t.bandwidth(2, 1);
+        assert!(local / remote > 3.5 && local / remote < 5.0);
+    }
+
+    #[test]
+    fn core_to_node_mapping() {
+        let t = Topology::kunpeng920();
+        assert_eq!(t.node_of_core(0), 0);
+        assert_eq!(t.node_of_core(47), 0);
+        assert_eq!(t.node_of_core(48), 1);
+        assert_eq!(t.node_of_core(191), 3);
+    }
+
+    #[test]
+    fn barrier_scales_with_span() {
+        let t = Topology::kunpeng920();
+        let one_node = t.barrier_cost(48, 1);
+        let four_nodes = t.barrier_cost(192, 4);
+        assert!(four_nodes > one_node * 2.0, "{four_nodes} vs {one_node}");
+        assert_eq!(t.barrier_cost(1, 1), 0.0);
+    }
+
+    #[test]
+    fn isolate_binding_fills_node0() {
+        let t = Topology::kunpeng920();
+        let cores = t.bind_cores(48, false, 1);
+        assert!(cores.iter().all(|c| c.node == 0));
+        assert_eq!(cores.len(), 48);
+    }
+
+    #[test]
+    fn distribute_binding_spreads_evenly() {
+        let t = Topology::kunpeng920();
+        let cores = t.bind_cores(64, true, 4);
+        for node in 0..4 {
+            assert_eq!(cores.iter().filter(|c| c.node == node).count(), 16);
+        }
+        let cores2 = t.bind_cores(96, true, 2);
+        assert_eq!(cores2.iter().filter(|c| c.node == 0).count(), 48);
+        assert_eq!(cores2.iter().filter(|c| c.node == 1).count(), 48);
+    }
+
+    #[test]
+    fn uniform_topology() {
+        let t = Topology::uniform(2, 8, 100.0, 25.0);
+        assert_eq!(t.n_cores(), 16);
+        assert_eq!(t.bandwidth(0, 1), 25e9);
+        assert_eq!(t.bandwidth(1, 1), 100e9);
+    }
+}

@@ -1,0 +1,230 @@
+//! Fused attention over the KV cache (paper §2.7 "FlashAttention").
+//!
+//! Online-softmax streaming over KV positions — the score row never
+//! materializes beyond a running (max, sum, acc) triple, mirroring the
+//! L1 Pallas kernel. Partitioned by *query head* `[h0, h1)`: heads are
+//! independent, which is also how the TP plan shards attention across
+//! NUMA nodes (W_q/W_k/W_v are head-partitioned, §3.2).
+//!
+//! Layout: `q` is [rows, heads*head_dim] (rows = new tokens);
+//! `k_cache`/`v_cache` are [kv_heads, max_seq, head_dim]; GQA maps query
+//! head `h` to kv head `h / (heads / kv_heads)`.
+
+/// Decode/prefill attention for query heads `[h0, h1)`.
+///
+/// Row `r` of `q` sits at absolute position `pos0 + r` and attends
+/// causally to cache positions `0..=pos0+r`.
+#[allow(clippy::too_many_arguments)]
+pub fn attention(
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    heads: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    max_seq: usize,
+    pos0: usize,
+    h0: usize,
+    h1: usize,
+) {
+    debug_assert_eq!(q.len(), rows * heads * head_dim);
+    debug_assert_eq!(k_cache.len(), kv_heads * max_seq * head_dim);
+    debug_assert_eq!(out.len(), rows * heads * head_dim);
+    let rep = heads / kv_heads;
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let d = heads * head_dim;
+
+    // accumulator reused across rows/heads (no allocation in the loop)
+    let mut acc = vec![0.0f32; head_dim];
+    for r in 0..rows {
+        let kv_len = pos0 + r + 1; // causal horizon for this query row
+        for h in h0..h1 {
+            let kvh = h / rep;
+            let qv = &q[r * d + h * head_dim..r * d + (h + 1) * head_dim];
+            let kbase = kvh * max_seq * head_dim;
+            let vbase = kbase;
+
+            // online softmax
+            let mut m = f32::NEG_INFINITY;
+            let mut l = 0.0f32;
+            acc.fill(0.0);
+            for t in 0..kv_len {
+                let kv = &k_cache[kbase + t * head_dim..kbase + (t + 1) * head_dim];
+                let s = super::gemm::dot_f32(qv, kv) * scale;
+                let m_new = m.max(s);
+                let corr = if m.is_finite() { (m - m_new).exp() } else { 0.0 };
+                let p = (s - m_new).exp();
+                l = l * corr + p;
+                let vv = &v_cache[vbase + t * head_dim..vbase + (t + 1) * head_dim];
+                for i in 0..head_dim {
+                    acc[i] = acc[i] * corr + p * vv[i];
+                }
+                m = m_new;
+            }
+            let inv = if l > 0.0 { 1.0 / l } else { 0.0 };
+            let or = &mut out[r * d + h * head_dim..r * d + (h + 1) * head_dim];
+            for i in 0..head_dim {
+                or[i] = acc[i] * inv;
+            }
+        }
+    }
+}
+
+/// Write new K/V rows into the cache: `src` is [rows, kv_heads*head_dim]
+/// laid out per token; cache slot `pos0 + r` of each kv head receives
+/// the corresponding segment. Partitioned by kv head `[h0, h1)`.
+#[allow(clippy::too_many_arguments)]
+pub fn store_kv(
+    src: &[f32],
+    cache: &mut [f32],
+    rows: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    max_seq: usize,
+    pos0: usize,
+    h0: usize,
+    h1: usize,
+) {
+    debug_assert_eq!(src.len(), rows * kv_heads * head_dim);
+    debug_assert!(pos0 + rows <= max_seq);
+    let d = kv_heads * head_dim;
+    for r in 0..rows {
+        for h in h0..h1 {
+            let from = &src[r * d + h * head_dim..r * d + (h + 1) * head_dim];
+            let to_base = h * max_seq * head_dim + (pos0 + r) * head_dim;
+            cache[to_base..to_base + head_dim].copy_from_slice(from);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::softmax::softmax_rows;
+    use crate::util::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        let mut v = vec![0.0; n];
+        r.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    /// Naive reference: materialize scores, mask, softmax, weight V.
+    #[allow(clippy::too_many_arguments)]
+    fn naive(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        rows: usize,
+        heads: usize,
+        kv_heads: usize,
+        hd: usize,
+        max_seq: usize,
+        pos0: usize,
+    ) -> Vec<f32> {
+        let rep = heads / kv_heads;
+        let d = heads * hd;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = vec![0.0; rows * d];
+        for r in 0..rows {
+            let kv_len = pos0 + r + 1;
+            for h in 0..heads {
+                let kvh = h / rep;
+                let qv = &q[r * d + h * hd..r * d + (h + 1) * hd];
+                let mut scores = vec![0.0f32; kv_len];
+                for t in 0..kv_len {
+                    let kr = &k[kvh * max_seq * hd + t * hd..kvh * max_seq * hd + (t + 1) * hd];
+                    scores[t] = qv.iter().zip(kr).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+                softmax_rows(&mut scores, kv_len, kv_len, 0, 1);
+                for t in 0..kv_len {
+                    let vr = &v[kvh * max_seq * hd + t * hd..kvh * max_seq * hd + (t + 1) * hd];
+                    for i in 0..hd {
+                        out[r * d + h * hd + i] += scores[t] * vr[i];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn decode_matches_naive() {
+        let (heads, kvh, hd, max_seq) = (4, 2, 8, 32);
+        let q = rand_vec(heads * hd, 1);
+        let k = rand_vec(kvh * max_seq * hd, 2);
+        let v = rand_vec(kvh * max_seq * hd, 3);
+        let mut out = vec![0.0; heads * hd];
+        attention(&q, &k, &v, &mut out, 1, heads, kvh, hd, max_seq, 9, 0, heads);
+        let expect = naive(&q, &k, &v, 1, heads, kvh, hd, max_seq, 9);
+        for (a, b) in out.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn prefill_rows_are_causal() {
+        let (heads, kvh, hd, max_seq, rows) = (2, 1, 4, 16, 5);
+        let q = rand_vec(rows * heads * hd, 4);
+        let k = rand_vec(kvh * max_seq * hd, 5);
+        let v = rand_vec(kvh * max_seq * hd, 6);
+        let mut out = vec![0.0; rows * heads * hd];
+        attention(&q, &k, &v, &mut out, rows, heads, kvh, hd, max_seq, 0, 0, heads);
+        let expect = naive(&q, &k, &v, rows, heads, kvh, hd, max_seq, 0);
+        for (a, b) in out.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        // row 0 attends only to position 0: independent check
+        let mut solo = vec![0.0; heads * hd];
+        attention(&q[..heads * hd], &k, &v, &mut solo, 1, heads, kvh, hd, max_seq, 0, 0, heads);
+        for (a, b) in solo.iter().zip(&out[..heads * hd]) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn head_partition_composes() {
+        let (heads, kvh, hd, max_seq) = (4, 4, 8, 8);
+        let q = rand_vec(heads * hd, 7);
+        let k = rand_vec(kvh * max_seq * hd, 8);
+        let v = rand_vec(kvh * max_seq * hd, 9);
+        let mut full = vec![0.0; heads * hd];
+        attention(&q, &k, &v, &mut full, 1, heads, kvh, hd, max_seq, 5, 0, heads);
+        let mut split = vec![0.0; heads * hd];
+        attention(&q, &k, &v, &mut split, 1, heads, kvh, hd, max_seq, 5, 0, 1);
+        attention(&q, &k, &v, &mut split, 1, heads, kvh, hd, max_seq, 5, 1, 4);
+        assert_eq!(full, split);
+    }
+
+    #[test]
+    fn store_then_attend_roundtrip() {
+        let (kvh, hd, max_seq) = (2, 4, 8);
+        let mut cache = vec![0.0f32; kvh * max_seq * hd];
+        let t0 = rand_vec(kvh * hd, 10);
+        let t1 = rand_vec(kvh * hd, 11);
+        store_kv(&t0, &mut cache, 1, kvh, hd, max_seq, 0, 0, kvh);
+        store_kv(&t1, &mut cache, 1, kvh, hd, max_seq, 1, 0, kvh);
+        // cache slot (head 1, pos 1) must hold t1's head-1 segment
+        let got = &cache[1 * max_seq * hd + 1 * hd..1 * max_seq * hd + 2 * hd];
+        assert_eq!(got, &t1[hd..2 * hd]);
+    }
+
+    #[test]
+    fn gqa_heads_share_kv() {
+        // 4 query heads, 1 kv head: all query heads see the same K/V, so
+        // identical q segments give identical outputs
+        let (heads, kvh, hd, max_seq) = (4, 1, 4, 4);
+        let seg = rand_vec(hd, 12);
+        let q: Vec<f32> = (0..heads).flat_map(|_| seg.clone()).collect();
+        let k = rand_vec(kvh * max_seq * hd, 13);
+        let v = rand_vec(kvh * max_seq * hd, 14);
+        let mut out = vec![0.0; heads * hd];
+        attention(&q, &k, &v, &mut out, 1, heads, kvh, hd, max_seq, 2, 0, heads);
+        for h in 1..heads {
+            assert_eq!(&out[..hd], &out[h * hd..(h + 1) * hd]);
+        }
+    }
+}

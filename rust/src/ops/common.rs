@@ -1,0 +1,63 @@
+//! Hardware-agnostic operators (paper §2.7: "organized in common.cpp").
+
+/// Copy rows `[r0, r1)` of `src` ([rows, d]) into the same rows of `dst`.
+pub fn copy_rows(src: &[f32], dst: &mut [f32], d: usize, r0: usize, r1: usize) {
+    dst[r0 * d..r1 * d].copy_from_slice(&src[r0 * d..r1 * d]);
+}
+
+/// Embedding lookup: for tokens `[t0, t1)` copy `emb[token[t]]` into row
+/// `t` of `out`. `emb` is [vocab, d] f32.
+pub fn embed_rows(
+    emb: &[f32],
+    tokens: &[i32],
+    out: &mut [f32],
+    d: usize,
+    t0: usize,
+    t1: usize,
+) {
+    for t in t0..t1 {
+        let tok = tokens[t] as usize;
+        out[t * d..(t + 1) * d].copy_from_slice(&emb[tok * d..(tok + 1) * d]);
+    }
+}
+
+/// Accumulate: dst[i] += src[i] over [e0, e1) — the Gather operator's
+/// partial-sum reduction (§3.3: "collects and sums the output tensors
+/// from all subgraphs").
+pub fn accumulate(src: &[f32], dst: &mut [f32], e0: usize, e1: usize) {
+    for i in e0..e1 {
+        dst[i] += src[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copy_row_range() {
+        let src = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut dst = vec![0.0; 6];
+        copy_rows(&src, &mut dst, 2, 1, 3);
+        assert_eq!(dst, vec![0.0, 0.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn embed_looks_up_rows() {
+        let emb = vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]; // vocab 3, d 2
+        let tokens = vec![2i32, 0, 1];
+        let mut out = vec![9.0; 6];
+        embed_rows(&emb, &tokens, &mut out, 2, 0, 3);
+        assert_eq!(out, vec![2.0, 2.0, 0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn accumulate_sums() {
+        let src = vec![1.0, 1.0, 1.0];
+        let mut dst = vec![1.0, 2.0, 3.0];
+        accumulate(&src, &mut dst, 0, 3);
+        assert_eq!(dst, vec![2.0, 3.0, 4.0]);
+        accumulate(&src, &mut dst, 1, 2);
+        assert_eq!(dst, vec![2.0, 4.0, 4.0]);
+    }
+}

@@ -1,0 +1,174 @@
+//! Analytic (FLOPs, bytes) profiles per operator — the contract between
+//! real execution and the virtual-time simulator.
+//!
+//! Each function describes the resources one worker consumes when it
+//! computes its share of an operator. Byte counts are what the operator
+//! *streams from memory*, which for the bandwidth-bound decode path is
+//! the quantity that determines throughput (paper §3.1).
+
+use crate::tensor::DType;
+
+/// Resource profile of a worker's share of one operator.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpCost {
+    pub flops: f64,
+    /// Bytes streamed from the weight-like operand (partitioned rows).
+    pub weight_bytes: f64,
+    /// Bytes streamed from activation inputs.
+    pub input_bytes: f64,
+    /// Bytes written to the output.
+    pub output_bytes: f64,
+}
+
+impl OpCost {
+    pub fn total_bytes(&self) -> f64 {
+        self.weight_bytes + self.input_bytes + self.output_bytes
+    }
+}
+
+/// GEMM over output rows `[n0, n1)`: x [m, k] · w[n, k]ᵀ stripe.
+pub fn gemm(m: usize, k: usize, n0: usize, n1: usize, wdtype: DType) -> OpCost {
+    let rows = (n1 - n0) as f64;
+    OpCost {
+        flops: 2.0 * m as f64 * k as f64 * rows,
+        weight_bytes: rows * k as f64 * wdtype.bytes_per_element(),
+        input_bytes: m as f64 * k as f64 * 4.0,
+        output_bytes: m as f64 * rows * 4.0,
+    }
+}
+
+/// RMSNorm over rows `[r0, r1)` of a [rows, d] activation.
+pub fn rmsnorm(d: usize, r0: usize, r1: usize) -> OpCost {
+    let rows = (r1 - r0) as f64;
+    OpCost {
+        flops: rows * d as f64 * 3.0,
+        weight_bytes: d as f64 * 4.0, // the gain vector
+        input_bytes: rows * d as f64 * 4.0,
+        output_bytes: rows * d as f64 * 4.0,
+    }
+}
+
+/// RoPE on heads `[h0, h1)` of [rows, heads*hd] (in place).
+pub fn rope(rows: usize, head_dim: usize, h0: usize, h1: usize) -> OpCost {
+    let elems = rows as f64 * (h1 - h0) as f64 * head_dim as f64;
+    OpCost {
+        flops: elems * 6.0, // sin/cos amortized + 4 mul/add per pair
+        weight_bytes: 0.0,
+        input_bytes: elems * 4.0,
+        output_bytes: elems * 4.0,
+    }
+}
+
+/// Attention for query heads `[h0, h1)` over `kv_len` cached positions.
+/// The KV stream is the "weight-like" operand: each of the worker's kv
+/// heads streams `kv_len · head_dim` K and V elements.
+#[allow(clippy::too_many_arguments)]
+pub fn attention(
+    rows: usize,
+    heads: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    kv_len: usize,
+    kv_dtype: DType,
+    h0: usize,
+    h1: usize,
+) -> OpCost {
+    let rep = (heads / kv_heads).max(1);
+    let my_heads = (h1 - h0) as f64;
+    // distinct kv heads this worker touches (adjacent query heads share)
+    let my_kv_heads = ((h1.div_ceil(rep)) - (h0 / rep)) as f64;
+    let qk_flops = 2.0 * rows as f64 * my_heads * kv_len as f64 * head_dim as f64;
+    OpCost {
+        flops: 2.0 * qk_flops + 4.0 * rows as f64 * my_heads * kv_len as f64,
+        weight_bytes: 2.0 * my_kv_heads * kv_len as f64 * head_dim as f64
+            * kv_dtype.bytes_per_element(),
+        input_bytes: rows as f64 * my_heads * head_dim as f64 * 4.0,
+        output_bytes: rows as f64 * my_heads * head_dim as f64 * 4.0,
+    }
+}
+
+/// KV store for kv heads `[h0, h1)` of `rows` new tokens.
+pub fn store_kv(rows: usize, head_dim: usize, h0: usize, h1: usize) -> OpCost {
+    let elems = rows as f64 * (h1 - h0) as f64 * head_dim as f64;
+    OpCost { flops: 0.0, weight_bytes: 0.0, input_bytes: elems * 4.0, output_bytes: elems * 4.0 }
+}
+
+/// Element-wise binary/unary op over `[e0, e1)` flat elements.
+/// `inputs` = number of input streams (1 for silu/copy, 2 for add/mul).
+pub fn elementwise(inputs: usize, e0: usize, e1: usize) -> OpCost {
+    let elems = (e1 - e0) as f64;
+    OpCost {
+        flops: elems * 2.0,
+        weight_bytes: 0.0,
+        input_bytes: elems * 4.0 * inputs as f64,
+        output_bytes: elems * 4.0,
+    }
+}
+
+/// Embedding lookup of `[t0, t1)` tokens from a [vocab, d] f32 table.
+pub fn embed(d: usize, t0: usize, t1: usize) -> OpCost {
+    let elems = (t1 - t0) as f64 * d as f64;
+    OpCost { flops: 0.0, weight_bytes: elems * 4.0, input_bytes: 0.0, output_bytes: elems * 4.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_q4_weight_stream_matches_paper_math() {
+        // one decode token over a [2560, 2560] Q4_0 matmul reads
+        // 2560·2560·0.5625 ≈ 3.69 MB of weights
+        let c = gemm(1, 2560, 0, 2560, DType::Q4_0);
+        assert!((c.weight_bytes - 2560.0 * 2560.0 * 0.5625).abs() < 1.0);
+        assert_eq!(c.flops, 2.0 * 2560.0 * 2560.0);
+    }
+
+    #[test]
+    fn gemm_partition_is_linear_in_rows() {
+        let half = gemm(1, 256, 0, 128, DType::F32);
+        let full = gemm(1, 256, 0, 256, DType::F32);
+        assert!((full.weight_bytes - 2.0 * half.weight_bytes).abs() < 1e-9);
+        assert!((full.flops - 2.0 * half.flops).abs() < 1e-9);
+        // input activation is NOT partitioned: both read all of x
+        assert_eq!(full.input_bytes, half.input_bytes);
+    }
+
+    #[test]
+    fn attention_kv_stream_grows_with_kv_len() {
+        let short = attention(1, 4, 2, 64, 16, DType::F32, 0, 4);
+        let long = attention(1, 4, 2, 64, 256, DType::F32, 0, 4);
+        assert!((long.weight_bytes / short.weight_bytes - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attention_gqa_dedups_kv_heads() {
+        // 4 query heads on 2 kv heads: workers covering heads 0..2 touch
+        // kv head 0 only
+        let c = attention(1, 4, 2, 8, 10, DType::F32, 0, 2);
+        let full = attention(1, 4, 2, 8, 10, DType::F32, 0, 4);
+        assert!((full.weight_bytes / c.weight_bytes - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn elementwise_input_streams() {
+        assert_eq!(elementwise(2, 0, 100).input_bytes, 800.0);
+        assert_eq!(elementwise(1, 0, 100).input_bytes, 400.0);
+    }
+
+    #[test]
+    fn decode_step_is_weight_dominated() {
+        // sanity: for one token on a 4B-geometry layer, GEMM weight bytes
+        // dwarf everything else — the premise of the paper's analysis
+        let d = 2560;
+        let ffn = 9728;
+        let mut weight = 0.0;
+        let mut other = 0.0;
+        for (n, k) in [(d, d), (d, ffn), (ffn, d), (ffn, d)] {
+            let c = gemm(1, k, 0, n, DType::Q4_0);
+            weight += c.weight_bytes;
+            other += c.input_bytes + c.output_bytes;
+        }
+        assert!(weight / other > 100.0);
+    }
+}

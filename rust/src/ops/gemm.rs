@@ -1,0 +1,235 @@
+//! GEMM / GEMV kernels — the decode hot path.
+//!
+//! Weights are row-major `[N, K]` (each output feature is one weight
+//! row, ggml convention) in f32 or Q4_0; activations are `[M, K]` f32.
+//! Every kernel computes output *rows `[n0, n1)` for all `M`* so a
+//! thread group partitions the N axis — the exact partition Fig. 7
+//! draws for llama.cpp and §3.2 reuses for TP shards.
+//!
+//! The inner loop reads each quantized weight byte exactly once
+//! (`dot_q4_0_f32`): on real hardware this is the bandwidth-bound
+//! stream the whole paper is about.
+
+use crate::quant::dot_q8_0_f32;
+use crate::tensor::dtype::{Q4_0_BLOCK_BYTES, Q8_0_BLOCK_BYTES, QK4_0, QK8_0};
+
+/// f32 GEMM: `out[m, n] = Σ_k x[m, k] · w[n, k]` for `n ∈ [n0, n1)`.
+/// `out` covers only the `[n0, n1)` column stripe? No — `out` is the
+/// full `[M, N]` buffer; this call writes columns `n0..n1` of each row.
+pub fn gemm_f32(
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    n0: usize,
+    n1: usize,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for mi in 0..m {
+        let xr = &x[mi * k..(mi + 1) * k];
+        let or = &mut out[mi * n..(mi + 1) * n];
+        for ni in n0..n1 {
+            let wr = &w[ni * k..(ni + 1) * k];
+            or[ni] = dot_f32(xr, wr);
+        }
+    }
+}
+
+/// Q4_0 GEMM: weight rows are Q4_0 streams of `k/32*18` bytes.
+///
+/// The activation row's per-block sums are computed once and shared by
+/// all `n1 - n0` weight rows (`dot_q4_0_f32_presum`), hoisting the Q4_0
+/// bias correction out of the hot loop — see EXPERIMENTS.md §Perf.
+pub fn gemm_q4_0(
+    x: &[f32],
+    w: &[u8],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    n0: usize,
+    n1: usize,
+) {
+    let row_bytes = k / QK4_0 * Q4_0_BLOCK_BYTES;
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * row_bytes);
+    debug_assert_eq!(out.len(), m * n);
+    let mut xsums = Vec::with_capacity(k / QK4_0);
+    for mi in 0..m {
+        let xr = &x[mi * k..(mi + 1) * k];
+        crate::quant::block_sums_q4_0(xr, &mut xsums);
+        let or = &mut out[mi * n..(mi + 1) * n];
+        for ni in n0..n1 {
+            let wr = &w[ni * row_bytes..(ni + 1) * row_bytes];
+            or[ni] = crate::quant::dot_q4_0_f32_presum(wr, xr, &xsums);
+        }
+    }
+}
+
+/// Q8_0 GEMM (quantized-KV attention scores use this layout).
+pub fn gemm_q8_0(
+    x: &[f32],
+    w: &[u8],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    n0: usize,
+    n1: usize,
+) {
+    let row_bytes = k / QK8_0 * Q8_0_BLOCK_BYTES;
+    debug_assert_eq!(out.len(), m * n);
+    for mi in 0..m {
+        let xr = &x[mi * k..(mi + 1) * k];
+        let or = &mut out[mi * n..(mi + 1) * n];
+        for ni in n0..n1 {
+            let wr = &w[ni * row_bytes..(ni + 1) * row_bytes];
+            or[ni] = dot_q8_0_f32(wr, xr);
+        }
+    }
+}
+
+/// Unrolled f32 dot product (the auto-vectorizer's favourite shape).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_matrix_q4_0;
+    use crate::util::Rng;
+
+    fn naive(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0; m * n];
+        for mi in 0..m {
+            for ni in 0..n {
+                let mut s = 0.0;
+                for ki in 0..k {
+                    s += x[mi * k + ki] * w[ni * k + ki];
+                }
+                out[mi * n + ni] = s;
+            }
+        }
+        out
+    }
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        let mut v = vec![0.0; n];
+        r.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn f32_matches_naive() {
+        let (m, k, n) = (3, 64, 17);
+        let x = rand_vec(m * k, 1);
+        let w = rand_vec(n * k, 2);
+        let mut out = vec![0.0; m * n];
+        gemm_f32(&x, &w, &mut out, m, k, n, 0, n);
+        let expect = naive(&x, &w, m, k, n);
+        for (a, b) in out.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn partial_stripe_writes_only_range() {
+        let (m, k, n) = (2, 32, 8);
+        let x = rand_vec(m * k, 3);
+        let w = rand_vec(n * k, 4);
+        let mut out = vec![f32::NAN; m * n];
+        gemm_f32(&x, &w, &mut out, m, k, n, 2, 5);
+        for mi in 0..m {
+            for ni in 0..n {
+                let v = out[mi * n + ni];
+                if (2..5).contains(&ni) {
+                    assert!(v.is_finite());
+                } else {
+                    assert!(v.is_nan());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stripes_compose_to_full_gemm() {
+        // two disjoint stripes (as two workers would compute) == full
+        let (m, k, n) = (1, 96, 10);
+        let x = rand_vec(m * k, 5);
+        let w = rand_vec(n * k, 6);
+        let mut full = vec![0.0; m * n];
+        gemm_f32(&x, &w, &mut full, m, k, n, 0, n);
+        let mut split = vec![0.0; m * n];
+        gemm_f32(&x, &w, &mut split, m, k, n, 0, 4);
+        gemm_f32(&x, &w, &mut split, m, k, n, 4, n);
+        assert_eq!(full, split);
+    }
+
+    #[test]
+    fn q4_matches_dequantized_f32_gemm() {
+        let (m, k, n) = (2, 128, 6);
+        let x = rand_vec(m * k, 7);
+        let w = rand_vec(n * k, 8);
+        let wq = quantize_matrix_q4_0(&w, n, k);
+        let mut wd = vec![0.0; n * k];
+        for ni in 0..n {
+            crate::quant::dequantize_row_q4_0(
+                &wq[ni * (k / 32 * 18)..(ni + 1) * (k / 32 * 18)],
+                &mut wd[ni * k..(ni + 1) * k],
+            );
+        }
+        let expect = naive(&x, &wd, m, k, n);
+        let mut out = vec![0.0; m * n];
+        gemm_q4_0(&x, &wq, &mut out, m, k, n, 0, n);
+        for (a, b) in out.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn q8_roundtrip_gemv() {
+        let k = 64;
+        let n = 4;
+        let w = rand_vec(n * k, 9);
+        let x = rand_vec(k, 10);
+        let mut wq = Vec::new();
+        for r in w.chunks_exact(k) {
+            crate::quant::quantize_row_q8_0(r, &mut wq);
+        }
+        let mut out = vec![0.0; n];
+        gemm_q8_0(&x, &wq, &mut out, 1, k, n, 0, n);
+        let expect = naive(&x, &w, 1, k, n);
+        for (a, b) in out.iter().zip(&expect) {
+            assert!((a - b).abs() < 0.05 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dot_handles_tails() {
+        let a = rand_vec(7, 11);
+        let b = rand_vec(7, 12);
+        let expect: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot_f32(&a, &b) - expect).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,26 @@
+//! Operator library (paper §2.7).
+//!
+//! Hardware-agnostic operations (copy/reshape) live in [`common`];
+//! CPU-hot operations (GEMM, attention, norms) have row/head-partitioned
+//! kernels: every entry point computes an explicit `[r0, r1)` slice of
+//! the output so the thread manager can hand disjoint ranges to the
+//! workers of a group — the same work-splitting llama.cpp's compute
+//! threads use, made explicit.
+//!
+//! The paper reuses llama.cpp's NEON kernels; this reproduction ships
+//! portable Rust with identical block layouts (`crate::quant`) and an
+//! L1 Pallas kernel for the TPU mapping (DESIGN.md
+//! §Hardware-Adaptation). [`cost`] carries each operator's analytic
+//! (flops, bytes) profile — the contract between real execution and the
+//! virtual-time simulator.
+
+pub mod attention;
+pub mod common;
+pub mod cost;
+pub mod elementwise;
+pub mod gemm;
+pub mod norm;
+pub mod rope;
+pub mod softmax;
+
+pub use cost::OpCost;

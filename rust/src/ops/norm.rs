@@ -1,0 +1,136 @@
+//! RMSNorm — full-row and per-head (Qwen3 QK-norm) variants.
+
+/// RMSNorm rows `[r0, r1)` of `x` ([rows, d]) into `out` with gain `g`.
+pub fn rmsnorm(
+    x: &[f32],
+    g: &[f32],
+    out: &mut [f32],
+    d: usize,
+    eps: f32,
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(g.len(), d);
+    for r in r0..r1 {
+        let xr = &x[r * d..(r + 1) * d];
+        let or = &mut out[r * d..(r + 1) * d];
+        let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for i in 0..d {
+            or[i] = xr[i] * inv * g[i];
+        }
+    }
+}
+
+/// Per-head RMSNorm over `head_dim` segments (Qwen3's q_norm/k_norm):
+/// `x` is [rows, heads*head_dim]; the gain `g` is [head_dim], shared by
+/// all heads. Normalizes heads `[h0, h1)` of every row.
+pub fn rmsnorm_heads(
+    x: &[f32],
+    g: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    heads: usize,
+    head_dim: usize,
+    eps: f32,
+    h0: usize,
+    h1: usize,
+) {
+    debug_assert_eq!(g.len(), head_dim);
+    let d = heads * head_dim;
+    for r in 0..rows {
+        for h in h0..h1 {
+            let base = r * d + h * head_dim;
+            let xr = &x[base..base + head_dim];
+            let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() / head_dim as f32;
+            let inv = 1.0 / (ms + eps).sqrt();
+            let or = &mut out[base..base + head_dim];
+            for i in 0..head_dim {
+                or[i] = xr[i] * inv * g[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        let mut v = vec![0.0; n];
+        r.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn unit_rms_rows() {
+        let d = 64;
+        let x = rand_vec(3 * d, 1);
+        let g = vec![1.0; d];
+        let mut out = vec![0.0; 3 * d];
+        rmsnorm(&x, &g, &mut out, d, 1e-6, 0, 3);
+        for r in 0..3 {
+            let row = &out[r * d..(r + 1) * d];
+            let rms: f32 = (row.iter().map(|v| v * v).sum::<f32>() / d as f32).sqrt();
+            assert!((rms - 1.0).abs() < 1e-3, "rms {rms}");
+        }
+    }
+
+    #[test]
+    fn gain_is_applied() {
+        let d = 4;
+        let x = vec![2.0, 2.0, 2.0, 2.0];
+        let g = vec![0.5, 1.0, 2.0, 0.0];
+        let mut out = vec![0.0; 4];
+        rmsnorm(&x, &g, &mut out, d, 0.0, 0, 1);
+        // rms = 2 → normalized = 1
+        assert!((out[0] - 0.5).abs() < 1e-6);
+        assert!((out[2] - 2.0).abs() < 1e-6);
+        assert_eq!(out[3], 0.0);
+    }
+
+    #[test]
+    fn row_range_respected() {
+        let d = 8;
+        let x = rand_vec(4 * d, 2);
+        let g = vec![1.0; d];
+        let mut out = vec![f32::NAN; 4 * d];
+        rmsnorm(&x, &g, &mut out, d, 1e-6, 1, 3);
+        assert!(out[0].is_nan());
+        assert!(out[d].is_finite());
+        assert!(out[3 * d].is_nan());
+    }
+
+    #[test]
+    fn per_head_norm_matches_rowwise_on_each_head() {
+        let (heads, hd) = (4, 16);
+        let x = rand_vec(2 * heads * hd, 3);
+        let g = rand_vec(hd, 4);
+        let mut out = vec![0.0; x.len()];
+        rmsnorm_heads(&x, &g, &mut out, 2, heads, hd, 1e-6, 0, heads);
+        // reference: treat each (row, head) segment as a row
+        let mut expect = vec![0.0; x.len()];
+        for seg in 0..(2 * heads) {
+            rmsnorm(&x[seg * hd..(seg + 1) * hd], &g,
+                    &mut expect[seg * hd..(seg + 1) * hd], hd, 1e-6, 0, 1);
+        }
+        for (a, b) in out.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn head_range_partition_composes() {
+        let (heads, hd) = (6, 8);
+        let x = rand_vec(heads * hd, 5);
+        let g = vec![1.0; hd];
+        let mut full = vec![0.0; x.len()];
+        rmsnorm_heads(&x, &g, &mut full, 1, heads, hd, 1e-6, 0, heads);
+        let mut split = vec![0.0; x.len()];
+        rmsnorm_heads(&x, &g, &mut split, 1, heads, hd, 1e-6, 0, 2);
+        rmsnorm_heads(&x, &g, &mut split, 1, heads, hd, 1e-6, 2, 6);
+        assert_eq!(full, split);
+    }
+}

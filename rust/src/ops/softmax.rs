@@ -1,0 +1,63 @@
+//! Numerically-stable row softmax.
+
+/// Softmax rows `[r0, r1)` of `x` ([rows, n]) in place, over the first
+/// `valid` entries of each row (entries beyond `valid` are forced to 0 —
+/// the KV cache holds `max_seq` slots but only `kv_len` are live).
+pub fn softmax_rows(x: &mut [f32], n: usize, valid: usize, r0: usize, r1: usize) {
+    debug_assert!(valid <= n);
+    for r in r0..r1 {
+        let row = &mut x[r * n..(r + 1) * n];
+        let m = row[..valid].iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row[..valid].iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        let inv = if sum > 0.0 { 1.0 / sum } else { 0.0 };
+        for v in row[..valid].iter_mut() {
+            *v *= inv;
+        }
+        for v in row[valid..].iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_to_one() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        softmax_rows(&mut x, 4, 4, 0, 1);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(x[3] > x[2] && x[2] > x[1]);
+    }
+
+    #[test]
+    fn stable_for_large_values() {
+        let mut x = vec![1000.0, 1001.0];
+        softmax_rows(&mut x, 2, 2, 0, 1);
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!((x[0] + x[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn masks_beyond_valid() {
+        let mut x = vec![1.0, 1.0, 99.0, 99.0];
+        softmax_rows(&mut x, 4, 2, 0, 1);
+        assert_eq!(x[2], 0.0);
+        assert_eq!(x[3], 0.0);
+        assert!((x[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn row_range_respected() {
+        let mut x = vec![1.0; 8];
+        softmax_rows(&mut x, 4, 4, 1, 2);
+        assert_eq!(&x[..4], &[1.0; 4]);
+        assert!((x[4] - 0.25).abs() < 1e-6);
+    }
+}

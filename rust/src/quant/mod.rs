@@ -1,0 +1,298 @@
+//! Block quantization — ggml-compatible Q4_0 / Q8_0 (paper §4 runs
+//! Qwen3-4B in Q4_0 with a Q4_0 KV cache).
+//!
+//! Layouts are byte-identical with llama.cpp and with the Python writer
+//! (`python/compile/quantize.py`):
+//!
+//! * **Q4_0** — 32 elements → 18 bytes: little-endian f16 scale `d`,
+//!   then 16 bytes where byte `i` packs element `i` (low nibble) and
+//!   element `i+16` (high nibble); `x[i] = (q[i] - 8) * d`.
+//! * **Q8_0** — 32 elements → 34 bytes: f16 scale then 32 signed bytes;
+//!   `x[i] = q[i] * d`.
+//!
+//! The quantization rule mirrors `quantize_row_q4_0`: the scale comes
+//! from the *signed* value with the largest magnitude (`d = max / -8`),
+//! keeping the asymmetric [-8, 7] codebook anchored on the dominant
+//! sign.
+
+use crate::tensor::dtype::{Q4_0_BLOCK_BYTES, Q8_0_BLOCK_BYTES, QK4_0, QK8_0};
+use crate::util::{f16_to_f32, f32_to_f16};
+
+/// Quantize one row (`k % 32 == 0`) into a Q4_0 byte stream appended to
+/// `out`. Matches the Python `quantize_q4_0` bit-for-bit.
+pub fn quantize_row_q4_0(x: &[f32], out: &mut Vec<u8>) {
+    assert!(x.len() % QK4_0 == 0, "row length {} not a multiple of 32", x.len());
+    for block in x.chunks_exact(QK4_0) {
+        // signed max-|x| value
+        let mut maxv = 0.0f32;
+        let mut amax = 0.0f32;
+        for &v in block {
+            if v.abs() > amax {
+                amax = v.abs();
+                maxv = v;
+            }
+        }
+        let d = maxv / -8.0;
+        let d16 = f32_to_f16(d);
+        let d_used = f16_to_f32(d16); // python quantizes with the f16 value? No: python uses f16->f32 of d for inv
+        let id = if d_used != 0.0 { 1.0 / d_used } else { 0.0 };
+        out.extend_from_slice(&d16.to_le_bytes());
+        for i in 0..16 {
+            let q = |v: f32| -> u8 { (v * id + 8.5).clamp(0.0, 15.0) as u8 };
+            let lo = q(block[i]);
+            let hi = q(block[i + 16]);
+            out.push(lo | (hi << 4));
+        }
+    }
+}
+
+/// Dequantize a Q4_0 byte stream into `out` (f32), one block per 18 bytes.
+pub fn dequantize_row_q4_0(raw: &[u8], out: &mut [f32]) {
+    assert_eq!(raw.len() % Q4_0_BLOCK_BYTES, 0);
+    assert_eq!(out.len(), raw.len() / Q4_0_BLOCK_BYTES * QK4_0);
+    for (bi, block) in raw.chunks_exact(Q4_0_BLOCK_BYTES).enumerate() {
+        let d = f16_to_f32(u16::from_le_bytes([block[0], block[1]]));
+        let dst = &mut out[bi * QK4_0..(bi + 1) * QK4_0];
+        for i in 0..16 {
+            let b = block[2 + i];
+            dst[i] = ((b & 0x0F) as i32 - 8) as f32 * d;
+            dst[i + 16] = ((b >> 4) as i32 - 8) as f32 * d;
+        }
+    }
+}
+
+/// Dot product of a Q4_0 row with an f32 activation — the decode GEMV
+/// inner loop. Reads each quantized byte exactly once (the paper's
+/// bandwidth-bound hot path); block-wise FMA accumulation in f32.
+#[inline]
+pub fn dot_q4_0_f32(raw: &[u8], x: &[f32]) -> f32 {
+    debug_assert_eq!(raw.len() % Q4_0_BLOCK_BYTES, 0);
+    debug_assert_eq!(x.len(), raw.len() / Q4_0_BLOCK_BYTES * QK4_0);
+    let mut acc = 0.0f32;
+    for (block, xb) in raw.chunks_exact(Q4_0_BLOCK_BYTES).zip(x.chunks_exact(QK4_0)) {
+        let d = f16_to_f32(u16::from_le_bytes([block[0], block[1]]));
+        let xsum: f32 = xb.iter().sum();
+        acc += (dot_block_q4(block, xb) - 8.0 * xsum) * d;
+    }
+    acc
+}
+
+/// Per-block sums of an activation row (`Σ x` over each 32-element
+/// block). Computed once per GEMV row and shared across all weight rows
+/// by [`dot_q4_0_f32_presum`] — hoisting the `-8·Σx` bias correction
+/// out of the N-row loop (§Perf optimization 1).
+pub fn block_sums_q4_0(x: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(x.chunks_exact(QK4_0).map(|b| b.iter().sum::<f32>()));
+}
+
+/// [`dot_q4_0_f32`] with precomputed block sums (the GEMM fast path).
+#[inline]
+pub fn dot_q4_0_f32_presum(raw: &[u8], x: &[f32], xsums: &[f32]) -> f32 {
+    debug_assert_eq!(raw.len() % Q4_0_BLOCK_BYTES, 0);
+    debug_assert_eq!(xsums.len(), raw.len() / Q4_0_BLOCK_BYTES);
+    let mut acc = 0.0f32;
+    for ((block, xb), &xsum) in raw
+        .chunks_exact(Q4_0_BLOCK_BYTES)
+        .zip(x.chunks_exact(QK4_0))
+        .zip(xsums)
+    {
+        let d = f16_to_f32(u16::from_le_bytes([block[0], block[1]]));
+        acc += (dot_block_q4(block, xb) - 8.0 * xsum) * d;
+    }
+    acc
+}
+
+/// Unbiased nibble·x contraction of one 18-byte block against 32
+/// activations: `Σ q_lo[i]·x[i] + Σ q_hi[i]·x[i+16]` with four
+/// accumulators and fixed-size views (bounds-check free, keeps the
+/// auto-vectorizer fed).
+#[inline(always)]
+fn dot_block_q4(block: &[u8], xb: &[f32]) -> f32 {
+    let qs: &[u8; 16] = block[2..18].try_into().unwrap();
+    let x0: &[f32; 16] = xb[..16].try_into().unwrap();
+    let x1: &[f32; 16] = xb[16..32].try_into().unwrap();
+    let mut s = [0.0f32; 4];
+    for i in 0..4 {
+        let j = i * 4;
+        s[0] += (qs[j] & 0x0F) as f32 * x0[j] + (qs[j] >> 4) as f32 * x1[j];
+        s[1] += (qs[j + 1] & 0x0F) as f32 * x0[j + 1] + (qs[j + 1] >> 4) as f32 * x1[j + 1];
+        s[2] += (qs[j + 2] & 0x0F) as f32 * x0[j + 2] + (qs[j + 2] >> 4) as f32 * x1[j + 2];
+        s[3] += (qs[j + 3] & 0x0F) as f32 * x0[j + 3] + (qs[j + 3] >> 4) as f32 * x1[j + 3];
+    }
+    (s[0] + s[1]) + (s[2] + s[3])
+}
+
+/// Quantize one row into Q8_0 (used for the quantized KV-cache path).
+pub fn quantize_row_q8_0(x: &[f32], out: &mut Vec<u8>) {
+    assert!(x.len() % QK8_0 == 0);
+    for block in x.chunks_exact(QK8_0) {
+        let amax = block.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let d = amax / 127.0;
+        let d16 = f32_to_f16(d);
+        let d_used = f16_to_f32(d16);
+        let id = if d_used != 0.0 { 1.0 / d_used } else { 0.0 };
+        out.extend_from_slice(&d16.to_le_bytes());
+        for &v in block {
+            out.push((v * id).round().clamp(-127.0, 127.0) as i8 as u8);
+        }
+    }
+}
+
+/// Dequantize a Q8_0 byte stream.
+pub fn dequantize_row_q8_0(raw: &[u8], out: &mut [f32]) {
+    assert_eq!(raw.len() % Q8_0_BLOCK_BYTES, 0);
+    assert_eq!(out.len(), raw.len() / Q8_0_BLOCK_BYTES * QK8_0);
+    for (bi, block) in raw.chunks_exact(Q8_0_BLOCK_BYTES).enumerate() {
+        let d = f16_to_f32(u16::from_le_bytes([block[0], block[1]]));
+        let dst = &mut out[bi * QK8_0..(bi + 1) * QK8_0];
+        for i in 0..QK8_0 {
+            dst[i] = (block[2 + i] as i8) as f32 * d;
+        }
+    }
+}
+
+/// Dot product of a Q8_0 row with f32 activations.
+#[inline]
+pub fn dot_q8_0_f32(raw: &[u8], x: &[f32]) -> f32 {
+    debug_assert_eq!(raw.len() % Q8_0_BLOCK_BYTES, 0);
+    let mut acc = 0.0f32;
+    for (bi, block) in raw.chunks_exact(Q8_0_BLOCK_BYTES).enumerate() {
+        let d = f16_to_f32(u16::from_le_bytes([block[0], block[1]]));
+        let xb = &x[bi * QK8_0..(bi + 1) * QK8_0];
+        let mut s = 0.0f32;
+        for i in 0..QK8_0 {
+            s += (block[2 + i] as i8) as f32 * xb[i];
+        }
+        acc += s * d;
+    }
+    acc
+}
+
+/// Quantize a whole [n, k] matrix row-wise into a Q4_0 stream.
+pub fn quantize_matrix_q4_0(w: &[f32], n: usize, k: usize) -> Vec<u8> {
+    assert_eq!(w.len(), n * k);
+    let mut out = Vec::with_capacity(n * k / QK4_0 * Q4_0_BLOCK_BYTES);
+    for row in w.chunks_exact(k) {
+        quantize_row_q4_0(row, &mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_row(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, scale);
+        v
+    }
+
+    #[test]
+    fn q4_roundtrip_error_bound() {
+        // worst case one full step (asymmetric codebook) + f16 slack
+        for seed in 0..8 {
+            let x = rand_row(256, seed, 1.0);
+            let mut raw = Vec::new();
+            quantize_row_q4_0(&x, &mut raw);
+            let mut y = vec![0.0; 256];
+            dequantize_row_q4_0(&raw, &mut y);
+            for (bi, block) in x.chunks_exact(32).enumerate() {
+                let d = f16_to_f32(u16::from_le_bytes([raw[bi * 18], raw[bi * 18 + 1]])).abs();
+                for (i, &v) in block.iter().enumerate() {
+                    let err = (v - y[bi * 32 + i]).abs();
+                    assert!(err <= d * 1.0 + d * 1e-2 + 1e-6, "err {err} vs step {d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q4_known_block() {
+        // max magnitude -16 at position 5 → d = 2.0, that element → nibble 0
+        let mut x = vec![0.0f32; 32];
+        x[5] = -16.0;
+        let mut raw = Vec::new();
+        quantize_row_q4_0(&x, &mut raw);
+        let d = f16_to_f32(u16::from_le_bytes([raw[0], raw[1]]));
+        assert_eq!(d, 2.0);
+        let mut y = vec![0.0; 32];
+        dequantize_row_q4_0(&raw, &mut y);
+        assert_eq!(y[5], -16.0);
+        assert_eq!(y[0], 0.0);
+    }
+
+    #[test]
+    fn q4_zero_block() {
+        let x = vec![0.0f32; 32];
+        let mut raw = Vec::new();
+        quantize_row_q4_0(&x, &mut raw);
+        let mut y = vec![1.0; 32];
+        dequantize_row_q4_0(&raw, &mut y);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn q4_dot_matches_dequant_dot() {
+        let w = rand_row(320, 3, 0.5);
+        let x = rand_row(320, 4, 1.0);
+        let mut raw = Vec::new();
+        quantize_row_q4_0(&w, &mut raw);
+        let mut wd = vec![0.0; 320];
+        dequantize_row_q4_0(&raw, &mut wd);
+        let expect: f32 = wd.iter().zip(&x).map(|(a, b)| a * b).sum();
+        let got = dot_q4_0_f32(&raw, &x);
+        assert!((expect - got).abs() <= 1e-4 * expect.abs().max(1.0), "{expect} vs {got}");
+    }
+
+    #[test]
+    fn q8_roundtrip_tighter_than_q4() {
+        let x = rand_row(128, 9, 1.0);
+        let mut r4 = Vec::new();
+        let mut r8 = Vec::new();
+        quantize_row_q4_0(&x, &mut r4);
+        quantize_row_q8_0(&x, &mut r8);
+        let mut y4 = vec![0.0; 128];
+        let mut y8 = vec![0.0; 128];
+        dequantize_row_q4_0(&r4, &mut y4);
+        dequantize_row_q8_0(&r8, &mut y8);
+        let e4: f32 = x.iter().zip(&y4).map(|(a, b)| (a - b).abs()).sum();
+        let e8: f32 = x.iter().zip(&y8).map(|(a, b)| (a - b).abs()).sum();
+        assert!(e8 < e4 * 0.25, "q8 {e8} vs q4 {e4}");
+    }
+
+    #[test]
+    fn q8_dot_matches() {
+        let w = rand_row(64, 5, 1.0);
+        let x = rand_row(64, 6, 1.0);
+        let mut raw = Vec::new();
+        quantize_row_q8_0(&w, &mut raw);
+        let mut wd = vec![0.0; 64];
+        dequantize_row_q8_0(&raw, &mut wd);
+        let expect: f32 = wd.iter().zip(&x).map(|(a, b)| a * b).sum();
+        let got = dot_q8_0_f32(&raw, &x);
+        assert!((expect - got).abs() < 1e-4);
+    }
+
+    #[test]
+    fn matrix_stream_is_row_major_blocks() {
+        let k = 64;
+        let w = rand_row(3 * k, 7, 1.0);
+        let raw = quantize_matrix_q4_0(&w, 3, k);
+        assert_eq!(raw.len(), 3 * 2 * 18);
+        // row 1's stream equals quantizing row 1 alone
+        let mut solo = Vec::new();
+        quantize_row_q4_0(&w[k..2 * k], &mut solo);
+        assert_eq!(&raw[36..72], &solo[..]);
+    }
+
+    #[test]
+    fn sizes_match_dtype_math() {
+        use crate::tensor::DType;
+        let raw = quantize_matrix_q4_0(&vec![0.0; 8 * 96], 8, 96);
+        assert_eq!(raw.len(), DType::Q4_0.tensor_bytes(&[8, 96]));
+    }
+}

@@ -1,0 +1,239 @@
+//! Figures 10–13: decode/prefill throughput sweeps on the simulated
+//! testbed (Qwen3-4B Q4_0, the paper's §4 setup).
+
+use crate::baseline::Strategy;
+use crate::model::{ModelConfig, ModelGraphs};
+use crate::numa::{CostModel, Topology};
+use crate::sched::{ExecParams, SimExecutor};
+
+/// One measured configuration.
+#[derive(Clone, Debug)]
+pub struct SimPoint {
+    pub strategy: String,
+    pub threads: usize,
+    pub tok_per_s: f64,
+    pub remote_fraction: f64,
+}
+
+/// A plot series: y = tok/s over x = thread count.
+#[derive(Clone, Debug)]
+pub struct FigureSeries {
+    pub label: String,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+}
+
+fn sim_executor(strategy: Strategy, threads: usize, topo: &Topology) -> SimExecutor {
+    let cores = strategy.bind_cores(topo, threads);
+    let (single, tp) = strategy.organizations(&cores);
+    SimExecutor::new(CostModel::new(topo.clone()), cores, single, tp, strategy.sync())
+}
+
+/// Decode throughput (token/s) of one configuration: prompt ingested,
+/// then `gen` steps. Step latency is sampled at `samples` evenly-spaced
+/// positions (attention cost is linear in KV length, so the sampled
+/// mean matches the full sum).
+pub fn decode_tok_s(
+    cfg: &ModelConfig,
+    strategy: Strategy,
+    threads: usize,
+    topo: &Topology,
+    prompt: usize,
+    gen: usize,
+    samples: usize,
+) -> SimPoint {
+    let spec = strategy.build_spec(cfg.clone(), topo.n_nodes()).with_sim_only(true);
+    let m = ModelGraphs::build(spec);
+    let ex = sim_executor(strategy, threads, topo);
+
+    let samples = samples.max(1).min(gen);
+    let mut total = 0.0;
+    let mut remote = 0.0;
+    for s in 0..samples {
+        let pos = prompt + (gen - 1) * s / samples.max(1);
+        let rep = ex.run(&m.decode, ExecParams { pos, rows: 1 }, s as u64 + 1);
+        total += rep.elapsed;
+        remote += rep.remote_fraction();
+    }
+    let mean_step = total / samples as f64;
+    SimPoint {
+        strategy: strategy.name(),
+        threads,
+        tok_per_s: 1.0 / mean_step,
+        remote_fraction: remote / samples as f64,
+    }
+}
+
+/// Prefill throughput (token/s): one pass over `prompt` tokens.
+pub fn prefill_tok_s(
+    cfg: &ModelConfig,
+    strategy: Strategy,
+    threads: usize,
+    topo: &Topology,
+    prompt: usize,
+) -> SimPoint {
+    let spec = strategy
+        .build_spec(cfg.clone(), topo.n_nodes())
+        .with_sim_only(true)
+        .with_prefill(prompt);
+    let m = ModelGraphs::build(spec);
+    let ex = sim_executor(strategy, threads, topo);
+    let rep = ex.run(
+        m.prefill.as_ref().expect("prefill graph"),
+        ExecParams { pos: 0, rows: prompt },
+        1,
+    );
+    SimPoint {
+        strategy: strategy.name(),
+        threads,
+        tok_per_s: prompt as f64 / rep.elapsed,
+        remote_fraction: rep.remote_fraction(),
+    }
+}
+
+/// Sweep one strategy over thread counts → a plot series.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_series(
+    cfg: &ModelConfig,
+    strategy: Strategy,
+    thread_counts: &[usize],
+    topo: &Topology,
+    prompt: usize,
+    gen: usize,
+    samples: usize,
+) -> FigureSeries {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &t in thread_counts {
+        let p = decode_tok_s(cfg, strategy, t, topo, prompt, gen, samples);
+        xs.push(t as f64);
+        ys.push(p.tok_per_s);
+    }
+    FigureSeries { label: strategy.name(), xs, ys }
+}
+
+/// Figure 10: single NUMA node, threads 6→48, ArcLight vs llama.cpp.
+pub fn fig10(cfg: &ModelConfig, topo: &Topology, samples: usize) -> Vec<FigureSeries> {
+    let threads = [6, 12, 24, 36, 48];
+    vec![
+        decode_series(cfg, Strategy::llama_isolate(), &threads, topo, 15, 256, samples),
+        decode_series(cfg, Strategy::arclight_single(), &threads, topo, 15, 256, samples),
+    ]
+}
+
+/// Figure 11: 2 and 4 NUMA nodes, llama.cpp-distribute vs ArcLight-TP
+/// (both sync modes). Thread counts are per-machine totals.
+pub fn fig11(cfg: &ModelConfig, topo: &Topology, nodes: usize, samples: usize) -> Vec<FigureSeries> {
+    let per_node = [12, 24, 48];
+    let threads: Vec<usize> = per_node.iter().map(|t| t * nodes).collect();
+    use crate::sched::SyncMode;
+    vec![
+        decode_series(cfg, Strategy::llama_distribute(nodes), &threads, topo, 15, 256, samples),
+        decode_series(cfg, Strategy::arclight_tp(nodes, SyncMode::SyncA), &threads, topo, 15, 256, samples),
+        decode_series(cfg, Strategy::arclight_tp(nodes, SyncMode::SyncB), &threads, topo, 15, 256, samples),
+    ]
+}
+
+/// Figure 12: decode with a 300-token prompt (multi-node).
+pub fn fig12(cfg: &ModelConfig, topo: &Topology, nodes: usize, samples: usize) -> Vec<FigureSeries> {
+    let per_node = [12, 24, 48];
+    let threads: Vec<usize> = per_node.iter().map(|t| t * nodes).collect();
+    use crate::sched::SyncMode;
+    vec![
+        decode_series(cfg, Strategy::llama_distribute(nodes), &threads, topo, 300, 256, samples),
+        decode_series(cfg, Strategy::arclight_tp(nodes, SyncMode::SyncB), &threads, topo, 300, 256, samples),
+    ]
+}
+
+/// Figure 13: prefill throughput with a 300-token prompt (multi-node).
+pub fn fig13(cfg: &ModelConfig, topo: &Topology, nodes: usize) -> Vec<FigureSeries> {
+    let per_node = [12, 24, 48];
+    let threads: Vec<usize> = per_node.iter().map(|t| t * nodes).collect();
+    use crate::sched::SyncMode;
+    let mut out = Vec::new();
+    for strategy in [
+        Strategy::llama_distribute(nodes),
+        Strategy::arclight_tp(nodes, SyncMode::SyncB),
+    ] {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for &t in &threads {
+            let p = prefill_tok_s(cfg, strategy, t, topo, 300);
+            xs.push(t as f64);
+            ys.push(p.tok_per_s);
+        }
+        out.push(FigureSeries { label: strategy.name(), xs, ys });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A scaled-down geometry so report tests stay fast; same shape
+    /// properties as the 4B run (bandwidth-bound decode).
+    fn small() -> ModelConfig {
+        ModelConfig {
+            dim: 512,
+            n_layers: 4,
+            n_heads: 8,
+            n_kv_heads: 4,
+            head_dim: 64,
+            ffn_dim: 1536,
+            vocab: 8192,
+            max_seq: 512,
+            rope_theta: 1e6,
+            norm_eps: 1e-6,
+        }
+    }
+
+    #[test]
+    fn arclight_beats_llama_on_four_nodes() {
+        let cfg = small();
+        let topo = Topology::kunpeng920();
+        let llama = decode_tok_s(&cfg, Strategy::llama_distribute(4), 192, &topo, 15, 256, 2);
+        let arc = decode_tok_s(
+            &cfg,
+            Strategy::arclight_tp(4, crate::sched::SyncMode::SyncB),
+            192,
+            &topo,
+            15,
+            256,
+            2,
+        );
+        assert!(
+            arc.tok_per_s > llama.tok_per_s * 1.1,
+            "arclight {} vs llama {}",
+            arc.tok_per_s,
+            llama.tok_per_s
+        );
+        // the mechanism: ArcLight's remote traffic share is far lower
+        assert!(arc.remote_fraction < llama.remote_fraction * 0.8,
+                "remote {} vs {}", arc.remote_fraction, llama.remote_fraction);
+    }
+
+    #[test]
+    fn throughput_scales_with_threads_single_node() {
+        let cfg = small();
+        let topo = Topology::kunpeng920();
+        let t6 = decode_tok_s(&cfg, Strategy::arclight_single(), 6, &topo, 15, 64, 2);
+        let t48 = decode_tok_s(&cfg, Strategy::arclight_single(), 48, &topo, 15, 64, 2);
+        assert!(t48.tok_per_s > t6.tok_per_s, "{} vs {}", t48.tok_per_s, t6.tok_per_s);
+    }
+
+    #[test]
+    fn prefill_is_compute_heavier_than_decode() {
+        // prefill advantage of TP is smaller than decode advantage (§A.2)
+        let cfg = small();
+        let topo = Topology::kunpeng920();
+        let d_l = decode_tok_s(&cfg, Strategy::llama_distribute(4), 192, &topo, 300, 64, 2);
+        let d_a = decode_tok_s(&cfg, Strategy::arclight_tp(4, crate::sched::SyncMode::SyncB), 192, &topo, 300, 64, 2);
+        let p_l = prefill_tok_s(&cfg, Strategy::llama_distribute(4), 192, &topo, 300);
+        let p_a = prefill_tok_s(&cfg, Strategy::arclight_tp(4, crate::sched::SyncMode::SyncB), 192, &topo, 300);
+        let decode_gain = d_a.tok_per_s / d_l.tok_per_s;
+        let prefill_gain = p_a.tok_per_s / p_l.tok_per_s;
+        assert!(prefill_gain < decode_gain,
+                "prefill gain {prefill_gain} should be below decode gain {decode_gain}");
+    }
+}

@@ -1,0 +1,61 @@
+//! Regeneration of the paper's evaluation artifacts (Table 1,
+//! Figures 10–13) on the simulated testbed.
+//!
+//! Each function returns structured series and can pretty-print the
+//! same rows the paper reports. Absolute numbers are simulator
+//! estimates (see DESIGN.md "Hardware substitution"); the *shape* —
+//! who wins, by what factor, where the crossovers sit — is the
+//! reproduction target.
+
+pub mod figures;
+pub mod table1;
+pub mod trace;
+
+pub use figures::{decode_tok_s, prefill_tok_s, FigureSeries, SimPoint};
+pub use table1::bandwidth_table;
+
+/// Pretty-print a set of series as an aligned text table:
+/// rows = x values, columns = series.
+pub fn render_table(title: &str, xlabel: &str, series: &[FigureSeries]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "# {title}");
+    let _ = write!(out, "{xlabel:>12}");
+    for s in series {
+        let _ = write!(out, "  {:>22}", s.label);
+    }
+    let _ = writeln!(out);
+    let xs = &series[0].xs;
+    for (i, x) in xs.iter().enumerate() {
+        let _ = write!(out, "{x:>12}");
+        for s in series {
+            match s.ys.get(i) {
+                Some(y) => {
+                    let _ = write!(out, "  {y:>22.2}");
+                }
+                None => {
+                    let _ = write!(out, "  {:>22}", "-");
+                }
+            }
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let s = vec![
+            FigureSeries { label: "a".into(), xs: vec![6.0, 12.0], ys: vec![1.0, 2.0] },
+            FigureSeries { label: "b".into(), xs: vec![6.0, 12.0], ys: vec![3.0, 4.0] },
+        ];
+        let t = render_table("T", "threads", &s);
+        assert!(t.contains("# T"));
+        assert!(t.lines().count() >= 3);
+        assert!(t.contains("3.00"));
+    }
+}

@@ -1,0 +1,99 @@
+//! Table 1: memory access speed (GB/s) for every core-node ×
+//! memory-node combination.
+//!
+//! The paper measures this with a streaming microbenchmark on its
+//! Kunpeng-920 box; we regenerate it by running the *same experiment
+//! against the simulator*: all cores of node `i` stream a large buffer
+//! homed on node `j`, and the observed aggregate GB/s is reported.
+//! Recovering the configured matrix end-to-end validates the
+//! contention model (shared channels must cancel out exactly).
+
+use crate::numa::cost::Traffic;
+use crate::numa::{CostModel, Topology};
+
+/// Aggregate streaming bandwidth matrix (GB/s): `out[i][j]` = cores of
+/// node `i` reading memory of node `j`.
+pub fn bandwidth_table(topo: &Topology, readers_per_node: usize, buffer_gb: f64) -> Vec<Vec<f64>> {
+    let mut topo = topo.clone();
+    topo.jitter = 0.0; // the paper's microbench reports steady-state
+    topo.op_dispatch = 0.0;
+    let n = topo.n_nodes();
+    let model = CostModel::new(topo.clone());
+    let bytes_total = buffer_gb * 1e9;
+    let mut out = vec![vec![0.0; n]; n];
+    for cn in 0..n {
+        for mn in 0..n {
+            // every reader core scans its slice of the buffer
+            let per_reader = bytes_total / readers_per_node as f64;
+            let workers: Vec<(usize, Traffic)> = (0..readers_per_node)
+                .map(|i| {
+                    let core = cn * topo.cores_per_node + i;
+                    let mut t = Traffic::new(n);
+                    t.add_bytes(mn, per_reader);
+                    (core, t)
+                })
+                .collect();
+            let times = model.op_times(&workers, 1);
+            let elapsed = times.iter().copied().fold(0.0, f64::max);
+            out[cn][mn] = bytes_total / elapsed / 1e9;
+        }
+    }
+    out
+}
+
+/// Render in the paper's layout.
+pub fn render(table: &[Vec<f64>]) -> String {
+    use std::fmt::Write;
+    let n = table.len();
+    let mut s = String::new();
+    let _ = writeln!(s, "# Table 1: memory access speed (GB/s), cores × memory node");
+    let _ = write!(s, "{:>10}", "cores\\mem");
+    for j in 0..n {
+        let _ = write!(s, "  node {j:>3}");
+    }
+    let _ = writeln!(s);
+    for (i, row) in table.iter().enumerate() {
+        let _ = write!(s, "{:>10}", format!("node {i}"));
+        for v in row {
+            let _ = write!(s, "  {v:>8.0}");
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_the_configured_matrix() {
+        let topo = Topology::kunpeng920();
+        let t = bandwidth_table(&topo, 48, 1.0);
+        for i in 0..4 {
+            for j in 0..4 {
+                let expect = topo.bandwidth(i, j) / 1e9;
+                assert!(
+                    (t[i][j] - expect).abs() < 0.5,
+                    "({i},{j}): {} vs {expect}",
+                    t[i][j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn local_is_about_4x_remote() {
+        let t = bandwidth_table(&Topology::kunpeng920(), 48, 0.5);
+        let ratio = t[0][0] / t[0][3];
+        assert!(ratio > 3.5 && ratio < 5.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let t = bandwidth_table(&Topology::kunpeng920(), 8, 0.1);
+        let s = render(&t);
+        assert_eq!(s.lines().count(), 6);
+        assert!(s.contains("node 3"));
+    }
+}

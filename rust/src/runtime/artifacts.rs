@@ -1,0 +1,118 @@
+//! AOT artifact manifest (`artifacts/manifest.json`).
+//!
+//! The manifest records the exact flattened argument order of each HLO
+//! entry point (jax flattens the parameter pytree in sorted-key order)
+//! so the runtime can assemble PJRT literals positionally from the ALF
+//! weight file.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+/// One argument of an HLO entry point.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    fn from_json(j: &Json) -> Result<ArgSpec> {
+        let name = j.get("name").and_then(Json::as_str).context("arg name")?.to_string();
+        let dt = j.get("dtype").and_then(Json::as_str).context("arg dtype")?;
+        let dtype = match dt {
+            "u8" => DType::I32, // placeholder — u8 handled specially by the loader
+            other => DType::parse(other).with_context(|| format!("dtype {other}"))?,
+        };
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("arg shape")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        Ok(ArgSpec { name, dtype, shape })
+    }
+
+    /// The raw dtype string (the manifest distinguishes u8 from i32).
+    pub fn is_u8(j: &Json) -> bool {
+        j.get("dtype").and_then(Json::as_str) == Some("u8")
+    }
+}
+
+/// One entry point: ordered args + outputs.
+#[derive(Clone, Debug)]
+pub struct EntryPoint {
+    pub args: Vec<(ArgSpec, bool)>, // (spec, is_u8)
+    pub hlo_path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: Json,
+    pub weights_file: PathBuf,
+    pub prompt_len: usize,
+    pub decode: EntryPoint,
+    pub prefill: EntryPoint,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let entry = |key: &str, file: &str| -> Result<EntryPoint> {
+            let args = j
+                .get(key)
+                .and_then(|d| d.get("args"))
+                .and_then(Json::as_arr)
+                .with_context(|| format!("{key}.args"))?
+                .iter()
+                .map(|a| Ok((ArgSpec::from_json(a)?, ArgSpec::is_u8(a))))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(EntryPoint { args, hlo_path: dir.join(file) })
+        };
+        Ok(Manifest {
+            config: j.get("config").cloned().context("config")?,
+            weights_file: dir.join(
+                j.get("weights_file").and_then(Json::as_str).unwrap_or("tiny.alf"),
+            ),
+            prompt_len: j.get("prompt_len").and_then(Json::as_usize).unwrap_or(16),
+            decode: entry("decode", "decode.hlo.txt")?,
+            prefill: entry("prefill", "prefill.hlo.txt")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.prompt_len, 16);
+        // decode args: weights… + token, pos, k_caches, v_caches
+        let names: Vec<&str> = m.decode.args.iter().map(|(a, _)| a.name.as_str()).collect();
+        assert!(names.contains(&"token"));
+        assert!(names.contains(&"pos"));
+        assert!(names.last() == Some(&"v_caches"));
+        // weight args appear before runtime args (pytree order)
+        let tok_idx = names.iter().position(|n| *n == "token").unwrap();
+        assert!(names[..tok_idx].iter().any(|n| n.starts_with("layers.0.")));
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT-compiled L2 artifacts and execute them
+//! from Rust (the L3↔L2 bridge).
+//!
+//! `python/compile/aot.py` lowers the JAX model (which calls the L1
+//! Pallas kernels) to HLO **text**; this module compiles that text on
+//! the PJRT CPU client and feeds it weights/caches/tokens as literals.
+//! Python never runs at serving time. The golden integration tests
+//! compare the native engine against this path on identical ALF bytes.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArgSpec, Manifest};
+pub use pjrt::{PjrtModel, PjrtSession};

@@ -1,0 +1,216 @@
+//! PJRT session: compile HLO text once, run decode/prefill as functions
+//! over literals.
+//!
+//! Interchange is HLO *text* (see `aot.py` / DESIGN.md): jax ≥ 0.5
+//! serializes HloModuleProto with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::model::AlfFile;
+use crate::quant::dequantize_row_q4_0;
+use crate::tensor::DType;
+use crate::util::f16_to_f32;
+
+use super::artifacts::Manifest;
+
+/// A compiled entry point plus the pre-built weight literals it takes.
+pub struct PjrtModel {
+    exe: PjRtLoadedExecutable,
+    /// Literals for every *weight* argument, in positional order.
+    weight_args: Vec<Literal>,
+    /// Names of the trailing runtime arguments, in order.
+    pub runtime_args: Vec<String>,
+}
+
+/// The PJRT CPU session: client + decode/prefill models.
+pub struct PjrtSession {
+    pub manifest: Manifest,
+    pub decode: PjrtModel,
+    pub prefill: PjrtModel,
+    pub kv_shape: Vec<usize>,
+}
+
+impl PjrtSession {
+    /// Load artifacts (manifest + HLO text + ALF weights) and compile.
+    pub fn load(artifacts_dir: &Path) -> Result<PjrtSession> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let alf = AlfFile::open(&manifest.weights_file)?;
+        let client = PjRtClient::cpu().context("PJRT CPU client")?;
+
+        let build = |ep: &super::artifacts::EntryPoint| -> Result<PjrtModel> {
+            let proto = xla::HloModuleProto::from_text_file(
+                ep.hlo_path.to_str().context("hlo path")?,
+            )
+            .with_context(|| format!("parsing {}", ep.hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).context("PJRT compile")?;
+
+            let mut weight_args = Vec::new();
+            let mut runtime_args = Vec::new();
+            for (spec, is_u8) in &ep.args {
+                if is_runtime_arg(&spec.name) {
+                    runtime_args.push(spec.name.clone());
+                    continue;
+                }
+                if !runtime_args.is_empty() {
+                    bail!("weight arg '{}' after runtime args", spec.name);
+                }
+                weight_args.push(weight_literal(&alf, &spec.name, &spec.shape, *is_u8)?);
+            }
+            Ok(PjrtModel { exe, weight_args, runtime_args })
+        };
+
+        let decode = build(&manifest.decode)?;
+        let prefill = build(&manifest.prefill)?;
+        let cfg = &manifest.config;
+        let kv_shape = vec![
+            cfg.get("n_layers").and_then(crate::util::json::Json::as_usize).unwrap_or(2),
+            cfg.get("n_kv_heads").and_then(crate::util::json::Json::as_usize).unwrap_or(2),
+            cfg.get("max_seq").and_then(crate::util::json::Json::as_usize).unwrap_or(64),
+            cfg.get("head_dim").and_then(crate::util::json::Json::as_usize).unwrap_or(16),
+        ];
+        Ok(PjrtSession { manifest, decode, prefill, kv_shape })
+    }
+
+    /// Run prefill: tokens → (logits, k_caches, v_caches).
+    pub fn run_prefill(&self, tokens: &[i32]) -> Result<(Vec<f32>, Literal, Literal)> {
+        if tokens.len() != self.manifest.prompt_len {
+            bail!("prefill expects exactly {} tokens", self.manifest.prompt_len);
+        }
+        let toks = Literal::vec1(tokens);
+        let mut args: Vec<&Literal> = self.prefill.weight_args.iter().collect();
+        args.push(&toks);
+        let out = self.prefill.exe.execute::<&Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        unpack_outputs(parts)
+    }
+
+    /// Run one decode step: (token, pos, caches) → (logits, caches).
+    pub fn run_decode(
+        &self,
+        token: i32,
+        pos: i32,
+        k: &Literal,
+        v: &Literal,
+    ) -> Result<(Vec<f32>, Literal, Literal)> {
+        let tok = Literal::scalar(token);
+        let pos = Literal::scalar(pos);
+        let mut args: Vec<&Literal> = self.decode.weight_args.iter().collect();
+        args.push(&tok);
+        args.push(&pos);
+        args.push(k);
+        args.push(v);
+        let out = self.decode.exe.execute::<&Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        unpack_outputs(parts)
+    }
+
+    /// Zero-filled KV cache literals.
+    pub fn empty_kv(&self) -> Result<(Literal, Literal)> {
+        let n: usize = self.kv_shape.iter().product();
+        let zeros = vec![0u8; n * 4];
+        let k = Literal::create_from_shape_and_untyped_data(ElementType::F32, &self.kv_shape, &zeros)?;
+        let v = Literal::create_from_shape_and_untyped_data(ElementType::F32, &self.kv_shape, &zeros)?;
+        Ok((k, v))
+    }
+
+    /// Full autoregressive generation through PJRT (golden reference).
+    pub fn generate(&self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        let (mut logits, mut k, mut v) = self.run_prefill(prompt)?;
+        let mut pos = prompt.len() as i32;
+        let mut out = Vec::new();
+        for _ in 0..max_new {
+            let next = argmax(&logits) as i32;
+            out.push(next);
+            let (l2, k2, v2) = self.run_decode(next, pos, &k, &v)?;
+            logits = l2;
+            k = k2;
+            v = v2;
+            pos += 1;
+        }
+        Ok(out)
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn is_runtime_arg(name: &str) -> bool {
+    matches!(name, "token" | "pos" | "tokens" | "k_caches" | "v_caches")
+}
+
+fn unpack_outputs(mut parts: Vec<Literal>) -> Result<(Vec<f32>, Literal, Literal)> {
+    if parts.len() != 3 {
+        bail!("expected 3 outputs, got {}", parts.len());
+    }
+    let v = parts.pop().unwrap();
+    let k = parts.pop().unwrap();
+    let logits = parts.pop().unwrap().to_vec::<f32>()?;
+    Ok((logits, k, v))
+}
+
+/// Build the literal for one weight argument from the ALF file.
+///
+/// Manifest arg names map onto ALF tensors: `layers.0.wq.qs` /
+/// `layers.0.wq.d` are the packed-nibble and scale views of the Q4_0
+/// tensor `layers.0.wq`; everything else is a raw f32 tensor.
+fn weight_literal(alf: &AlfFile, name: &str, shape: &[usize], is_u8: bool) -> Result<Literal> {
+    if let Some(base) = name.strip_suffix(".qs") {
+        let t = alf.tensor(base)?;
+        let raw = alf.payload(t);
+        // extract the 16 nibble bytes of each 18-byte block
+        let mut qs = Vec::with_capacity(raw.len() / 18 * 16);
+        for block in raw.chunks_exact(18) {
+            qs.extend_from_slice(&block[2..]);
+        }
+        if !is_u8 {
+            bail!("{name}: expected u8");
+        }
+        return Ok(Literal::create_from_shape_and_untyped_data(ElementType::U8, shape, &qs)?);
+    }
+    if let Some(base) = name.strip_suffix(".d") {
+        let t = alf.tensor(base)?;
+        let raw = alf.payload(t);
+        // f16 scale of each block, widened to f32 (matching the python
+        // side's d.astype(np.float32))
+        let mut d = Vec::with_capacity(raw.len() / 18);
+        for block in raw.chunks_exact(18) {
+            d.push(f16_to_f32(u16::from_le_bytes([block[0], block[1]])));
+        }
+        let bytes: Vec<u8> = d.iter().flat_map(|x| x.to_le_bytes()).collect();
+        return Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, &bytes)?);
+    }
+    let t = alf.tensor(name)?;
+    match t.dtype {
+        DType::F32 => Ok(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            shape,
+            alf.payload(t),
+        )?),
+        DType::Q4_0 => {
+            // fully dequantized fallback (unused by the current manifest)
+            let k = crate::tensor::row_len(&t.shape);
+            let n = crate::tensor::rows(&t.shape);
+            let mut out = vec![0.0f32; n * k];
+            for r in 0..n {
+                dequantize_row_q4_0(alf.rows(t, r, r + 1), &mut out[r * k..(r + 1) * k]);
+            }
+            let bytes: Vec<u8> = out.iter().flat_map(|x| x.to_le_bytes()).collect();
+            Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, &bytes)?)
+        }
+        other => bail!("unsupported ALF dtype {other} for '{name}'"),
+    }
+}

@@ -1,0 +1,271 @@
+//! Real execution of one operator slice.
+//!
+//! `run_op(graph, pool, id, params, u0, u1)` computes work units
+//! `[u0, u1)` of tensor `id`'s producing operator. Workers of a group
+//! call this with disjoint unit ranges; unit semantics per op are
+//! defined by [`super::partition_units`].
+//!
+//! Safety: each invocation writes only the output region its unit range
+//! owns; inputs are read-only. Disjointness across concurrent calls is
+//! guaranteed by the partitioner (chunk_range), which is what makes the
+//! raw-pointer arena views sound.
+
+use crate::graph::{Graph, OpKind};
+use crate::memory::MemoryPool;
+use crate::ops;
+use crate::tensor::{DType, TensorId};
+
+use super::ExecParams;
+
+/// Fetch an f32 view of a tensor's whole buffer.
+///
+/// # Safety
+/// Caller must ensure no concurrent overlapping writer (see module docs).
+unsafe fn f32s<'a>(pool: &'a MemoryPool, graph: &Graph, id: TensorId) -> &'a [f32] {
+    let b = graph.buf(id);
+    pool.arena(b.arena).f32s(b.off, b.len / 4)
+}
+
+#[allow(clippy::mut_from_ref)]
+unsafe fn f32s_mut<'a>(pool: &'a MemoryPool, graph: &Graph, id: TensorId) -> &'a mut [f32] {
+    let b = graph.buf(id);
+    pool.arena(b.arena).f32s_mut(b.off, b.len / 4)
+}
+
+unsafe fn bytes<'a>(pool: &'a MemoryPool, graph: &Graph, id: TensorId) -> &'a [u8] {
+    let b = graph.buf(id);
+    pool.arena(b.arena).bytes(b.off, b.len)
+}
+
+/// Execute units `[u0, u1)` of the operator producing `id`.
+pub fn run_op(
+    graph: &Graph,
+    pool: &MemoryPool,
+    id: TensorId,
+    params: &ExecParams,
+    u0: usize,
+    u1: usize,
+) {
+    if u0 >= u1 {
+        return;
+    }
+    let meta = graph.meta(id);
+    let src = &meta.src;
+    unsafe {
+        match &meta.op {
+            OpKind::Leaf => {}
+            OpKind::Embed => {
+                let table = f32s(pool, graph, src[0]);
+                let toks_buf = graph.buf(src[1]);
+                let toks_raw = pool.arena(toks_buf.arena).bytes(toks_buf.off, toks_buf.len);
+                let tokens: &[i32] = std::slice::from_raw_parts(
+                    toks_raw.as_ptr() as *const i32,
+                    toks_raw.len() / 4,
+                );
+                let out = f32s_mut(pool, graph, id);
+                let d = meta.row_len();
+                ops::common::embed_rows(table, tokens, out, d, u0, u1);
+            }
+            OpKind::RmsNorm { eps } => {
+                let x = f32s(pool, graph, src[0]);
+                let g = f32s(pool, graph, src[1]);
+                let out = f32s_mut(pool, graph, id);
+                ops::norm::rmsnorm(x, g, out, meta.row_len(), *eps, u0, u1);
+            }
+            OpKind::RmsNormHeads { eps, heads, head_dim } => {
+                let x = f32s(pool, graph, src[0]);
+                let g = f32s(pool, graph, src[1]);
+                let out = f32s_mut(pool, graph, id);
+                let rows = meta.rows();
+                ops::norm::rmsnorm_heads(x, g, out, rows, *heads, *head_dim, *eps, u0, u1);
+            }
+            OpKind::MatMul => {
+                let x = f32s(pool, graph, src[0]);
+                let out = f32s_mut(pool, graph, id);
+                let k = graph.meta(src[1]).row_len();
+                let n = graph.meta(src[1]).rows();
+                let m = graph.meta(src[0]).rows();
+                match graph.meta(src[1]).dtype {
+                    DType::F32 => {
+                        let w = f32s(pool, graph, src[1]);
+                        ops::gemm::gemm_f32(x, w, out, m, k, n, u0, u1);
+                    }
+                    DType::Q4_0 => {
+                        let w = bytes(pool, graph, src[1]);
+                        ops::gemm::gemm_q4_0(x, w, out, m, k, n, u0, u1);
+                    }
+                    DType::Q8_0 => {
+                        let w = bytes(pool, graph, src[1]);
+                        ops::gemm::gemm_q8_0(x, w, out, m, k, n, u0, u1);
+                    }
+                    DType::I32 => panic!("i32 weights unsupported"),
+                }
+            }
+            OpKind::Rope { theta, heads, head_dim } => {
+                let x = f32s(pool, graph, src[0]);
+                let out = f32s_mut(pool, graph, id);
+                // copy the head range, then rotate in place
+                let rows = meta.rows();
+                let d = heads * head_dim;
+                for r in 0..rows {
+                    let lo = r * d + u0 * head_dim;
+                    let hi = r * d + u1 * head_dim;
+                    out[lo..hi].copy_from_slice(&x[lo..hi]);
+                }
+                ops::rope::rope(out, rows, *heads, *head_dim, params.pos, *theta, u0, u1);
+            }
+            OpKind::StoreKv { kv_heads, head_dim, max_seq } => {
+                let kv = f32s(pool, graph, src[0]);
+                // output aliases the cache (src[1]) buffer
+                let cache = f32s_mut(pool, graph, src[1]);
+                let rows = graph.meta(src[0]).rows();
+                ops::attention::store_kv(
+                    kv, cache, rows, *kv_heads, *head_dim, *max_seq, params.pos, u0, u1,
+                );
+            }
+            OpKind::Attention { heads, kv_heads, head_dim, max_seq } => {
+                let q = f32s(pool, graph, src[0]);
+                let k = f32s(pool, graph, src[1]);
+                let v = f32s(pool, graph, src[2]);
+                let out = f32s_mut(pool, graph, id);
+                let rows = graph.meta(src[0]).rows();
+                ops::attention::attention(
+                    q, k, v, out, rows, *heads, *kv_heads, *head_dim, *max_seq,
+                    params.pos, u0, u1,
+                );
+            }
+            OpKind::Silu => {
+                let a = f32s(pool, graph, src[0]);
+                let out = f32s_mut(pool, graph, id);
+                ops::elementwise::silu(a, out, u0, u1);
+            }
+            OpKind::Add => {
+                let a = f32s(pool, graph, src[0]);
+                let b = f32s(pool, graph, src[1]);
+                let out = f32s_mut(pool, graph, id);
+                ops::elementwise::add(a, b, out, u0, u1);
+            }
+            OpKind::Mul => {
+                let a = f32s(pool, graph, src[0]);
+                let b = f32s(pool, graph, src[1]);
+                let out = f32s_mut(pool, graph, id);
+                ops::elementwise::mul(a, b, out, u0, u1);
+            }
+            OpKind::SwiGlu => {
+                let g = f32s(pool, graph, src[0]);
+                let u = f32s(pool, graph, src[1]);
+                let out = f32s_mut(pool, graph, id);
+                ops::elementwise::swiglu(g, u, out, u0, u1);
+            }
+            OpKind::Copy => {
+                let a = f32s(pool, graph, src[0]);
+                let out = f32s_mut(pool, graph, id);
+                out[u0..u1].copy_from_slice(&a[u0..u1]);
+            }
+            OpKind::SliceRow { row } => {
+                let a = f32s(pool, graph, src[0]);
+                let out = f32s_mut(pool, graph, id);
+                let d = meta.row_len();
+                out[u0..u1].copy_from_slice(&a[row * d + u0..row * d + u1]);
+            }
+            OpKind::AddN => {
+                let out = f32s_mut(pool, graph, id);
+                let first = f32s(pool, graph, src[0]);
+                out[u0..u1].copy_from_slice(&first[u0..u1]);
+                for s in &src[1..] {
+                    let p = f32s(pool, graph, *s);
+                    ops::common::accumulate(p, out, u0, u1);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::numa::Placement;
+    use crate::tensor::TensorBundle;
+
+    /// Build a tiny graph, fill leaves, execute serially, check numbers.
+    #[test]
+    fn serial_execution_of_small_chain() {
+        let pool = MemoryPool::new(1, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0], Placement::Node(0));
+        let x = b.leaf("x", DType::F32, vec![1, 4], Placement::Node(0));
+        let w = b.leaf("w", DType::F32, vec![2, 4], Placement::Node(0));
+        let y = b.matmul(&TensorBundle::one(x), &TensorBundle::one(w));
+        let z = b.add(&y, &y);
+        let (graph, pool) = b.finish();
+        let pool = pool.unwrap();
+
+        unsafe {
+            f32s_mut(&pool, &graph, x).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+            f32s_mut(&pool, &graph, w)
+                .copy_from_slice(&[1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        }
+        let params = ExecParams { pos: 0, rows: 1 };
+        for entry in &graph.exec {
+            for id in entry.bundle.iter() {
+                let units = super::super::partition_units(graph.meta(id), &params);
+                run_op(&graph, &pool, id, &params, 0, units);
+            }
+        }
+        unsafe {
+            assert_eq!(f32s(&pool, &graph, y.single()), &[1.0, 2.0]);
+            assert_eq!(f32s(&pool, &graph, z.single()), &[2.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn addn_sums_partials() {
+        let pool = MemoryPool::new(2, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0, 1], Placement::Node(0));
+        let p0 = b.leaf("p0", DType::F32, vec![1, 4], Placement::Node(0));
+        let p1 = b.leaf("p1", DType::F32, vec![1, 4], Placement::Node(1));
+        let z = b.gather(&TensorBundle::new(vec![p0, p1]));
+        let (graph, pool) = b.finish();
+        let pool = pool.unwrap();
+        unsafe {
+            f32s_mut(&pool, &graph, p0).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+            f32s_mut(&pool, &graph, p1).copy_from_slice(&[10.0, 20.0, 30.0, 40.0]);
+        }
+        let params = ExecParams { pos: 0, rows: 1 };
+        run_op(&graph, &pool, z.single(), &params, 0, 4);
+        unsafe {
+            assert_eq!(f32s(&pool, &graph, z.single()), &[11.0, 22.0, 33.0, 44.0]);
+        }
+    }
+
+    #[test]
+    fn store_kv_aliases_cache() {
+        let pool = MemoryPool::new(1, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0], Placement::Node(0));
+        let kvsrc = b.leaf("kv", DType::F32, vec![1, 2 * 4], Placement::Node(0));
+        let cache = b.kv_leaf("cache", vec![2, 8, 4], Placement::Node(0));
+        let stored = b.store_kv(
+            &TensorBundle::one(kvsrc),
+            &TensorBundle::one(cache),
+            2,
+            4,
+            8,
+        );
+        let (graph, pool) = b.finish();
+        let pool = pool.unwrap();
+        assert_eq!(graph.buf(stored.single()), graph.buf(cache));
+        unsafe {
+            f32s_mut(&pool, &graph, kvsrc)
+                .copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        }
+        let params = ExecParams { pos: 3, rows: 1 };
+        run_op(&graph, &pool, stored.single(), &params, 0, 2);
+        unsafe {
+            let c = f32s(&pool, &graph, cache);
+            // head 0 slot 3
+            assert_eq!(&c[3 * 4..4 * 4], &[1.0, 2.0, 3.0, 4.0]);
+            // head 1 slot 3 (head stride = 8 slots × 4)
+            assert_eq!(&c[8 * 4 + 3 * 4..8 * 4 + 4 * 4], &[5.0, 6.0, 7.0, 8.0]);
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Graph computation scheduler (paper §2.6, §3.3–3.4).
+//!
+//! The scheduler walks the static execution list in order. Width-1
+//! entries run on the whole pool (every worker computes a slice of the
+//! same operator, barrier after each — llama.cpp's model). Width-G
+//! entries are TP subgraphs executed by the per-node thread groups
+//! under one of two synchronization disciplines (Fig. 9):
+//!
+//! * **Sync A** — a *global* barrier after every operator: all groups
+//!   finish operator `i` before any starts `i+1`;
+//! * **Sync B** — *local* barriers inside each group; the global
+//!   barrier appears only at the Gather boundary. Groups drift through
+//!   their independent streams, hiding stragglers (the paper's
+//!   "asynchronous subgraph execution", worth ≈5 tok/s).
+//!
+//! Two executors share all partitioning code: [`real::RealExecutor`]
+//! runs actual kernels on the worker pool; [`sim::SimExecutor`] charges
+//! the identical work to the NUMA cost model in virtual time.
+
+pub mod exec_op;
+pub mod real;
+pub mod sim;
+pub mod traffic;
+
+pub use real::RealExecutor;
+pub use sim::{SimExecutor, SimReport};
+
+/// Synchronization discipline for TP subgraph execution (§3.4, Fig. 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Global barrier after every operator.
+    SyncA,
+    /// Group-local barriers; global only at region boundaries.
+    SyncB,
+}
+
+/// Per-pass runtime parameters (the static graph is position-agnostic).
+#[derive(Clone, Copy, Debug)]
+pub struct ExecParams {
+    /// Absolute position of the first row processed this pass.
+    pub pos: usize,
+    /// Rows (tokens) processed this pass: 1 for decode, prompt length
+    /// for prefill.
+    pub rows: usize,
+}
+
+impl ExecParams {
+    /// KV positions live after this pass completes.
+    pub fn kv_len(&self) -> usize {
+        self.pos + self.rows
+    }
+}
+
+/// Work units an operator partitions across its thread group — the row
+/// policy of §2.7 (matmul: weight rows; attention/rope: heads;
+/// element-wise: flat elements). Row counts come from tensor shapes so
+/// sliced tails (prefill last-row logits) partition correctly.
+pub fn partition_units(meta: &crate::graph::TensorMeta, _params: &ExecParams) -> usize {
+    use crate::graph::OpKind::*;
+    match &meta.op {
+        Leaf => 0,
+        Embed => meta.rows(),
+        RmsNorm { .. } => meta.rows(),
+        RmsNormHeads { heads, .. } => *heads,
+        MatMul => meta.row_len(), // output features N
+        Rope { heads, .. } => *heads,
+        StoreKv { kv_heads, .. } => *kv_heads,
+        Attention { heads, .. } => *heads,
+        SliceRow { .. } => meta.row_len(),
+        Silu | Add | Mul | SwiGlu | Copy | AddN => meta.numel(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, TensorMeta};
+    use crate::numa::Placement;
+    use crate::tensor::DType;
+
+    fn meta(op: OpKind, shape: Vec<usize>) -> TensorMeta {
+        TensorMeta {
+            name: "t".into(),
+            dtype: DType::F32,
+            shape,
+            op,
+            src: vec![],
+            placement: Placement::Node(0),
+            buf: None,
+            group: None,
+        }
+    }
+
+    #[test]
+    fn units_per_op() {
+        let p = ExecParams { pos: 4, rows: 2 };
+        assert_eq!(p.kv_len(), 6);
+        assert_eq!(partition_units(&meta(OpKind::MatMul, vec![2, 96]), &p), 96);
+        assert_eq!(
+            partition_units(&meta(OpKind::Attention { heads: 8, kv_heads: 2, head_dim: 16, max_seq: 64 }, vec![2, 128]), &p),
+            8
+        );
+        assert_eq!(partition_units(&meta(OpKind::Add, vec![2, 64]), &p), 128);
+        assert_eq!(partition_units(&meta(OpKind::RmsNorm { eps: 1e-6 }, vec![2, 64]), &p), 2);
+    }
+}

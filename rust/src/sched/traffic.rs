@@ -1,0 +1,231 @@
+//! Per-worker traffic derivation for the simulator.
+//!
+//! For every operator this module answers: *when a worker computes work
+//! units `[u0, u1)`, how many bytes does it pull from each NUMA node and
+//! how many FLOPs does it execute?* The byte formulas mirror
+//! [`crate::ops::cost`]; the node attribution comes from each source
+//! tensor's [`Placement`]. Matmul weight rows and attention KV heads use
+//! exact row-range attribution (placement alignment is the paper's whole
+//! point); secondary streams use proportional spreading.
+
+use crate::graph::{Graph, OpKind};
+use crate::numa::cost::Traffic;
+use crate::ops::cost as oc;
+use crate::tensor::TensorId;
+
+use super::ExecParams;
+
+fn spread_into(t: &mut Traffic, placement: &crate::numa::Placement, bytes: f64) {
+    let n = t.bytes.len();
+    for (node, b) in placement.spread_bytes(bytes, n) {
+        t.add_bytes(node, b);
+    }
+}
+
+/// Traffic of one worker computing units `[u0, u1)` of tensor `id`.
+///
+/// `co_readers` = number of workers on the same NUMA node executing
+/// this operator. Multi-row (prefill) matmuls amortize the shared
+/// activation stream across co-located readers: blocked GEMM fetches X
+/// into the node's shared L3 once and every core reuses it, so the
+/// DRAM traffic is one stream per node, not one per core. Decode
+/// (m = 1) has no reuse dimension and is charged per worker — which is
+/// exactly why the paper's TP gain is larger for decode than prefill
+/// (§A.2).
+pub fn op_traffic(
+    graph: &Graph,
+    id: TensorId,
+    params: &ExecParams,
+    u0: usize,
+    u1: usize,
+    n_nodes: usize,
+    co_readers: usize,
+    bcast_amort: f64,
+) -> Traffic {
+    let mut t = Traffic::new(n_nodes);
+    if u0 >= u1 {
+        return t;
+    }
+    let meta = graph.meta(id);
+    let src = &meta.src;
+    let units = u1 - u0;
+
+    match &meta.op {
+        OpKind::Leaf => {}
+        OpKind::Embed => {
+            let d = meta.row_len();
+            let c = oc::embed(d, u0, u1);
+            t.flops += c.flops;
+            spread_into(&mut t, &graph.meta(src[0]).placement, c.weight_bytes);
+            spread_into(&mut t, &meta.placement, c.output_bytes);
+        }
+        OpKind::RmsNorm { .. } => {
+            let d = meta.row_len();
+            let c = oc::rmsnorm(d, u0, u1);
+            t.flops += c.flops;
+            let x = graph.meta(src[0]);
+            t.add_placed(&x.placement, u0, u1, x.rows().max(1), d as f64 * 4.0);
+            spread_into(&mut t, &graph.meta(src[1]).placement, c.weight_bytes);
+            t.add_placed(&meta.placement, u0, u1, meta.rows().max(1), d as f64 * 4.0);
+        }
+        OpKind::RmsNormHeads { head_dim, .. } => {
+            let rows = meta.rows();
+            let bytes = (rows * units * head_dim * 4) as f64;
+            t.flops += (rows * units * head_dim * 3) as f64;
+            spread_into(&mut t, &graph.meta(src[0]).placement, bytes);
+            spread_into(&mut t, &meta.placement, bytes);
+        }
+        OpKind::MatMul => {
+            let w = graph.meta(src[1]);
+            let x = graph.meta(src[0]);
+            let k = w.row_len();
+            let n = w.rows();
+            let m = x.rows();
+            let c = oc::gemm(m, k, u0, u1, w.dtype);
+            t.flops += c.flops;
+            // exact row-range attribution for the dominant weight stream
+            t.add_placed(&w.placement, u0, u1, n, w.dtype.row_bytes(k) as f64);
+            // x is read in full by every worker of the stripe; with
+            // m > 1 (prefill) the blocked-GEMM stream amortizes over the
+            // node's L3; at m = 1 (decode) partial cache dedup applies
+            let amortize = if m > 1 {
+                co_readers.max(1) as f64
+            } else {
+                bcast_amort.max(1.0)
+            };
+            spread_into(&mut t, &x.placement, c.input_bytes / amortize);
+            spread_into(&mut t, &meta.placement, c.output_bytes);
+        }
+        OpKind::Rope { head_dim, .. } => {
+            let c = oc::rope(meta.rows(), *head_dim, u0, u1);
+            t.flops += c.flops;
+            spread_into(&mut t, &graph.meta(src[0]).placement, c.input_bytes);
+            spread_into(&mut t, &meta.placement, c.output_bytes);
+        }
+        OpKind::StoreKv { head_dim, .. } => {
+            let c = oc::store_kv(graph.meta(src[0]).rows(), *head_dim, u0, u1);
+            t.flops += c.flops;
+            spread_into(&mut t, &graph.meta(src[0]).placement, c.input_bytes);
+            // writes land in the cache (src[1])
+            spread_into(&mut t, &graph.meta(src[1]).placement, c.output_bytes);
+        }
+        OpKind::Attention { heads, kv_heads, head_dim, max_seq } => {
+            let kv_len = params.kv_len().min(*max_seq);
+            let c = oc::attention(
+                graph.meta(src[0]).rows(), *heads, *kv_heads, *head_dim, kv_len,
+                graph.meta(src[1]).dtype, u0, u1,
+            );
+            t.flops += c.flops;
+            spread_into(&mut t, &graph.meta(src[0]).placement, c.input_bytes);
+            // exact attribution of the K/V streams: kv head h occupies
+            // row block [h*max_seq, h*max_seq + kv_len) of the cache
+            let rep = (heads / kv_heads).max(1);
+            let kvh0 = u0 / rep;
+            let kvh1 = u1.div_ceil(rep);
+            let kc = graph.meta(src[1]);
+            let vc = graph.meta(src[2]);
+            let cache_rows = kv_heads * max_seq;
+            for h in kvh0..kvh1 {
+                let r0 = h * max_seq;
+                t.add_placed(&kc.placement, r0, r0 + kv_len, cache_rows, (*head_dim * 4) as f64);
+                t.add_placed(&vc.placement, r0, r0 + kv_len, cache_rows, (*head_dim * 4) as f64);
+            }
+            spread_into(&mut t, &meta.placement, c.output_bytes);
+        }
+        OpKind::Silu | OpKind::Copy | OpKind::SliceRow { .. } => {
+            let c = oc::elementwise(1, u0, u1);
+            t.flops += c.flops;
+            spread_into(&mut t, &graph.meta(src[0]).placement, c.input_bytes);
+            spread_into(&mut t, &meta.placement, c.output_bytes);
+        }
+        OpKind::Add | OpKind::Mul | OpKind::SwiGlu => {
+            let c = oc::elementwise(2, u0, u1);
+            t.flops += c.flops;
+            spread_into(&mut t, &graph.meta(src[0]).placement, c.input_bytes / 2.0);
+            spread_into(&mut t, &graph.meta(src[1]).placement, c.input_bytes / 2.0);
+            spread_into(&mut t, &meta.placement, c.output_bytes);
+        }
+        OpKind::AddN => {
+            let bytes = (units * 4) as f64;
+            t.flops += (units * src.len()) as f64;
+            for s in src {
+                spread_into(&mut t, &graph.meta(*s).placement, bytes);
+            }
+            spread_into(&mut t, &meta.placement, bytes);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::numa::Placement;
+    use crate::tensor::{DType, TensorBundle};
+
+    fn params() -> ExecParams {
+        ExecParams { pos: 0, rows: 1 }
+    }
+
+    #[test]
+    fn matmul_weight_bytes_go_to_weight_node() {
+        let mut b = GraphBuilder::sim(vec![0, 1], Placement::Node(0));
+        let x = b.leaf("x", DType::F32, vec![1, 64], Placement::Node(0));
+        let w = b.leaf("w", DType::Q4_0, vec![32, 64], Placement::Node(1));
+        let y = b.matmul(&TensorBundle::one(x), &TensorBundle::one(w));
+        let (g, _) = b.finish();
+        let t = op_traffic(&g, y.single(), &params(), 0, 32, 2, 1, 1.0);
+        // weights (36 B/row × 32 rows) on node 1
+        assert!(t.bytes[1] >= 32.0 * 36.0);
+        // activation (64×4) on node 0
+        assert!(t.bytes[0] >= 256.0);
+        assert_eq!(t.flops, 2.0 * 64.0 * 32.0);
+    }
+
+    #[test]
+    fn matmul_row_range_attribution_is_exact() {
+        // weights sharded: rows 0..16 node0, 16..32 node1; a worker doing
+        // rows 0..16 must read weights ONLY from node 0
+        let mut b = GraphBuilder::sim(vec![0, 1], Placement::Node(0));
+        let x = b.leaf("x", DType::F32, vec![1, 64], Placement::Node(0));
+        let w = b.leaf("w", DType::F32, vec![32, 64], Placement::even_shards(32, 2));
+        let y = b.matmul(&TensorBundle::one(x), &TensorBundle::one(w));
+        let (g, _) = b.finish();
+        let t = op_traffic(&g, y.single(), &params(), 0, 16, 2, 1, 1.0);
+        let weight_bytes_node1: f64 = t.bytes[1];
+        // node1 gets only output-spread bytes (output on node 0) → 0
+        assert_eq!(weight_bytes_node1, 0.0);
+    }
+
+    #[test]
+    fn attention_kv_stream_is_charged_to_cache_node() {
+        let mut b = GraphBuilder::sim(vec![0, 1], Placement::Node(0));
+        let q = b.leaf("q", DType::F32, vec![1, 64], Placement::Node(0));
+        let kc = b.kv_leaf("k", vec![2, 16, 16], Placement::Node(1));
+        let vc = b.kv_leaf("v", vec![2, 16, 16], Placement::Node(1));
+        let o = b.attention(&TensorBundle::one(q), &TensorBundle::one(kc),
+                            &TensorBundle::one(vc), 4, 2, 16, 16);
+        let (g, _) = b.finish();
+        let p = ExecParams { pos: 7, rows: 1 };
+        let t = op_traffic(&g, o.single(), &p, 0, 4, 2, 1, 1.0);
+        // kv_len = 8; 2 kv heads × 8 pos × 16 dim × 4 B × 2 (K+V)
+        let expect = 2.0 * 8.0 * 16.0 * 4.0 * 2.0;
+        assert!((t.bytes[1] - expect).abs() < 1e-6, "{} vs {expect}", t.bytes[1]);
+    }
+
+    #[test]
+    fn partition_halves_traffic() {
+        let mut b = GraphBuilder::sim(vec![0], Placement::Node(0));
+        let x = b.leaf("x", DType::F32, vec![1, 64], Placement::Node(0));
+        let w = b.leaf("w", DType::Q4_0, vec![32, 64], Placement::Node(0));
+        let y = b.matmul(&TensorBundle::one(x), &TensorBundle::one(w));
+        let (g, _) = b.finish();
+        let full = op_traffic(&g, y.single(), &params(), 0, 32, 1, 1, 1.0);
+        let half = op_traffic(&g, y.single(), &params(), 0, 16, 1, 1, 1.0);
+        // weight stream halves; activation stream does not
+        let w_bytes = 32.0 * 36.0;
+        assert!(full.bytes[0] - half.bytes[0] > w_bytes / 2.0 * 0.9);
+        assert!(full.flops / half.flops > 1.99 && full.flops / half.flops < 2.01);
+    }
+}

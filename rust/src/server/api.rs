@@ -1,0 +1,158 @@
+//! TCP front door: line-delimited JSON over a socket, plus a client.
+//!
+//! Protocol (one JSON object per line):
+//!   → {"op":"generate","prompt":"...","max_new":32, ...}
+//!   ← {"id":…, "tokens":[…], "text":"…", "ttft_s":…, …}
+//!   → {"op":"metrics"}           ← metrics snapshot
+//!   → {"op":"ping"}              ← {"ok":true}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+
+use super::batcher::Router;
+use super::request::{GenRequest, GenResponse};
+
+/// A running server (listener thread + connection threads).
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    router: Arc<Router>,
+    stopping: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Bind and start accepting. Engine slots must be started
+    /// separately (`EngineSlot::serve`) on the same router.
+    pub fn start(addr: &str, router: Arc<Router>) -> Result<ServerHandle> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stopping = Arc::new(AtomicBool::new(false));
+        let stop2 = stopping.clone();
+        let router2 = router.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("arclight-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let r = router2.clone();
+                            std::thread::spawn(move || handle_conn(stream, r));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(ServerHandle { addr: local, router, stopping, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn router(&self) -> Arc<Router> {
+        self.router.clone()
+    }
+
+    pub fn stop(mut self) {
+        self.stopping.store(true, Ordering::Release);
+        self.router.shutdown();
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: Arc<Router>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = dispatch(&line, &router);
+        let mut out = reply.to_string();
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+fn dispatch(line: &str, router: &Arc<Router>) -> Json {
+    let parsed = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return obj(vec![("error", format!("bad json: {e}").into())]),
+    };
+    match parsed.get("op").and_then(Json::as_str) {
+        Some("ping") => obj(vec![("ok", true.into())]),
+        Some("metrics") => router.metrics.snapshot(),
+        Some("generate") | None => match GenRequest::from_json(&parsed) {
+            Ok(mut req) => {
+                if req.id == 0 {
+                    req.id = router.fresh_id();
+                }
+                match router.submit(req) {
+                    Ok(resp) => resp.to_json(),
+                    Err(e) => obj(vec![("error", e.into())]),
+                }
+            }
+            Err(e) => obj(vec![("error", e.into())]),
+        },
+        Some(other) => obj(vec![("error", format!("unknown op '{other}'").into())]),
+    }
+}
+
+/// Blocking client for tests, examples and the CLI.
+pub struct ServerClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl ServerClient {
+    pub fn connect(addr: &str) -> Result<ServerClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let writer = stream.try_clone()?;
+        Ok(ServerClient { reader: BufReader::new(stream), writer })
+    }
+
+    fn roundtrip(&mut self, msg: &Json) -> Result<Json> {
+        let mut line = msg.to_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        Json::parse(&reply).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        Ok(self.roundtrip(&obj(vec![("op", "ping".into())]))?
+            .get("ok")
+            .and_then(Json::as_bool)
+            .unwrap_or(false))
+    }
+
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.roundtrip(&obj(vec![("op", "metrics".into())]))
+    }
+
+    pub fn generate(&mut self, req: &GenRequest) -> Result<GenResponse> {
+        let j = self.roundtrip(&req.to_json())?;
+        if let Some(e) = j.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error: {e}");
+        }
+        GenResponse::from_json(&j).map_err(|e| anyhow::anyhow!(e))
+    }
+}

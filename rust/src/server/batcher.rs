@@ -1,0 +1,271 @@
+//! Router + dynamic batcher.
+//!
+//! Requests land in a bounded queue (backpressure: `submit` fails when
+//! full). Engine *slots* — each a full engine instance with its own KV
+//! cache — pull batches of up to `max_batch` requests formed within a
+//! `batch_window`. A slot serves its batch sequentially (the engine
+//! holds one sequence's KV state at a time), which matches llama.cpp's
+//! single-slot semantics; multiple slots give concurrent sequences.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::frontend::{ByteTokenizer, Engine, Sampler};
+use crate::metrics::Metrics;
+
+use super::request::{GenRequest, GenResponse};
+
+/// Batching/queueing parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub queue_capacity: usize,
+    pub max_batch: usize,
+    pub batch_window: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            queue_capacity: 256,
+            max_batch: 8,
+            batch_window: Duration::from_millis(2),
+        }
+    }
+}
+
+struct Pending {
+    req: GenRequest,
+    enqueued: Instant,
+    done: Arc<(Mutex<Option<GenResponse>>, Condvar)>,
+}
+
+/// Shared state between submitters and engine slots.
+pub struct Router {
+    cfg: BatcherConfig,
+    queue: Mutex<VecDeque<Pending>>,
+    notify: Condvar,
+    pub metrics: Arc<Metrics>,
+    stopping: AtomicBool,
+    next_id: AtomicU64,
+    pub batches_formed: AtomicU64,
+}
+
+impl Router {
+    pub fn new(cfg: BatcherConfig) -> Arc<Router> {
+        Arc::new(Router {
+            cfg,
+            queue: Mutex::new(VecDeque::new()),
+            notify: Condvar::new(),
+            metrics: Arc::new(Metrics::new()),
+            stopping: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+            batches_formed: AtomicU64::new(0),
+        })
+    }
+
+    pub fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Enqueue; blocks the caller until the response is ready.
+    /// Returns an error immediately when the queue is full (backpressure).
+    pub fn submit(&self, req: GenRequest) -> Result<GenResponse, String> {
+        let done = Arc::new((Mutex::new(None), Condvar::new()));
+        {
+            let mut q = self.queue.lock().unwrap();
+            if q.len() >= self.cfg.queue_capacity {
+                self.metrics.record_failure();
+                return Err("queue full".into());
+            }
+            q.push_back(Pending { req, enqueued: Instant::now(), done: done.clone() });
+        }
+        self.notify.notify_all();
+        let (lock, cv) = &*done;
+        let mut slot = lock.lock().unwrap();
+        while slot.is_none() {
+            slot = cv.wait(slot).unwrap();
+        }
+        Ok(slot.take().unwrap())
+    }
+
+    /// Pull the next batch (blocking). `None` once shut down and drained.
+    fn next_batch(&self) -> Option<Vec<Pending>> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if !q.is_empty() {
+                break;
+            }
+            if self.stopping.load(Ordering::Acquire) {
+                return None;
+            }
+            let (qq, _timeout) = self
+                .notify
+                .wait_timeout(q, Duration::from_millis(50))
+                .unwrap();
+            q = qq;
+        }
+        // batching window: give co-arriving requests a moment to join
+        let deadline = Instant::now() + self.cfg.batch_window;
+        while q.len() < self.cfg.max_batch && Instant::now() < deadline {
+            let (qq, _t) = self.notify.wait_timeout(q, self.cfg.batch_window).unwrap();
+            q = qq;
+        }
+        let take = q.len().min(self.cfg.max_batch);
+        let batch: Vec<Pending> = q.drain(..take).collect();
+        self.batches_formed.fetch_add(1, Ordering::Relaxed);
+        Some(batch)
+    }
+
+    pub fn shutdown(&self) {
+        self.stopping.store(true, Ordering::Release);
+        self.notify.notify_all();
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+}
+
+/// One engine slot: owns an [`Engine`] and serves batches until
+/// shutdown. Run on its own OS thread.
+pub struct EngineSlot {
+    pub engine: Engine,
+    pub tokenizer: ByteTokenizer,
+}
+
+impl EngineSlot {
+    pub fn new(engine: Engine) -> Self {
+        EngineSlot { engine, tokenizer: ByteTokenizer }
+    }
+
+    /// Serve until the router shuts down.
+    pub fn serve(mut self, router: Arc<Router>) {
+        while let Some(batch) = router.next_batch() {
+            for p in batch {
+                let resp = self.run_one(&p);
+                router.metrics.record_request(
+                    p.req.tokens.as_ref().map(|t| t.len()).unwrap_or_else(|| {
+                        p.req.prompt.as_deref().unwrap_or("").len() + 1
+                    }),
+                    resp.tokens.len(),
+                    resp.ttft_s,
+                    resp.total_s,
+                );
+                let (lock, cv) = &*p.done;
+                *lock.lock().unwrap() = Some(resp);
+                cv.notify_all();
+            }
+        }
+    }
+
+    fn run_one(&mut self, p: &Pending) -> GenResponse {
+        let queued = p.enqueued.elapsed().as_secs_f64();
+        let toks: Vec<i32> = match (&p.req.tokens, &p.req.prompt) {
+            (Some(t), _) => t.clone(),
+            (None, Some(text)) => self.tokenizer.encode(text, true),
+            (None, None) => vec![crate::frontend::tokenizer::BOS],
+        };
+        // clamp to capacity
+        let cap = self.engine.cfg().max_seq;
+        let prompt: Vec<i32> = toks.into_iter().take(cap.saturating_sub(2)).collect();
+        let max_new = p.req.max_new.min(cap - prompt.len().min(cap));
+
+        let sampler = match p.req.top_k {
+            None | Some(1) => Sampler::greedy(),
+            Some(k) => Sampler::top_k(k, p.req.temperature, p.req.id),
+        };
+        self.engine.reset();
+        let res = self.engine.generate(&prompt, max_new, &sampler);
+        GenResponse {
+            id: p.req.id,
+            text: self.tokenizer.decode(&res.tokens),
+            tokens: res.tokens.clone(),
+            ttft_s: queued + res.prefill_seconds,
+            total_s: queued + res.prefill_seconds + res.decode_seconds,
+            decode_tok_per_s: res.decode_tok_per_s(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::Strategy;
+    use crate::frontend::EngineOptions;
+    use crate::model::ModelConfig;
+    use crate::numa::Topology;
+
+    fn tiny_slot() -> EngineSlot {
+        let opts = EngineOptions {
+            strategy: Strategy::arclight_single(),
+            threads: 2,
+            topo: Topology::uniform(2, 2, 100.0, 25.0),
+            prefill_rows: None,
+            seed: 1,
+        };
+        EngineSlot::new(Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap())
+    }
+
+    #[test]
+    fn router_serves_requests() {
+        let router = Router::new(BatcherConfig {
+            queue_capacity: 8,
+            max_batch: 4,
+            batch_window: Duration::from_millis(1),
+        });
+        let slot = tiny_slot();
+        let r2 = router.clone();
+        let h = std::thread::spawn(move || slot.serve(r2));
+
+        let resp = router.submit(GenRequest::text(1, "hi", 4)).unwrap();
+        assert_eq!(resp.tokens.len(), 4);
+        assert!(resp.total_s > 0.0);
+
+        router.shutdown();
+        h.join().unwrap();
+        assert_eq!(router.metrics.requests_total.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_submitters_all_served() {
+        let router = Router::new(BatcherConfig::default());
+        let slot = tiny_slot();
+        let r2 = router.clone();
+        let h = std::thread::spawn(move || slot.serve(r2));
+
+        let mut joins = Vec::new();
+        for i in 0..6 {
+            let r = router.clone();
+            joins.push(std::thread::spawn(move || {
+                r.submit(GenRequest::text(i, "abc", 3)).unwrap()
+            }));
+        }
+        for j in joins {
+            let resp = j.join().unwrap();
+            assert_eq!(resp.tokens.len(), 3);
+        }
+        router.shutdown();
+        h.join().unwrap();
+        assert_eq!(router.metrics.requests_total.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let router = Router::new(BatcherConfig {
+            queue_capacity: 1,
+            max_batch: 1,
+            batch_window: Duration::from_millis(1),
+        });
+        // no slot is serving: fill the queue from another thread, then overflow
+        let r = router.clone();
+        let _waiter = std::thread::spawn(move || {
+            let _ = r.submit(GenRequest::text(1, "x", 1));
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let err = router.submit(GenRequest::text(2, "y", 1));
+        assert!(err.is_err());
+        router.shutdown();
+    }
+}

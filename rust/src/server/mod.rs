@@ -1,0 +1,17 @@
+//! Serving layer: request router, dynamic batcher and a TCP/JSON API.
+//!
+//! ArcLight's paper stops at the decode loop; a deployable system needs
+//! a request path. This module provides one in the shape of
+//! llama.cpp's server / vLLM's router, scaled to this engine: a bounded
+//! request queue with backpressure, N engine *slots* (each owning its
+//! own KV cache) pulling work, a batching window for queue fairness,
+//! and a line-delimited JSON protocol over TCP. Python is nowhere on
+//! this path.
+
+pub mod api;
+pub mod batcher;
+pub mod request;
+
+pub use api::{ServerClient, ServerHandle};
+pub use batcher::{BatcherConfig, EngineSlot, Router};
+pub use request::{GenRequest, GenResponse};

@@ -1,0 +1,150 @@
+//! Wire types for the serving API (line-delimited JSON).
+
+use crate::util::json::{obj, Json};
+
+/// A generation request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenRequest {
+    pub id: u64,
+    /// Either raw text (byte-tokenized server-side) …
+    pub prompt: Option<String>,
+    /// … or pre-tokenized ids.
+    pub tokens: Option<Vec<i32>>,
+    pub max_new: usize,
+    /// `None` → greedy (the paper's benchmark setting).
+    pub top_k: Option<usize>,
+    pub temperature: f32,
+}
+
+impl GenRequest {
+    pub fn text(id: u64, prompt: &str, max_new: usize) -> Self {
+        GenRequest {
+            id,
+            prompt: Some(prompt.to_string()),
+            tokens: None,
+            max_new,
+            top_k: None,
+            temperature: 1.0,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<GenRequest, String> {
+        let max_new = j.get("max_new").and_then(Json::as_usize).unwrap_or(32);
+        let prompt = j.get("prompt").and_then(Json::as_str).map(str::to_string);
+        let tokens = j.get("tokens").and_then(Json::as_arr).map(|a| {
+            a.iter().filter_map(Json::as_f64).map(|x| x as i32).collect::<Vec<i32>>()
+        });
+        if prompt.is_none() && tokens.is_none() {
+            return Err("request needs 'prompt' or 'tokens'".into());
+        }
+        Ok(GenRequest {
+            id: j.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
+            prompt,
+            tokens,
+            max_new,
+            top_k: j.get("top_k").and_then(Json::as_usize),
+            temperature: j.get("temperature").and_then(Json::as_f64).unwrap_or(1.0) as f32,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("op", "generate".into()),
+            ("id", (self.id as usize).into()),
+            ("max_new", self.max_new.into()),
+            ("temperature", (self.temperature as f64).into()),
+        ];
+        if let Some(p) = &self.prompt {
+            pairs.push(("prompt", p.as_str().into()));
+        }
+        if let Some(t) = &self.tokens {
+            pairs.push(("tokens", Json::Arr(t.iter().map(|&x| Json::Num(x as f64)).collect())));
+        }
+        if let Some(k) = self.top_k {
+            pairs.push(("top_k", k.into()));
+        }
+        obj(pairs)
+    }
+}
+
+/// The response to a generation request.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub text: String,
+    pub ttft_s: f64,
+    pub total_s: f64,
+    pub decode_tok_per_s: f64,
+}
+
+impl GenResponse {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", (self.id as usize).into()),
+            ("tokens", Json::Arr(self.tokens.iter().map(|&t| Json::Num(t as f64)).collect())),
+            ("text", self.text.as_str().into()),
+            ("ttft_s", self.ttft_s.into()),
+            ("total_s", self.total_s.into()),
+            ("decode_tok_per_s", self.decode_tok_per_s.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<GenResponse, String> {
+        Ok(GenResponse {
+            id: j.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
+            tokens: j
+                .get("tokens")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).map(|x| x as i32).collect())
+                .unwrap_or_default(),
+            text: j.get("text").and_then(Json::as_str).unwrap_or("").to_string(),
+            ttft_s: j.get("ttft_s").and_then(Json::as_f64).unwrap_or(0.0),
+            total_s: j.get("total_s").and_then(Json::as_f64).unwrap_or(0.0),
+            decode_tok_per_s: j.get("decode_tok_per_s").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = GenRequest::text(7, "hello", 16);
+        let j = r.to_json();
+        let back = GenRequest::from_json(&j).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn token_request() {
+        let j = Json::parse(r#"{"id":1,"tokens":[1,2,3],"max_new":4}"#).unwrap();
+        let r = GenRequest::from_json(&j).unwrap();
+        assert_eq!(r.tokens, Some(vec![1, 2, 3]));
+        assert_eq!(r.max_new, 4);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let j = Json::parse(r#"{"max_new":4}"#).unwrap();
+        assert!(GenRequest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = GenResponse {
+            id: 3,
+            tokens: vec![5, 6],
+            text: "ab".into(),
+            ttft_s: 0.1,
+            total_s: 0.5,
+            decode_tok_per_s: 20.0,
+        };
+        let j = r.to_json();
+        let back = GenResponse::from_json(&j).unwrap();
+        assert_eq!(back.tokens, vec![5, 6]);
+        assert_eq!(back.text, "ab");
+    }
+}

@@ -1,0 +1,104 @@
+//! `TensorBundle` — the paper's `tensor_ptrs` (appendix A.1).
+//!
+//! ArcLight extends the tensor-pointer type used by module interfaces to
+//! a *bundle* of pointers so the same `linear(...)`/`attention(...)`
+//! builder functions construct either a single graph (bundle of one) or
+//! N parallel subgraphs (bundle of N) without a TP-specific rewrite.
+//! Scatter turns a 1-bundle into an N-bundle; Gather folds an N-bundle
+//! back to 1.
+
+use super::TensorId;
+
+/// A set of tensor ids, one per parallel subgraph (N == 1 outside TP
+/// regions). Supports "mutual assignment with a single tensor pointer"
+/// (paper A.1): `From<TensorId>` and `single()` convert back and forth.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorBundle {
+    ids: Vec<TensorId>,
+}
+
+impl TensorBundle {
+    pub fn new(ids: Vec<TensorId>) -> Self {
+        assert!(!ids.is_empty(), "empty bundle");
+        TensorBundle { ids }
+    }
+
+    /// Bundle of one — the non-TP case.
+    pub fn one(id: TensorId) -> Self {
+        TensorBundle { ids: vec![id] }
+    }
+
+    /// Number of parallel subgraphs this bundle spans.
+    pub fn width(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_single(&self) -> bool {
+        self.ids.len() == 1
+    }
+
+    /// The single tensor id; panics when called on a TP bundle —
+    /// mirrors the paper's implicit-conversion contract.
+    pub fn single(&self) -> TensorId {
+        assert!(self.is_single(), "bundle of {} used as single tensor", self.ids.len());
+        self.ids[0]
+    }
+
+    pub fn get(&self, part: usize) -> TensorId {
+        self.ids[part]
+    }
+
+    pub fn ids(&self) -> &[TensorId] {
+        &self.ids
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = TensorId> + '_ {
+        self.ids.iter().copied()
+    }
+
+    /// Pair up two bundles of the same width (Parallel construction mode).
+    pub fn zip<'a>(&'a self, other: &'a TensorBundle) -> impl Iterator<Item = (TensorId, TensorId)> + 'a {
+        assert_eq!(self.width(), other.width(), "bundle width mismatch");
+        self.ids.iter().copied().zip(other.ids.iter().copied())
+    }
+}
+
+impl From<TensorId> for TensorBundle {
+    fn from(id: TensorId) -> Self {
+        TensorBundle::one(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_conversion() {
+        let b: TensorBundle = TensorId(3).into();
+        assert!(b.is_single());
+        assert_eq!(b.single(), TensorId(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "used as single")]
+    fn wide_bundle_is_not_single() {
+        TensorBundle::new(vec![TensorId(0), TensorId(1)]).single();
+    }
+
+    #[test]
+    fn zip_pairs() {
+        let a = TensorBundle::new(vec![TensorId(0), TensorId(1)]);
+        let b = TensorBundle::new(vec![TensorId(2), TensorId(3)]);
+        let pairs: Vec<_> = a.zip(&b).collect();
+        assert_eq!(pairs, vec![(TensorId(0), TensorId(2)), (TensorId(1), TensorId(3))]);
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn zip_requires_same_width() {
+        let a = TensorBundle::one(TensorId(0));
+        let b = TensorBundle::new(vec![TensorId(1), TensorId(2)]);
+        let _ = a.zip(&b).count();
+    }
+}

@@ -1,0 +1,118 @@
+//! Element types supported by the engine.
+
+use std::fmt;
+
+/// Q4_0 block geometry (ggml-compatible): 32 elements / 18 bytes.
+pub const QK4_0: usize = 32;
+pub const Q4_0_BLOCK_BYTES: usize = 18;
+
+/// Q8_0 block geometry: 32 elements / 34 bytes (f16 scale + 32 i8).
+pub const QK8_0: usize = 32;
+pub const Q8_0_BLOCK_BYTES: usize = 34;
+
+/// Tensor element type. Quantized types are only legal as the *weight*
+/// side of matmuls; activations are always `F32`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    /// ggml Q4_0: blocks of 32 along the last (contraction) axis,
+    /// 18 bytes per block (f16 scale + 16 nibble bytes).
+    Q4_0,
+    /// ggml Q8_0: blocks of 32, 34 bytes per block (f16 scale + 32×i8).
+    Q8_0,
+}
+
+impl DType {
+    /// Bytes needed to store `k` contiguous elements of this type.
+    /// For quantized types `k` must be a multiple of the block size.
+    pub fn row_bytes(self, k: usize) -> usize {
+        match self {
+            DType::F32 | DType::I32 => k * 4,
+            DType::Q4_0 => {
+                debug_assert!(k % QK4_0 == 0, "Q4_0 row length {k} not a multiple of 32");
+                k / QK4_0 * Q4_0_BLOCK_BYTES
+            }
+            DType::Q8_0 => {
+                debug_assert!(k % QK8_0 == 0, "Q8_0 row length {k} not a multiple of 32");
+                k / QK8_0 * Q8_0_BLOCK_BYTES
+            }
+        }
+    }
+
+    /// Total bytes for a tensor of `shape` stored row-contiguously.
+    pub fn tensor_bytes(self, shape: &[usize]) -> usize {
+        super::rows(shape) * self.row_bytes(super::row_len(shape))
+    }
+
+    /// Effective bytes per element (fractional for quantized types) —
+    /// the quantity the bandwidth cost model charges per element read.
+    pub fn bytes_per_element(self) -> f64 {
+        match self {
+            DType::F32 | DType::I32 => 4.0,
+            DType::Q4_0 => Q4_0_BLOCK_BYTES as f64 / QK4_0 as f64, // 0.5625
+            DType::Q8_0 => Q8_0_BLOCK_BYTES as f64 / QK8_0 as f64, // 1.0625
+        }
+    }
+
+    pub fn is_quantized(self) -> bool {
+        matches!(self, DType::Q4_0 | DType::Q8_0)
+    }
+
+    /// Parse the manifest/ALF dtype string.
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            "q4_0" => Some(DType::Q4_0),
+            "q8_0" => Some(DType::Q8_0),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::Q4_0 => "q4_0",
+            DType::Q8_0 => "q8_0",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_bytes() {
+        assert_eq!(DType::F32.row_bytes(10), 40);
+        assert_eq!(DType::Q4_0.row_bytes(32), 18);
+        assert_eq!(DType::Q4_0.row_bytes(64), 36);
+        assert_eq!(DType::Q8_0.row_bytes(32), 34);
+    }
+
+    #[test]
+    fn tensor_bytes() {
+        assert_eq!(DType::F32.tensor_bytes(&[2, 3]), 24);
+        assert_eq!(DType::Q4_0.tensor_bytes(&[4, 64]), 4 * 36);
+        assert_eq!(DType::F32.tensor_bytes(&[]), 4); // scalar
+    }
+
+    #[test]
+    fn bytes_per_element_matches_q4_paper_math() {
+        // Qwen3-4B ≈ 4e9 params → ~2.26 GB in Q4_0; sanity check the ratio
+        assert!((DType::Q4_0.bytes_per_element() - 0.5625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for d in [DType::F32, DType::I32, DType::Q4_0, DType::Q8_0] {
+            assert_eq!(DType::parse(&d.to_string()), Some(d));
+        }
+        assert_eq!(DType::parse("f64"), None);
+    }
+}

@@ -1,0 +1,64 @@
+//! Tensor library (paper §2.2).
+//!
+//! An ArcLight tensor is split into a *header* (name, shape, dtype,
+//! producing operation, source links — everything the graph builder and
+//! scheduler need) and a *data area* (a contiguous range inside one of
+//! the memory manager's NUMA-local arenas). This module owns the header
+//! side: [`DType`], shapes, [`TensorId`] handles and the
+//! [`TensorBundle`] (`tensor_ptrs` in the paper's appendix A.1) that
+//! lets one module interface serve both single-graph and
+//! tensor-parallel construction.
+
+pub mod bundle;
+pub mod dtype;
+
+pub use bundle::TensorBundle;
+pub use dtype::DType;
+
+/// Index of a tensor header inside a [`crate::graph::Graph`]'s tensor
+/// table. ArcLight's C++ uses raw `tensor*`; an index is the idiomatic
+/// Rust equivalent (stable across reallocation, trivially Copy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub u32);
+
+impl TensorId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Number of elements of a shape.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Rows = product of all leading dims; the last dim is the contiguous
+/// axis every operator iterates over.
+pub fn rows(shape: &[usize]) -> usize {
+    if shape.is_empty() {
+        1
+    } else {
+        shape[..shape.len() - 1].iter().product()
+    }
+}
+
+/// Last (contiguous) dimension, 1 for scalars.
+pub fn row_len(shape: &[usize]) -> usize {
+    shape.last().copied().unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_helpers() {
+        assert_eq!(numel(&[2, 3, 4]), 24);
+        assert_eq!(rows(&[2, 3, 4]), 6);
+        assert_eq!(row_len(&[2, 3, 4]), 4);
+        assert_eq!(numel(&[]), 1);
+        assert_eq!(rows(&[]), 1);
+        assert_eq!(row_len(&[]), 1);
+        assert_eq!(rows(&[5]), 1);
+    }
+}

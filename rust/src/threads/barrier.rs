@@ -1,0 +1,117 @@
+//! Sense-reversing spin barrier.
+//!
+//! `std::sync::Barrier` allocates a mutex + condvar and cannot be
+//! re-pointed at a different thread count; inference frameworks use
+//! spinning barriers because operator bodies are microseconds long and
+//! the same threads re-synchronize thousands of times per token. The
+//! sense-reversing design needs one atomic round trip per thread per
+//! phase and is reusable immediately.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+pub struct SpinBarrier {
+    n: usize,
+    count: AtomicUsize,
+    sense: AtomicBool,
+}
+
+impl SpinBarrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        SpinBarrier { n, count: AtomicUsize::new(0), sense: AtomicBool::new(false) }
+    }
+
+    pub fn parties(&self) -> usize {
+        self.n
+    }
+
+    /// Block until all `n` parties arrive. Returns `true` for exactly one
+    /// caller per phase (the "serial" thread, llama.cpp's convention for
+    /// post-op bookkeeping).
+    pub fn wait(&self) -> bool {
+        let my_sense = !self.sense.load(Ordering::Relaxed);
+        let arrived = self.count.fetch_add(1, Ordering::AcqRel) + 1;
+        if arrived == self.n {
+            self.count.store(0, Ordering::Relaxed);
+            self.sense.store(my_sense, Ordering::Release);
+            true
+        } else {
+            // Spin with yield: worker counts can exceed host cores (the
+            // simulated machine is bigger than the real one), so a pure
+            // spin would livelock a 1-core host.
+            let mut spins = 0u32;
+            while self.sense.load(Ordering::Acquire) != my_sense {
+                spins += 1;
+                if spins > 64 {
+                    std::thread::yield_now();
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_party_is_trivially_serial() {
+        let b = SpinBarrier::new(1);
+        assert!(b.wait());
+        assert!(b.wait());
+    }
+
+    #[test]
+    fn all_threads_pass_and_one_is_serial() {
+        let n = 8;
+        let b = Arc::new(SpinBarrier::new(n));
+        let serial = Arc::new(AtomicUsize::new(0));
+        let passed = Arc::new(AtomicUsize::new(0));
+        let mut hs = Vec::new();
+        for _ in 0..n {
+            let (b, serial, passed) = (b.clone(), serial.clone(), passed.clone());
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    if b.wait() {
+                        serial.fetch_add(1, Ordering::Relaxed);
+                    }
+                    passed.fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(serial.load(Ordering::Relaxed), 50);
+        assert_eq!(passed.load(Ordering::Relaxed), 50 * n);
+    }
+
+    #[test]
+    fn barrier_orders_phases() {
+        // No thread may enter phase k+1 before all finished phase k.
+        let n = 4;
+        let b = Arc::new(SpinBarrier::new(n));
+        let phase_counts: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..20).map(|_| AtomicUsize::new(0)).collect());
+        let mut hs = Vec::new();
+        for _ in 0..n {
+            let (b, pc) = (b.clone(), phase_counts.clone());
+            hs.push(std::thread::spawn(move || {
+                for phase in 0..20 {
+                    pc[phase].fetch_add(1, Ordering::SeqCst);
+                    b.wait();
+                    // after the barrier, everyone must have bumped this phase
+                    assert_eq!(pc[phase].load(Ordering::SeqCst), n);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+}

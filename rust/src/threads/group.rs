@@ -1,0 +1,178 @@
+//! Multi-view thread organization (paper §2.4, Fig. 5).
+//!
+//! An [`Organization`] is a partition of the pool's workers into logical
+//! groups, each with its own local barrier. The pool itself is never
+//! reconfigured — views are cheap value objects built at initialization
+//! or at Scatter/Gather boundaries ("explicit interfaces and operators
+//! are provided to dynamically reconfigure the internal thread
+//! organization").
+
+use std::sync::Arc;
+
+use super::SpinBarrier;
+use crate::numa::{Core, NodeId};
+
+/// One logical thread group: a set of pool worker indices plus the local
+/// barrier they synchronize on after each operator of their stream.
+#[derive(Clone)]
+pub struct GroupView {
+    pub id: usize,
+    /// Pool worker indices, in rank order (`rank = position`).
+    pub workers: Vec<usize>,
+    /// The NUMA node this group is anchored to (TP groups are node-local
+    /// by construction; a whole-pool group reports node of worker 0).
+    pub node: NodeId,
+    barrier: Arc<SpinBarrier>,
+}
+
+impl GroupView {
+    pub fn new(id: usize, workers: Vec<usize>, node: NodeId) -> Self {
+        assert!(!workers.is_empty());
+        let barrier = Arc::new(SpinBarrier::new(workers.len()));
+        GroupView { id, workers, node, barrier }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Rank of a pool worker inside this group, if it belongs.
+    pub fn rank_of(&self, worker: usize) -> Option<usize> {
+        self.workers.iter().position(|&w| w == worker)
+    }
+
+    /// The group-local barrier (paper Fig. 6 "local barrier").
+    pub fn barrier(&self) -> &Arc<SpinBarrier> {
+        &self.barrier
+    }
+}
+
+/// A complete view over the pool: disjoint groups covering a subset (or
+/// all) of the workers.
+#[derive(Clone)]
+pub struct Organization {
+    pub groups: Vec<GroupView>,
+    /// Reverse map: worker → (group index, rank) — `None` for workers
+    /// idle under this view.
+    assignment: Vec<Option<(usize, usize)>>,
+}
+
+impl Organization {
+    pub fn from_groups(groups: Vec<GroupView>, pool_size: usize) -> Self {
+        let mut assignment = vec![None; pool_size];
+        for (gi, g) in groups.iter().enumerate() {
+            for (rank, &w) in g.workers.iter().enumerate() {
+                assert!(assignment[w].is_none(), "worker {w} in two groups");
+                assignment[w] = Some((gi, rank));
+            }
+        }
+        Organization { groups, assignment }
+    }
+
+    /// The single-group view: the whole pool executes one operator
+    /// stream (non-TP mode, llama.cpp's only mode).
+    pub fn single(cores: &[Core]) -> Self {
+        let workers: Vec<usize> = (0..cores.len()).collect();
+        let node = cores.first().map(|c| c.node).unwrap_or(0);
+        Organization::from_groups(vec![GroupView::new(0, workers, node)], cores.len())
+    }
+
+    /// One group per NUMA node (the Scatter operator's reconfiguration
+    /// for cross-NUMA TP, §3.3): workers are grouped by the node of
+    /// their bound core.
+    pub fn by_node(cores: &[Core]) -> Self {
+        let mut nodes: Vec<NodeId> = cores.iter().map(|c| c.node).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        let groups = nodes
+            .iter()
+            .enumerate()
+            .map(|(gi, &node)| {
+                let ws: Vec<usize> = cores
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, c)| c.node == node)
+                    .map(|(i, _)| i)
+                    .collect();
+                GroupView::new(gi, ws, node)
+            })
+            .collect();
+        Organization::from_groups(groups, cores.len())
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Which (group, rank) a pool worker holds under this view.
+    pub fn assignment(&self, worker: usize) -> Option<(usize, usize)> {
+        self.assignment.get(worker).copied().flatten()
+    }
+
+    /// Number of distinct NUMA nodes spanned by all groups (barrier cost
+    /// input).
+    pub fn nodes_spanned(&self, cores: &[Core]) -> usize {
+        let mut nodes: Vec<NodeId> = self
+            .groups
+            .iter()
+            .flat_map(|g| g.workers.iter().map(|&w| cores[w].node))
+            .collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numa::Topology;
+
+    fn cores_2x4() -> Vec<Core> {
+        let t = Topology::uniform(2, 4, 100.0, 25.0);
+        (0..8).map(|i| t.core(i)).collect()
+    }
+
+    #[test]
+    fn single_view_one_group() {
+        let cs = cores_2x4();
+        let org = Organization::single(&cs);
+        assert_eq!(org.n_groups(), 1);
+        assert_eq!(org.groups[0].size(), 8);
+        assert_eq!(org.assignment(5), Some((0, 5)));
+    }
+
+    #[test]
+    fn by_node_groups_are_node_local() {
+        let cs = cores_2x4();
+        let org = Organization::by_node(&cs);
+        assert_eq!(org.n_groups(), 2);
+        for g in &org.groups {
+            for &w in &g.workers {
+                assert_eq!(cs[w].node, g.node);
+            }
+        }
+        assert_eq!(org.nodes_spanned(&cs), 2);
+    }
+
+    #[test]
+    fn ranks_are_positions() {
+        let g = GroupView::new(0, vec![4, 6, 7], 1);
+        assert_eq!(g.rank_of(6), Some(1));
+        assert_eq!(g.rank_of(5), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "two groups")]
+    fn overlapping_groups_rejected() {
+        let a = GroupView::new(0, vec![0, 1], 0);
+        let b = GroupView::new(1, vec![1, 2], 0);
+        Organization::from_groups(vec![a, b], 4);
+    }
+
+    #[test]
+    fn local_barrier_sized_to_group() {
+        let org = Organization::by_node(&cores_2x4());
+        assert_eq!(org.groups[0].barrier().parties(), 4);
+    }
+}

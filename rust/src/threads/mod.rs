@@ -1,0 +1,23 @@
+//! Thread manager (paper §2.4, Figs. 5–6).
+//!
+//! A fixed set of worker threads is created before inference begins and
+//! organized through *logical views*: the pool can run as one group
+//! (every worker executes a slice of the same operator — the llama.cpp
+//! model) or be split into `n` groups that execute `n` independent
+//! operator streams (tensor-parallel subgraphs). Reconfiguration is an
+//! explicit, cheap operation (the paper's Scatter/Gather operators call
+//! it at TP region boundaries).
+//!
+//! Synchronization (Fig. 6):
+//! * **local barrier** — among the workers of one group, passed after
+//!   every operator of that group's stream;
+//! * **global barrier** — across the entire pool, passed at TP region
+//!   boundaries (and after every operator in Sync-A mode, §3.4).
+
+pub mod barrier;
+pub mod group;
+pub mod pool;
+
+pub use barrier::SpinBarrier;
+pub use group::{GroupView, Organization};
+pub use pool::{ThreadPool, WorkerCtx};

@@ -1,0 +1,239 @@
+//! The worker thread pool.
+//!
+//! Workers are spawned once (before inference) and bound to *simulated*
+//! cores — the `Core` tag flows into the cost model; on the real host
+//! the OS schedules them freely. Jobs are closures dispatched to an
+//! explicit subset of workers; the scheduler composes them with group /
+//! global barriers to realize Sync-A or Sync-B execution (§3.4).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::SpinBarrier;
+use crate::numa::Core;
+
+/// Per-worker identity visible to job closures.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerCtx {
+    /// Index of this worker within the pool (== simulated core order).
+    pub worker: usize,
+    /// The simulated core this worker is bound to.
+    pub core: Core,
+}
+
+type Job = Box<dyn FnOnce(&WorkerCtx) + Send>;
+
+enum Msg {
+    Run(Job, Arc<Latch>),
+    Shutdown,
+}
+
+/// Countdown latch for leader-side completion waits.
+pub struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { remaining: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.cv.wait(r).unwrap();
+        }
+    }
+}
+
+/// Fixed pool of workers bound to simulated cores.
+pub struct ThreadPool {
+    senders: Vec<Sender<Msg>>,
+    handles: Vec<JoinHandle<()>>,
+    cores: Vec<Core>,
+    global_barrier: Arc<SpinBarrier>,
+    jobs_dispatched: AtomicUsize,
+}
+
+impl ThreadPool {
+    /// Spawn one worker per core.
+    pub fn new(cores: Vec<Core>) -> Self {
+        let n = cores.len();
+        assert!(n > 0);
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (i, core) in cores.iter().copied().enumerate() {
+            let (tx, rx) = channel::<Msg>();
+            senders.push(tx);
+            let ctx = WorkerCtx { worker: i, core };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("arclight-w{i}"))
+                    .spawn(move || {
+                        while let Ok(msg) = rx.recv() {
+                            match msg {
+                                Msg::Run(job, latch) => {
+                                    job(&ctx);
+                                    latch.count_down();
+                                }
+                                Msg::Shutdown => break,
+                            }
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool {
+            senders,
+            handles,
+            cores,
+            global_barrier: Arc::new(SpinBarrier::new(n)),
+            jobs_dispatched: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cores.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cores.is_empty()
+    }
+
+    pub fn cores(&self) -> &[Core] {
+        &self.cores
+    }
+
+    /// Barrier spanning every worker of the pool (the paper's *global
+    /// barrier*, Fig. 6). Valid only inside jobs dispatched to **all**
+    /// workers.
+    pub fn global_barrier(&self) -> Arc<SpinBarrier> {
+        self.global_barrier.clone()
+    }
+
+    /// Total jobs dispatched (metrics).
+    pub fn jobs_dispatched(&self) -> usize {
+        self.jobs_dispatched.load(Ordering::Relaxed)
+    }
+
+    /// Run `f` on the given workers and block until all finish.
+    /// `f(ctx)` — rank/size bookkeeping is the caller's (the scheduler
+    /// knows each worker's group assignment).
+    pub fn run_on<F>(&self, workers: &[usize], f: Arc<F>)
+    where
+        F: Fn(&WorkerCtx) + Send + Sync + 'static,
+    {
+        let latch = Arc::new(Latch::new(workers.len()));
+        for &w in workers {
+            let f = f.clone();
+            let job: Job = Box::new(move |ctx| f(ctx));
+            self.senders[w]
+                .send(Msg::Run(job, latch.clone()))
+                .expect("worker alive");
+        }
+        self.jobs_dispatched.fetch_add(workers.len(), Ordering::Relaxed);
+        latch.wait();
+    }
+
+    /// Run `f` on every worker.
+    pub fn run_all<F>(&self, f: Arc<F>)
+    where
+        F: Fn(&WorkerCtx) + Send + Sync + 'static,
+    {
+        let all: Vec<usize> = (0..self.len()).collect();
+        self.run_on(&all, f);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numa::Topology;
+
+    fn cores(n: usize) -> Vec<Core> {
+        let t = Topology::uniform(2, n.div_ceil(2), 100.0, 25.0);
+        (0..n).map(|i| t.core(i)).collect()
+    }
+
+    #[test]
+    fn run_all_touches_every_worker() {
+        let pool = ThreadPool::new(cores(6));
+        let hits = Arc::new(Mutex::new(vec![0usize; 6]));
+        let h2 = hits.clone();
+        pool.run_all(Arc::new(move |ctx: &WorkerCtx| {
+            h2.lock().unwrap()[ctx.worker] += 1;
+        }));
+        assert_eq!(*hits.lock().unwrap(), vec![1; 6]);
+    }
+
+    #[test]
+    fn run_on_subset_only() {
+        let pool = ThreadPool::new(cores(4));
+        let hits = Arc::new(Mutex::new(vec![0usize; 4]));
+        let h2 = hits.clone();
+        pool.run_on(&[1, 3], Arc::new(move |ctx: &WorkerCtx| {
+            h2.lock().unwrap()[ctx.worker] += 1;
+        }));
+        assert_eq!(*hits.lock().unwrap(), vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn global_barrier_synchronizes_all() {
+        let pool = ThreadPool::new(cores(4));
+        let gb = pool.global_barrier();
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = counter.clone();
+        pool.run_all(Arc::new(move |_ctx: &WorkerCtx| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            gb.wait();
+            // all four increments must be visible after the barrier
+            assert_eq!(c2.load(Ordering::SeqCst), 4);
+        }));
+    }
+
+    #[test]
+    fn worker_core_binding_matches_order() {
+        let cs = cores(4);
+        let pool = ThreadPool::new(cs.clone());
+        let seen = Arc::new(Mutex::new(vec![None; 4]));
+        let s2 = seen.clone();
+        pool.run_all(Arc::new(move |ctx: &WorkerCtx| {
+            s2.lock().unwrap()[ctx.worker] = Some(ctx.core);
+        }));
+        let seen = seen.lock().unwrap();
+        for (i, c) in cs.iter().enumerate() {
+            assert_eq!(seen[i], Some(*c));
+        }
+    }
+
+    #[test]
+    fn sequential_jobs_do_not_deadlock() {
+        let pool = ThreadPool::new(cores(3));
+        for _ in 0..100 {
+            pool.run_all(Arc::new(|_: &WorkerCtx| {}));
+        }
+        assert_eq!(pool.jobs_dispatched(), 300);
+    }
+}

@@ -1,0 +1,142 @@
+//! IEEE 754 binary16 ⇄ binary32 conversion.
+//!
+//! Q4_0 block scales are stored as f16 on disk (ggml/ALF layout); the
+//! engine widens them to f32 once at load time. The conversions here are
+//! bit-exact with the hardware/`numpy` semantics (round-to-nearest-even
+//! on narrowing), which keeps the Rust loader byte-compatible with the
+//! Python writer.
+
+/// Widen an IEEE binary16 (as raw bits) to f32.
+pub fn f16_to_f32(bits: u16) -> f32 {
+    let sign = u32::from(bits >> 15) << 31;
+    let exp = (bits >> 10) & 0x1F;
+    let frac = u32::from(bits & 0x3FF);
+    let out = match exp {
+        0 => {
+            if frac == 0 {
+                sign // ±0
+            } else {
+                // subnormal: value = frac * 2^-24
+                let v = frac as f32 * (-24f32).exp2();
+                return if sign != 0 { -v } else { v };
+            }
+        }
+        0x1F => sign | 0x7F80_0000 | (frac << 13), // inf / nan
+        _ => sign | ((u32::from(exp) + 112) << 23) | (frac << 13),
+    };
+    f32::from_bits(out)
+}
+
+/// Narrow an f32 to IEEE binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // inf / nan
+        let nan = if frac != 0 { 0x200 } else { 0 };
+        return sign | 0x7C00 | nan | ((frac >> 13) as u16 & 0x3FF);
+    }
+
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if unbiased >= -14 {
+        // normal range
+        let mut mant = frac >> 13;
+        let rest = frac & 0x1FFF;
+        // round to nearest even
+        if rest > 0x1000 || (rest == 0x1000 && (mant & 1) == 1) {
+            mant += 1;
+        }
+        let mut e16 = (unbiased + 15) as u32;
+        if mant == 0x400 {
+            mant = 0;
+            e16 += 1;
+            if e16 >= 0x1F {
+                return sign | 0x7C00;
+            }
+        }
+        return sign | ((e16 as u16) << 10) | (mant as u16);
+    }
+    if unbiased >= -25 {
+        // subnormal
+        let full = frac | 0x80_0000;
+        let shift = (-14 - unbiased + 13) as u32;
+        let mant = full >> shift;
+        let rest = full & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut mant = mant;
+        if rest > half || (rest == half && (mant & 1) == 1) {
+            mant += 1;
+        }
+        return sign | (mant as u16);
+    }
+    sign // underflow → ±0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0xBC00), -1.0);
+        assert_eq!(f16_to_f32(0x4000), 2.0);
+        assert_eq!(f16_to_f32(0x0000), 0.0);
+        assert_eq!(f16_to_f32(0x3800), 0.5);
+        assert_eq!(f16_to_f32(0x7BFF), 65504.0); // f16 max
+        assert!(f16_to_f32(0x7C00).is_infinite());
+        assert!(f16_to_f32(0x7E00).is_nan());
+    }
+
+    #[test]
+    fn narrowing_known() {
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-2.0), 0xC000);
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF);
+        assert_eq!(f32_to_f16(1e6), 0x7C00); // overflow
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn roundtrip_exact_for_all_f16() {
+        // every finite f16 must survive f16 -> f32 -> f16 exactly
+        for bits in 0..=0xFFFFu16 {
+            let exp = (bits >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf/nan compare differently
+            }
+            let x = f16_to_f32(bits);
+            let back = f32_to_f16(x);
+            // +0/-0 both fine, otherwise exact
+            if bits == 0x8000 && back == 0x8000 || bits == back {
+                continue;
+            }
+            panic!("roundtrip failed: {bits:#06x} -> {x} -> {back:#06x}");
+        }
+    }
+
+    #[test]
+    fn subnormals() {
+        let tiny = f16_to_f32(0x0001); // smallest positive subnormal
+        assert!(tiny > 0.0 && tiny < 1e-7);
+        assert_eq!(f32_to_f16(tiny), 0x0001);
+    }
+
+    #[test]
+    fn rounding_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between two f16 values; ties-to-even
+        // keeps the even mantissa (1.0).
+        let x = 1.0 + (-11f32).exp2();
+        assert_eq!(f32_to_f16(x), 0x3C00);
+        // 1 + 3*2^-11 halfway -> rounds up to even (mantissa 2)
+        let y = 1.0 + 3.0 * (-11f32).exp2();
+        assert_eq!(f32_to_f16(y), 0x3C02);
+    }
+}

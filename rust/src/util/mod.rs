@@ -1,0 +1,74 @@
+//! Small self-contained utilities shared across the engine.
+//!
+//! The build environment vendors only the `xla` dependency chain, so
+//! anything an ordinary project would pull from crates.io (f16
+//! conversion, a PRNG, JSON, summary statistics) lives here as a tiny
+//! std-only implementation.
+
+pub mod f16;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use f16::{f16_to_f32, f32_to_f16};
+pub use rng::Rng;
+
+/// Round `n` up to the next multiple of `align` (power of two not required).
+pub fn align_up(n: usize, align: usize) -> usize {
+    debug_assert!(align > 0);
+    n.div_ceil(align) * align
+}
+
+/// Split `n` items into `parts` contiguous chunks as evenly as possible;
+/// returns the `[start, end)` range of chunk `idx`. The first `n % parts`
+/// chunks get one extra item — the same policy llama.cpp and ArcLight use
+/// to hand rows to worker threads.
+pub fn chunk_range(n: usize, parts: usize, idx: usize) -> (usize, usize) {
+    debug_assert!(idx < parts);
+    let base = n / parts;
+    let rem = n % parts;
+    let start = idx * base + idx.min(rem);
+    let len = base + usize::from(idx < rem);
+    (start, (start + len).min(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_up_basics() {
+        assert_eq!(align_up(0, 64), 0);
+        assert_eq!(align_up(1, 64), 64);
+        assert_eq!(align_up(64, 64), 64);
+        assert_eq!(align_up(65, 64), 128);
+        assert_eq!(align_up(10, 3), 12);
+    }
+
+    #[test]
+    fn chunk_range_covers_everything_once() {
+        for n in [0usize, 1, 7, 48, 100, 193] {
+            for parts in [1usize, 2, 3, 7, 48] {
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for i in 0..parts {
+                    let (s, e) = chunk_range(n, parts, i);
+                    assert_eq!(s, prev_end, "n={n} parts={parts} i={i}");
+                    assert!(e >= s);
+                    covered += e - s;
+                    prev_end = e;
+                }
+                assert_eq!(covered, n);
+                assert_eq!(prev_end, n);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_range_is_balanced() {
+        for i in 0..5 {
+            let (s, e) = chunk_range(17, 5, i);
+            assert!(e - s == 3 || e - s == 4);
+        }
+    }
+}

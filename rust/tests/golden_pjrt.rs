@@ -1,0 +1,103 @@
+//! Golden numerics: the native Rust engine vs the PJRT execution of the
+//! AOT-lowered JAX model (which routes through the L1 Pallas kernels),
+//! on identical ALF weight bytes.
+//!
+//! Requires `make artifacts` (skipped otherwise).
+
+use std::path::PathBuf;
+
+use arclight::baseline::Strategy;
+use arclight::frontend::{Engine, EngineOptions};
+use arclight::numa::Topology;
+use arclight::runtime::PjrtSession;
+use arclight::sched::SyncMode;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn engine(strategy: Strategy, threads: usize, prefill: Option<usize>) -> Engine {
+    let dir = artifacts_dir().unwrap();
+    let opts = EngineOptions {
+        strategy,
+        threads,
+        topo: Topology::uniform(4, 4, 100.0, 25.0),
+        prefill_rows: prefill,
+        seed: 0,
+    };
+    Engine::from_alf(&dir.join("tiny.alf"), &opts).unwrap()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn decode_logits_match_pjrt() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let session = PjrtSession::load(&dir).unwrap();
+    let mut eng = engine(Strategy::arclight_single(), 2, None);
+
+    let (k, v) = session.empty_kv().unwrap();
+    let (pjrt_logits, k, v) = session.run_decode(7, 0, &k, &v).unwrap();
+    let native_logits = eng.decode_step(7);
+    assert_eq!(pjrt_logits.len(), native_logits.len());
+    let d = max_abs_diff(&pjrt_logits, &native_logits);
+    assert!(d < 1e-3, "decode logits diverge: {d}");
+
+    // a second step exercises the KV-cache path on both sides
+    let (pjrt2, _, _) = session.run_decode(42, 1, &k, &v).unwrap();
+    let native2 = eng.decode_step(42);
+    let d2 = max_abs_diff(&pjrt2, &native2);
+    assert!(d2 < 1e-3, "step-2 logits diverge: {d2}");
+}
+
+#[test]
+fn prefill_matches_pjrt() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let session = PjrtSession::load(&dir).unwrap();
+    let prompt: Vec<i32> = (0..session.manifest.prompt_len as i32).map(|i| (i * 7 + 3) % 512).collect();
+
+    let (pjrt_logits, _, _) = session.run_prefill(&prompt).unwrap();
+    let mut eng = engine(Strategy::arclight_single(), 2, Some(prompt.len()));
+    let native_logits = eng.prefill(&prompt);
+    let d = max_abs_diff(&pjrt_logits, &native_logits);
+    assert!(d < 1e-3, "prefill logits diverge: {d}");
+}
+
+#[test]
+fn tp_engine_matches_pjrt() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let session = PjrtSession::load(&dir).unwrap();
+    let (k, v) = session.empty_kv().unwrap();
+    let (pjrt_logits, _, _) = session.run_decode(11, 0, &k, &v).unwrap();
+    let mut eng = engine(Strategy::arclight_tp(2, SyncMode::SyncB), 4, None);
+    let native = eng.decode_step(11);
+    let d = max_abs_diff(&pjrt_logits, &native);
+    assert!(d < 1e-3, "TP engine diverges from PJRT: {d}");
+}
+
+#[test]
+fn greedy_generation_matches_pjrt() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let session = PjrtSession::load(&dir).unwrap();
+    let prompt: Vec<i32> = (0..session.manifest.prompt_len as i32).map(|i| (i * 13 + 1) % 512).collect();
+    let pjrt_tokens = session.generate(&prompt, 12).unwrap();
+
+    let mut eng = engine(Strategy::arclight_single(), 2, Some(prompt.len()));
+    let res = eng.generate(&prompt, 12, &arclight::frontend::Sampler::greedy());
+    assert_eq!(pjrt_tokens, res.tokens, "greedy token streams diverge");
+}

@@ -1,0 +1,223 @@
+//! Randomized property tests (std-only harness: deterministic seeds,
+//! many cases per property — the vendored environment has no proptest).
+//!
+//! Invariants covered: quantization error bounds, work-partition
+//! completeness, GEMM stripe composition, placement accounting
+//! conservation, engine determinism across random strategy/thread
+//! configurations, JSON round-tripping, and barrier stress.
+
+use arclight::baseline::Strategy;
+use arclight::frontend::{Engine, EngineOptions};
+use arclight::model::ModelConfig;
+use arclight::numa::{Placement, Topology};
+use arclight::quant;
+use arclight::sched::SyncMode;
+use arclight::threads::SpinBarrier;
+use arclight::util::json::Json;
+use arclight::util::{chunk_range, Rng};
+
+const CASES: usize = 60;
+
+#[test]
+fn prop_q4_roundtrip_error_bounded() {
+    let mut rng = Rng::new(0xA11CE);
+    for _ in 0..CASES {
+        let blocks = rng.range(1, 8);
+        let scale = (10f32).powi(rng.range(0, 6) as i32 - 3);
+        let mut x = vec![0.0f32; blocks * 32];
+        rng.fill_normal(&mut x, scale);
+        let mut raw = Vec::new();
+        quant::quantize_row_q4_0(&x, &mut raw);
+        let mut y = vec![0.0f32; x.len()];
+        quant::dequantize_row_q4_0(&raw, &mut y);
+        for (bi, block) in x.chunks_exact(32).enumerate() {
+            let d = arclight::util::f16_to_f32(u16::from_le_bytes([raw[bi * 18], raw[bi * 18 + 1]]))
+                .abs();
+            for (i, &v) in block.iter().enumerate() {
+                let err = (v - y[bi * 32 + i]).abs();
+                assert!(err <= d + d * 0.02 + 1e-7, "err {err} > step {d}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_chunk_range_partitions_exactly() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..CASES * 4 {
+        let n = rng.below(10_000);
+        let parts = rng.range(1, 300);
+        let mut covered = 0usize;
+        let mut prev = 0usize;
+        for i in 0..parts {
+            let (s, e) = chunk_range(n, parts, i);
+            assert_eq!(s, prev);
+            assert!(e >= s);
+            // balance: no chunk exceeds ceil(n/parts)
+            assert!(e - s <= n.div_ceil(parts));
+            covered += e - s;
+            prev = e;
+        }
+        assert_eq!(covered, n);
+    }
+}
+
+#[test]
+fn prop_gemm_stripes_compose() {
+    let mut rng = Rng::new(0xCAFE);
+    for _ in 0..20 {
+        let m = rng.range(1, 4);
+        let k = 32 * rng.range(1, 4);
+        let n = rng.range(4, 24);
+        let mut x = vec![0.0f32; m * k];
+        let mut w = vec![0.0f32; n * k];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut w, 1.0);
+        let wq = quant::quantize_matrix_q4_0(&w, n, k);
+
+        let mut full = vec![0.0f32; m * n];
+        arclight::ops::gemm::gemm_q4_0(&x, &wq, &mut full, m, k, n, 0, n);
+
+        let parts = rng.range(2, 5);
+        let mut split = vec![0.0f32; m * n];
+        for p in 0..parts {
+            let (a, b) = chunk_range(n, parts, p);
+            arclight::ops::gemm::gemm_q4_0(&x, &wq, &mut split, m, k, n, a, b);
+        }
+        assert_eq!(full, split, "stripes must compose bit-exactly");
+    }
+}
+
+#[test]
+fn prop_placement_bytes_conserved() {
+    // summing bytes_by_node over any row range must equal rows × row_bytes
+    let mut rng = Rng::new(0xD00D);
+    for _ in 0..CASES {
+        let rows = rng.range(1, 500);
+        let nodes = rng.range(1, 4);
+        let row_bytes = (rng.range(1, 64) * 4) as f64;
+        let placement = match rng.below(3) {
+            0 => Placement::Node(rng.below(nodes)),
+            1 => Placement::Interleaved(nodes),
+            _ => Placement::even_shards(rows, nodes),
+        };
+        let r0 = rng.below(rows);
+        let r1 = rng.range(r0 + 1, rows);
+        let total: f64 = placement
+            .bytes_by_node(r0, r1, rows, row_bytes, 4)
+            .iter()
+            .map(|(_, b)| b)
+            .sum();
+        let expect = (r1 - r0) as f64 * row_bytes;
+        assert!((total - expect).abs() < 1e-6, "{placement:?}: {total} vs {expect}");
+        // spread_bytes conserves too
+        let spread: f64 = placement.spread_bytes(1234.5, 4).iter().map(|(_, b)| b).sum();
+        assert!((spread - 1234.5).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_engine_deterministic_across_random_configs() {
+    let topo = Topology::uniform(4, 4, 100.0, 25.0);
+    let mut reference: Option<Vec<i32>> = None;
+    let mut rng = Rng::new(0x5EED5);
+    for _ in 0..6 {
+        let strategy = match rng.below(4) {
+            0 => Strategy::arclight_single(),
+            1 => Strategy::arclight_tp(2, SyncMode::SyncA),
+            2 => Strategy::arclight_tp(2, SyncMode::SyncB),
+            _ => Strategy::llama_distribute(2),
+        };
+        let threads = rng.range(strategy.nodes_used().max(1), 8);
+        let opts = EngineOptions {
+            strategy,
+            threads,
+            topo: topo.clone(),
+            prefill_rows: None,
+            seed: 31,
+        };
+        let mut e = Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap();
+        let res = e.generate(&[5, 9, 2], 10, &arclight::frontend::Sampler::greedy());
+        match &reference {
+            None => reference = Some(res.tokens),
+            Some(want) => assert_eq!(
+                want, &res.tokens,
+                "{} with {threads} threads diverged",
+                strategy.name()
+            ),
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    let mut rng = Rng::new(0x1AB);
+    for _ in 0..CASES {
+        let j = random_json(&mut rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("reparse failed: {e} for {text}"));
+        assert_eq!(j, back, "roundtrip mismatch for {text}");
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.next_f64() * 2000.0 - 1000.0).round()),
+        3 => {
+            let len = rng.below(8);
+            let s: String = (0..len)
+                .map(|_| char::from_u32(rng.range(32, 0x24F) as u32).unwrap_or('x'))
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_barrier_stress_random_party_counts() {
+    let mut rng = Rng::new(0xFA57);
+    for _ in 0..10 {
+        let n = rng.range(2, 8);
+        let rounds = rng.range(10, 60);
+        let b = std::sync::Arc::new(SpinBarrier::new(n));
+        let serial = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let mut hs = Vec::new();
+        for _ in 0..n {
+            let (b, s) = (b.clone(), serial.clone());
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..rounds {
+                    if b.wait() {
+                        s.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(serial.load(std::sync::atomic::Ordering::Relaxed), rounds);
+    }
+}
+
+#[test]
+fn prop_f16_widen_narrow_random() {
+    let mut rng = Rng::new(0xF16);
+    for _ in 0..CASES * 20 {
+        let bits = (rng.next_u64() & 0xFFFF) as u16;
+        let exp = (bits >> 10) & 0x1F;
+        if exp == 0x1F {
+            continue;
+        }
+        let x = arclight::util::f16_to_f32(bits);
+        let back = arclight::util::f32_to_f16(x);
+        assert!(back == bits || (bits == 0x8000 && back == 0x8000), "{bits:#06x} → {x} → {back:#06x}");
+    }
+}

@@ -1,0 +1,146 @@
+//! End-to-end serving tests: TCP API → router → batcher → engine slots.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use arclight::baseline::Strategy;
+use arclight::frontend::{Engine, EngineOptions};
+use arclight::model::ModelConfig;
+use arclight::numa::Topology;
+use arclight::server::{BatcherConfig, EngineSlot, GenRequest, Router, ServerClient, ServerHandle};
+
+fn start_server(slots: usize) -> (ServerHandle, Arc<Router>, Vec<std::thread::JoinHandle<()>>) {
+    let router = Router::new(BatcherConfig {
+        queue_capacity: 64,
+        max_batch: 4,
+        batch_window: Duration::from_millis(1),
+    });
+    let mut threads = Vec::new();
+    for _ in 0..slots {
+        let opts = EngineOptions {
+            strategy: Strategy::arclight_single(),
+            threads: 2,
+            topo: Topology::uniform(2, 2, 100.0, 25.0),
+            prefill_rows: None,
+            seed: 7,
+        };
+        let engine = Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap();
+        let r = router.clone();
+        threads.push(std::thread::spawn(move || EngineSlot::new(engine).serve(r)));
+    }
+    let server = ServerHandle::start("127.0.0.1:0", router.clone()).unwrap();
+    (server, router, threads)
+}
+
+#[test]
+fn ping_and_generate_over_tcp() {
+    let (server, router, slots) = start_server(1);
+    let addr = server.addr.to_string();
+
+    let mut c = ServerClient::connect(&addr).unwrap();
+    assert!(c.ping().unwrap());
+
+    let resp = c.generate(&GenRequest::text(1, "hello world", 6)).unwrap();
+    assert_eq!(resp.tokens.len(), 6);
+    assert!(resp.total_s > 0.0 && resp.ttft_s > 0.0);
+
+    server.stop();
+    drop(router);
+    for t in slots {
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn concurrent_clients_share_slots() {
+    let (server, router, slots) = start_server(2);
+    let addr = server.addr.to_string();
+
+    let mut joins = Vec::new();
+    for i in 0..8u64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut c = ServerClient::connect(&addr).unwrap();
+            c.generate(&GenRequest::text(i + 1, "abcdef", 5)).unwrap()
+        }));
+    }
+    for j in joins {
+        let resp = j.join().unwrap();
+        assert_eq!(resp.tokens.len(), 5);
+    }
+
+    let mut c = ServerClient::connect(&addr).unwrap();
+    let m = c.metrics().unwrap();
+    assert_eq!(m.get("requests_total").unwrap().as_usize(), Some(8));
+    assert_eq!(m.get("requests_failed").unwrap().as_usize(), Some(0));
+    assert!(m.get("decode_tok_per_s").unwrap().as_f64().unwrap() > 0.0);
+
+    server.stop();
+    drop(router);
+    for t in slots {
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn identical_requests_get_identical_tokens() {
+    // greedy decoding is deterministic across slots and orderings
+    let (server, router, slots) = start_server(2);
+    let addr = server.addr.to_string();
+    let mut c1 = ServerClient::connect(&addr).unwrap();
+    let mut c2 = ServerClient::connect(&addr).unwrap();
+    let r1 = c1.generate(&GenRequest::text(1, "same prompt", 8)).unwrap();
+    let r2 = c2.generate(&GenRequest::text(2, "same prompt", 8)).unwrap();
+    assert_eq!(r1.tokens, r2.tokens);
+
+    server.stop();
+    drop(router);
+    for t in slots {
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn malformed_requests_get_errors_not_crashes() {
+    let (server, router, slots) = start_server(1);
+    let addr = server.addr.to_string();
+
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    for bad in ["not json\n", "{\"op\":\"generate\",\"max_new\":3}\n", "{\"op\":\"nope\"}\n"] {
+        stream.write_all(bad.as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "expected error for {bad:?}, got {line}");
+    }
+    // the connection still works afterwards
+    stream.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("true"));
+
+    server.stop();
+    drop(router);
+    for t in slots {
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn long_generation_clamped_to_kv_capacity() {
+    let (server, router, slots) = start_server(1);
+    let addr = server.addr.to_string();
+    let mut c = ServerClient::connect(&addr).unwrap();
+    // tiny max_seq = 64; ask for far more
+    let resp = c.generate(&GenRequest::text(1, "x", 10_000)).unwrap();
+    assert!(resp.tokens.len() <= 64);
+    assert!(!resp.tokens.is_empty());
+
+    server.stop();
+    drop(router);
+    for t in slots {
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,31 @@
+# Convenience entry points. Tier-1 verification is just:
+#     cargo build --release && cargo test -q
+
+.PHONY: build test smoke artifacts bench-figures lint
+
+build:
+	cargo build --release --workspace
+
+test:
+	cargo test -q
+
+smoke:
+	cargo run --release --example quickstart
+
+# AOT-lower the tiny JAX model (L1 Pallas kernels) to HLO text + ALF
+# weights under rust/artifacts/, enabling the golden_pjrt suite (which
+# additionally needs a build with `--features pjrt`). Requires a
+# python environment with jax; see python/compile/aot.py.
+artifacts:
+	python3 python/compile/aot.py --out-dir rust/artifacts
+
+bench-figures:
+	cargo bench --bench table1_membw
+	cargo bench --bench fig10_single_node
+	cargo bench --bench fig11_multi_node
+	cargo bench --bench fig12_decode_long
+	cargo bench --bench fig13_prefill
+
+lint:
+	cargo fmt --all --check
+	cargo clippy --workspace --all-targets -- -D warnings

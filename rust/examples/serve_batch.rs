@@ -84,19 +84,11 @@ fn main() -> anyhow::Result<()> {
     let mut latency = Summary::new();
     let mut ttft = Summary::new();
     let mut decoded = 0usize;
-    let mut sample_tokens: Option<(Vec<i32>, Vec<i32>)> = None;
     for c in clients {
         let resp = c.join().unwrap()?;
         latency.add(resp.total_s);
         ttft.add(resp.ttft_s);
         decoded += resp.tokens.len();
-        if resp.id == 2 && sample_tokens.is_none() {
-            // request id 2 used tokens [0,17,34,...] (i=1? no — i=1 is text) —
-            // stash the first even-id token-request for the golden check
-        }
-        if sample_tokens.is_none() {
-            sample_tokens = Some((vec![], resp.tokens.clone()));
-        }
     }
     let wall = t0.elapsed().as_secs_f64();
 
@@ -109,20 +101,29 @@ fn main() -> anyhow::Result<()> {
     println!("server metrics: {}", m.to_string());
 
     // --- golden cross-check vs PJRT (when artifacts exist) ------------------
+    // The PJRT session only loads in builds with the `pjrt` feature;
+    // the default build's stub errors, which we treat as a skip so the
+    // example still exits cleanly after a successful batch.
     if let Some(dir) = artifacts_dir() {
-        let session = arclight::runtime::PjrtSession::load(&dir)?;
-        let prompt: Vec<i32> = (0..session.manifest.prompt_len as i32).collect();
-        let want = session.generate(&prompt, 8)?;
-        let mut c = ServerClient::connect(&addr)?;
-        let mut req = GenRequest::text(999, "", 8);
-        req.prompt = None;
-        req.tokens = Some(prompt);
-        let got = c.generate(&req)?;
-        assert_eq!(want, got.tokens, "served tokens must match the PJRT golden path");
-        println!("golden check vs PJRT: served tokens match ✓ ({want:?})");
+        match arclight::runtime::PjrtSession::load(&dir) {
+            Ok(session) => {
+                let prompt: Vec<i32> = (0..session.manifest.prompt_len as i32).collect();
+                let want = session.generate(&prompt, 8)?;
+                let mut c = ServerClient::connect(&addr)?;
+                let mut req = GenRequest::text(999, "", 8);
+                req.prompt = None;
+                req.tokens = Some(prompt);
+                let got = c.generate(&req)?;
+                assert_eq!(want, got.tokens, "served tokens must match the PJRT golden path");
+                println!("golden check vs PJRT: served tokens match ✓ ({want:?})");
+            }
+            // feature-enabled builds must surface real load failures
+            Err(e) if cfg!(feature = "pjrt") => return Err(e),
+            Err(e) => println!("golden check vs PJRT skipped: {e}"),
+        }
     }
 
-    drop(server.stop());
+    server.stop();
     let _ = Arc::try_unwrap(router);
     for t in slot_threads {
         let _ = t.join();

@@ -14,8 +14,9 @@ use crate::quant::dot_q8_0_f32;
 use crate::tensor::dtype::{Q4_0_BLOCK_BYTES, Q8_0_BLOCK_BYTES, QK4_0, QK8_0};
 
 /// f32 GEMM: `out[m, n] = Σ_k x[m, k] · w[n, k]` for `n ∈ [n0, n1)`.
-/// `out` covers only the `[n0, n1)` column stripe? No — `out` is the
-/// full `[M, N]` buffer; this call writes columns `n0..n1` of each row.
+/// `out` is the full `[M, N]` buffer; this call writes columns
+/// `n0..n1` of each row.
+#[allow(clippy::too_many_arguments)]
 pub fn gemm_f32(
     x: &[f32],
     w: &[f32],
@@ -43,7 +44,8 @@ pub fn gemm_f32(
 ///
 /// The activation row's per-block sums are computed once and shared by
 /// all `n1 - n0` weight rows (`dot_q4_0_f32_presum`), hoisting the Q4_0
-/// bias correction out of the hot loop — see EXPERIMENTS.md §Perf.
+/// bias correction out of the hot loop.
+#[allow(clippy::too_many_arguments)]
 pub fn gemm_q4_0(
     x: &[f32],
     w: &[u8],
@@ -71,6 +73,7 @@ pub fn gemm_q4_0(
 }
 
 /// Q8_0 GEMM (quantized-KV attention scores use this layout).
+#[allow(clippy::too_many_arguments)]
 pub fn gemm_q8_0(
     x: &[f32],
     w: &[u8],

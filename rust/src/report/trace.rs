@@ -119,7 +119,7 @@ pub fn to_chrome_json(events: &[TraceEvent]) -> String {
                 ("pid", 1usize.into()),
                 (
                     "tid",
-                    if e.group == usize::MAX { 0usize } else { e.group + 1 }.into(),
+                    (if e.group == usize::MAX { 0usize } else { e.group + 1 }).into(),
                 ),
                 ("args", obj(vec![("node", e.node.into())])),
             ])

@@ -133,6 +133,7 @@ mod tests {
     use crate::tensor::{DType, TensorBundle};
 
     /// x[1,4] → scatter(2) → matmul(w_g) → gather == full matmul.
+    #[allow(clippy::type_complexity)]
     fn build_tp_graph(
         pool: MemoryPool,
     ) -> (Arc<Graph>, Arc<MemoryPool>, crate::tensor::TensorId, crate::tensor::TensorId, Vec<crate::tensor::TensorId>) {

@@ -32,6 +32,7 @@ fn spread_into(t: &mut Traffic, placement: &crate::numa::Placement, bytes: f64) 
 /// (m = 1) has no reuse dimension and is charged per worker — which is
 /// exactly why the paper's TP gain is larger for decode than prefill
 /// (§A.2).
+#[allow(clippy::too_many_arguments)]
 pub fn op_traffic(
     graph: &Graph,
     id: TensorId,

@@ -38,6 +38,7 @@ impl Default for BatcherConfig {
 struct Pending {
     req: GenRequest,
     enqueued: Instant,
+    #[allow(clippy::type_complexity)]
     done: Arc<(Mutex<Option<GenResponse>>, Condvar)>,
 }
 

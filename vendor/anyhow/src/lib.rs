@@ -1,0 +1,175 @@
+//! A minimal, std-only, API-compatible shim for the subset of
+//! [`anyhow`](https://docs.rs/anyhow) this workspace uses.
+//!
+//! The build environments for this repo are offline (everything is
+//! vendored), so instead of pulling the real crate from crates.io the
+//! workspace ships this ~150-line stand-in. It provides:
+//!
+//! * [`Error`] — a single-message error value (no backtraces, no chain
+//!   downcasting; context is folded into the message eagerly);
+//! * [`Result<T>`] — `std::result::Result<T, Error>` with a default
+//!   error type;
+//! * [`Context`] — `.context(...)` / `.with_context(...)` on both
+//!   `Result` and `Option`;
+//! * [`anyhow!`] / [`bail!`] — the formatting constructors.
+//!
+//! `?` works on any `std::error::Error` (io, utf8, slice conversions,
+//! …) through a blanket `From` impl, exactly like the real crate. If
+//! the workspace ever gains network access, swapping this for the real
+//! `anyhow = "1"` is a one-line change in `rust/Cargo.toml`.
+
+use std::fmt;
+
+/// A string-backed error value. Display prints the message with every
+/// context layer prepended (`outer: inner`), matching the `{:#}`
+/// rendering of real anyhow closely enough for logs and tests.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context layer.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` reports through Debug;
+        // print the plain message like real anyhow does.
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error`;
+// that is what makes the blanket `From` below coherent (same trick as
+// the real crate).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — result with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for `Result` and `Option`, mirroring anyhow's.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Wrap with a lazily-computed context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error { msg: context.to_string() })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error { msg: f().to_string() })
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn inner(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {flag} ({})", 42);
+            }
+            Ok(7)
+        }
+        assert_eq!(inner(false).unwrap(), 7);
+        let e = inner(true).unwrap_err();
+        assert_eq!(e.to_string(), "flag was true (42)");
+
+        let from_string = anyhow!(String::from("plain"));
+        assert_eq!(from_string.to_string(), "plain");
+        let n = 3;
+        let formatted = anyhow!("n = {n}");
+        assert_eq!(formatted.to_string(), "n = 3");
+    }
+}

@@ -1,7 +1,7 @@
 # Convenience entry points. Tier-1 verification is just:
 #     cargo build --release && cargo test -q
 
-.PHONY: build test smoke artifacts bench-figures lint
+.PHONY: build test smoke bench-smoke artifacts bench-figures lint
 
 build:
 	cargo build --release --workspace
@@ -11,6 +11,14 @@ test:
 
 smoke:
 	cargo run --release --example quickstart
+
+# The CI bench-smoke leg: serving comparison (sequential slots vs
+# continuous batching) plus the operator hot-path report, both in quick
+# mode, JSON reports under perf-reports/.
+bench-smoke:
+	mkdir -p perf-reports
+	cargo run --release --example serve_batch -- --quick --report perf-reports/serve_batch.json
+	cargo bench --bench ops_hotpath -- --quick --json perf-reports/ops_hotpath.json
 
 # AOT-lower the tiny JAX model (L1 Pallas kernels) to HLO text + ALF
 # weights under rust/artifacts/, enabling the golden_pjrt suite (which

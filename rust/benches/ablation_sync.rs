@@ -17,12 +17,15 @@ use arclight::sched::SyncMode;
 fn main() {
     let cfg = ModelConfig::qwen3_4b();
     println!("Sync A (global barrier per op) vs Sync B (local barriers), Qwen3-4B decode\n");
-    println!("{:>6} {:>9} {:>12} {:>12} {:>12}", "nodes", "threads", "SyncA tok/s", "SyncB tok/s", "B−A tok/s");
+    let cols = ("nodes", "threads", "SyncA tok/s", "SyncB tok/s", "B−A tok/s");
+    println!("{:>6} {:>9} {:>12} {:>12} {:>12}", cols.0, cols.1, cols.2, cols.3, cols.4);
     for nodes in [2usize, 4] {
         let threads = nodes * 48;
         let topo = Topology::kunpeng920();
-        let a = decode_tok_s(&cfg, Strategy::arclight_tp(nodes, SyncMode::SyncA), threads, &topo, 15, 256, 4);
-        let b = decode_tok_s(&cfg, Strategy::arclight_tp(nodes, SyncMode::SyncB), threads, &topo, 15, 256, 4);
+        let sync_a = Strategy::arclight_tp(nodes, SyncMode::SyncA);
+        let sync_b = Strategy::arclight_tp(nodes, SyncMode::SyncB);
+        let a = decode_tok_s(&cfg, sync_a, threads, &topo, 15, 256, 4);
+        let b = decode_tok_s(&cfg, sync_b, threads, &topo, 15, 256, 4);
         println!(
             "{:>6} {:>9} {:>12.1} {:>12.1} {:>12.1}",
             nodes, threads, a.tok_per_s, b.tok_per_s, b.tok_per_s - a.tok_per_s
@@ -31,12 +34,15 @@ fn main() {
     }
 
     println!("\nsensitivity to the cross-node barrier cost (N=4, 192 threads):");
-    println!("{:>18} {:>12} {:>12} {:>12}", "barrier/node (µs)", "SyncA tok/s", "SyncB tok/s", "B−A tok/s");
+    let cols = ("barrier/node (µs)", "SyncA tok/s", "SyncB tok/s", "B−A tok/s");
+    println!("{:>18} {:>12} {:>12} {:>12}", cols.0, cols.1, cols.2, cols.3);
     for per_node_us in [0.5f64, 2.0, 8.0] {
         let mut topo = Topology::kunpeng920();
         topo.barrier_per_node = per_node_us * 1e-6;
-        let a = decode_tok_s(&cfg, Strategy::arclight_tp(4, SyncMode::SyncA), 192, &topo, 15, 256, 4);
-        let b = decode_tok_s(&cfg, Strategy::arclight_tp(4, SyncMode::SyncB), 192, &topo, 15, 256, 4);
+        let sync_a = Strategy::arclight_tp(4, SyncMode::SyncA);
+        let sync_b = Strategy::arclight_tp(4, SyncMode::SyncB);
+        let a = decode_tok_s(&cfg, sync_a, 192, &topo, 15, 256, 4);
+        let b = decode_tok_s(&cfg, sync_b, 192, &topo, 15, 256, 4);
         println!(
             "{:>18} {:>12.1} {:>12.1} {:>12.1}",
             per_node_us, a.tok_per_s, b.tok_per_s, b.tok_per_s - a.tok_per_s

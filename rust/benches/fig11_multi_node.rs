@@ -27,7 +27,7 @@ fn main() {
         let sync_a = best(&series[1]);
         let sync_b = best(&series[2]);
         println!(
-            "  N={nodes}: ArcLight-TP(SyncB) vs llama.cpp: +{:.0}%  |  SyncB − SyncA: +{:.1} tok/s\n",
+            "  N={nodes}: TP(SyncB) vs llama.cpp: +{:.0}% | SyncB − SyncA: +{:.1} tok/s\n",
             (sync_b / llama - 1.0) * 100.0,
             sync_b - sync_a
         );

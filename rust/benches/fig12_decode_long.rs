@@ -29,8 +29,9 @@ fn main() {
     }
 
     // appendix A.2: long-prompt decode ≤ short-prompt decode
-    let short = decode_tok_s(&cfg, Strategy::arclight_tp(4, SyncMode::SyncB), 192, &topo, 15, 256, 4);
-    let long = decode_tok_s(&cfg, Strategy::arclight_tp(4, SyncMode::SyncB), 192, &topo, 300, 256, 4);
+    let tp4 = Strategy::arclight_tp(4, SyncMode::SyncB);
+    let short = decode_tok_s(&cfg, tp4, 192, &topo, 15, 256, 4);
+    let long = decode_tok_s(&cfg, tp4, 192, &topo, 300, 256, 4);
     println!(
         "\nArcLight-TP4 decode: prompt 15 → {:.1} tok/s, prompt 300 → {:.1} tok/s",
         short.tok_per_s, long.tok_per_s

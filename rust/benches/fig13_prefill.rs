@@ -30,13 +30,15 @@ fn main() {
 
     // the paper's A.2 observation: prefill gain < decode gain
     let d_l = decode_tok_s(&cfg, Strategy::llama_distribute(4), 192, &topo, 300, 128, 4);
-    let d_a = decode_tok_s(&cfg, Strategy::arclight_tp(4, SyncMode::SyncB), 192, &topo, 300, 128, 4);
+    let tp4 = Strategy::arclight_tp(4, SyncMode::SyncB);
+    let d_a = decode_tok_s(&cfg, tp4, 192, &topo, 300, 128, 4);
     let p_l = prefill_tok_s(&cfg, Strategy::llama_distribute(4), 192, &topo, 300);
     let p_a = prefill_tok_s(&cfg, Strategy::arclight_tp(4, SyncMode::SyncB), 192, &topo, 300);
     let decode_gain = d_a.tok_per_s / d_l.tok_per_s;
     let prefill_gain = p_a.tok_per_s / p_l.tok_per_s;
     println!(
-        "\nTP gain at N=4: decode ×{decode_gain:.2}, prefill ×{prefill_gain:.2} (paper: prefill advantage 'less pronounced')"
+        "\nTP gain at N=4: decode ×{decode_gain:.2}, prefill ×{prefill_gain:.2} \
+         (paper: prefill advantage 'less pronounced')"
     );
     assert!(p_a.tok_per_s > p_l.tok_per_s, "ArcLight should still win prefill");
     assert!(

@@ -1,12 +1,17 @@
 //! Real wall-clock microbenchmarks of the operator hot paths (the §Perf
 //! targets): Q4_0 GEMV/GEMM, fused attention, RMSNorm, and the end-to-end
-//! decode step of the real engine on the small model.
+//! decode step of the real engine on the small model — single-sequence
+//! and continuous-batched.
 //!
 //! These are host-machine numbers (1 core in this environment), used for
 //! the optimization loop — the paper-figure numbers come from the
 //! simulated testbed instead.
 //!
-//!     cargo bench --bench ops_hotpath
+//!     cargo bench --bench ops_hotpath [-- --quick] [-- --json <path>]
+//!
+//! `--quick` shrinks sizes/iterations for the CI bench-smoke leg;
+//! `--json <path>` writes the measured per-iteration seconds as a JSON
+//! report (the perf-trajectory artifact).
 
 use std::time::Instant;
 
@@ -16,11 +21,13 @@ use arclight::model::ModelConfig;
 use arclight::numa::Topology;
 use arclight::ops;
 use arclight::quant::quantize_matrix_q4_0;
+use arclight::util::json::{obj, Json};
 use arclight::util::stats::{fmt_duration, Summary};
 use arclight::util::Rng;
 
-/// warmup + timed iterations; returns per-iteration seconds.
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+/// warmup + timed iterations; returns per-iteration seconds and logs
+/// the sample into `report`.
+fn bench<F: FnMut()>(report: &mut Vec<(String, f64)>, name: &str, iters: usize, mut f: F) -> f64 {
     for _ in 0..3 {
         f();
     }
@@ -32,6 +39,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     }
     let p50 = s.p50();
     println!("{name:42} {:>12}/iter  (min {:>12})", fmt_duration(p50), fmt_duration(s.min()));
+    report.push((name.to_string(), p50));
     p50
 }
 
@@ -42,16 +50,41 @@ fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
     v
 }
 
+fn engine_opts(threads: usize, batch_slots: usize) -> EngineOptions {
+    EngineOptions {
+        strategy: Strategy::arclight_single(),
+        threads,
+        topo: Topology::kunpeng920(),
+        prefill_rows: None,
+        seed: 0,
+        batch_slots,
+    }
+}
+
 fn main() {
-    println!("== operator hot paths (host wall-clock) ==\n");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let mut report: Vec<(String, f64)> = Vec::new();
+    let rep = &mut report;
+
+    println!(
+        "== operator hot paths (host wall-clock{}) ==\n",
+        if quick { ", quick mode" } else { "" }
+    );
 
     // --- Q4_0 GEMV: the decode inner loop -----------------------------------
-    let (n, k) = (2048usize, 2048usize);
+    let (n, k) = if quick { (512usize, 512usize) } else { (2048usize, 2048usize) };
+    let gemv_iters = if quick { 5 } else { 20 };
     let w = rand_vec(n * k, 1);
     let wq = quantize_matrix_q4_0(&w, n, k);
     let x = rand_vec(k, 2);
     let mut out = vec![0.0f32; n];
-    let t = bench(&format!("q4_0 gemv {n}x{k}"), 20, || {
+    let t = bench(rep, &format!("q4_0 gemv {n}x{k}"), gemv_iters, || {
         ops::gemm::gemm_q4_0(&x, &wq, &mut out, 1, k, n, 0, n);
     });
     let bytes = wq.len() as f64;
@@ -61,28 +94,35 @@ fn main() {
 
     // --- f32 GEMV reference --------------------------------------------------
     let mut out_f = vec![0.0f32; n];
-    let tf = bench(&format!("f32 gemv {n}x{k}"), 20, || {
+    let tf = bench(rep, &format!("f32 gemv {n}x{k}"), gemv_iters, || {
         ops::gemm::gemm_f32(&x, &w, &mut out_f, 1, k, n, 0, n);
     });
     println!("{:42} q4/f32 time ratio: {:.2} (q4 moves 7.1x fewer bytes)", "", t / tf);
 
-    // --- prefill GEMM (m = 16) ----------------------------------------------
-    let m = 16usize;
+    // --- batched GEMM (m = 8): the continuous-batching decode shape ----------
+    let m = 8usize;
     let xm = rand_vec(m * k, 3);
     let mut outm = vec![0.0f32; m * n];
-    let tm = bench(&format!("q4_0 gemm {m}x{k} · {n}x{k}ᵀ"), 10, || {
+    let tm = bench(rep, &format!("q4_0 gemm {m}x{k} · {n}x{k}ᵀ"), gemv_iters.max(10), || {
         ops::gemm::gemm_q4_0(&xm, &wq, &mut outm, m, k, n, 0, n);
     });
-    println!("{:42} {:>8.2} GFLOP/s", "", 2.0 * (m * n * k) as f64 / tm / 1e9);
+    println!(
+        "{:42} {:>8.2} GFLOP/s, {:.2}x the GEMV time for {m}x the tokens",
+        "",
+        2.0 * (m * n * k) as f64 / tm / 1e9,
+        tm / t
+    );
 
     // --- fused attention over the KV cache -----------------------------------
-    let (heads, kvh, hd, max_seq, kv_len) = (16usize, 8usize, 64usize, 512usize, 384usize);
+    let (heads, kvh, hd) = (16usize, 8usize, 64usize);
+    let (max_seq, kv_len) = if quick { (128usize, 96usize) } else { (512usize, 384usize) };
     let q = rand_vec(heads * hd, 4);
     let kc = rand_vec(kvh * max_seq * hd, 5);
     let vc = rand_vec(kvh * max_seq * hd, 6);
     let mut ao = vec![0.0f32; heads * hd];
-    bench(&format!("attention decode H={heads} kv_len={kv_len}"), 20, || {
-        ops::attention::attention(&q, &kc, &vc, &mut ao, 1, heads, kvh, hd, max_seq, kv_len - 1, 0, heads);
+    bench(rep, &format!("attention decode H={heads} kv_len={kv_len}"), gemv_iters, || {
+        let p0 = kv_len - 1;
+        ops::attention::attention(&q, &kc, &vc, &mut ao, 1, heads, kvh, hd, max_seq, p0, 0, heads);
     });
 
     // --- RMSNorm -------------------------------------------------------------
@@ -90,28 +130,25 @@ fn main() {
     let xr = rand_vec(d, 7);
     let g = rand_vec(d, 8);
     let mut outn = vec![0.0f32; d];
-    bench(&format!("rmsnorm d={d}"), 50, || {
+    bench(rep, &format!("rmsnorm d={d}"), if quick { 10 } else { 50 }, || {
         ops::norm::rmsnorm(&xr, &g, &mut outn, d, 1e-6, 0, 1);
     });
 
     // --- end-to-end decode step (real engine, small model) -------------------
     println!("\n== end-to-end decode (small-25m, real engine) ==\n");
-    for threads in [1usize, 2, 4] {
-        let opts = EngineOptions {
-            strategy: Strategy::arclight_single(),
-            threads,
-            topo: Topology::kunpeng920(),
-            prefill_rows: None,
-            seed: 0,
-        };
-        let mut engine = Engine::new_synthetic(ModelConfig::small_25m(), &opts).unwrap();
+    let cfg = if quick { ModelConfig::tiny() } else { ModelConfig::small_25m() };
+    let thread_counts: &[usize] = if quick { &[2] } else { &[1, 2, 4] };
+    let step_iters = if quick { 4 } else { 12 };
+    for &threads in thread_counts {
+        let mut engine = Engine::new_synthetic(cfg.clone(), &engine_opts(threads, 1)).unwrap();
         engine.prefill(&[1, 2, 3, 4]);
+        let horizon = cfg.max_seq - 24;
         let mut step = 0usize;
-        let t = bench(&format!("decode step, {threads} worker(s)"), 12, || {
+        let t = bench(rep, &format!("decode step, {threads} worker(s)"), step_iters, || {
             let logits = engine.decode_step((step % 200) as i32 + 5);
             step += 1;
             std::hint::black_box(&logits);
-            if engine.position() > 400 {
+            if engine.position() > horizon {
                 engine.reset();
                 engine.prefill(&[1, 2, 3, 4]);
             }
@@ -119,15 +156,47 @@ fn main() {
         println!("{:42} {:>8.1} tok/s", "", 1.0 / t);
     }
 
+    // --- batched decode step (continuous batching, 4 live sequences) ---------
+    {
+        let slots = 4usize;
+        let mut engine = Engine::new_synthetic(cfg.clone(), &engine_opts(2, slots)).unwrap();
+        let mut seqs: Vec<_> = (0..slots).map(|_| engine.seq_alloc().unwrap()).collect();
+        let horizon = cfg.max_seq - 24;
+        let mut step = 0usize;
+        let t = bench(rep, &format!("batched decode step, {slots} lanes"), step_iters, || {
+            let lanes: Vec<_> = seqs.iter().map(|&s| (s, (step % 200) as i32 + 5)).collect();
+            let logits = engine.step_batch(&lanes);
+            step += 1;
+            std::hint::black_box(&logits);
+            if seqs.iter().any(|&s| engine.seq_pos(s) > horizon) {
+                engine.reset();
+                seqs = (0..slots).map(|_| engine.seq_alloc().unwrap()).collect();
+            }
+        });
+        println!("{:42} {:>8.1} tok/s aggregate", "", slots as f64 / t);
+    }
+
     // --- generation sanity ----------------------------------------------------
-    let opts = EngineOptions {
-        strategy: Strategy::arclight_single(),
-        threads: 2,
-        topo: Topology::kunpeng920(),
-        prefill_rows: None,
-        seed: 0,
-    };
-    let mut engine = Engine::new_synthetic(ModelConfig::small_25m(), &opts).unwrap();
-    let res = engine.generate(&[1, 2, 3, 4, 5], 32, &Sampler::greedy());
-    println!("\ngenerate 32 tokens: {:.1} tok/s decode", res.decode_tok_per_s());
+    let mut engine = Engine::new_synthetic(cfg, &engine_opts(2, 1)).unwrap();
+    let res = engine.generate(&[1, 2, 3, 4, 5], if quick { 8 } else { 32 }, &Sampler::greedy());
+    println!("\ngenerate {} tokens: {:.1} tok/s decode", res.decode_tokens, res.decode_tok_per_s());
+
+    if let Some(path) = json_path {
+        let entries: Vec<Json> = report
+            .iter()
+            .map(|(name, secs)| {
+                obj(vec![("name", name.as_str().into()), ("p50_s", (*secs).into())])
+            })
+            .collect();
+        let j = obj(vec![
+            ("benchmark", "ops_hotpath".into()),
+            ("quick", quick.into()),
+            ("results", Json::Arr(entries)),
+        ]);
+        if let Some(parent) = std::path::Path::new(&path).parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        std::fs::write(&path, j.to_string()).expect("write json report");
+        println!("wrote report to {path}");
+    }
 }

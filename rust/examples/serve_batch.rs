@@ -1,14 +1,24 @@
-//! End-to-end serving driver (the repo's E2E validation workload).
+//! End-to-end serving driver and the continuous-batching headline
+//! benchmark.
 //!
 //! Loads a small *real* model (the AOT tiny model when artifacts are
 //! built — byte-identical weights to the PJRT/JAX golden path — else a
-//! synthetic 25M model), starts the TCP serving stack (router + dynamic
-//! batcher + engine slots), fires a batch of concurrent client
-//! requests over the socket, and reports latency/throughput. When
-//! artifacts are present it also cross-checks one served response
-//! against PJRT token-for-token.
+//! synthetic 25M model) and serves the same batch of concurrent client
+//! requests over TCP twice:
+//!
+//! 1. **sequential-slots baseline** — 2 engine slots, each serving one
+//!    whole generation at a time (the pre-continuous design);
+//! 2. **continuous batching** — one engine whose KV pool holds 8
+//!    sequences, every decode step a single batched graph pass.
+//!
+//! It reports aggregate tokens/s for both and asserts the continuous
+//! scheduler wins. When artifacts are present it also cross-checks one
+//! served response against PJRT token-for-token.
 //!
 //!     make artifacts && cargo run --release --example serve_batch
+//!
+//! Flags: `--quick` (CI-sized run), `--report <path>` (write a JSON
+//! report for the perf-trajectory artifact).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -18,7 +28,10 @@ use arclight::baseline::Strategy;
 use arclight::frontend::{Engine, EngineOptions};
 use arclight::model::ModelConfig;
 use arclight::numa::Topology;
-use arclight::server::{BatcherConfig, EngineSlot, GenRequest, Router, ServerClient, ServerHandle};
+use arclight::server::{
+    BatcherConfig, ContinuousBatcher, EngineSlot, GenRequest, Router, ServerClient, ServerHandle,
+};
+use arclight::util::json::{obj, Json};
 use arclight::util::stats::Summary;
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -26,13 +39,14 @@ fn artifacts_dir() -> Option<PathBuf> {
     dir.join("manifest.json").exists().then_some(dir)
 }
 
-fn build_engine(seed: u64) -> anyhow::Result<(Engine, bool)> {
+fn build_engine(threads: usize, batch_slots: usize) -> anyhow::Result<(Engine, bool)> {
     let opts = EngineOptions {
         strategy: Strategy::arclight_single(),
-        threads: 2,
+        threads,
         topo: Topology::kunpeng920(),
         prefill_rows: None,
-        seed,
+        seed: 0,
+        batch_slots,
     };
     if let Some(dir) = artifacts_dir() {
         Ok((Engine::from_alf(&dir.join("tiny.alf"), &opts)?, true))
@@ -41,46 +55,52 @@ fn build_engine(seed: u64) -> anyhow::Result<(Engine, bool)> {
     }
 }
 
-fn main() -> anyhow::Result<()> {
-    let slots = 2usize;
-    let n_requests = 16usize;
-    let max_new = 24usize;
+struct PhaseResult {
+    name: &'static str,
+    wall_s: f64,
+    decoded: usize,
+    agg_tok_s: f64,
+    latency: Summary,
+    ttft: Summary,
+    metrics: Json,
+}
 
-    // --- serving stack -----------------------------------------------------
-    let router = Router::new(BatcherConfig::default());
-    let mut slot_threads = Vec::new();
-    let mut from_artifacts = false;
-    for _ in 0..slots {
-        let (engine, real) = build_engine(0)?;
-        from_artifacts = real;
-        let r = router.clone();
-        slot_threads.push(std::thread::spawn(move || EngineSlot::new(engine).serve(r)));
+impl PhaseResult {
+    fn to_json(&mut self) -> Json {
+        obj(vec![
+            ("name", self.name.into()),
+            ("wall_s", self.wall_s.into()),
+            ("decoded_tokens", self.decoded.into()),
+            ("aggregate_tok_per_s", self.agg_tok_s.into()),
+            ("latency_p50_s", self.latency.p50().into()),
+            ("latency_p95_s", self.latency.p95().into()),
+            ("ttft_p50_s", self.ttft.p50().into()),
+            ("server_metrics", self.metrics.clone()),
+        ])
     }
-    let server = ServerHandle::start("127.0.0.1:0", router.clone())?;
-    let addr = server.addr.to_string();
-    println!(
-        "serving {} model on {addr} with {slots} slots",
-        if from_artifacts { "tiny AOT (real weights)" } else { "synthetic 25M" }
-    );
+}
 
-    // --- batched clients ---------------------------------------------------
+/// Fire `n_requests` concurrent clients at `addr`; half text prompts,
+/// half pre-tokenized (covers both request paths).
+fn fire_clients(
+    addr: &str,
+    n_requests: usize,
+    max_new: usize,
+) -> anyhow::Result<(f64, usize, Summary, Summary)> {
     let t0 = Instant::now();
     let mut clients = Vec::new();
     for i in 0..n_requests {
-        let addr = addr.clone();
+        let addr = addr.to_string();
         clients.push(std::thread::spawn(move || -> anyhow::Result<_> {
             let mut c = ServerClient::connect(&addr)?;
             let mut req = GenRequest::text(i as u64 + 1, "the quick brown fox", max_new);
-            // pre-tokenized variant for half the requests (covers both paths)
             if i % 2 == 0 {
                 req.prompt = None;
                 req.tokens = Some((0..12).map(|k| (k * 17 + i as i32) % 256).collect());
             }
-            let resp = c.generate(&req)?;
-            Ok(resp)
+            c.generate(&req)
         }));
     }
-
     let mut latency = Summary::new();
     let mut ttft = Summary::new();
     let mut decoded = 0usize;
@@ -90,15 +110,129 @@ fn main() -> anyhow::Result<()> {
         ttft.add(resp.ttft_s);
         decoded += resp.tokens.len();
     }
-    let wall = t0.elapsed().as_secs_f64();
+    Ok((t0.elapsed().as_secs_f64(), decoded, latency, ttft))
+}
 
-    let m = router.metrics.snapshot();
-    println!("--- batch complete ---");
-    println!("requests: {n_requests}, decoded tokens: {decoded}, wall: {wall:.2}s");
-    println!("aggregate decode throughput: {:.1} tok/s", decoded as f64 / wall);
-    println!("latency  p50 {:.3}s  p95 {:.3}s", latency.p50(), latency.p95());
-    println!("ttft     p50 {:.3}s  p95 {:.3}s", ttft.p50(), ttft.p95());
-    println!("server metrics: {}", m.to_string());
+fn run_sequential(
+    threads_total: usize,
+    slots: usize,
+    n_requests: usize,
+    max_new: usize,
+) -> anyhow::Result<(PhaseResult, bool)> {
+    let router = Router::new(BatcherConfig::default());
+    let mut slot_threads = Vec::new();
+    let mut from_artifacts = false;
+    for _ in 0..slots {
+        let (engine, real) = build_engine(threads_total / slots, 1)?;
+        from_artifacts = real;
+        let r = router.clone();
+        slot_threads.push(std::thread::spawn(move || EngineSlot::new(engine).serve(r)));
+    }
+    let server = ServerHandle::start("127.0.0.1:0", router.clone())?;
+    let addr = server.addr.to_string();
+    let (wall_s, decoded, latency, ttft) = fire_clients(&addr, n_requests, max_new)?;
+    let metrics = router.metrics.snapshot();
+    server.stop();
+    for t in slot_threads {
+        let _ = t.join();
+    }
+    let _ = Arc::try_unwrap(router);
+    Ok((
+        PhaseResult {
+            name: "sequential-slots",
+            wall_s,
+            decoded,
+            agg_tok_s: decoded as f64 / wall_s,
+            latency,
+            ttft,
+            metrics,
+        },
+        from_artifacts,
+    ))
+}
+
+fn run_continuous(
+    threads_total: usize,
+    batch: usize,
+    n_requests: usize,
+    max_new: usize,
+) -> anyhow::Result<(PhaseResult, String, ServerHandle, std::thread::JoinHandle<()>)> {
+    let router = Router::new(BatcherConfig::default());
+    let (engine, _) = build_engine(threads_total, batch)?;
+    let r = router.clone();
+    let batcher_thread = std::thread::spawn(move || ContinuousBatcher::new(engine).serve(r));
+    let server = ServerHandle::start("127.0.0.1:0", router.clone())?;
+    let addr = server.addr.to_string();
+    let (wall_s, decoded, latency, ttft) = fire_clients(&addr, n_requests, max_new)?;
+    let metrics = router.metrics.snapshot();
+    Ok((
+        PhaseResult {
+            name: "continuous",
+            wall_s,
+            decoded,
+            agg_tok_s: decoded as f64 / wall_s,
+            latency,
+            ttft,
+            metrics,
+        },
+        addr,
+        server,
+        batcher_thread,
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let report_path = args
+        .iter()
+        .position(|a| a == "--report")
+        .and_then(|i| args.get(i + 1))
+        .map(PathBuf::from);
+
+    let threads_total = 4usize;
+    let batch = 8usize;
+    let (n_requests, max_new) = if quick { (8, 8) } else { (16, 24) };
+    println!(
+        "serve_batch: {n_requests} concurrent requests × {max_new} new tokens, \
+         {threads_total} worker threads{}",
+        if quick { " (quick mode)" } else { "" }
+    );
+
+    // --- phase 1: sequential-slot baseline ---------------------------------
+    let (mut seq, from_artifacts) = run_sequential(threads_total, 2, n_requests, max_new)?;
+    println!(
+        "[{}] model: {}",
+        seq.name,
+        if from_artifacts { "tiny AOT (real weights)" } else { "synthetic 25M" }
+    );
+    println!(
+        "[{}] decoded {} tok in {:.2}s → {:.1} tok/s aggregate | p50 {:.3}s p95 {:.3}s",
+        seq.name,
+        seq.decoded,
+        seq.wall_s,
+        seq.agg_tok_s,
+        seq.latency.p50(),
+        seq.latency.p95()
+    );
+
+    // --- phase 2: continuous batching --------------------------------------
+    let (mut cont, addr, server, batcher_thread) =
+        run_continuous(threads_total, batch, n_requests, max_new)?;
+    println!(
+        "[{}] decoded {} tok in {:.2}s → {:.1} tok/s aggregate | p50 {:.3}s p95 {:.3}s | \
+         occupancy {:.2}",
+        cont.name,
+        cont.decoded,
+        cont.wall_s,
+        cont.agg_tok_s,
+        cont.latency.p50(),
+        cont.latency.p95(),
+        cont.metrics.get("batch_occupancy").and_then(Json::as_f64).unwrap_or(0.0)
+    );
+
+    let speedup = cont.agg_tok_s / seq.agg_tok_s;
+    println!("continuous / sequential speedup: {speedup:.2}×");
 
     // --- golden cross-check vs PJRT (when artifacts exist) ------------------
     // The PJRT session only loads in builds with the `pjrt` feature;
@@ -124,9 +258,35 @@ fn main() -> anyhow::Result<()> {
     }
 
     server.stop();
-    let _ = Arc::try_unwrap(router);
-    for t in slot_threads {
-        let _ = t.join();
+    let _ = batcher_thread.join();
+
+    // --- JSON report (perf trajectory artifact) ----------------------------
+    if let Some(path) = report_path {
+        let report = obj(vec![
+            ("benchmark", "serve_batch".into()),
+            ("quick", quick.into()),
+            ("n_requests", n_requests.into()),
+            ("max_new", max_new.into()),
+            ("threads", threads_total.into()),
+            ("batch_slots", batch.into()),
+            ("from_artifacts", from_artifacts.into()),
+            ("speedup_continuous_vs_sequential", speedup.into()),
+            ("phases", Json::Arr(vec![seq.to_json(), cont.to_json()])),
+        ]);
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        std::fs::write(&path, report.to_string())?;
+        println!("wrote report to {}", path.display());
     }
+
+    // the headline claim this example exists to demonstrate
+    assert!(
+        speedup > 1.0,
+        "continuous batching ({:.1} tok/s) must beat the sequential baseline ({:.1} tok/s)",
+        cont.agg_tok_s,
+        seq.agg_tok_s
+    );
+    println!("continuous batching beats the sequential baseline ✓");
     Ok(())
 }

@@ -56,10 +56,16 @@ impl Strategy {
     pub fn name(&self) -> String {
         match self {
             Strategy::ArcLight { nodes: 1, .. } => "arclight".into(),
-            Strategy::ArcLight { nodes, sync: SyncMode::SyncA } => format!("arclight-tp{nodes}-syncA"),
-            Strategy::ArcLight { nodes, sync: SyncMode::SyncB } => format!("arclight-tp{nodes}-syncB"),
+            Strategy::ArcLight { nodes, sync: SyncMode::SyncA } => {
+                format!("arclight-tp{nodes}-syncA")
+            }
+            Strategy::ArcLight { nodes, sync: SyncMode::SyncB } => {
+                format!("arclight-tp{nodes}-syncB")
+            }
             Strategy::LlamaCpp { numa: LlamaNuma::Isolate } => "llama.cpp-isolate".into(),
-            Strategy::LlamaCpp { numa: LlamaNuma::Distribute(n) } => format!("llama.cpp-distribute{n}"),
+            Strategy::LlamaCpp { numa: LlamaNuma::Distribute(n) } => {
+                format!("llama.cpp-distribute{n}")
+            }
         }
     }
 
@@ -94,7 +100,9 @@ impl Strategy {
         match self {
             Strategy::ArcLight { nodes, .. } => topo.bind_cores(threads, *nodes > 1, *nodes),
             Strategy::LlamaCpp { numa: LlamaNuma::Isolate } => topo.bind_cores(threads, false, 1),
-            Strategy::LlamaCpp { numa: LlamaNuma::Distribute(n) } => topo.bind_cores(threads, true, *n),
+            Strategy::LlamaCpp { numa: LlamaNuma::Distribute(n) } => {
+                topo.bind_cores(threads, true, *n)
+            }
         }
     }
 

@@ -3,7 +3,16 @@
 //! `Engine` is the real-execution object behind the CLI, the examples
 //! and the serving layer. It owns the worker pool (created once, before
 //! inference — §2.4), the model graphs and the weight storage, and
-//! exposes the frontend API: `prefill`, `decode_step`, `generate`.
+//! exposes two frontend APIs:
+//!
+//! * the classic single-sequence loop (`prefill`, `decode_step`,
+//!   `generate`), and
+//! * the multi-sequence API behind continuous batching (`seq_alloc` /
+//!   `seq_free` / `step_batch`): up to `batch_slots` live sequences,
+//!   each owning one KV-pool slot, advanced one token per lane per
+//!   batched graph pass. Per-lane arithmetic is identical to the
+//!   single-sequence path, so interleaved decode is token-for-token
+//!   equal to serial decode.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -11,10 +20,11 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::baseline::Strategy;
+use crate::graph::SlotAllocator;
 use crate::model::synth;
 use crate::model::{AlfFile, ModelConfig, ModelGraphs};
 use crate::numa::Topology;
-use crate::sched::{ExecParams, RealExecutor};
+use crate::sched::{BatchView, ExecParams, RealExecutor};
 use crate::threads::ThreadPool;
 
 use super::sampler::Sampler;
@@ -30,17 +40,37 @@ pub struct EngineOptions {
     pub prefill_rows: Option<usize>,
     /// Synthetic weight seed when no ALF file is given.
     pub seed: u64,
+    /// KV-pool sequence slots; > 1 builds the batched decode graph and
+    /// enables the multi-sequence API (continuous batching).
+    pub batch_slots: usize,
 }
 
 impl EngineOptions {
     pub fn quick(strategy: Strategy, threads: usize) -> Self {
+        EngineOptions { strategy, threads, ..Default::default() }
+    }
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
         EngineOptions {
-            strategy,
-            threads,
+            strategy: Strategy::arclight_single(),
+            threads: 1,
             topo: Topology::kunpeng920(),
             prefill_rows: None,
             seed: 0,
+            batch_slots: 1,
         }
+    }
+}
+
+/// Handle to a live sequence: its KV-pool slot index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SeqId(usize);
+
+impl SeqId {
+    pub fn index(&self) -> usize {
+        self.0
     }
 }
 
@@ -76,7 +106,12 @@ impl GenerationResult {
 pub struct Engine {
     pub graphs: ModelGraphs,
     executor: RealExecutor,
+    /// Cursor of the classic single-sequence API (KV-pool slot 0).
     pos: usize,
+    /// KV-pool slot bookkeeping for the multi-sequence API.
+    slots: SlotAllocator,
+    /// Tokens ingested so far per slot.
+    seq_pos: Vec<usize>,
 }
 
 impl Engine {
@@ -111,8 +146,11 @@ impl Engine {
                 opts.threads
             );
         }
+        if opts.batch_slots == 0 {
+            bail!("batch_slots must be at least 1");
+        }
         let total_nodes = opts.topo.n_nodes();
-        let mut spec = opts.strategy.build_spec(cfg, total_nodes);
+        let mut spec = opts.strategy.build_spec(cfg, total_nodes).with_batch(opts.batch_slots);
         if let Some(rows) = opts.prefill_rows {
             spec = spec.with_prefill(rows);
         }
@@ -129,7 +167,14 @@ impl Engine {
             Arc::new(tp),
             opts.strategy.sync(),
         );
-        Ok(Engine { graphs, executor, pos: 0 })
+        let n_slots = graphs.batch_slots();
+        Ok(Engine {
+            graphs,
+            executor,
+            pos: 0,
+            slots: SlotAllocator::new(n_slots),
+            seq_pos: vec![0; n_slots],
+        })
     }
 
     pub fn cfg(&self) -> &ModelConfig {
@@ -140,10 +185,92 @@ impl Engine {
         self.pos
     }
 
-    /// Clear the KV cache and rewind to position 0.
+    /// Clear the KV cache, rewind to position 0 and free every
+    /// sequence slot.
     pub fn reset(&mut self) {
         synth::reset_kv(&self.graphs);
         self.pos = 0;
+        let n = self.graphs.batch_slots();
+        self.slots = SlotAllocator::new(n);
+        self.seq_pos = vec![0; n];
+    }
+
+    // ---- multi-sequence API (continuous batching) --------------------------
+
+    /// Sequence slots in the KV pool (1 = single-sequence engine).
+    pub fn batch_slots(&self) -> usize {
+        self.graphs.batch_slots()
+    }
+
+    /// Live sequences.
+    pub fn seqs_in_use(&self) -> usize {
+        self.slots.in_use()
+    }
+
+    /// Start a sequence: claim a KV-pool slot. `None` when every slot
+    /// is taken (the scheduler's admission backpressure).
+    pub fn seq_alloc(&mut self) -> Option<SeqId> {
+        self.slots.alloc().map(|s| {
+            self.seq_pos[s] = 0;
+            SeqId(s)
+        })
+    }
+
+    /// Finish a sequence: return its slot to the pool. No bytes move —
+    /// a recycled slot's stale KV is never read (attention spans only
+    /// positions the new sequence has itself stored).
+    pub fn seq_free(&mut self, id: SeqId) {
+        self.slots.free(id.0);
+    }
+
+    /// Tokens ingested so far by a live sequence.
+    pub fn seq_pos(&self, id: SeqId) -> usize {
+        self.seq_pos[id.0]
+    }
+
+    /// One continuous-batching step: each lane feeds `token` to its
+    /// sequence at that sequence's next position, all lanes in a single
+    /// graph pass. Several lanes may name the *same* sequence — they
+    /// ingest consecutive positions of it (chunked prefill inside a
+    /// running batch). Returns next-token logits per lane.
+    ///
+    /// Panics when the engine was built without `batch_slots > 1`, when
+    /// more lanes than slots are passed, on a lane for a freed slot, or
+    /// when a lane would overflow its sequence's `max_seq` span.
+    pub fn step_batch(&mut self, lanes: &[(SeqId, i32)]) -> Vec<Vec<f32>> {
+        let slots = self.batch_slots();
+        let graph = self
+            .graphs
+            .decode_batch
+            .clone()
+            .expect("engine built without batch slots (set EngineOptions::batch_slots > 1)");
+        assert!(
+            !lanes.is_empty() && lanes.len() <= slots,
+            "step of {} lanes on a {slots}-slot engine",
+            lanes.len()
+        );
+        let max_seq = self.cfg().max_seq;
+        let mut kv_base = Vec::with_capacity(lanes.len());
+        let mut pos = Vec::with_capacity(lanes.len());
+        let mut toks = vec![0i32; slots];
+        for (r, (seq, tok)) in lanes.iter().enumerate() {
+            let s = seq.0;
+            assert!(!self.slots.is_free(s), "lane for freed sequence slot {s}");
+            let p = self.seq_pos[s];
+            assert!(p < max_seq, "sequence slot {s} KV span full ({max_seq})");
+            kv_base.push(s * max_seq);
+            pos.push(p);
+            self.seq_pos[s] = p + 1;
+            toks[r] = *tok;
+        }
+        let tokens_id = self.graphs.decode_batch_tokens.expect("batch tokens leaf");
+        self.write_tokens(&graph, tokens_id, &toks);
+        let params = ExecParams::batched(BatchView::new(kv_base, pos));
+        self.executor.run(&graph, params);
+        let logits_id = self.graphs.decode_batch_logits.expect("batch logits");
+        let all = self.read_logits(&graph, logits_id);
+        let vocab = self.cfg().vocab;
+        (0..lanes.len()).map(|r| all[r * vocab..(r + 1) * vocab].to_vec()).collect()
     }
 
     fn write_tokens(&self, graph: &crate::graph::Graph, id: crate::tensor::TensorId, toks: &[i32]) {
@@ -171,7 +298,7 @@ impl Engine {
         assert!(self.pos < self.cfg().max_seq, "KV cache full");
         let graph = self.graphs.decode.clone();
         self.write_tokens(&graph, self.graphs.decode_tokens, &[token]);
-        let params = ExecParams { pos: self.pos, rows: 1 };
+        let params = ExecParams::dense(self.pos, 1);
         self.executor.run(&graph, params);
         self.pos += 1;
         self.read_logits(&graph, self.graphs.decode_logits)
@@ -182,7 +309,8 @@ impl Engine {
     /// matches, decode steps otherwise.
     pub fn prefill(&mut self, tokens: &[i32]) -> Vec<f32> {
         assert!(!tokens.is_empty());
-        assert!(self.pos + tokens.len() <= self.cfg().max_seq, "prompt exceeds KV capacity");
+        let cap = self.cfg().max_seq;
+        assert!(self.pos + tokens.len() <= cap, "prompt exceeds KV capacity");
         if let (Some(pg), Some(ptoks), Some(plogits)) =
             (&self.graphs.prefill, self.graphs.prefill_tokens, self.graphs.prefill_logits)
         {
@@ -190,7 +318,7 @@ impl Engine {
             if rows == tokens.len() && self.pos == 0 {
                 let pg = pg.clone();
                 self.write_tokens(&pg, ptoks, tokens);
-                let params = ExecParams { pos: 0, rows };
+                let params = ExecParams::dense(0, rows);
                 self.executor.run(&pg, params);
                 self.pos = rows;
                 return self.read_logits(&pg, plogits);
@@ -205,7 +333,12 @@ impl Engine {
 
     /// Autoregressive generation with timing (the paper's benchmark
     /// loop: prompt ingestion, then `max_new` greedy/top-k steps).
-    pub fn generate(&mut self, prompt: &[i32], max_new: usize, sampler: &Sampler) -> GenerationResult {
+    pub fn generate(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+        sampler: &Sampler,
+    ) -> GenerationResult {
         let t0 = Instant::now();
         let mut logits = self.prefill(prompt);
         let prefill_seconds = t0.elapsed().as_secs_f64();
@@ -239,14 +372,70 @@ mod tests {
     use crate::numa::Topology;
 
     fn tiny_engine(strategy: Strategy, threads: usize, prefill: Option<usize>) -> Engine {
+        tiny_engine_slots(strategy, threads, prefill, 1)
+    }
+
+    fn tiny_engine_slots(
+        strategy: Strategy,
+        threads: usize,
+        prefill: Option<usize>,
+        batch_slots: usize,
+    ) -> Engine {
         let opts = EngineOptions {
             strategy,
             threads,
             topo: Topology::uniform(4, 4, 100.0, 25.0),
             prefill_rows: prefill,
             seed: 42,
+            batch_slots,
         };
         Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
+    }
+
+    /// Continuous-batching driver: feed every prompt one token per step
+    /// (so the sequences genuinely interleave inside each pass), then
+    /// decode all of them together until each has `max_new` tokens.
+    fn drive_batched(engine: &mut Engine, prompts: &[&[i32]], max_new: usize) -> Vec<Vec<i32>> {
+        let n = prompts.len();
+        let seqs: Vec<SeqId> = prompts.iter().map(|_| engine.seq_alloc().unwrap()).collect();
+        let sampler = Sampler::greedy();
+        let mut fed = vec![0usize; n];
+        let mut next_tok = vec![0i32; n];
+        let mut done = vec![false; n];
+        let mut out: Vec<Vec<i32>> = vec![Vec::new(); n];
+        while done.iter().any(|d| !d) {
+            let mut lanes: Vec<(SeqId, i32)> = Vec::new();
+            let mut owners: Vec<(usize, bool)> = Vec::new();
+            for i in 0..n {
+                if done[i] || lanes.len() == engine.batch_slots() {
+                    continue;
+                }
+                if fed[i] < prompts[i].len() {
+                    lanes.push((seqs[i], prompts[i][fed[i]]));
+                    fed[i] += 1;
+                    owners.push((i, fed[i] == prompts[i].len()));
+                } else {
+                    lanes.push((seqs[i], next_tok[i]));
+                    owners.push((i, true));
+                }
+            }
+            let logits = engine.step_batch(&lanes);
+            for (li, &(i, sample)) in owners.iter().enumerate() {
+                if !sample {
+                    continue;
+                }
+                let t = sampler.sample(&logits[li], out[i].len());
+                out[i].push(t);
+                next_tok[i] = t;
+                if out[i].len() == max_new || engine.seq_pos(seqs[i]) >= engine.cfg().max_seq {
+                    done[i] = true;
+                }
+            }
+        }
+        for s in seqs {
+            engine.seq_free(s);
+        }
+        out
     }
 
     #[test]
@@ -314,5 +503,91 @@ mod tests {
         let mut e = tiny_engine(Strategy::llama_distribute(2), 4, None);
         let logits = e.decode_step(9);
         assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn batched_interleaved_decode_matches_serial() {
+        // serial reference: two generations, one at a time
+        let mut serial = tiny_engine(Strategy::arclight_single(), 2, None);
+        let p1: &[i32] = &[5, 9, 2];
+        let p2: &[i32] = &[7, 7, 1, 3];
+        let r1 = serial.generate(p1, 6, &Sampler::greedy());
+        serial.reset();
+        let r2 = serial.generate(p2, 6, &Sampler::greedy());
+
+        // continuous: both sequences interleaved in every batched pass
+        let mut batched = tiny_engine_slots(Strategy::arclight_single(), 2, None, 3);
+        let out = drive_batched(&mut batched, &[p1, p2], 6);
+        assert_eq!(out[0], r1.tokens, "sequence 1 diverged under batching");
+        assert_eq!(out[1], r2.tokens, "sequence 2 diverged under batching");
+    }
+
+    #[test]
+    fn single_lane_step_matches_decode_step() {
+        let mut a = tiny_engine_slots(Strategy::arclight_single(), 2, None, 2);
+        let mut b = tiny_engine(Strategy::arclight_single(), 2, None);
+        let s = a.seq_alloc().unwrap();
+        for t in [3i32, 14, 15] {
+            let la = a.step_batch(&[(s, t)]).remove(0);
+            let lb = b.decode_step(t);
+            assert_eq!(la, lb, "lane logits diverged at token {t}");
+        }
+        assert_eq!(a.seq_pos(s), 3);
+    }
+
+    #[test]
+    fn slots_exhaust_and_recycle() {
+        let mut e = tiny_engine_slots(Strategy::arclight_single(), 2, None, 2);
+        let s0 = e.seq_alloc().unwrap();
+        let s1 = e.seq_alloc().unwrap();
+        assert!(e.seq_alloc().is_none(), "third sequence must be refused");
+        assert_eq!(e.seqs_in_use(), 2);
+        // fill slot 0 a little, free it, re-alloc: position must reset
+        e.step_batch(&[(s0, 1), (s1, 2)]);
+        assert_eq!(e.seq_pos(s0), 1);
+        e.seq_free(s0);
+        let s0b = e.seq_alloc().unwrap();
+        assert_eq!(s0b.index(), s0.index());
+        assert_eq!(e.seq_pos(s0b), 0);
+    }
+
+    #[test]
+    fn recycled_slot_reproduces_fresh_results() {
+        // a slot that served a long sequence must serve a new one
+        // identically to a never-used slot (stale KV is never read)
+        let mut e = tiny_engine_slots(Strategy::arclight_single(), 2, None, 2);
+        let p: &[i32] = &[11, 4, 8];
+        let first = drive_batched(&mut e, &[&[9, 9, 9, 9, 9, 9]], 8);
+        assert_eq!(first.len(), 1);
+        let reused = drive_batched(&mut e, &[p], 5);
+        let mut fresh = tiny_engine(Strategy::arclight_single(), 2, None);
+        let want = fresh.generate(p, 5, &Sampler::greedy());
+        assert_eq!(reused[0], want.tokens);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV span full")]
+    fn lane_past_slot_capacity_panics() {
+        let mut e = tiny_engine_slots(Strategy::arclight_single(), 2, None, 2);
+        let s = e.seq_alloc().unwrap();
+        for t in 0..(e.cfg().max_seq + 1) {
+            e.step_batch(&[(s, t as i32)]);
+        }
+    }
+
+    #[test]
+    fn tp_batched_decode_matches_serial() {
+        // TP(2) batched engine must agree with the single-node serial one
+        let mut serial = tiny_engine(Strategy::arclight_single(), 2, None);
+        let p: &[i32] = &[3, 1, 4];
+        let want = serial.generate(p, 5, &Sampler::greedy());
+        let mut tp = tiny_engine_slots(
+            Strategy::arclight_tp(2, crate::sched::SyncMode::SyncB),
+            4,
+            None,
+            2,
+        );
+        let out = drive_batched(&mut tp, &[p], 5);
+        assert_eq!(out[0], want.tokens);
     }
 }

@@ -7,6 +7,6 @@ pub mod engine;
 pub mod sampler;
 pub mod tokenizer;
 
-pub use engine::{Engine, EngineOptions, GenerationResult};
+pub use engine::{Engine, EngineOptions, GenerationResult, SeqId};
 pub use sampler::Sampler;
 pub use tokenizer::ByteTokenizer;

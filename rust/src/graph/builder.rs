@@ -38,7 +38,11 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
-    pub fn new(pool: Option<MemoryPool>, group_nodes: Vec<NodeId>, act_placement: Placement) -> Self {
+    pub fn new(
+        pool: Option<MemoryPool>,
+        group_nodes: Vec<NodeId>,
+        act_placement: Placement,
+    ) -> Self {
         let n_nodes = pool.as_ref().map(|p| p.n_nodes()).unwrap_or_else(|| {
             group_nodes.iter().copied().max().unwrap_or(0) + 1
         });
@@ -331,7 +335,13 @@ impl GraphBuilder {
     }
 
     /// RoPE on [rows, heads*head_dim].
-    pub fn rope(&mut self, x: &TensorBundle, heads: usize, head_dim: usize, theta: f32) -> TensorBundle {
+    pub fn rope(
+        &mut self,
+        x: &TensorBundle,
+        heads: usize,
+        head_dim: usize,
+        theta: f32,
+    ) -> TensorBundle {
         self.zip_op(
             "rope",
             OpKind::Rope { theta, heads, head_dim },
@@ -358,9 +368,16 @@ impl GraphBuilder {
             let shape = self.graph.meta(cs).shape.clone();
             let placement = self.graph.meta(cs).placement.clone();
             let name = format!("store_kv.{}.{part}", self.graph.tensors.len());
-            let id = self.push_op(name, DType::F32, shape,
-                                  OpKind::StoreKv { kv_heads, head_dim, max_seq },
-                                  vec![ks, cs], group, alias.or(Some(crate::memory::BufRef { arena: 0, off: 0, len: 0 })));
+            let alias = alias.or(Some(crate::memory::BufRef { arena: 0, off: 0, len: 0 }));
+            let id = self.push_op(
+                name,
+                DType::F32,
+                shape,
+                OpKind::StoreKv { kv_heads, head_dim, max_seq },
+                vec![ks, cs],
+                group,
+                alias,
+            );
             // placement must mirror the cache, not the group default
             self.graph.meta_mut(id).placement = placement;
             out.push(id);
@@ -404,7 +421,8 @@ impl GraphBuilder {
 
     /// Fused silu(gate)·up.
     pub fn swiglu(&mut self, gate: &TensorBundle, up: &TensorBundle) -> TensorBundle {
-        self.zip_op("swiglu", OpKind::SwiGlu, DType::F32, |g, x| g.meta(x).shape.clone(), vec![gate, up])
+        let shape = |g: &Graph, x: TensorId| g.meta(x).shape.clone();
+        self.zip_op("swiglu", OpKind::SwiGlu, DType::F32, shape, vec![gate, up])
     }
 
     /// Take one row of a [rows, d] tensor as [1, d] (prefill extracts

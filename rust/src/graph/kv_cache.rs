@@ -5,6 +5,15 @@
 //! sharded by KV head across NUMA nodes — each subgraph only ever
 //! touches its node-local shard, so decode attention never crosses the
 //! NUMA boundary (§3.2: W_k/W_v are head-partitioned).
+//!
+//! For continuous batching the cache is a **pool**: each layer's leaf
+//! holds `slots` logical sequence slots of `max_seq` positions carved
+//! from one arena allocation (`[kv_heads/G, slots·max_seq, head_dim]`).
+//! Slot `s` owns cache positions `[s·max_seq, (s+1)·max_seq)`; the
+//! engine allocates a slot when a request starts and frees it when the
+//! request finishes ([`SlotAllocator`]). Stale bytes in a recycled slot
+//! are harmless: a sequence's attention span only ever covers positions
+//! it has itself stored this lifetime.
 
 use crate::numa::Placement;
 use crate::tensor::{TensorBundle, TensorId};
@@ -23,14 +32,15 @@ pub struct LayerKv {
 /// All layers' caches for one model instance.
 pub struct KvCacheSet {
     pub layers: Vec<LayerKv>,
+    /// Positions per sequence slot.
     pub max_seq: usize,
+    /// Sequence slots carved from the pool (1 = classic single-sequence).
+    pub slots: usize,
 }
 
 impl KvCacheSet {
-    /// Create caches: one leaf per layer per TP part, shaped
-    /// `[kv_heads/G, max_seq, head_dim]`, placed on the part's node.
-    /// With `G == 1` the placement argument overrides (llama.cpp's
-    /// interleaved UMA cache vs ArcLight's node-local cache).
+    /// Create single-sequence caches (`slots == 1`); see
+    /// [`KvCacheSet::create_pooled`].
     pub fn create(
         b: &mut GraphBuilder,
         n_layers: usize,
@@ -39,8 +49,26 @@ impl KvCacheSet {
         max_seq: usize,
         single_placement: Placement,
     ) -> KvCacheSet {
+        Self::create_pooled(b, n_layers, kv_heads, head_dim, max_seq, 1, single_placement)
+    }
+
+    /// Create caches: one leaf per layer per TP part, shaped
+    /// `[kv_heads/G, slots·max_seq, head_dim]`, placed on the part's
+    /// node. With `G == 1` the placement argument overrides (llama.cpp's
+    /// interleaved UMA cache vs ArcLight's node-local cache).
+    #[allow(clippy::too_many_arguments)]
+    pub fn create_pooled(
+        b: &mut GraphBuilder,
+        n_layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        max_seq: usize,
+        slots: usize,
+        single_placement: Placement,
+    ) -> KvCacheSet {
         let g = b.n_groups();
         assert!(kv_heads % g == 0, "kv_heads {kv_heads} not divisible by {g} groups");
+        assert!(slots >= 1, "a KV pool needs at least one slot");
         let hpp = kv_heads / g;
         let mut layers = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
@@ -52,7 +80,7 @@ impl KvCacheSet {
                 } else {
                     Placement::Node(b.group_node(part))
                 };
-                let shape = vec![hpp, max_seq, head_dim];
+                let shape = vec![hpp, slots * max_seq, head_dim];
                 ks.push(b.kv_leaf(&format!("kv.{l}.k.{part}"), shape.clone(), placement.clone()));
                 vs.push(b.kv_leaf(&format!("kv.{l}.v.{part}"), shape, placement));
             }
@@ -62,11 +90,23 @@ impl KvCacheSet {
                 heads_per_part: hpp,
             });
         }
-        KvCacheSet { layers, max_seq }
+        KvCacheSet { layers, max_seq, slots }
     }
 
     pub fn layer(&self, l: usize) -> &LayerKv {
         &self.layers[l]
+    }
+
+    /// Total cache positions per kv head (`slots · max_seq`) — the
+    /// stride every attention/store op over this pool uses.
+    pub fn capacity(&self) -> usize {
+        self.slots * self.max_seq
+    }
+
+    /// First cache position of sequence slot `s`.
+    pub fn slot_base(&self, s: usize) -> usize {
+        debug_assert!(s < self.slots);
+        s * self.max_seq
     }
 
     /// Every cache tensor id (weight-loader / reset iteration).
@@ -75,6 +115,45 @@ impl KvCacheSet {
             .iter()
             .flat_map(|l| l.k.iter().chain(l.v.iter()))
             .collect()
+    }
+}
+
+/// Free-list of sequence slots in the KV pool. Purely bookkeeping — no
+/// bytes move on alloc/free (see the module docs for why recycled slots
+/// need no zeroing).
+#[derive(Clone, Debug)]
+pub struct SlotAllocator {
+    free: Vec<usize>,
+    slots: usize,
+}
+
+impl SlotAllocator {
+    pub fn new(slots: usize) -> Self {
+        // pop() hands out low slot indices first
+        SlotAllocator { free: (0..slots).rev().collect(), slots }
+    }
+
+    pub fn alloc(&mut self) -> Option<usize> {
+        self.free.pop()
+    }
+
+    pub fn free(&mut self, slot: usize) {
+        assert!(slot < self.slots, "slot {slot} out of range");
+        assert!(!self.free.contains(&slot), "double free of slot {slot}");
+        self.free.push(slot);
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Whether `slot` is currently unallocated.
+    pub fn is_free(&self, slot: usize) -> bool {
+        self.free.contains(&slot)
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.slots - self.free.len()
     }
 }
 
@@ -121,5 +200,40 @@ mod tests {
         let mut b = GraphBuilder::new(Some(pool), vec![0, 1], Placement::Node(0));
         let kv = KvCacheSet::create(&mut b, 3, 2, 8, 16, Placement::Node(0));
         assert_eq!(kv.all_ids().len(), 3 * 2 * 2);
+    }
+
+    #[test]
+    fn pooled_cache_carves_slot_spans() {
+        let pool = MemoryPool::new(1, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0], Placement::Node(0));
+        let kv = KvCacheSet::create_pooled(&mut b, 2, 2, 8, 16, 4, Placement::Node(0));
+        assert_eq!(kv.capacity(), 64);
+        assert_eq!(kv.slot_base(3), 48);
+        let m = b.graph.meta(kv.layer(1).k.single());
+        assert_eq!(m.shape, vec![2, 64, 8]);
+    }
+
+    #[test]
+    fn slot_allocator_recycles() {
+        let mut a = SlotAllocator::new(3);
+        assert_eq!(a.available(), 3);
+        let s0 = a.alloc().unwrap();
+        let s1 = a.alloc().unwrap();
+        assert_eq!((s0, s1), (0, 1));
+        assert_eq!(a.in_use(), 2);
+        a.free(s0);
+        assert_eq!(a.alloc().unwrap(), 0);
+        let s2 = a.alloc().unwrap();
+        assert_eq!(s2, 2);
+        assert!(a.alloc().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn slot_double_free_rejected() {
+        let mut a = SlotAllocator::new(2);
+        let s = a.alloc().unwrap();
+        a.free(s);
+        a.free(s);
     }
 }

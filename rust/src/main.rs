@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   generate  write a synthetic ALF model file
 //!   run       load a model and generate text (quickstart)
-//!   serve     start the TCP serving API with N engine slots
+//!   serve     start the TCP serving API (continuous batching by
+//!             default; --mode slots for the sequential baseline)
 //!   report    regenerate the paper's Table 1 / Figures 10–13
 //!   probe     print the simulated machine + bandwidth matrix
 //!   trace     export a Chrome-trace of one simulated decode step
@@ -20,7 +21,7 @@ use arclight::model::{synth, ModelConfig};
 use arclight::numa::Topology;
 use arclight::report;
 use arclight::sched::SyncMode;
-use arclight::server::{BatcherConfig, EngineSlot, Router, ServerHandle};
+use arclight::server::{BatcherConfig, ContinuousBatcher, EngineSlot, Router, ServerHandle};
 
 /// Tiny std-only flag parser: `--key value` pairs after the subcommand.
 struct Args {
@@ -92,6 +93,7 @@ fn engine_opts(args: &Args) -> Result<EngineOptions> {
         topo: Topology::kunpeng920(),
         prefill_rows: args.get("prefill-rows").and_then(|v| v.parse().ok()),
         seed: args.usize("seed", 0) as u64,
+        batch_slots: args.usize("batch", 1),
     })
 }
 
@@ -144,20 +146,42 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:8763");
-    let slots = args.usize("slots", 2);
     let router = Router::new(BatcherConfig {
         queue_capacity: args.usize("queue", 256),
         max_batch: args.usize("max-batch", 8),
         batch_window: std::time::Duration::from_millis(args.usize("window-ms", 2) as u64),
     });
-    let mut slot_threads = Vec::new();
-    for i in 0..slots {
-        let engine = load_engine(args).with_context(|| format!("building slot {i}"))?;
-        let r = router.clone();
-        slot_threads.push(std::thread::spawn(move || EngineSlot::new(engine).serve(r)));
+    match args.str_or("mode", "continuous") {
+        "continuous" => {
+            // one engine, one KV pool, --batch concurrent sequences
+            let batch = args.usize("batch", 8).max(2);
+            let mut flags = args.flags.clone();
+            flags.insert("batch".into(), batch.to_string());
+            let engine = load_engine(&Args { flags }).context("building batched engine")?;
+            let r = router.clone();
+            std::thread::spawn(move || ContinuousBatcher::new(engine).serve(r));
+            let server = ServerHandle::start(addr, router)?;
+            println!(
+                "arclight serving on {} (continuous batching, {batch} slots); Ctrl-C to stop",
+                server.addr
+            );
+        }
+        "slots" => {
+            // sequential-slot baseline: N engines, one request at a time
+            let slots = args.usize("slots", 2);
+            for i in 0..slots {
+                let engine = load_engine(args).with_context(|| format!("building slot {i}"))?;
+                let r = router.clone();
+                std::thread::spawn(move || EngineSlot::new(engine).serve(r));
+            }
+            let server = ServerHandle::start(addr, router)?;
+            println!(
+                "arclight serving on {} with {slots} sequential slot(s); Ctrl-C to stop",
+                server.addr
+            );
+        }
+        other => bail!("unknown serve mode '{other}' (continuous|slots)"),
     }
-    let server = ServerHandle::start(addr, router)?;
-    println!("arclight serving on {} with {slots} slot(s); Ctrl-C to stop", server.addr);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -186,14 +210,9 @@ fn cmd_report(args: &Args, which: &str) -> Result<()> {
         "fig11" => {
             for nodes in [2usize, 4] {
                 let series = report::figures::fig11(&cfg, &topo, nodes, samples);
-                print!(
-                    "{}",
-                    report::render_table(
-                        &format!("Figure 11 (N={nodes}): decode tok/s, multi-NUMA (prompt 15, gen 256)"),
-                        "threads",
-                        &series
-                    )
-                );
+                let title =
+                    format!("Figure 11 (N={nodes}): decode tok/s, multi-NUMA (prompt 15, gen 256)");
+                print!("{}", report::render_table(&title, "threads", &series));
             }
         }
         "fig12" => {
@@ -262,7 +281,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
         &arclight::numa::CostModel::new(topo),
         &cores,
         &tp,
-        arclight::sched::ExecParams { pos: args.usize("pos", 100), rows: 1 },
+        arclight::sched::ExecParams::dense(args.usize("pos", 100), 1),
     );
     let out = args.str_or("out", "decode_trace.json");
     std::fs::write(out, arclight::report::trace::to_chrome_json(&events))?;
@@ -287,6 +306,7 @@ fn cmd_golden(args: &Args) -> Result<()> {
         topo: Topology::kunpeng920(),
         prefill_rows: Some(prompt.len()),
         seed: 0,
+        batch_slots: 1,
     };
     let mut engine = Engine::from_alf(&dir.join("tiny.alf"), &opts)?;
     let res = engine.generate(&prompt, 8, &Sampler::greedy());

@@ -1,4 +1,5 @@
-//! Serving metrics: latency histograms and token-throughput counters.
+//! Serving metrics: latency histograms, token-throughput counters and
+//! continuous-batching gauges (queue wait, batch occupancy).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -13,8 +14,17 @@ pub struct Metrics {
     pub requests_failed: AtomicU64,
     pub tokens_prefilled: AtomicU64,
     pub tokens_decoded: AtomicU64,
+    /// Batched decode steps executed (continuous batching).
+    pub decode_steps: AtomicU64,
+    /// Lanes summed over all steps; occupancy = lanes / steps.
+    pub decode_lanes: AtomicU64,
     latency: Mutex<Summary>,
     ttft: Mutex<Summary>,
+    /// Enqueue → admission into the running batch.
+    queue_wait: Mutex<Summary>,
+    /// Per-request decode throughput (token/s), for p50/p95 reporting
+    /// next to the process-wide aggregate.
+    req_decode_tok_s: Mutex<Summary>,
     start: Mutex<Option<Instant>>,
 }
 
@@ -23,17 +33,47 @@ impl Metrics {
         Metrics { start: Mutex::new(Some(Instant::now())), ..Default::default() }
     }
 
-    pub fn record_request(&self, prefill_tokens: usize, decode_tokens: usize,
-                          ttft_s: f64, total_s: f64) {
+    pub fn record_request(
+        &self,
+        prefill_tokens: usize,
+        decode_tokens: usize,
+        ttft_s: f64,
+        total_s: f64,
+        decode_tok_per_s: f64,
+    ) {
         self.requests_total.fetch_add(1, Ordering::Relaxed);
         self.tokens_prefilled.fetch_add(prefill_tokens as u64, Ordering::Relaxed);
         self.tokens_decoded.fetch_add(decode_tokens as u64, Ordering::Relaxed);
         self.latency.lock().unwrap().add(total_s);
         self.ttft.lock().unwrap().add(ttft_s);
+        if decode_tok_per_s > 0.0 {
+            self.req_decode_tok_s.lock().unwrap().add(decode_tok_per_s);
+        }
     }
 
     pub fn record_failure(&self) {
         self.requests_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One continuous-batching step that processed `lanes` lanes.
+    pub fn record_step(&self, lanes: usize) {
+        self.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.decode_lanes.fetch_add(lanes as u64, Ordering::Relaxed);
+    }
+
+    /// Enqueue → admission latency of one request.
+    pub fn record_queue_wait(&self, seconds: f64) {
+        self.queue_wait.lock().unwrap().add(seconds);
+    }
+
+    /// Mean lanes per batched step since startup (0 when no batched
+    /// steps ran — e.g. the sequential baseline).
+    pub fn batch_occupancy(&self) -> f64 {
+        let steps = self.decode_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            return 0.0;
+        }
+        self.decode_lanes.load(Ordering::Relaxed) as f64 / steps as f64
     }
 
     /// Aggregate decode throughput since startup (token/s).
@@ -55,12 +95,20 @@ impl Metrics {
         use crate::util::json::obj;
         let mut lat = self.latency.lock().unwrap().clone();
         let mut ttft = self.ttft.lock().unwrap().clone();
+        let mut qw = self.queue_wait.lock().unwrap().clone();
+        let mut rate = self.req_decode_tok_s.lock().unwrap().clone();
+        let load = |c: &AtomicU64| c.load(Ordering::Relaxed) as usize;
         obj(vec![
-            ("requests_total", (self.requests_total.load(Ordering::Relaxed) as usize).into()),
-            ("requests_failed", (self.requests_failed.load(Ordering::Relaxed) as usize).into()),
-            ("tokens_prefilled", (self.tokens_prefilled.load(Ordering::Relaxed) as usize).into()),
-            ("tokens_decoded", (self.tokens_decoded.load(Ordering::Relaxed) as usize).into()),
+            ("requests_total", load(&self.requests_total).into()),
+            ("requests_failed", load(&self.requests_failed).into()),
+            ("tokens_prefilled", load(&self.tokens_prefilled).into()),
+            ("tokens_decoded", load(&self.tokens_decoded).into()),
             ("decode_tok_per_s", self.decode_throughput().into()),
+            ("req_decode_tok_per_s_p50", rate.p50().into()),
+            ("decode_steps", load(&self.decode_steps).into()),
+            ("batch_occupancy", self.batch_occupancy().into()),
+            ("queue_wait_p50_s", qw.p50().into()),
+            ("queue_wait_p95_s", qw.p95().into()),
             ("latency_p50_s", lat.p50().into()),
             ("latency_p95_s", lat.p95().into()),
             ("ttft_p50_s", ttft.p50().into()),
@@ -76,8 +124,8 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record_request(15, 256, 0.1, 1.0);
-        m.record_request(15, 128, 0.2, 0.6);
+        m.record_request(15, 256, 0.1, 1.0, 256.0);
+        m.record_request(15, 128, 0.2, 0.6, 213.0);
         m.record_failure();
         let s = m.snapshot();
         assert_eq!(s.get("requests_total").unwrap().as_usize(), Some(2));
@@ -90,7 +138,30 @@ mod tests {
     #[test]
     fn throughput_positive_after_tokens() {
         let m = Metrics::new();
-        m.record_request(1, 100, 0.0, 0.1);
+        m.record_request(1, 100, 0.0, 0.1, 1000.0);
         assert!(m.decode_throughput() > 0.0);
+    }
+
+    #[test]
+    fn occupancy_is_lanes_per_step() {
+        let m = Metrics::new();
+        assert_eq!(m.batch_occupancy(), 0.0);
+        m.record_step(4);
+        m.record_step(2);
+        m.record_step(3);
+        assert!((m.batch_occupancy() - 3.0).abs() < 1e-9);
+        let s = m.snapshot();
+        assert_eq!(s.get("decode_steps").unwrap().as_usize(), Some(3));
+        assert!((s.get("batch_occupancy").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_wait_percentiles_reported() {
+        let m = Metrics::new();
+        m.record_queue_wait(0.010);
+        m.record_queue_wait(0.030);
+        let s = m.snapshot();
+        let p50 = s.get("queue_wait_p50_s").unwrap().as_f64().unwrap();
+        assert!((p50 - 0.020).abs() < 1e-9);
     }
 }

@@ -221,7 +221,8 @@ mod tests {
     #[test]
     fn rejects_corrupt() {
         assert!(AlfFile::parse(b"NOPE".to_vec()).is_err());
-        assert!(AlfFile::parse(b"ALF1\x02\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00".to_vec()).is_err());
+        let truncated = b"ALF1\x02\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00".to_vec();
+        assert!(AlfFile::parse(truncated).is_err());
     }
 
     #[test]

@@ -74,6 +74,10 @@ pub struct BuildSpec {
     /// Also build a prefill graph ingesting this many tokens.
     pub prefill_rows: Option<usize>,
     pub plan_mode: PlanMode,
+    /// Sequence slots in the KV pool. With `> 1` a batched decode graph
+    /// is built that processes one token of up to `batch_slots` live
+    /// sequences per pass (continuous batching).
+    pub batch_slots: usize,
 }
 
 impl BuildSpec {
@@ -91,6 +95,7 @@ impl BuildSpec {
             sim_only: false,
             prefill_rows: None,
             plan_mode: PlanMode::DoubleBuffered,
+            batch_slots: 1,
         }
     }
 
@@ -113,6 +118,7 @@ impl BuildSpec {
             sim_only: false,
             prefill_rows: None,
             plan_mode: PlanMode::DoubleBuffered,
+            batch_slots: 1,
         }
     }
 
@@ -123,6 +129,13 @@ impl BuildSpec {
 
     pub fn with_prefill(mut self, rows: usize) -> Self {
         self.prefill_rows = Some(rows);
+        self
+    }
+
+    /// Enable continuous batching with `slots` KV-pool sequence slots.
+    pub fn with_batch(mut self, slots: usize) -> Self {
+        assert!(slots >= 1, "batch_slots must be at least 1");
+        self.batch_slots = slots;
         self
     }
 
@@ -155,18 +168,23 @@ struct ModelW {
     lm_head: TensorBundle,
 }
 
-/// A fully-built model: decode (+ optional prefill) graphs over shared
-/// weight/cache storage.
+/// A fully-built model: decode (+ optional prefill and batched-decode)
+/// graphs over shared weight/cache storage.
 pub struct ModelGraphs {
     pub cfg: ModelConfig,
     pub spec: BuildSpec,
     pub decode: Arc<Graph>,
     pub prefill: Option<Arc<Graph>>,
+    /// Continuous-batching decode graph: `batch_slots` rows per pass,
+    /// one logits row per lane (built when `spec.batch_slots > 1`).
+    pub decode_batch: Option<Arc<Graph>>,
     pub pool: Option<Arc<MemoryPool>>,
     pub decode_tokens: TensorId,
     pub decode_logits: TensorId,
     pub prefill_tokens: Option<TensorId>,
     pub prefill_logits: Option<TensorId>,
+    pub decode_batch_tokens: Option<TensorId>,
+    pub decode_batch_logits: Option<TensorId>,
     /// Weight leaves (decode-graph ids; prefill shares buffers).
     pub weights: Vec<(TensorId, ShardInfo)>,
     /// KV cache leaves (decode-graph ids) for reset between sequences.
@@ -176,12 +194,15 @@ pub struct ModelGraphs {
 }
 
 impl ModelGraphs {
-    /// Build decode (rows = 1) and optionally prefill graphs.
+    /// Build decode (rows = 1), optional prefill and optional batched
+    /// decode graphs over one shared weight/KV-pool storage.
     pub fn build(spec: BuildSpec) -> ModelGraphs {
         spec.cfg.validate().expect("invalid model config");
         let g = spec.n_groups();
-        assert!(spec.cfg.n_heads % g == 0 && spec.cfg.n_kv_heads % g == 0,
-                "heads not divisible by {g} TP groups");
+        assert!(
+            spec.cfg.n_heads % g == 0 && spec.cfg.n_kv_heads % g == 0,
+            "heads not divisible by {g} TP groups"
+        );
         assert!(spec.cfg.ffn_dim % (32 * g) == 0, "ffn not shardable into {g}");
 
         let pool = if spec.sim_only { None } else { Some(Self::sized_pool(&spec)) };
@@ -194,74 +215,108 @@ impl ModelGraphs {
 
         // ---- weights + caches (decode graph owns the leaves) ----
         let (weights_handles, shard_table) = create_weights(&mut b, &spec);
-        let kv = KvCacheSet::create(
+        let kv = KvCacheSet::create_pooled(
             &mut b,
             spec.cfg.n_layers,
             spec.cfg.n_kv_heads,
             spec.cfg.head_dim,
             spec.cfg.max_seq,
+            spec.batch_slots,
             spec.kv_placement.clone(),
         );
         let kv_ids = kv.all_ids();
 
-        // ---- decode graph ----
+        // ---- decode graph (single sequence, slot 0) ----
         let decode_tokens = b.leaf("input.tokens", DType::I32, vec![1], Placement::Node(0));
-        let decode_logits = build_forward(&mut b, &spec.cfg, &weights_handles, &kv, decode_tokens, 1);
+        let decode_logits =
+            build_forward(&mut b, &spec.cfg, &weights_handles, &kv, decode_tokens, 1, false);
         let act_footprint = b.activation_footprint();
         let (decode_graph, pool) = b.finish();
 
-        // ---- prefill graph (imports the same leaves) ----
-        let (prefill, prefill_tokens, prefill_logits, pool) = if let Some(rows) = spec.prefill_rows {
-            let mut pb = if spec.sim_only {
+        let sub_builder = |pool: Option<MemoryPool>| {
+            if spec.sim_only {
                 GraphBuilder::sim(spec.group_nodes.clone(), spec.act_placement.clone())
             } else {
                 GraphBuilder::new(pool, spec.group_nodes.clone(), spec.act_placement.clone())
             }
-            .with_plan_mode(spec.plan_mode);
+            .with_plan_mode(spec.plan_mode)
+        };
+
+        // ---- prefill graph (imports the same leaves) ----
+        let (prefill, prefill_tokens, prefill_logits, pool) = if let Some(rows) = spec.prefill_rows
+        {
+            let mut pb = sub_builder(pool);
             let w2 = import_model_w(&mut pb, &decode_graph, &weights_handles);
             let kv2 = import_kv(&mut pb, &decode_graph, &kv);
             let toks = pb.leaf("input.tokens", DType::I32, vec![rows], Placement::Node(0));
-            let logits = build_forward(&mut pb, &spec.cfg, &w2, &kv2, toks, rows);
+            let logits = build_forward(&mut pb, &spec.cfg, &w2, &kv2, toks, rows, false);
             let (pg, pool) = pb.finish();
             (Some(Arc::new(pg)), Some(toks), Some(logits), pool)
         } else {
             (None, None, None, pool)
         };
 
+        // ---- batched decode graph (continuous batching) ----
+        let (decode_batch, decode_batch_tokens, decode_batch_logits, pool) =
+            if spec.batch_slots > 1 {
+                let rows = spec.batch_slots;
+                let mut bb = sub_builder(pool);
+                let w2 = import_model_w(&mut bb, &decode_graph, &weights_handles);
+                let kv2 = import_kv(&mut bb, &decode_graph, &kv);
+                let toks =
+                    bb.leaf("input.tokens.batch", DType::I32, vec![rows], Placement::Node(0));
+                let logits = build_forward(&mut bb, &spec.cfg, &w2, &kv2, toks, rows, true);
+                let (bg, pool) = bb.finish();
+                (Some(Arc::new(bg)), Some(toks), Some(logits), pool)
+            } else {
+                (None, None, None, pool)
+            };
+
         ModelGraphs {
             cfg: spec.cfg.clone(),
             spec,
             decode: Arc::new(decode_graph),
             prefill,
+            decode_batch,
             pool: pool.map(Arc::new),
             decode_tokens,
             decode_logits,
             prefill_tokens,
             prefill_logits,
+            decode_batch_tokens,
+            decode_batch_logits,
             weights: shard_table,
             kv_ids,
             act_footprint,
         }
     }
 
+    /// Sequence slots in the KV pool (1 = single-sequence engine).
+    pub fn batch_slots(&self) -> usize {
+        self.spec.batch_slots
+    }
+
     fn sized_pool(spec: &BuildSpec) -> MemoryPool {
         let c = &spec.cfg;
-        let slack = 1 << 16;
+        let slack = 1 << 18;
+        let batch = spec.batch_slots;
         // weights: everything could land on one node in single mode
         let wbytes = c.q4_weight_bytes()
             + c.vocab * c.dim * 4            // tok_emb f32
             + c.n_layers * (2 * c.dim + 2 * c.head_dim) * 4
             + c.dim * 4
             + 64 * (c.n_layers * 16 + 8)
-            + (spec.prefill_rows.unwrap_or(1) + 1) * 4 // token buffers
+            + (spec.prefill_rows.unwrap_or(1) + 1 + batch + 1) * 4 // token buffers
             + slack;
-        let kvbytes = c.n_layers * 2 * c.n_kv_heads * c.max_seq * c.head_dim * 4
+        // the KV pool holds `batch` sequence slots per layer
+        let kvbytes = c.n_layers * 2 * c.n_kv_heads * batch * c.max_seq * c.head_dim * 4
             + 64 * c.n_layers * 4
             + slack;
-        // activations: per-parity bound × (decode + prefill rows)
-        let rows = 1 + spec.prefill_rows.unwrap_or(0);
+        // activations: per-parity bound × (decode + prefill + batch rows)
+        let rows = 1 + spec.prefill_rows.unwrap_or(0) + if batch > 1 { batch } else { 0 };
         let per_row = (8 * c.dim + 6 * c.q_dim() + 8 * c.kv_dim() + 6 * c.ffn_dim) * 4;
-        let abytes = rows * per_row + 2 * (c.vocab * 4 * rows.min(2)) + 256 * 64 + slack;
+        let logits_rows = 2 + if batch > 1 { batch } else { 0 };
+        let abytes = rows * per_row + 2 * (c.vocab * 4 * logits_rows) + 256 * 64 + slack;
         MemoryPool::new(spec.n_nodes, wbytes, kvbytes, abytes * 2)
     }
 }
@@ -360,27 +415,31 @@ fn replicated_leaves(
 
 fn create_weights(b: &mut GraphBuilder, spec: &BuildSpec) -> (ModelW, Vec<(TensorId, ShardInfo)>) {
     let c = &spec.cfg;
+    let q4 = DType::Q4_0;
+    let rows0 = Some(ShardKind::Rows(0, 0));
+    let cols0 = Some(ShardKind::Cols(0, 0));
     let mut table = Vec::new();
     let tok_emb = weight_leaves(b, spec, &mut table, "tok_emb", DType::F32, c.vocab, c.dim, None);
     let mut layers = Vec::with_capacity(c.n_layers);
     for l in 0..c.n_layers {
         let p = |s: &str| format!("layers.{l}.{s}");
+        let t = &mut table;
         layers.push(LayerW {
-            attn_norm: weight_leaves(b, spec, &mut table, &p("attn_norm"), DType::F32, c.dim, 0, None),
-            wq: weight_leaves(b, spec, &mut table, &p("wq"), DType::Q4_0, c.q_dim(), c.dim, Some(ShardKind::Rows(0, 0))),
-            wk: weight_leaves(b, spec, &mut table, &p("wk"), DType::Q4_0, c.kv_dim(), c.dim, Some(ShardKind::Rows(0, 0))),
-            wv: weight_leaves(b, spec, &mut table, &p("wv"), DType::Q4_0, c.kv_dim(), c.dim, Some(ShardKind::Rows(0, 0))),
-            wo: weight_leaves(b, spec, &mut table, &p("wo"), DType::Q4_0, c.dim, c.q_dim(), Some(ShardKind::Cols(0, 0))),
-            q_norm: replicated_leaves(b, spec, &mut table, &p("q_norm"), c.head_dim),
-            k_norm: replicated_leaves(b, spec, &mut table, &p("k_norm"), c.head_dim),
-            mlp_norm: weight_leaves(b, spec, &mut table, &p("mlp_norm"), DType::F32, c.dim, 0, None),
-            w_gate: weight_leaves(b, spec, &mut table, &p("w_gate"), DType::Q4_0, c.ffn_dim, c.dim, Some(ShardKind::Rows(0, 0))),
-            w_up: weight_leaves(b, spec, &mut table, &p("w_up"), DType::Q4_0, c.ffn_dim, c.dim, Some(ShardKind::Rows(0, 0))),
-            w_down: weight_leaves(b, spec, &mut table, &p("w_down"), DType::Q4_0, c.dim, c.ffn_dim, Some(ShardKind::Cols(0, 0))),
+            attn_norm: weight_leaves(b, spec, t, &p("attn_norm"), DType::F32, c.dim, 0, None),
+            wq: weight_leaves(b, spec, t, &p("wq"), q4, c.q_dim(), c.dim, rows0.clone()),
+            wk: weight_leaves(b, spec, t, &p("wk"), q4, c.kv_dim(), c.dim, rows0.clone()),
+            wv: weight_leaves(b, spec, t, &p("wv"), q4, c.kv_dim(), c.dim, rows0.clone()),
+            wo: weight_leaves(b, spec, t, &p("wo"), q4, c.dim, c.q_dim(), cols0.clone()),
+            q_norm: replicated_leaves(b, spec, t, &p("q_norm"), c.head_dim),
+            k_norm: replicated_leaves(b, spec, t, &p("k_norm"), c.head_dim),
+            mlp_norm: weight_leaves(b, spec, t, &p("mlp_norm"), DType::F32, c.dim, 0, None),
+            w_gate: weight_leaves(b, spec, t, &p("w_gate"), q4, c.ffn_dim, c.dim, rows0.clone()),
+            w_up: weight_leaves(b, spec, t, &p("w_up"), q4, c.ffn_dim, c.dim, rows0.clone()),
+            w_down: weight_leaves(b, spec, t, &p("w_down"), q4, c.dim, c.ffn_dim, cols0.clone()),
         });
     }
     let final_norm = weight_leaves(b, spec, &mut table, "final_norm", DType::F32, c.dim, 0, None);
-    let lm_head = weight_leaves(b, spec, &mut table, "lm_head", DType::Q4_0, c.vocab, c.dim, None);
+    let lm_head = weight_leaves(b, spec, &mut table, "lm_head", q4, c.vocab, c.dim, None);
     (ModelW { tok_emb, layers, final_norm, lm_head }, table)
 }
 
@@ -425,6 +484,7 @@ fn import_kv(pb: &mut GraphBuilder, src: &Graph, kv: &KvCacheSet) -> KvCacheSet 
             })
             .collect(),
         max_seq: kv.max_seq,
+        slots: kv.slots,
     }
 }
 
@@ -432,8 +492,11 @@ fn import_kv(pb: &mut GraphBuilder, src: &Graph, kv: &KvCacheSet) -> KvCacheSet 
 // forward construction (shared by decode and prefill)
 // ---------------------------------------------------------------------------
 
-/// Build the forward pass for `rows` tokens; returns the logits tensor
-/// ([1, vocab] — prefill slices the last row before the LM head).
+/// Build the forward pass for `rows` tokens; returns the logits tensor.
+/// With `all_rows == false` (single-sequence decode/prefill) only the
+/// last row reaches the LM head ([1, vocab]); with `all_rows == true`
+/// (batched decode, each row a different sequence) every row gets
+/// logits ([rows, vocab]).
 fn build_forward(
     b: &mut GraphBuilder,
     c: &ModelConfig,
@@ -441,10 +504,13 @@ fn build_forward(
     kv: &KvCacheSet,
     tokens: TensorId,
     rows: usize,
+    all_rows: bool,
 ) -> TensorId {
     let g = b.n_groups();
     let heads_g = c.n_heads / g;
     let kv_heads_g = c.n_kv_heads / g;
+    // attention/store stride over the whole KV pool, not one slot
+    let cap = kv.capacity();
 
     let mut x = b.embed(&w.tok_emb, &TensorBundle::one(tokens));
     for l in 0..c.n_layers {
@@ -462,9 +528,9 @@ fn build_forward(
         let kn = b.rmsnorm_heads(&k, &lw.k_norm, kv_heads_g, c.head_dim, c.norm_eps);
         let qr = b.rope(&qn, heads_g, c.head_dim, c.rope_theta);
         let kr = b.rope(&kn, kv_heads_g, c.head_dim, c.rope_theta);
-        b.store_kv(&kr, &cache.k, kv_heads_g, c.head_dim, c.max_seq);
-        b.store_kv(&v, &cache.v, kv_heads_g, c.head_dim, c.max_seq);
-        let ao = b.attention(&qr, &cache.k, &cache.v, heads_g, kv_heads_g, c.head_dim, c.max_seq);
+        b.store_kv(&kr, &cache.k, kv_heads_g, c.head_dim, cap);
+        b.store_kv(&v, &cache.v, kv_heads_g, c.head_dim, cap);
+        let ao = b.attention(&qr, &cache.k, &cache.v, heads_g, kv_heads_g, c.head_dim, cap);
         let partial = b.matmul(&ao, &lw.wo);
         let attn_out = b.gather(&partial);
         x = b.add(&x, &attn_out);
@@ -480,7 +546,7 @@ fn build_forward(
         x = b.add(&x, &mlp_out);
     }
     b.enter_layer(c.n_layers);
-    let last = if rows > 1 { b.slice_row(&x, rows - 1) } else { x };
+    let last = if rows > 1 && !all_rows { b.slice_row(&x, rows - 1) } else { x };
     let xf = b.rmsnorm(&last, &w.final_norm, c.norm_eps);
     let logits = b.matmul(&xf, &w.lm_head);
     logits.single()
@@ -545,9 +611,15 @@ mod tests {
 
     #[test]
     fn llama_spec_places_interleaved() {
-        let m = ModelGraphs::build(BuildSpec::llama_cpp(ModelConfig::tiny(), 4, 4).with_sim_only(true));
+        let m = ModelGraphs::build(
+            BuildSpec::llama_cpp(ModelConfig::tiny(), 4, 4).with_sim_only(true),
+        );
         // weights: first-touch row shards over 4 nodes
-        let (wq, _) = m.weights.iter().find(|(id, _)| m.decode.meta(*id).name == "layers.0.wq").unwrap();
+        let (wq, _) = m
+            .weights
+            .iter()
+            .find(|(id, _)| m.decode.meta(*id).name == "layers.0.wq")
+            .unwrap();
         match &m.decode.meta(*wq).placement {
             Placement::RowShards(s) => assert_eq!(s.len(), 4),
             p => panic!("expected shards, got {p:?}"),
@@ -565,6 +637,47 @@ mod tests {
         assert!(m.pool.is_none());
         assert!(m.decode.n_tensors() > 36 * 20);
         assert!(m.decode.check_topological().is_ok());
+    }
+
+    #[test]
+    fn batch_spec_builds_pooled_kv_and_batch_graph() {
+        let m = ModelGraphs::build(BuildSpec::arclight(ModelConfig::tiny(), 1).with_batch(4));
+        assert_eq!(m.batch_slots(), 4);
+        let bg = m.decode_batch.as_ref().unwrap();
+        assert!(bg.check_topological().is_ok());
+        // batched logits: one row per lane
+        let logits = bg.meta(m.decode_batch_logits.unwrap());
+        assert_eq!(logits.shape, vec![4, 512]);
+        // KV pool: per-layer cache spans 4 slots × max_seq positions
+        let c = ModelConfig::tiny();
+        let kv = m.decode.meta(m.kv_ids[0]);
+        assert_eq!(kv.shape, vec![c.n_kv_heads, 4 * c.max_seq, c.head_dim]);
+        // attention ops in every graph stride over the whole pool
+        let cap = 4 * c.max_seq;
+        for t in bg.tensors.iter().chain(m.decode.tensors.iter()) {
+            if let crate::graph::OpKind::Attention { max_seq, .. } = &t.op {
+                assert_eq!(*max_seq, cap);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_graph_shares_cache_buffers_with_decode() {
+        let m = ModelGraphs::build(BuildSpec::arclight(ModelConfig::tiny(), 1).with_batch(2));
+        let bg = m.decode_batch.as_ref().unwrap();
+        let d = &m.decode;
+        let kd = d.find("kv.0.k.0").unwrap();
+        let kb = bg.find("kv.0.k.0").unwrap();
+        assert_eq!(d.buf(kd), bg.buf(kb));
+    }
+
+    #[test]
+    fn tp_batch_graph_builds() {
+        let m = ModelGraphs::build(BuildSpec::arclight(ModelConfig::tiny(), 2).with_batch(3));
+        let bg = m.decode_batch.as_ref().unwrap();
+        assert!(bg.check_topological().is_ok());
+        let widths: Vec<usize> = bg.exec.iter().map(|e| e.bundle.width()).collect();
+        assert!(widths.contains(&2), "no TP entries in batch graph");
     }
 
     #[test]

@@ -44,8 +44,11 @@ fn name_seed(global: u64, name: &str) -> u64 {
     h
 }
 
+/// Logical payload of one weight: (dtype, n, k, bytes).
+type Payload = (DType, usize, usize, Vec<u8>);
+
 /// Generate the logical payload of one weight.
-fn synth_payload(cfg: &ModelConfig, name: &str, seed: u64) -> Result<(DType, usize, usize, Vec<u8>)> {
+fn synth_payload(cfg: &ModelConfig, name: &str, seed: u64) -> Result<Payload> {
     let (dtype, n, k) = logical_shape(cfg, name)?;
     let mut rng = Rng::new(name_seed(seed, name));
     let leaf = name.rsplit('.').next().unwrap_or(name);
@@ -120,8 +123,8 @@ fn write_shard(m: &ModelGraphs, id: crate::tensor::TensorId, bytes: &[u8]) {
 /// Fill every weight leaf with deterministic synthetic data.
 pub fn fill_synthetic(m: &ModelGraphs, seed: u64) -> Result<()> {
     // group shards by logical tensor so each is generated once
-    let mut by_logical: std::collections::BTreeMap<&str, Vec<&(crate::tensor::TensorId, ShardInfo)>> =
-        Default::default();
+    type ShardRef<'a> = &'a (crate::tensor::TensorId, ShardInfo);
+    let mut by_logical: std::collections::BTreeMap<&str, Vec<ShardRef>> = Default::default();
     for ws in &m.weights {
         by_logical.entry(ws.1.logical.as_str()).or_default().push(ws);
     }
@@ -268,7 +271,8 @@ mod tests {
         }
         reset_kv(&m);
         unsafe {
-            assert!(m.pool.as_ref().unwrap().arena(b.arena).bytes(b.off, b.len).iter().all(|&x| x == 0));
+            let bytes = m.pool.as_ref().unwrap().arena(b.arena).bytes(b.off, b.len);
+            assert!(bytes.iter().all(|&x| x == 0));
         }
     }
 

@@ -99,6 +99,106 @@ pub fn store_kv(
     }
 }
 
+/// Multi-sequence decode attention (continuous batching): row `r` of
+/// `q` is one token of the sequence whose KV slot starts at cache
+/// position `kv_base[r]`; it attends causally to that slot's positions
+/// `[kv_base[r], kv_base[r] + pos[r]]`. The caches span the *whole*
+/// pool: `[kv_heads, capacity, head_dim]` with `capacity` = slots ×
+/// per-sequence max_seq. Partitioned by query head `[h0, h1)`.
+///
+/// Per-row arithmetic (dot order, online-softmax recurrence) is
+/// identical to [`attention`], so a batched step is bit-equal to the
+/// serial single-sequence step — the determinism contract the batcher
+/// tests pin down.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_rows(
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    out: &mut [f32],
+    heads: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    capacity: usize,
+    kv_base: &[usize],
+    pos: &[usize],
+    h0: usize,
+    h1: usize,
+) {
+    let rows = pos.len();
+    debug_assert_eq!(kv_base.len(), rows);
+    debug_assert!(q.len() >= rows * heads * head_dim);
+    debug_assert_eq!(k_cache.len(), kv_heads * capacity * head_dim);
+    debug_assert!(out.len() >= rows * heads * head_dim);
+    let rep = heads / kv_heads;
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let d = heads * head_dim;
+
+    let mut acc = vec![0.0f32; head_dim];
+    for r in 0..rows {
+        let start = kv_base[r];
+        let kv_len = pos[r] + 1;
+        debug_assert!(start + kv_len <= capacity);
+        for h in h0..h1 {
+            let kvh = h / rep;
+            let qv = &q[r * d + h * head_dim..r * d + (h + 1) * head_dim];
+            let base = kvh * capacity * head_dim + start * head_dim;
+
+            let mut m = f32::NEG_INFINITY;
+            let mut l = 0.0f32;
+            acc.fill(0.0);
+            for t in 0..kv_len {
+                let kv = &k_cache[base + t * head_dim..base + (t + 1) * head_dim];
+                let s = super::gemm::dot_f32(qv, kv) * scale;
+                let m_new = m.max(s);
+                let corr = if m.is_finite() { (m - m_new).exp() } else { 0.0 };
+                let p = (s - m_new).exp();
+                l = l * corr + p;
+                let vv = &v_cache[base + t * head_dim..base + (t + 1) * head_dim];
+                for i in 0..head_dim {
+                    acc[i] = acc[i] * corr + p * vv[i];
+                }
+                m = m_new;
+            }
+            let inv = if l > 0.0 { 1.0 / l } else { 0.0 };
+            let or = &mut out[r * d + h * head_dim..r * d + (h + 1) * head_dim];
+            for i in 0..head_dim {
+                or[i] = acc[i] * inv;
+            }
+        }
+    }
+}
+
+/// Multi-sequence KV store: row `r` of `src` lands in cache position
+/// `kv_base[r] + pos[r]` of each kv head. Cache layout as in
+/// [`attention_rows`]. Partitioned by kv head `[h0, h1)`.
+#[allow(clippy::too_many_arguments)]
+pub fn store_kv_rows(
+    src: &[f32],
+    cache: &mut [f32],
+    kv_heads: usize,
+    head_dim: usize,
+    capacity: usize,
+    kv_base: &[usize],
+    pos: &[usize],
+    h0: usize,
+    h1: usize,
+) {
+    let rows = pos.len();
+    debug_assert_eq!(kv_base.len(), rows);
+    debug_assert!(src.len() >= rows * kv_heads * head_dim);
+    let d = kv_heads * head_dim;
+    for r in 0..rows {
+        let slot = kv_base[r] + pos[r];
+        debug_assert!(slot < capacity);
+        for h in h0..h1 {
+            let from = &src[r * d + h * head_dim..r * d + (h + 1) * head_dim];
+            let to_base = h * capacity * head_dim + slot * head_dim;
+            cache[to_base..to_base + head_dim].copy_from_slice(from);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +310,64 @@ mod tests {
         // cache slot (head 1, pos 1) must hold t1's head-1 segment
         let got = &cache[1 * max_seq * hd + 1 * hd..1 * max_seq * hd + 2 * hd];
         assert_eq!(got, &t1[hd..2 * hd]);
+    }
+
+    #[test]
+    fn pooled_slots_match_independent_caches() {
+        // two sequences in one pooled cache (slots of 8 positions) must
+        // reproduce two independent single-sequence caches bit-for-bit
+        let (heads, kvh, hd, seq) = (2, 2, 4, 8);
+        let capacity = 2 * seq;
+        let mut pool_k = vec![0.0f32; kvh * capacity * hd];
+        let mut pool_v = vec![0.0f32; kvh * capacity * hd];
+        let mut solo_k = [vec![0.0f32; kvh * seq * hd], vec![0.0f32; kvh * seq * hd]];
+        let mut solo_v = [vec![0.0f32; kvh * seq * hd], vec![0.0f32; kvh * seq * hd]];
+
+        // interleave 3 tokens of seq 0 with 2 tokens of seq 1
+        let lanes = [(0usize, 0usize), (1, 0), (0, 1), (1, 1), (0, 2)];
+        for (li, &(s, p)) in lanes.iter().enumerate() {
+            let kv = rand_vec(kvh * hd, 20 + li as u64);
+            store_kv_rows(&kv, &mut pool_k, kvh, hd, capacity, &[s * seq], &[p], 0, kvh);
+            store_kv_rows(&kv, &mut pool_v, kvh, hd, capacity, &[s * seq], &[p], 0, kvh);
+            store_kv(&kv, &mut solo_k[s], 1, kvh, hd, seq, p, 0, kvh);
+            store_kv(&kv, &mut solo_v[s], 1, kvh, hd, seq, p, 0, kvh);
+        }
+
+        // one batched attention step over both sequences at once
+        let q = rand_vec(2 * heads * hd, 30);
+        let mut batched = vec![0.0f32; 2 * heads * hd];
+        attention_rows(
+            &q,
+            &pool_k,
+            &pool_v,
+            &mut batched,
+            heads,
+            kvh,
+            hd,
+            capacity,
+            &[0, seq],
+            &[2, 1],
+            0,
+            heads,
+        );
+        for (s, pos) in [(0usize, 2usize), (1, 1)] {
+            let mut solo = vec![0.0f32; heads * hd];
+            attention(
+                &q[s * heads * hd..(s + 1) * heads * hd],
+                &solo_k[s],
+                &solo_v[s],
+                &mut solo,
+                1,
+                heads,
+                kvh,
+                hd,
+                seq,
+                pos,
+                0,
+                heads,
+            );
+            assert_eq!(&batched[s * heads * hd..(s + 1) * heads * hd], &solo[..]);
+        }
     }
 
     #[test]

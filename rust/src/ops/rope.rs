@@ -36,6 +36,39 @@ pub fn rope(
     }
 }
 
+/// RoPE with an explicit position per row (continuous batching: row `r`
+/// belongs to its own sequence at position `pos[r]`). Only the first
+/// `pos.len()` rows of `x` are touched. In-place.
+pub fn rope_rows(
+    x: &mut [f32],
+    heads: usize,
+    head_dim: usize,
+    pos: &[usize],
+    theta: f32,
+    h0: usize,
+    h1: usize,
+) {
+    debug_assert!(x.len() >= pos.len() * heads * head_dim);
+    debug_assert!(head_dim % 2 == 0);
+    let half = head_dim / 2;
+    let d = heads * head_dim;
+    for (r, &p) in pos.iter().enumerate() {
+        let pf = p as f32;
+        for h in h0..h1 {
+            let base = r * d + h * head_dim;
+            for i in 0..half {
+                let freq = theta.powf(-(i as f32) / half as f32);
+                let ang = pf * freq;
+                let (sin, cos) = ang.sin_cos();
+                let a = x[base + i];
+                let b = x[base + i + half];
+                x[base + i] = a * cos - b * sin;
+                x[base + i + half] = b * cos + a * sin;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,6 +137,29 @@ mod tests {
         for i in 0..hd {
             assert!((two[hd + i] - one[i]).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn per_row_positions_match_dense_rope() {
+        // three rows at unrelated positions == three dense calls
+        let (heads, hd) = (2, 8);
+        let x0 = rand_vec(3 * heads * hd, 6);
+        let mut batched = x0.clone();
+        rope_rows(&mut batched, heads, hd, &[11, 0, 4], 1e6, 0, heads);
+        for (r, p) in [(0usize, 11usize), (1, 0), (2, 4)] {
+            let mut one = x0[r * heads * hd..(r + 1) * heads * hd].to_vec();
+            rope(&mut one, 1, heads, hd, p, 1e6, 0, heads);
+            assert_eq!(&batched[r * heads * hd..(r + 1) * heads * hd], &one[..]);
+        }
+    }
+
+    #[test]
+    fn rope_rows_leaves_padding_rows_untouched() {
+        let (heads, hd) = (1, 4);
+        let x0 = rand_vec(2 * hd, 7);
+        let mut x = x0.clone();
+        rope_rows(&mut x, heads, hd, &[3], 1e6, 0, heads);
+        assert_eq!(&x[hd..], &x0[hd..]);
     }
 
     #[test]

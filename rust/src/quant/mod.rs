@@ -34,7 +34,9 @@ pub fn quantize_row_q4_0(x: &[f32], out: &mut Vec<u8>) {
         }
         let d = maxv / -8.0;
         let d16 = f32_to_f16(d);
-        let d_used = f16_to_f32(d16); // python quantizes with the f16 value? No: python uses f16->f32 of d for inv
+        // quantize against the f16-rounded scale, matching the python
+        // reference (which uses f16→f32 of d for the inverse)
+        let d_used = f16_to_f32(d16);
         let id = if d_used != 0.0 { 1.0 / d_used } else { 0.0 };
         out.extend_from_slice(&d16.to_le_bytes());
         for i in 0..16 {

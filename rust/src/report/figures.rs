@@ -51,7 +51,7 @@ pub fn decode_tok_s(
     let mut remote = 0.0;
     for s in 0..samples {
         let pos = prompt + (gen - 1) * s / samples.max(1);
-        let rep = ex.run(&m.decode, ExecParams { pos, rows: 1 }, s as u64 + 1);
+        let rep = ex.run(&m.decode, ExecParams::dense(pos, 1), s as u64 + 1);
         total += rep.elapsed;
         remote += rep.remote_fraction();
     }
@@ -80,7 +80,7 @@ pub fn prefill_tok_s(
     let ex = sim_executor(strategy, threads, topo);
     let rep = ex.run(
         m.prefill.as_ref().expect("prefill graph"),
-        ExecParams { pos: 0, rows: prompt },
+        ExecParams::dense(0, prompt),
         1,
     );
     SimPoint {
@@ -123,25 +123,38 @@ pub fn fig10(cfg: &ModelConfig, topo: &Topology, samples: usize) -> Vec<FigureSe
 
 /// Figure 11: 2 and 4 NUMA nodes, llama.cpp-distribute vs ArcLight-TP
 /// (both sync modes). Thread counts are per-machine totals.
-pub fn fig11(cfg: &ModelConfig, topo: &Topology, nodes: usize, samples: usize) -> Vec<FigureSeries> {
+pub fn fig11(
+    cfg: &ModelConfig,
+    topo: &Topology,
+    nodes: usize,
+    samples: usize,
+) -> Vec<FigureSeries> {
     let per_node = [12, 24, 48];
     let threads: Vec<usize> = per_node.iter().map(|t| t * nodes).collect();
     use crate::sched::SyncMode;
+    let tp_a = Strategy::arclight_tp(nodes, SyncMode::SyncA);
+    let tp_b = Strategy::arclight_tp(nodes, SyncMode::SyncB);
     vec![
         decode_series(cfg, Strategy::llama_distribute(nodes), &threads, topo, 15, 256, samples),
-        decode_series(cfg, Strategy::arclight_tp(nodes, SyncMode::SyncA), &threads, topo, 15, 256, samples),
-        decode_series(cfg, Strategy::arclight_tp(nodes, SyncMode::SyncB), &threads, topo, 15, 256, samples),
+        decode_series(cfg, tp_a, &threads, topo, 15, 256, samples),
+        decode_series(cfg, tp_b, &threads, topo, 15, 256, samples),
     ]
 }
 
 /// Figure 12: decode with a 300-token prompt (multi-node).
-pub fn fig12(cfg: &ModelConfig, topo: &Topology, nodes: usize, samples: usize) -> Vec<FigureSeries> {
+pub fn fig12(
+    cfg: &ModelConfig,
+    topo: &Topology,
+    nodes: usize,
+    samples: usize,
+) -> Vec<FigureSeries> {
     let per_node = [12, 24, 48];
     let threads: Vec<usize> = per_node.iter().map(|t| t * nodes).collect();
     use crate::sched::SyncMode;
+    let tp_b = Strategy::arclight_tp(nodes, SyncMode::SyncB);
     vec![
         decode_series(cfg, Strategy::llama_distribute(nodes), &threads, topo, 300, 256, samples),
-        decode_series(cfg, Strategy::arclight_tp(nodes, SyncMode::SyncB), &threads, topo, 300, 256, samples),
+        decode_series(cfg, tp_b, &threads, topo, 300, 256, samples),
     ]
 }
 
@@ -209,8 +222,12 @@ mod tests {
             llama.tok_per_s
         );
         // the mechanism: ArcLight's remote traffic share is far lower
-        assert!(arc.remote_fraction < llama.remote_fraction * 0.8,
-                "remote {} vs {}", arc.remote_fraction, llama.remote_fraction);
+        assert!(
+            arc.remote_fraction < llama.remote_fraction * 0.8,
+            "remote {} vs {}",
+            arc.remote_fraction,
+            llama.remote_fraction
+        );
     }
 
     #[test]
@@ -227,13 +244,16 @@ mod tests {
         // prefill advantage of TP is smaller than decode advantage (§A.2)
         let cfg = small();
         let topo = Topology::kunpeng920();
+        let tp = Strategy::arclight_tp(4, crate::sched::SyncMode::SyncB);
         let d_l = decode_tok_s(&cfg, Strategy::llama_distribute(4), 192, &topo, 300, 64, 2);
-        let d_a = decode_tok_s(&cfg, Strategy::arclight_tp(4, crate::sched::SyncMode::SyncB), 192, &topo, 300, 64, 2);
+        let d_a = decode_tok_s(&cfg, tp, 192, &topo, 300, 64, 2);
         let p_l = prefill_tok_s(&cfg, Strategy::llama_distribute(4), 192, &topo, 300);
-        let p_a = prefill_tok_s(&cfg, Strategy::arclight_tp(4, crate::sched::SyncMode::SyncB), 192, &topo, 300);
+        let p_a = prefill_tok_s(&cfg, tp, 192, &topo, 300);
         let decode_gain = d_a.tok_per_s / d_l.tok_per_s;
         let prefill_gain = p_a.tok_per_s / p_l.tok_per_s;
-        assert!(prefill_gain < decode_gain,
-                "prefill gain {prefill_gain} should be below decode gain {decode_gain}");
+        assert!(
+            prefill_gain < decode_gain,
+            "prefill gain {prefill_gain} should be below decode gain {decode_gain}"
+        );
     }
 }

@@ -55,8 +55,8 @@ pub fn trace_pass(
                 .enumerate()
                 .map(|(wi, c)| {
                     let (u0, u1) = chunk_range(units, w, wi);
-                    (c.id, op_traffic(graph, id, &params, u0, u1, nn, per_node[c.node],
-                                      model.topo.bcast_amort))
+                    let amort = model.topo.bcast_amort;
+                    (c.id, op_traffic(graph, id, &params, u0, u1, nn, per_node[c.node], amort))
                 })
                 .collect();
             let times = model.op_times(&workers, ei as u64);
@@ -83,9 +83,9 @@ pub fn trace_pass(
                     .enumerate()
                     .map(|(rank, &wk)| {
                         let (u0, u1) = chunk_range(units, g.size(), rank);
-                        (cores[wk].id,
-                         op_traffic(graph, id, &params, u0, u1, nn, per_node[cores[wk].node],
-                                    model.topo.bcast_amort))
+                        let amort = model.topo.bcast_amort;
+                        let node = per_node[cores[wk].node];
+                        (cores[wk].id, op_traffic(graph, id, &params, u0, u1, nn, node, amort))
                     })
                     .collect();
                 let times = model.op_times(&workers, ei as u64);
@@ -150,7 +150,7 @@ mod tests {
             &CostModel::new(topo),
             &cores,
             &tp,
-            ExecParams { pos: 3, rows: 1 },
+            ExecParams::dense(3, 1),
         );
         // every exec entry yields ≥1 event; TP entries yield one per group
         assert!(events.len() >= m.decode.exec.len());

@@ -115,8 +115,10 @@ impl PjrtSession {
     pub fn empty_kv(&self) -> Result<(Literal, Literal)> {
         let n: usize = self.kv_shape.iter().product();
         let zeros = vec![0u8; n * 4];
-        let k = Literal::create_from_shape_and_untyped_data(ElementType::F32, &self.kv_shape, &zeros)?;
-        let v = Literal::create_from_shape_and_untyped_data(ElementType::F32, &self.kv_shape, &zeros)?;
+        let k =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &self.kv_shape, &zeros)?;
+        let v =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &self.kv_shape, &zeros)?;
         Ok((k, v))
     }
 

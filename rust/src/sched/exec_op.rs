@@ -76,7 +76,7 @@ pub fn run_op(
                 let x = f32s(pool, graph, src[0]);
                 let g = f32s(pool, graph, src[1]);
                 let out = f32s_mut(pool, graph, id);
-                let rows = meta.rows();
+                let rows = meta.rows().min(params.rows.max(1));
                 ops::norm::rmsnorm_heads(x, g, out, rows, *heads, *head_dim, *eps, u0, u1);
             }
             OpKind::MatMul => {
@@ -84,7 +84,8 @@ pub fn run_op(
                 let out = f32s_mut(pool, graph, id);
                 let k = graph.meta(src[1]).row_len();
                 let n = graph.meta(src[1]).rows();
-                let m = graph.meta(src[0]).rows();
+                // only the active rows of a partially-filled batch step
+                let m = graph.meta(src[0]).rows().min(params.rows.max(1));
                 match graph.meta(src[1]).dtype {
                     DType::F32 => {
                         let w = f32s(pool, graph, src[1]);
@@ -105,34 +106,88 @@ pub fn run_op(
                 let x = f32s(pool, graph, src[0]);
                 let out = f32s_mut(pool, graph, id);
                 // copy the head range, then rotate in place
-                let rows = meta.rows();
+                let rows = meta.rows().min(params.rows.max(1));
                 let d = heads * head_dim;
                 for r in 0..rows {
                     let lo = r * d + u0 * head_dim;
                     let hi = r * d + u1 * head_dim;
                     out[lo..hi].copy_from_slice(&x[lo..hi]);
                 }
-                ops::rope::rope(out, rows, *heads, *head_dim, params.pos, *theta, u0, u1);
+                match &params.batch {
+                    Some(bv) => {
+                        ops::rope::rope_rows(out, *heads, *head_dim, &bv.pos, *theta, u0, u1)
+                    }
+                    None => {
+                        ops::rope::rope(out, rows, *heads, *head_dim, params.pos, *theta, u0, u1)
+                    }
+                }
             }
             OpKind::StoreKv { kv_heads, head_dim, max_seq } => {
                 let kv = f32s(pool, graph, src[0]);
                 // output aliases the cache (src[1]) buffer
                 let cache = f32s_mut(pool, graph, src[1]);
-                let rows = graph.meta(src[0]).rows();
-                ops::attention::store_kv(
-                    kv, cache, rows, *kv_heads, *head_dim, *max_seq, params.pos, u0, u1,
-                );
+                let rows = graph.meta(src[0]).rows().min(params.rows.max(1));
+                match &params.batch {
+                    Some(bv) => ops::attention::store_kv_rows(
+                        kv,
+                        cache,
+                        *kv_heads,
+                        *head_dim,
+                        *max_seq,
+                        &bv.kv_base,
+                        &bv.pos,
+                        u0,
+                        u1,
+                    ),
+                    None => ops::attention::store_kv(
+                        kv,
+                        cache,
+                        rows,
+                        *kv_heads,
+                        *head_dim,
+                        *max_seq,
+                        params.pos,
+                        u0,
+                        u1,
+                    ),
+                }
             }
             OpKind::Attention { heads, kv_heads, head_dim, max_seq } => {
                 let q = f32s(pool, graph, src[0]);
                 let k = f32s(pool, graph, src[1]);
                 let v = f32s(pool, graph, src[2]);
                 let out = f32s_mut(pool, graph, id);
-                let rows = graph.meta(src[0]).rows();
-                ops::attention::attention(
-                    q, k, v, out, rows, *heads, *kv_heads, *head_dim, *max_seq,
-                    params.pos, u0, u1,
-                );
+                let rows = graph.meta(src[0]).rows().min(params.rows.max(1));
+                match &params.batch {
+                    Some(bv) => ops::attention::attention_rows(
+                        q,
+                        k,
+                        v,
+                        out,
+                        *heads,
+                        *kv_heads,
+                        *head_dim,
+                        *max_seq,
+                        &bv.kv_base,
+                        &bv.pos,
+                        u0,
+                        u1,
+                    ),
+                    None => ops::attention::attention(
+                        q,
+                        k,
+                        v,
+                        out,
+                        rows,
+                        *heads,
+                        *kv_heads,
+                        *head_dim,
+                        *max_seq,
+                        params.pos,
+                        u0,
+                        u1,
+                    ),
+                }
             }
             OpKind::Silu => {
                 let a = f32s(pool, graph, src[0]);
@@ -205,7 +260,7 @@ mod tests {
             f32s_mut(&pool, &graph, w)
                 .copy_from_slice(&[1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
         }
-        let params = ExecParams { pos: 0, rows: 1 };
+        let params = ExecParams::dense(0, 1);
         for entry in &graph.exec {
             for id in entry.bundle.iter() {
                 let units = super::super::partition_units(graph.meta(id), &params);
@@ -231,10 +286,37 @@ mod tests {
             f32s_mut(&pool, &graph, p0).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
             f32s_mut(&pool, &graph, p1).copy_from_slice(&[10.0, 20.0, 30.0, 40.0]);
         }
-        let params = ExecParams { pos: 0, rows: 1 };
+        let params = ExecParams::dense(0, 1);
         run_op(&graph, &pool, z.single(), &params, 0, 4);
         unsafe {
             assert_eq!(f32s(&pool, &graph, z.single()), &[11.0, 22.0, 33.0, 44.0]);
+        }
+    }
+
+    #[test]
+    fn batched_store_kv_targets_per_row_slots() {
+        // pooled cache of 2 slots × 4 positions; two rows land in their
+        // own slot's position (slot 0 pos 2, slot 1 pos 0)
+        let pool = MemoryPool::new(1, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0], Placement::Node(0));
+        let kvsrc = b.leaf("kv", DType::F32, vec![2, 4], Placement::Node(0));
+        let cache = b.kv_leaf("cache", vec![1, 8, 4], Placement::Node(0));
+        let stored = b.store_kv(&TensorBundle::one(kvsrc), &TensorBundle::one(cache), 1, 4, 8);
+        let (graph, pool) = b.finish();
+        let pool = pool.unwrap();
+        unsafe {
+            f32s_mut(&pool, &graph, kvsrc)
+                .copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        }
+        let view = crate::sched::BatchView::new(vec![0, 4], vec![2, 0]);
+        let params = ExecParams::batched(view);
+        run_op(&graph, &pool, stored.single(), &params, 0, 1);
+        unsafe {
+            let c = f32s(&pool, &graph, cache);
+            // row 0 → slot 0 position 2
+            assert_eq!(&c[2 * 4..3 * 4], &[1.0, 2.0, 3.0, 4.0]);
+            // row 1 → slot 1 (base 4) position 0
+            assert_eq!(&c[4 * 4..5 * 4], &[5.0, 6.0, 7.0, 8.0]);
         }
     }
 
@@ -258,7 +340,7 @@ mod tests {
             f32s_mut(&pool, &graph, kvsrc)
                 .copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
         }
-        let params = ExecParams { pos: 3, rows: 1 };
+        let params = ExecParams::dense(3, 1);
         run_op(&graph, &pool, stored.single(), &params, 0, 2);
         unsafe {
             let c = f32s(&pool, &graph, cache);

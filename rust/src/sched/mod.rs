@@ -22,6 +22,8 @@ pub mod real;
 pub mod sim;
 pub mod traffic;
 
+use std::sync::Arc;
+
 pub use real::RealExecutor;
 pub use sim::{SimExecutor, SimReport};
 
@@ -34,18 +36,67 @@ pub enum SyncMode {
     SyncB,
 }
 
+/// Per-row sequence view for a continuous-batching pass: each active
+/// row belongs to some sequence whose KV lives in its own logical slot
+/// of the pooled cache.
+///
+/// Row `r` is the token at position `pos[r]` of the sequence whose slot
+/// starts at cache position `kv_base[r]`; it writes KV slot
+/// `kv_base[r] + pos[r]` and attends to `[kv_base[r], kv_base[r] +
+/// pos[r]]`. Several rows may belong to the same sequence at
+/// consecutive positions (chunked prefill inside a running batch) —
+/// StoreKv entries execute before the Attention entry of each layer, so
+/// causality holds within a pass.
+#[derive(Clone, Debug, Default)]
+pub struct BatchView {
+    /// First cache position of each row's sequence slot.
+    pub kv_base: Vec<usize>,
+    /// Position of each row within its sequence.
+    pub pos: Vec<usize>,
+}
+
+impl BatchView {
+    pub fn new(kv_base: Vec<usize>, pos: Vec<usize>) -> Self {
+        assert_eq!(kv_base.len(), pos.len(), "batch view row mismatch");
+        BatchView { kv_base, pos }
+    }
+
+    /// Active rows this pass.
+    pub fn rows(&self) -> usize {
+        self.pos.len()
+    }
+}
+
 /// Per-pass runtime parameters (the static graph is position-agnostic).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ExecParams {
-    /// Absolute position of the first row processed this pass.
+    /// Absolute position of the first row processed this pass (dense
+    /// single-sequence passes; batched passes carry per-row positions).
     pub pos: usize,
     /// Rows (tokens) processed this pass: 1 for decode, prompt length
-    /// for prefill.
+    /// for prefill, active lanes for a batched decode step. Graphs are
+    /// built for their maximum row count; ops only compute the first
+    /// `rows` rows of a pass.
     pub rows: usize,
+    /// Per-row sequence state for multi-sequence (continuous-batching)
+    /// passes; `None` for the classic single-sequence graphs.
+    pub batch: Option<Arc<BatchView>>,
 }
 
 impl ExecParams {
-    /// KV positions live after this pass completes.
+    /// A dense single-sequence pass: `rows` tokens starting at `pos`.
+    pub fn dense(pos: usize, rows: usize) -> Self {
+        ExecParams { pos, rows, batch: None }
+    }
+
+    /// A multi-sequence pass described row-by-row.
+    pub fn batched(view: BatchView) -> Self {
+        let rows = view.rows();
+        ExecParams { pos: 0, rows, batch: Some(Arc::new(view)) }
+    }
+
+    /// KV positions live after this pass completes (dense passes; for
+    /// batched passes this is a per-sequence notion — see [`BatchView`]).
     pub fn kv_len(&self) -> usize {
         self.pos + self.rows
     }
@@ -53,21 +104,24 @@ impl ExecParams {
 
 /// Work units an operator partitions across its thread group — the row
 /// policy of §2.7 (matmul: weight rows; attention/rope: heads;
-/// element-wise: flat elements). Row counts come from tensor shapes so
-/// sliced tails (prefill last-row logits) partition correctly.
-pub fn partition_units(meta: &crate::graph::TensorMeta, _params: &ExecParams) -> usize {
+/// element-wise: flat elements). Row counts come from tensor shapes,
+/// clamped to the pass's active rows so a partially-filled batch graph
+/// (and sliced tails like the prefill last-row logits) partitions
+/// correctly.
+pub fn partition_units(meta: &crate::graph::TensorMeta, params: &ExecParams) -> usize {
     use crate::graph::OpKind::*;
+    let act_rows = meta.rows().min(params.rows.max(1));
     match &meta.op {
         Leaf => 0,
-        Embed => meta.rows(),
-        RmsNorm { .. } => meta.rows(),
+        Embed => act_rows,
+        RmsNorm { .. } => act_rows,
         RmsNormHeads { heads, .. } => *heads,
         MatMul => meta.row_len(), // output features N
         Rope { heads, .. } => *heads,
         StoreKv { kv_heads, .. } => *kv_heads,
         Attention { heads, .. } => *heads,
         SliceRow { .. } => meta.row_len(),
-        Silu | Add | Mul | SwiGlu | Copy | AddN => meta.numel(),
+        Silu | Add | Mul | SwiGlu | Copy | AddN => act_rows * meta.row_len(),
     }
 }
 
@@ -93,14 +147,30 @@ mod tests {
 
     #[test]
     fn units_per_op() {
-        let p = ExecParams { pos: 4, rows: 2 };
+        let p = ExecParams::dense(4, 2);
         assert_eq!(p.kv_len(), 6);
         assert_eq!(partition_units(&meta(OpKind::MatMul, vec![2, 96]), &p), 96);
-        assert_eq!(
-            partition_units(&meta(OpKind::Attention { heads: 8, kv_heads: 2, head_dim: 16, max_seq: 64 }, vec![2, 128]), &p),
-            8
-        );
+        let attn = OpKind::Attention { heads: 8, kv_heads: 2, head_dim: 16, max_seq: 64 };
+        assert_eq!(partition_units(&meta(attn, vec![2, 128]), &p), 8);
         assert_eq!(partition_units(&meta(OpKind::Add, vec![2, 64]), &p), 128);
         assert_eq!(partition_units(&meta(OpKind::RmsNorm { eps: 1e-6 }, vec![2, 64]), &p), 2);
+    }
+
+    #[test]
+    fn units_clamp_to_active_rows() {
+        // a batch graph built for 8 rows running 3 active lanes
+        let p = ExecParams::batched(BatchView::new(vec![0, 64, 128], vec![5, 0, 9]));
+        assert_eq!(p.rows, 3);
+        assert_eq!(partition_units(&meta(OpKind::Embed, vec![8, 64]), &p), 3);
+        assert_eq!(partition_units(&meta(OpKind::Add, vec![8, 64]), &p), 3 * 64);
+        assert_eq!(partition_units(&meta(OpKind::RmsNorm { eps: 1e-6 }, vec![8, 64]), &p), 3);
+        // matmul still partitions output features, not rows
+        assert_eq!(partition_units(&meta(OpKind::MatMul, vec![8, 96]), &p), 96);
+    }
+
+    #[test]
+    #[should_panic(expected = "row mismatch")]
+    fn batch_view_rejects_ragged_rows() {
+        BatchView::new(vec![0, 64], vec![1]);
     }
 }

@@ -49,7 +49,7 @@ impl RealExecutor {
         while i < exec.len() {
             let width = exec[i].bundle.width();
             if width == 1 {
-                self.run_single(graph, params, i);
+                self.run_single(graph, &params, i);
                 i += 1;
             } else {
                 assert_eq!(width, n_groups, "entry width {} vs {} groups", width, n_groups);
@@ -61,10 +61,10 @@ impl RealExecutor {
                 match self.sync {
                     SyncMode::SyncA => {
                         for e in i..j {
-                            self.run_parallel_lockstep(graph, params, e);
+                            self.run_parallel_lockstep(graph, &params, e);
                         }
                     }
-                    SyncMode::SyncB => self.run_parallel_async(graph, params, i, j),
+                    SyncMode::SyncB => self.run_parallel_async(graph, &params, i, j),
                 }
                 i = j;
             }
@@ -72,12 +72,13 @@ impl RealExecutor {
     }
 
     /// Width-1 entry: whole pool partitions one operator.
-    fn run_single(&self, graph: &Arc<Graph>, params: ExecParams, entry: usize) {
+    fn run_single(&self, graph: &Arc<Graph>, params: &ExecParams, entry: usize) {
         let id = graph.exec[entry].bundle.single();
-        let units = partition_units(graph.meta(id), &params);
+        let units = partition_units(graph.meta(id), params);
         let n = self.threads.len();
         let graph = graph.clone();
         let pool = self.pool.clone();
+        let params = params.clone();
         self.threads.run_all(Arc::new(move |ctx: &crate::threads::WorkerCtx| {
             let (u0, u1) = chunk_range(units, n, ctx.worker);
             run_op(&graph, &pool, id, &params, u0, u1);
@@ -86,10 +87,11 @@ impl RealExecutor {
 
     /// One TP entry, all groups in lockstep (Sync A: the completion
     /// latch across the whole pool is the global barrier).
-    fn run_parallel_lockstep(&self, graph: &Arc<Graph>, params: ExecParams, entry: usize) {
+    fn run_parallel_lockstep(&self, graph: &Arc<Graph>, params: &ExecParams, entry: usize) {
         let graph = graph.clone();
         let pool = self.pool.clone();
         let org = self.org_tp.clone();
+        let params = params.clone();
         self.threads.run_all(Arc::new(move |ctx: &crate::threads::WorkerCtx| {
             if let Some((gi, rank)) = org.assignment(ctx.worker) {
                 let id = graph.exec[entry].bundle.get(gi);
@@ -103,10 +105,11 @@ impl RealExecutor {
 
     /// A run `[i, j)` of TP entries under Sync B: each group streams its
     /// own operator sequence with local barriers only.
-    fn run_parallel_async(&self, graph: &Arc<Graph>, params: ExecParams, i: usize, j: usize) {
+    fn run_parallel_async(&self, graph: &Arc<Graph>, params: &ExecParams, i: usize, j: usize) {
         let graph = graph.clone();
         let pool = self.pool.clone();
         let org = self.org_tp.clone();
+        let params = params.clone();
         self.threads.run_all(Arc::new(move |ctx: &crate::threads::WorkerCtx| {
             if let Some((gi, rank)) = org.assignment(ctx.worker) {
                 let group = &org.groups[gi];
@@ -132,11 +135,16 @@ mod tests {
     use crate::numa::{Placement, Topology};
     use crate::tensor::{DType, TensorBundle};
 
+    type TpGraph = (
+        Arc<Graph>,
+        Arc<MemoryPool>,
+        crate::tensor::TensorId,
+        crate::tensor::TensorId,
+        Vec<crate::tensor::TensorId>,
+    );
+
     /// x[1,4] → scatter(2) → matmul(w_g) → gather == full matmul.
-    #[allow(clippy::type_complexity)]
-    fn build_tp_graph(
-        pool: MemoryPool,
-    ) -> (Arc<Graph>, Arc<MemoryPool>, crate::tensor::TensorId, crate::tensor::TensorId, Vec<crate::tensor::TensorId>) {
+    fn build_tp_graph(pool: MemoryPool) -> TpGraph {
         let mut b = GraphBuilder::new(Some(pool), vec![0, 1], Placement::Node(0));
         let x = b.leaf("x", DType::F32, vec![1, 4], Placement::Node(0));
         let w0 = b.leaf("w0", DType::F32, vec![2, 4], Placement::Node(0));
@@ -179,7 +187,7 @@ mod tests {
             Arc::new(Organization::by_node(&cores)),
             sync,
         );
-        ex.run(&graph, ExecParams { pos: 0, rows: 1 });
+        ex.run(&graph, ExecParams::dense(0, 1));
         read(&pool, &graph, z, 2)
     }
 

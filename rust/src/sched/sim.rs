@@ -96,17 +96,9 @@ impl SimExecutor {
                 while j < exec.len() && exec[j].bundle.width() == width {
                     j += 1;
                 }
-                match self.sync {
-                    SyncMode::SyncA => {
-                        for e in i..j {
-                            self.step_parallel(graph, &params, e, step_tag, true, &mut clocks, &mut rep);
-                        }
-                    }
-                    SyncMode::SyncB => {
-                        for e in i..j {
-                            self.step_parallel(graph, &params, e, step_tag, false, &mut clocks, &mut rep);
-                        }
-                    }
+                let lock = self.sync == SyncMode::SyncA;
+                for e in i..j {
+                    self.step_parallel(graph, &params, e, step_tag, lock, &mut clocks, &mut rep);
                 }
                 // region boundary: the Gather (or next single op) starts
                 // only after every group finished — global barrier
@@ -140,7 +132,8 @@ impl SimExecutor {
         let mut workers: Vec<(usize, Traffic)> = Vec::with_capacity(w);
         for (wi, core) in self.cores.iter().enumerate() {
             let (u0, u1) = chunk_range(units, w, wi);
-            let t = op_traffic(graph, id, params, u0, u1, nn, per_node[core.node], self.model.topo.bcast_amort);
+            let amort = self.model.topo.bcast_amort;
+            let t = op_traffic(graph, id, params, u0, u1, nn, per_node[core.node], amort);
             workers.push((core.id, t));
         }
         self.advance(&workers, entry as u64 + step_tag * 131_071, clocks, rep, None);
@@ -175,7 +168,9 @@ impl SimExecutor {
                 let units = partition_units(graph.meta(id), params);
                 let size = self.org_tp.groups[gi].size();
                 let (u0, u1) = chunk_range(units, size, rank);
-                workers.push((core.id, op_traffic(graph, id, params, u0, u1, nn, per_node[core.node], self.model.topo.bcast_amort)));
+                let amort = self.model.topo.bcast_amort;
+                let t = op_traffic(graph, id, params, u0, u1, nn, per_node[core.node], amort);
+                workers.push((core.id, t));
                 worker_idx.push(wi);
             }
         }
@@ -274,8 +269,8 @@ mod tests {
     fn local_weights_beat_remote_weights() {
         let topo = Topology::kunpeng920();
         let sim = sim_for(topo, 48, 1, SyncMode::SyncA);
-        let p = ExecParams { pos: 0, rows: 1 };
-        let local = sim.run(&local_matmul_graph(Placement::Node(0)), p, 0);
+        let p = ExecParams::dense(0, 1);
+        let local = sim.run(&local_matmul_graph(Placement::Node(0)), p.clone(), 0);
         let remote = sim.run(&local_matmul_graph(Placement::Node(1)), p, 0);
         let ratio = remote.elapsed / local.elapsed;
         // Table 1: local ≈ 102 GB/s vs remote 26 GB/s → ≈ 3.9×
@@ -285,9 +280,9 @@ mod tests {
     #[test]
     fn more_threads_scale_single_node() {
         let topo = Topology::kunpeng920();
-        let p = ExecParams { pos: 0, rows: 1 };
+        let p = ExecParams::dense(0, 1);
         let t6 = sim_for(topo.clone(), 6, 1, SyncMode::SyncA)
-            .run(&local_matmul_graph(Placement::Node(0)), p, 0)
+            .run(&local_matmul_graph(Placement::Node(0)), p.clone(), 0)
             .elapsed;
         let t48 = sim_for(topo, 48, 1, SyncMode::SyncA)
             .run(&local_matmul_graph(Placement::Node(0)), p, 0)
@@ -305,7 +300,7 @@ mod tests {
         let w = b.leaf("w", DType::Q4_0, vec![4096, 4096], Placement::even_shards(4096, 4));
         b.matmul(&TensorBundle::one(x), &TensorBundle::one(w));
         let g = b.finish().0;
-        let rep = sim.run(&g, ExecParams { pos: 0, rows: 1 }, 0);
+        let rep = sim.run(&g, ExecParams::dense(0, 1), 0);
         // activations interleaved → ~3/4 of activation reads are remote
         assert!(rep.remote_fraction() > 0.05, "{}", rep.remote_fraction());
     }
@@ -326,8 +321,8 @@ mod tests {
         }
         b.gather(&cur);
         let g = b.finish().0;
-        let p = ExecParams { pos: 0, rows: 1 };
-        let a = sim_for(topo.clone(), 8, 2, SyncMode::SyncA).run(&g, p, 3).elapsed;
+        let p = ExecParams::dense(0, 1);
+        let a = sim_for(topo.clone(), 8, 2, SyncMode::SyncA).run(&g, p.clone(), 3).elapsed;
         let bt = sim_for(topo, 8, 2, SyncMode::SyncB).run(&g, p, 3).elapsed;
         assert!(bt <= a * 1.001, "syncB {bt} vs syncA {a}");
     }
@@ -336,7 +331,8 @@ mod tests {
     fn report_accounts_channels() {
         let topo = Topology::kunpeng920();
         let sim = sim_for(topo, 8, 1, SyncMode::SyncA);
-        let rep = sim.run(&local_matmul_graph(Placement::Node(0)), ExecParams { pos: 0, rows: 1 }, 0);
+        let rep =
+            sim.run(&local_matmul_graph(Placement::Node(0)), ExecParams::dense(0, 1), 0);
         let total: f64 = rep.channel_bytes.iter().flatten().sum();
         // at least the weight bytes must be accounted
         assert!(total >= 4096.0 * 4096.0 * 0.5625);

@@ -166,7 +166,7 @@ mod tests {
     use crate::tensor::{DType, TensorBundle};
 
     fn params() -> ExecParams {
-        ExecParams { pos: 0, rows: 1 }
+        ExecParams::dense(0, 1)
     }
 
     #[test]
@@ -205,10 +205,17 @@ mod tests {
         let q = b.leaf("q", DType::F32, vec![1, 64], Placement::Node(0));
         let kc = b.kv_leaf("k", vec![2, 16, 16], Placement::Node(1));
         let vc = b.kv_leaf("v", vec![2, 16, 16], Placement::Node(1));
-        let o = b.attention(&TensorBundle::one(q), &TensorBundle::one(kc),
-                            &TensorBundle::one(vc), 4, 2, 16, 16);
+        let o = b.attention(
+            &TensorBundle::one(q),
+            &TensorBundle::one(kc),
+            &TensorBundle::one(vc),
+            4,
+            2,
+            16,
+            16,
+        );
         let (g, _) = b.finish();
-        let p = ExecParams { pos: 7, rows: 1 };
+        let p = ExecParams::dense(7, 1);
         let t = op_traffic(&g, o.single(), &p, 0, 4, 2, 1, 1.0);
         // kv_len = 8; 2 kv heads × 8 pos × 16 dim × 4 B × 2 (K+V)
         let expect = 2.0 * 8.0 * 16.0 * 4.0 * 2.0;

@@ -1,18 +1,26 @@
-//! Router + dynamic batcher.
+//! Router + schedulers: continuous batching and the sequential-slot
+//! baseline.
 //!
 //! Requests land in a bounded queue (backpressure: `submit` fails when
-//! full). Engine *slots* — each a full engine instance with its own KV
-//! cache — pull batches of up to `max_batch` requests formed within a
-//! `batch_window`. A slot serves its batch sequentially (the engine
-//! holds one sequence's KV state at a time), which matches llama.cpp's
-//! single-slot semantics; multiple slots give concurrent sequences.
+//! full). Two schedulers can drain it:
+//!
+//! * [`ContinuousBatcher`] — **the** serving path: one engine whose KV
+//!   pool holds `batch_slots` sequences. Every decode step is a single
+//!   batched graph pass over all live sequences (one token per lane,
+//!   prompt tokens chunked into spare lanes). New requests are admitted
+//!   from the queue *at step boundaries* in FIFO order the moment a
+//!   slot is free, and finished sequences retire without draining the
+//!   batch — the batch never stops for either.
+//! * [`EngineSlot`] — the llama.cpp-style baseline kept for comparison
+//!   benchmarks: each slot owns a whole engine and serves its batch
+//!   sequentially, one full generation at a time.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::frontend::{ByteTokenizer, Engine, Sampler};
+use crate::frontend::{ByteTokenizer, Engine, Sampler, SeqId};
 use crate::metrics::Metrics;
 
 use super::request::{GenRequest, GenResponse};
@@ -21,7 +29,9 @@ use super::request::{GenRequest, GenResponse};
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     pub queue_capacity: usize,
+    /// Sequential baseline only: requests pulled per wake-up.
     pub max_batch: usize,
+    /// Sequential baseline only: window for co-arriving requests.
     pub batch_window: Duration,
 }
 
@@ -42,7 +52,7 @@ struct Pending {
     done: Arc<(Mutex<Option<GenResponse>>, Condvar)>,
 }
 
-/// Shared state between submitters and engine slots.
+/// Shared state between submitters and schedulers.
 pub struct Router {
     cfg: BatcherConfig,
     queue: Mutex<VecDeque<Pending>>,
@@ -92,6 +102,7 @@ impl Router {
     }
 
     /// Pull the next batch (blocking). `None` once shut down and drained.
+    /// Sequential-baseline path.
     fn next_batch(&self) -> Option<Vec<Pending>> {
         let mut q = self.queue.lock().unwrap();
         loop {
@@ -119,6 +130,27 @@ impl Router {
         Some(batch)
     }
 
+    /// Pop one queued request without blocking (step-boundary admission).
+    fn try_pop(&self) -> Option<Pending> {
+        self.queue.lock().unwrap().pop_front()
+    }
+
+    /// Block until a request is queued; `None` once shut down and
+    /// drained.
+    fn wait_pending(&self) -> Option<Pending> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(p) = q.pop_front() {
+                return Some(p);
+            }
+            if self.stopping.load(Ordering::Acquire) {
+                return None;
+            }
+            let (qq, _t) = self.notify.wait_timeout(q, Duration::from_millis(50)).unwrap();
+            q = qq;
+        }
+    }
+
     pub fn shutdown(&self) {
         self.stopping.store(true, Ordering::Release);
         self.notify.notify_all();
@@ -129,8 +161,214 @@ impl Router {
     }
 }
 
+/// Tokenize, clamp to KV capacity and pick the sampler for a request —
+/// shared by both schedulers so they stay token-for-token comparable.
+fn prepare(tokenizer: &ByteTokenizer, req: &GenRequest, cap: usize) -> (Vec<i32>, usize, Sampler) {
+    let toks: Vec<i32> = match (&req.tokens, &req.prompt) {
+        (Some(t), _) => t.clone(),
+        (None, Some(text)) => tokenizer.encode(text, true),
+        (None, None) => vec![crate::frontend::tokenizer::BOS],
+    };
+    let mut prompt: Vec<i32> = toks.into_iter().take(cap.saturating_sub(2)).collect();
+    if prompt.is_empty() {
+        prompt.push(crate::frontend::tokenizer::BOS);
+    }
+    let max_new = req.max_new.min(cap - prompt.len().min(cap));
+    // wire-supplied values must not be able to panic the scheduler
+    // thread: degenerate top_k/temperature degrade to greedy
+    let sampler = match req.top_k {
+        Some(k) if k > 1 && req.temperature > 0.0 => Sampler::top_k(k, req.temperature, req.id),
+        _ => Sampler::greedy(),
+    };
+    (prompt, max_new, sampler)
+}
+
+// ---------------------------------------------------------------------------
+// continuous batching scheduler
+// ---------------------------------------------------------------------------
+
+/// One in-flight request inside the running batch.
+struct ActiveSeq {
+    pending: Pending,
+    seq: SeqId,
+    prompt: Vec<i32>,
+    /// Prompt tokens fed so far (chunked prefill).
+    fed: usize,
+    generated: Vec<i32>,
+    next_token: i32,
+    max_new: usize,
+    sampler: Sampler,
+    first_token_at: Option<Instant>,
+    prefill_done_at: Option<Instant>,
+}
+
+/// Continuous-batching scheduler: owns one multi-slot engine and runs
+/// the admit → step → sample → retire loop on its own OS thread.
+pub struct ContinuousBatcher {
+    pub engine: Engine,
+    pub tokenizer: ByteTokenizer,
+}
+
+impl ContinuousBatcher {
+    pub fn new(engine: Engine) -> Self {
+        assert!(
+            engine.batch_slots() > 1,
+            "continuous batching needs an engine with batch_slots > 1"
+        );
+        ContinuousBatcher { engine, tokenizer: ByteTokenizer }
+    }
+
+    /// Serve until the router shuts down *and* the queue and batch have
+    /// drained.
+    pub fn serve(mut self, router: Arc<Router>) {
+        let slots = self.engine.batch_slots();
+        let mut active: Vec<ActiveSeq> = Vec::new();
+        loop {
+            // ---- step-boundary admission (FIFO) ----
+            if active.is_empty() {
+                match router.wait_pending() {
+                    Some(p) => self.admit(p, &mut active, &router),
+                    None => break, // shut down and drained
+                }
+            }
+            while active.len() < slots {
+                match router.try_pop() {
+                    Some(p) => self.admit(p, &mut active, &router),
+                    None => break,
+                }
+            }
+            if active.is_empty() {
+                continue; // zero-work request(s) answered inline
+            }
+            self.step(&mut active, &router);
+        }
+    }
+
+    fn admit(&mut self, p: Pending, active: &mut Vec<ActiveSeq>, router: &Router) {
+        router.metrics.record_queue_wait(p.enqueued.elapsed().as_secs_f64());
+        let cap = self.engine.cfg().max_seq;
+        let (prompt, max_new, sampler) = prepare(&self.tokenizer, &p.req, cap);
+        if max_new == 0 {
+            // nothing to generate: answer without occupying a slot
+            let resp = GenResponse {
+                id: p.req.id,
+                text: String::new(),
+                tokens: Vec::new(),
+                ttft_s: p.enqueued.elapsed().as_secs_f64(),
+                total_s: p.enqueued.elapsed().as_secs_f64(),
+                decode_tok_per_s: 0.0,
+            };
+            router.metrics.record_request(prompt.len(), 0, resp.ttft_s, resp.total_s, 0.0);
+            let (lock, cv) = &*p.done;
+            *lock.lock().unwrap() = Some(resp);
+            cv.notify_all();
+            return;
+        }
+        let seq = self.engine.seq_alloc().expect("admission past slot capacity");
+        active.push(ActiveSeq {
+            pending: p,
+            seq,
+            prompt,
+            fed: 0,
+            generated: Vec::new(),
+            next_token: 0,
+            max_new,
+            sampler,
+            first_token_at: None,
+            prefill_done_at: None,
+        });
+    }
+
+    /// One batched pass: pack lanes (decode lanes plus chunked-prefill
+    /// lanes, FIFO order), run the graph, sample, retire finished
+    /// sequences — without ever draining the rest of the batch.
+    fn step(&mut self, active: &mut Vec<ActiveSeq>, router: &Router) {
+        let slots = self.engine.batch_slots();
+        let mut lanes: Vec<(SeqId, i32)> = Vec::new();
+        // (active index, does this lane's logits row get sampled?)
+        let mut owners: Vec<(usize, bool)> = Vec::new();
+        for (ai, a) in active.iter_mut().enumerate() {
+            if lanes.len() == slots {
+                break;
+            }
+            if a.fed < a.prompt.len() {
+                while a.fed < a.prompt.len() && lanes.len() < slots {
+                    lanes.push((a.seq, a.prompt[a.fed]));
+                    a.fed += 1;
+                    owners.push((ai, a.fed == a.prompt.len()));
+                }
+            } else {
+                lanes.push((a.seq, a.next_token));
+                owners.push((ai, true));
+            }
+        }
+        let logits = self.engine.step_batch(&lanes);
+        router.metrics.record_step(lanes.len());
+
+        let mut finished: Vec<usize> = Vec::new();
+        for (li, &(ai, sample)) in owners.iter().enumerate() {
+            if !sample {
+                continue;
+            }
+            let a = &mut active[ai];
+            if a.prefill_done_at.is_none() {
+                a.prefill_done_at = Some(Instant::now());
+            }
+            let t = a.sampler.sample(&logits[li], a.generated.len());
+            a.generated.push(t);
+            a.next_token = t;
+            if a.first_token_at.is_none() {
+                a.first_token_at = Some(Instant::now());
+            }
+            let kv_full = self.engine.seq_pos(a.seq) >= self.engine.cfg().max_seq;
+            if a.generated.len() >= a.max_new || kv_full {
+                finished.push(ai);
+            }
+        }
+        for &ai in finished.iter().rev() {
+            let done = active.remove(ai);
+            self.retire(done, router);
+        }
+    }
+
+    fn retire(&mut self, a: ActiveSeq, router: &Router) {
+        self.engine.seq_free(a.seq);
+        let total_s = a.pending.enqueued.elapsed().as_secs_f64();
+        let ttft_s = a
+            .first_token_at
+            .map(|t| t.duration_since(a.pending.enqueued).as_secs_f64())
+            .unwrap_or(total_s);
+        let decode_s = a.prefill_done_at.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let decode_tok_per_s =
+            if decode_s > 0.0 { a.generated.len() as f64 / decode_s } else { 0.0 };
+        let resp = GenResponse {
+            id: a.pending.req.id,
+            text: self.tokenizer.decode(&a.generated),
+            tokens: a.generated,
+            ttft_s,
+            total_s,
+            decode_tok_per_s,
+        };
+        router.metrics.record_request(
+            a.prompt.len(),
+            resp.tokens.len(),
+            ttft_s,
+            total_s,
+            decode_tok_per_s,
+        );
+        let (lock, cv) = &*a.pending.done;
+        *lock.lock().unwrap() = Some(resp);
+        cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sequential-slot baseline
+// ---------------------------------------------------------------------------
+
 /// One engine slot: owns an [`Engine`] and serves batches until
-/// shutdown. Run on its own OS thread.
+/// shutdown, one whole generation at a time (the pre-continuous
+/// design, kept as the benchmark baseline). Run on its own OS thread.
 pub struct EngineSlot {
     pub engine: Engine,
     pub tokenizer: ByteTokenizer,
@@ -153,6 +391,7 @@ impl EngineSlot {
                     resp.tokens.len(),
                     resp.ttft_s,
                     resp.total_s,
+                    resp.decode_tok_per_s,
                 );
                 let (lock, cv) = &*p.done;
                 *lock.lock().unwrap() = Some(resp);
@@ -163,20 +402,8 @@ impl EngineSlot {
 
     fn run_one(&mut self, p: &Pending) -> GenResponse {
         let queued = p.enqueued.elapsed().as_secs_f64();
-        let toks: Vec<i32> = match (&p.req.tokens, &p.req.prompt) {
-            (Some(t), _) => t.clone(),
-            (None, Some(text)) => self.tokenizer.encode(text, true),
-            (None, None) => vec![crate::frontend::tokenizer::BOS],
-        };
-        // clamp to capacity
         let cap = self.engine.cfg().max_seq;
-        let prompt: Vec<i32> = toks.into_iter().take(cap.saturating_sub(2)).collect();
-        let max_new = p.req.max_new.min(cap - prompt.len().min(cap));
-
-        let sampler = match p.req.top_k {
-            None | Some(1) => Sampler::greedy(),
-            Some(k) => Sampler::top_k(k, p.req.temperature, p.req.id),
-        };
+        let (prompt, max_new, sampler) = prepare(&self.tokenizer, &p.req, cap);
         self.engine.reset();
         let res = self.engine.generate(&prompt, max_new, &sampler);
         GenResponse {
@@ -198,15 +425,24 @@ mod tests {
     use crate::model::ModelConfig;
     use crate::numa::Topology;
 
-    fn tiny_slot() -> EngineSlot {
-        let opts = EngineOptions {
+    fn tiny_opts(batch_slots: usize) -> EngineOptions {
+        EngineOptions {
             strategy: Strategy::arclight_single(),
             threads: 2,
             topo: Topology::uniform(2, 2, 100.0, 25.0),
             prefill_rows: None,
             seed: 1,
-        };
-        EngineSlot::new(Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap())
+            batch_slots,
+        }
+    }
+
+    fn tiny_slot() -> EngineSlot {
+        EngineSlot::new(Engine::new_synthetic(ModelConfig::tiny(), &tiny_opts(1)).unwrap())
+    }
+
+    fn tiny_continuous(slots: usize) -> ContinuousBatcher {
+        let engine = Engine::new_synthetic(ModelConfig::tiny(), &tiny_opts(slots)).unwrap();
+        ContinuousBatcher::new(engine)
     }
 
     #[test]
@@ -259,7 +495,8 @@ mod tests {
             max_batch: 1,
             batch_window: Duration::from_millis(1),
         });
-        // no slot is serving: fill the queue from another thread, then overflow
+        // no scheduler is serving: fill the queue from another thread,
+        // then overflow
         let r = router.clone();
         let _waiter = std::thread::spawn(move || {
             let _ = r.submit(GenRequest::text(1, "x", 1));
@@ -268,5 +505,170 @@ mod tests {
         let err = router.submit(GenRequest::text(2, "y", 1));
         assert!(err.is_err());
         router.shutdown();
+    }
+
+    #[test]
+    fn continuous_serves_concurrent_requests() {
+        let router = Router::new(BatcherConfig::default());
+        let batcher = tiny_continuous(4);
+        let r2 = router.clone();
+        let h = std::thread::spawn(move || batcher.serve(r2));
+
+        let mut joins = Vec::new();
+        for i in 0..6u64 {
+            let r = router.clone();
+            joins.push(std::thread::spawn(move || {
+                r.submit(GenRequest::text(i + 1, "hello batching", 5)).unwrap()
+            }));
+        }
+        for j in joins {
+            let resp = j.join().unwrap();
+            assert_eq!(resp.tokens.len(), 5);
+            assert!(resp.total_s > 0.0 && resp.ttft_s > 0.0);
+        }
+        router.shutdown();
+        h.join().unwrap();
+        assert_eq!(router.metrics.requests_total.load(Ordering::Relaxed), 6);
+        // the whole point: >1 lane per step on average under concurrency
+        assert!(
+            router.metrics.batch_occupancy() > 1.0,
+            "occupancy {}",
+            router.metrics.batch_occupancy()
+        );
+    }
+
+    #[test]
+    fn continuous_matches_sequential_tokens() {
+        // the serving stack must not change tokens: continuous batching
+        // with interleaved sequences == one-at-a-time generation
+        let mut serial = Engine::new_synthetic(ModelConfig::tiny(), &tiny_opts(1)).unwrap();
+        let tok = ByteTokenizer;
+        let mut want = Vec::new();
+        for text in ["first prompt", "a different second prompt", "third"] {
+            serial.reset();
+            let prompt = tok.encode(text, true);
+            want.push(serial.generate(&prompt, 6, &Sampler::greedy()).tokens);
+        }
+
+        let router = Router::new(BatcherConfig::default());
+        let batcher = tiny_continuous(3);
+        let r2 = router.clone();
+        let h = std::thread::spawn(move || batcher.serve(r2));
+        let mut joins = Vec::new();
+        for (i, text) in ["first prompt", "a different second prompt", "third"]
+            .iter()
+            .enumerate()
+        {
+            let r = router.clone();
+            let text = text.to_string();
+            joins.push(std::thread::spawn(move || {
+                r.submit(GenRequest::text(i as u64 + 1, &text, 6)).unwrap()
+            }));
+        }
+        let mut got: Vec<(u64, Vec<i32>)> =
+            joins.into_iter().map(|j| j.join().unwrap()).map(|r| (r.id, r.tokens)).collect();
+        got.sort_by_key(|(id, _)| *id);
+        router.shutdown();
+        h.join().unwrap();
+        for (i, (_, tokens)) in got.iter().enumerate() {
+            assert_eq!(tokens, &want[i], "request {} diverged under batching", i + 1);
+        }
+    }
+
+    #[test]
+    fn continuous_admission_is_fifo() {
+        // 4 equal requests, 2 slots: the first two (by queue order) must
+        // finish a whole generation before the last two can.
+        let router = Router::new(BatcherConfig::default());
+        let mut joins = Vec::new();
+        for i in 0..4u64 {
+            let r = router.clone();
+            joins.push(std::thread::spawn(move || {
+                // deterministic queue order: wait for the i previous
+                // requests to be enqueued first
+                while r.queue_len() < i as usize {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                r.submit(GenRequest::text(i + 1, "same work", 8)).unwrap()
+            }));
+        }
+        // start serving only once the queue order is fixed
+        while router.queue_len() < 4 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let batcher = tiny_continuous(2);
+        let r2 = router.clone();
+        let h = std::thread::spawn(move || batcher.serve(r2));
+        let mut by_id: Vec<(u64, f64)> =
+            joins.into_iter().map(|j| j.join().unwrap()).map(|r| (r.id, r.total_s)).collect();
+        by_id.sort_by_key(|(id, _)| *id);
+        router.shutdown();
+        h.join().unwrap();
+        // requests 1/2 ran in the first wave; 3/4 waited for slots
+        for early in 0..2 {
+            for late in 2..4 {
+                assert!(
+                    by_id[early].1 < by_id[late].1,
+                    "FIFO violated: req {} ({:.4}s) vs req {} ({:.4}s)",
+                    by_id[early].0,
+                    by_id[early].1,
+                    by_id[late].0,
+                    by_id[late].1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_sampler_params_cannot_panic_the_scheduler() {
+        // top_k: 0 / non-positive temperature come straight off the
+        // wire; they must degrade to greedy, not panic the (single)
+        // scheduler thread and wedge the server
+        let router = Router::new(BatcherConfig::default());
+        let batcher = tiny_continuous(2);
+        let r2 = router.clone();
+        let h = std::thread::spawn(move || batcher.serve(r2));
+
+        let mut req = GenRequest::text(1, "bad sampler", 3);
+        req.top_k = Some(0);
+        req.temperature = -1.0;
+        let resp = router.submit(req).unwrap();
+        assert_eq!(resp.tokens.len(), 3);
+
+        // and the scheduler is still alive for well-formed requests
+        let ok = router.submit(GenRequest::text(2, "still alive", 2)).unwrap();
+        assert_eq!(ok.tokens.len(), 2);
+        router.shutdown();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn continuous_retires_without_draining() {
+        // unequal max_new: the short request must come back while the
+        // long one is still decoding (strictly earlier total time), and
+        // both must complete.
+        let router = Router::new(BatcherConfig::default());
+        let batcher = tiny_continuous(2);
+        let r2 = router.clone();
+        let h = std::thread::spawn(move || batcher.serve(r2));
+
+        let r_long = router.clone();
+        let long = std::thread::spawn(move || {
+            r_long.submit(GenRequest::text(1, "long running request", 40)).unwrap()
+        });
+        // make sure the long one is admitted first
+        std::thread::sleep(Duration::from_millis(20));
+        let short = router.submit(GenRequest::text(2, "short", 2)).unwrap();
+        let long = long.join().unwrap();
+        assert_eq!(short.tokens.len(), 2);
+        assert_eq!(long.tokens.len(), 40);
+        assert!(
+            short.total_s < long.total_s,
+            "short request ({:.4}s) should retire before the long one ({:.4}s)",
+            short.total_s,
+            long.total_s
+        );
+        router.shutdown();
+        h.join().unwrap();
     }
 }

@@ -1,17 +1,21 @@
-//! Serving layer: request router, dynamic batcher and a TCP/JSON API.
+//! Serving layer: request router, continuous batcher and a TCP/JSON
+//! API.
 //!
 //! ArcLight's paper stops at the decode loop; a deployable system needs
-//! a request path. This module provides one in the shape of
-//! llama.cpp's server / vLLM's router, scaled to this engine: a bounded
-//! request queue with backpressure, N engine *slots* (each owning its
-//! own KV cache) pulling work, a batching window for queue fairness,
-//! and a line-delimited JSON protocol over TCP. Python is nowhere on
-//! this path.
+//! a request path. This module provides one in the shape of vLLM's
+//! router, scaled to this engine: a bounded request queue with
+//! backpressure feeding a **continuous batcher** — one engine whose KV
+//! pool holds many sequences, admitting queued requests into the
+//! running batch at decode-step boundaries and retiring finished ones
+//! without draining it. The pre-continuous sequential-slot scheduler
+//! ([`EngineSlot`]) is kept as the benchmark baseline. The wire
+//! protocol is line-delimited JSON over TCP; Python is nowhere on this
+//! path.
 
 pub mod api;
 pub mod batcher;
 pub mod request;
 
 pub use api::{ServerClient, ServerHandle};
-pub use batcher::{BatcherConfig, EngineSlot, Router};
+pub use batcher::{BatcherConfig, ContinuousBatcher, EngineSlot, Router};
 pub use request::{GenRequest, GenResponse};

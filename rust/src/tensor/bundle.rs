@@ -57,7 +57,10 @@ impl TensorBundle {
     }
 
     /// Pair up two bundles of the same width (Parallel construction mode).
-    pub fn zip<'a>(&'a self, other: &'a TensorBundle) -> impl Iterator<Item = (TensorId, TensorId)> + 'a {
+    pub fn zip<'a>(
+        &'a self,
+        other: &'a TensorBundle,
+    ) -> impl Iterator<Item = (TensorId, TensorId)> + 'a {
         assert_eq!(self.width(), other.width(), "bundle width mismatch");
         self.ids.iter().copied().zip(other.ids.iter().copied())
     }

@@ -231,7 +231,10 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.i += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')) {
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
             self.i += 1;
         }
         std::str::from_utf8(&self.b[start..self.i])
@@ -401,7 +404,8 @@ mod tests {
 
     #[test]
     fn parses_real_manifest_shape() {
-        let src = r#"{"config":{"dim":64},"decode":{"args":[{"name":"t","dtype":"i32","shape":[]}]}}"#;
+        let src =
+            r#"{"config":{"dim":64},"decode":{"args":[{"name":"t","dtype":"i32","shape":[]}]}}"#;
         let j = Json::parse(src).unwrap();
         let args = j.get("decode").unwrap().get("args").unwrap().as_arr().unwrap();
         assert_eq!(args[0].get("dtype").unwrap().as_str(), Some("i32"));

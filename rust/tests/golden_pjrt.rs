@@ -40,6 +40,7 @@ fn engine(strategy: Strategy, threads: usize, prefill: Option<usize>) -> Engine 
         topo: Topology::uniform(4, 4, 100.0, 25.0),
         prefill_rows: prefill,
         seed: 0,
+        batch_slots: 1,
     };
     Engine::from_alf(&dir.join("tiny.alf"), &opts).unwrap()
 }
@@ -82,7 +83,8 @@ fn prefill_matches_pjrt() {
     let Some(session) = load_session(&dir) else {
         return;
     };
-    let prompt: Vec<i32> = (0..session.manifest.prompt_len as i32).map(|i| (i * 7 + 3) % 512).collect();
+    let prompt: Vec<i32> =
+        (0..session.manifest.prompt_len as i32).map(|i| (i * 7 + 3) % 512).collect();
 
     let (pjrt_logits, _, _) = session.run_prefill(&prompt).unwrap();
     let mut eng = engine(Strategy::arclight_single(), 2, Some(prompt.len()));
@@ -117,7 +119,8 @@ fn greedy_generation_matches_pjrt() {
     let Some(session) = load_session(&dir) else {
         return;
     };
-    let prompt: Vec<i32> = (0..session.manifest.prompt_len as i32).map(|i| (i * 13 + 1) % 512).collect();
+    let prompt: Vec<i32> =
+        (0..session.manifest.prompt_len as i32).map(|i| (i * 13 + 1) % 512).collect();
     let pjrt_tokens = session.generate(&prompt, 12).unwrap();
 
     let mut eng = engine(Strategy::arclight_single(), 2, Some(prompt.len()));

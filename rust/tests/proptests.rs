@@ -135,6 +135,7 @@ fn prop_engine_deterministic_across_random_configs() {
             topo: topo.clone(),
             prefill_rows: None,
             seed: 31,
+            batch_slots: 1,
         };
         let mut e = Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap();
         let res = e.generate(&[5, 9, 2], 10, &arclight::frontend::Sampler::greedy());
@@ -218,6 +219,9 @@ fn prop_f16_widen_narrow_random() {
         }
         let x = arclight::util::f16_to_f32(bits);
         let back = arclight::util::f32_to_f16(x);
-        assert!(back == bits || (bits == 0x8000 && back == 0x8000), "{bits:#06x} → {x} → {back:#06x}");
+        assert!(
+            back == bits || (bits == 0x8000 && back == 0x8000),
+            "{bits:#06x} → {x} → {back:#06x}"
+        );
     }
 }

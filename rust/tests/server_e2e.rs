@@ -1,4 +1,6 @@
-//! End-to-end serving tests: TCP API → router → batcher → engine slots.
+//! End-to-end serving tests: TCP API → router → scheduler → engine.
+//! Both schedulers are exercised: the sequential-slot baseline and the
+//! continuous batcher.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -7,7 +9,21 @@ use arclight::baseline::Strategy;
 use arclight::frontend::{Engine, EngineOptions};
 use arclight::model::ModelConfig;
 use arclight::numa::Topology;
-use arclight::server::{BatcherConfig, EngineSlot, GenRequest, Router, ServerClient, ServerHandle};
+use arclight::server::{
+    BatcherConfig, ContinuousBatcher, EngineSlot, GenRequest, Router, ServerClient, ServerHandle,
+};
+
+fn tiny_engine(batch_slots: usize) -> Engine {
+    let opts = EngineOptions {
+        strategy: Strategy::arclight_single(),
+        threads: 2,
+        topo: Topology::uniform(2, 2, 100.0, 25.0),
+        prefill_rows: None,
+        seed: 7,
+        batch_slots,
+    };
+    Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
+}
 
 fn start_server(slots: usize) -> (ServerHandle, Arc<Router>, Vec<std::thread::JoinHandle<()>>) {
     let router = Router::new(BatcherConfig {
@@ -17,17 +33,21 @@ fn start_server(slots: usize) -> (ServerHandle, Arc<Router>, Vec<std::thread::Jo
     });
     let mut threads = Vec::new();
     for _ in 0..slots {
-        let opts = EngineOptions {
-            strategy: Strategy::arclight_single(),
-            threads: 2,
-            topo: Topology::uniform(2, 2, 100.0, 25.0),
-            prefill_rows: None,
-            seed: 7,
-        };
-        let engine = Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap();
+        let engine = tiny_engine(1);
         let r = router.clone();
         threads.push(std::thread::spawn(move || EngineSlot::new(engine).serve(r)));
     }
+    let server = ServerHandle::start("127.0.0.1:0", router.clone()).unwrap();
+    (server, router, threads)
+}
+
+fn start_continuous(
+    batch_slots: usize,
+) -> (ServerHandle, Arc<Router>, Vec<std::thread::JoinHandle<()>>) {
+    let router = Router::new(BatcherConfig::default());
+    let batcher = ContinuousBatcher::new(tiny_engine(batch_slots));
+    let r = router.clone();
+    let threads = vec![std::thread::spawn(move || batcher.serve(r))];
     let server = ServerHandle::start("127.0.0.1:0", router.clone()).unwrap();
     (server, router, threads)
 }
@@ -126,6 +146,61 @@ fn malformed_requests_get_errors_not_crashes() {
     for t in slots {
         t.join().unwrap();
     }
+}
+
+#[test]
+fn continuous_server_end_to_end() {
+    let (server, router, threads) = start_continuous(4);
+    let addr = server.addr.to_string();
+
+    let mut joins = Vec::new();
+    for i in 0..8u64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut c = ServerClient::connect(&addr).unwrap();
+            c.generate(&GenRequest::text(i + 1, "continuous batch", 5)).unwrap()
+        }));
+    }
+    for j in joins {
+        let resp = j.join().unwrap();
+        assert_eq!(resp.tokens.len(), 5);
+    }
+
+    let mut c = ServerClient::connect(&addr).unwrap();
+    let m = c.metrics().unwrap();
+    assert_eq!(m.get("requests_total").unwrap().as_usize(), Some(8));
+    assert!(m.get("decode_steps").unwrap().as_usize().unwrap() > 0);
+    assert!(m.get("batch_occupancy").unwrap().as_f64().unwrap() > 1.0);
+
+    server.stop();
+    drop(router);
+    for t in threads {
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn continuous_server_matches_slot_server_tokens() {
+    // the scheduler must be invisible in the tokens: continuous and
+    // sequential serving of the same prompt agree exactly
+    let (s1, r1, t1) = start_server(1);
+    let mut c1 = ServerClient::connect(&s1.addr.to_string()).unwrap();
+    let a = c1.generate(&GenRequest::text(1, "the same prompt", 8)).unwrap();
+    s1.stop();
+    drop(r1);
+    for t in t1 {
+        t.join().unwrap();
+    }
+
+    let (s2, r2, t2) = start_continuous(3);
+    let mut c2 = ServerClient::connect(&s2.addr.to_string()).unwrap();
+    let b = c2.generate(&GenRequest::text(1, "the same prompt", 8)).unwrap();
+    s2.stop();
+    drop(r2);
+    for t in t2 {
+        t.join().unwrap();
+    }
+    assert_eq!(a.tokens, b.tokens);
 }
 
 #[test]

@@ -52,7 +52,8 @@ fn fig11_shape_tp_beats_llama_and_wall_exists() {
     for nodes in [2usize, 4] {
         let threads = 48 * nodes;
         let llama = decode_tok_s(&c, Strategy::llama_distribute(nodes), threads, &topo, 15, 64, 2);
-        let arc_b = decode_tok_s(&c, Strategy::arclight_tp(nodes, SyncMode::SyncB), threads, &topo, 15, 64, 2);
+        let tp_b = Strategy::arclight_tp(nodes, SyncMode::SyncB);
+        let arc_b = decode_tok_s(&c, tp_b, threads, &topo, 15, 64, 2);
         assert!(
             arc_b.tok_per_s > llama.tok_per_s * 1.15,
             "N={nodes}: TP {} vs llama {}",

@@ -16,6 +16,7 @@ fn engine(strategy: Strategy, threads: usize) -> Engine {
         topo: Topology::uniform(4, 4, 100.0, 25.0),
         prefill_rows: None,
         seed: 99,
+        batch_slots: 1,
     };
     Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
 }
@@ -78,6 +79,7 @@ fn four_way_tp_rejected_on_tiny() {
         topo: Topology::uniform(4, 4, 100.0, 25.0),
         prefill_rows: None,
         seed: 99,
+        batch_slots: 1,
     };
     let r = std::panic::catch_unwind(|| Engine::new_synthetic(ModelConfig::tiny(), &opts));
     assert!(r.is_err(), "tiny model must reject 4-way TP (2 kv heads)");
@@ -93,6 +95,7 @@ fn small_model_four_way_tp_agrees() {
             topo: topo.clone(),
             prefill_rows: None,
             seed: 5,
+            batch_slots: 1,
         };
         Engine::new_synthetic(ModelConfig::small_25m(), &opts).unwrap()
     };

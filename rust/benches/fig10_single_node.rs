@@ -35,6 +35,8 @@ fn main() {
     let best_llama = llama.ys.iter().cloned().fold(0.0, f64::max);
     assert!(best_arc > best_llama, "ArcLight should edge out llama.cpp on one node");
     assert!(best_arc < best_llama * 1.3, "single-node gap should be modest");
-    println!("single-node advantage: +{:.1}% (paper: 'slightly higher')",
-             (best_arc / best_llama - 1.0) * 100.0);
+    println!(
+        "single-node advantage: +{:.1}% (paper: 'slightly higher')",
+        (best_arc / best_llama - 1.0) * 100.0
+    );
 }

@@ -11,11 +11,13 @@
 //! * the synchronization discipline (Sync A/B vs llama.cpp's global
 //!   barrier after every operator).
 
-use crate::memory::PlanMode;
+use std::sync::Arc;
+
+use crate::memory::{MemoryPool, PlanMode};
 use crate::model::{BuildSpec, ModelConfig};
-use crate::numa::{Core, Topology};
-use crate::sched::SyncMode;
-use crate::threads::Organization;
+use crate::numa::{Core, CostModel, Topology};
+use crate::sched::{RealExecutor, SimExecutor, SyncMode};
+use crate::threads::{Organization, ThreadPool};
 
 /// llama.cpp's `-numa` flag (appendix A.3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,6 +124,31 @@ impl Strategy {
             // llama.cpp has only the global-barrier discipline
             Strategy::LlamaCpp { .. } => SyncMode::SyncA,
         }
+    }
+
+    /// Build the real (wall-clock) backend for this strategy: bind
+    /// `threads` workers to cores, derive the single/TP organizations
+    /// and wrap them with the memory pool. The engine and the parity
+    /// tests drive the result through the `sched::Executor` trait.
+    pub fn real_executor(
+        &self,
+        pool: Arc<MemoryPool>,
+        topo: &Topology,
+        threads: usize,
+    ) -> RealExecutor {
+        let cores = self.bind_cores(topo, threads);
+        let (single, tp) = self.organizations(&cores);
+        let workers = Arc::new(ThreadPool::new(cores));
+        RealExecutor::new(pool, workers, Arc::new(single), Arc::new(tp), self.sync())
+    }
+
+    /// Build the virtual-time backend for this strategy on `topo` —
+    /// the same binding/organization derivation as
+    /// [`Strategy::real_executor`], charged to the cost model instead.
+    pub fn sim_executor(&self, topo: &Topology, threads: usize) -> SimExecutor {
+        let cores = self.bind_cores(topo, threads);
+        let (single, tp) = self.organizations(&cores);
+        SimExecutor::new(CostModel::new(topo.clone()), cores, single, tp, self.sync())
     }
 }
 

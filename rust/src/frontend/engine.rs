@@ -21,11 +21,11 @@ use anyhow::{bail, Result};
 
 use crate::baseline::Strategy;
 use crate::graph::SlotAllocator;
+use crate::memory::MemoryPool;
 use crate::model::synth;
 use crate::model::{AlfFile, ModelConfig, ModelGraphs};
 use crate::numa::Topology;
-use crate::sched::{BatchView, ExecParams, RealExecutor};
-use crate::threads::ThreadPool;
+use crate::sched::{BatchView, ExecParams, Executor};
 
 use super::sampler::Sampler;
 
@@ -105,7 +105,11 @@ impl GenerationResult {
 /// The real-execution engine.
 pub struct Engine {
     pub graphs: ModelGraphs,
-    executor: RealExecutor,
+    /// Shared weight/KV/activation storage the graphs were planned on.
+    pool: Arc<MemoryPool>,
+    /// The backend every pass goes through — held as a trait object so
+    /// the decode loop is backend-agnostic (`sched::Executor`).
+    executor: Box<dyn Executor + Send + Sync>,
     /// Cursor of the classic single-sequence API (KV-pool slot 0).
     pos: usize,
     /// KV-pool slot bookkeeping for the multi-sequence API.
@@ -156,21 +160,12 @@ impl Engine {
         }
         let graphs = ModelGraphs::build(spec);
         let pool = graphs.pool.clone().expect("real engine needs buffers");
-
-        let cores = opts.strategy.bind_cores(&opts.topo, opts.threads);
-        let (single, tp) = opts.strategy.organizations(&cores);
-        let threads = Arc::new(ThreadPool::new(cores));
-        let executor = RealExecutor::new(
-            pool,
-            threads,
-            Arc::new(single),
-            Arc::new(tp),
-            opts.strategy.sync(),
-        );
+        let executor = opts.strategy.real_executor(pool.clone(), &opts.topo, opts.threads);
         let n_slots = graphs.batch_slots();
         Ok(Engine {
             graphs,
-            executor,
+            pool,
+            executor: Box::new(executor),
             pos: 0,
             slots: SlotAllocator::new(n_slots),
             seq_pos: vec![0; n_slots],
@@ -266,7 +261,7 @@ impl Engine {
         let tokens_id = self.graphs.decode_batch_tokens.expect("batch tokens leaf");
         self.write_tokens(&graph, tokens_id, &toks);
         let params = ExecParams::batched(BatchView::new(kv_base, pos));
-        self.executor.run(&graph, params);
+        self.executor.run(&graph, &params);
         let logits_id = self.graphs.decode_batch_logits.expect("batch logits");
         let all = self.read_logits(&graph, logits_id);
         let vocab = self.cfg().vocab;
@@ -276,9 +271,8 @@ impl Engine {
     fn write_tokens(&self, graph: &crate::graph::Graph, id: crate::tensor::TensorId, toks: &[i32]) {
         let buf = graph.buf(id);
         assert_eq!(buf.len, toks.len() * 4);
-        let pool = self.executor.pool.clone();
         unsafe {
-            let dst = pool.arena(buf.arena).bytes_mut(buf.off, buf.len);
+            let dst = self.pool.arena(buf.arena).bytes_mut(buf.off, buf.len);
             for (i, t) in toks.iter().enumerate() {
                 dst[i * 4..(i + 1) * 4].copy_from_slice(&t.to_le_bytes());
             }
@@ -287,9 +281,7 @@ impl Engine {
 
     fn read_logits(&self, graph: &crate::graph::Graph, id: crate::tensor::TensorId) -> Vec<f32> {
         let buf = graph.buf(id);
-        unsafe {
-            self.executor.pool.arena(buf.arena).f32s(buf.off, buf.len / 4).to_vec()
-        }
+        unsafe { self.pool.arena(buf.arena).f32s(buf.off, buf.len / 4).to_vec() }
     }
 
     /// One decode step: ingest `token` at the current position, return
@@ -299,7 +291,7 @@ impl Engine {
         let graph = self.graphs.decode.clone();
         self.write_tokens(&graph, self.graphs.decode_tokens, &[token]);
         let params = ExecParams::dense(self.pos, 1);
-        self.executor.run(&graph, params);
+        self.executor.run(&graph, &params);
         self.pos += 1;
         self.read_logits(&graph, self.graphs.decode_logits)
     }
@@ -319,7 +311,7 @@ impl Engine {
                 let pg = pg.clone();
                 self.write_tokens(&pg, ptoks, tokens);
                 let params = ExecParams::dense(0, rows);
-                self.executor.run(&pg, params);
+                self.executor.run(&pg, &params);
                 self.pos = rows;
                 return self.read_logits(&pg, plogits);
             }

@@ -79,8 +79,9 @@ impl GraphBuilder {
         self.group_nodes.get(g).copied().unwrap_or(0)
     }
 
-    pub fn finish(self) -> (Graph, Option<MemoryPool>) {
+    pub fn finish(mut self) -> (Graph, Option<MemoryPool>) {
         debug_assert!(self.graph.check_topological().is_ok());
+        self.graph.resolve_kernels();
         (self.graph, self.pool)
     }
 
@@ -261,7 +262,7 @@ impl GraphBuilder {
         TensorBundle::new(out)
     }
 
-    /// Embedding lookup: tokens [rows] i32 × table [vocab, d] → [rows, d].
+    /// Embedding lookup: tokens `[rows]` i32 × table [vocab, d] → [rows, d].
     pub fn embed(&mut self, table: &TensorBundle, tokens: &TensorBundle) -> TensorBundle {
         let d = self.graph.meta(table.single()).row_len();
         let rows = self.graph.meta(tokens.single()).numel();
@@ -279,7 +280,7 @@ impl GraphBuilder {
         TensorBundle::one(id)
     }
 
-    /// RMSNorm: x [rows, d] × gain [d] → [rows, d].
+    /// RMSNorm: x [rows, d] × gain `[d]` → [rows, d].
     pub fn rmsnorm(&mut self, x: &TensorBundle, g: &TensorBundle, eps: f32) -> TensorBundle {
         self.zip_op(
             "rmsnorm",
@@ -326,8 +327,15 @@ impl GraphBuilder {
             );
             let group = if x.width() > 1 { Some(part) } else { self.graph.meta(xs).group };
             let name = format!("matmul.{}.{part}", self.graph.tensors.len());
-            let id = self.push_op(name, DType::F32, vec![rows, n], OpKind::MatMul,
-                                  vec![xs, ws], group, None);
+            let id = self.push_op(
+                name,
+                DType::F32,
+                vec![rows, n],
+                OpKind::MatMul,
+                vec![xs, ws],
+                group,
+                None,
+            );
             out.push(id);
         }
         self.push_entry(out.clone());
@@ -456,8 +464,15 @@ impl GraphBuilder {
         let mut out = Vec::with_capacity(g);
         for part in 0..g {
             let name = format!("scatter.{}.{part}", self.graph.tensors.len());
-            let id = self.push_op(name, DType::F32, shape.clone(), OpKind::Copy,
-                                  vec![xid], Some(part), None);
+            let id = self.push_op(
+                name,
+                DType::F32,
+                shape.clone(),
+                OpKind::Copy,
+                vec![xid],
+                Some(part),
+                None,
+            );
             out.push(id);
         }
         self.push_entry(out.clone());

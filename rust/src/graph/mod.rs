@@ -24,6 +24,7 @@ pub use kv_cache::{KvCacheSet, SlotAllocator};
 pub use node::{OpKind, TensorMeta};
 
 use crate::memory::BufRef;
+use crate::ops::kernel::{Kernel, KernelRegistry};
 use crate::tensor::{TensorBundle, TensorId};
 
 /// One entry of the static execution list: the bundle of tensors whose
@@ -39,11 +40,38 @@ pub struct ExecEntry {
 pub struct Graph {
     pub tensors: Vec<TensorMeta>,
     pub exec: Vec<ExecEntry>,
+    /// Kernel resolved for each tensor's producing op (parallel to
+    /// `tensors`; filled once by [`Graph::resolve_kernels`] at build).
+    kernels: Vec<&'static dyn Kernel>,
 }
 
 impl Graph {
     pub fn meta(&self, id: TensorId) -> &TensorMeta {
         &self.tensors[id.index()]
+    }
+
+    /// Resolve the kernel for every tensor through the
+    /// [`KernelRegistry`]. Called once by `GraphBuilder::finish`;
+    /// executors then dispatch through [`Graph::kernel`] with no per-op
+    /// `OpKind` matching. Unexecutable graphs (e.g. i32 matmul weights)
+    /// are rejected here, at build time.
+    pub fn resolve_kernels(&mut self) {
+        let reg = KernelRegistry::global();
+        self.kernels = self
+            .tensors
+            .iter()
+            .map(|t| {
+                let wdtype = t.src.get(1).map(|s| self.tensors[s.index()].dtype);
+                reg.resolve(&t.op, wdtype)
+            })
+            .collect();
+    }
+
+    /// The kernel executing tensor `id`'s producing operator (resolved
+    /// at graph build — panics on a graph that never ran
+    /// [`Graph::resolve_kernels`]).
+    pub fn kernel(&self, id: TensorId) -> &'static dyn Kernel {
+        self.kernels[id.index()]
     }
 
     pub fn meta_mut(&mut self, id: TensorId) -> &mut TensorMeta {

@@ -19,14 +19,14 @@ pub enum OpKind {
     RmsNormHeads { eps: f32, heads: usize, head_dim: usize },
     /// src: [x, w] → x·wᵀ. Weight may be F32/Q4_0/Q8_0.
     MatMul,
-    /// src: [x]; rotary embedding at position `pos0 + row`.
+    /// src: `[x]`; rotary embedding at position `pos0 + row`.
     Rope { theta: f32, heads: usize, head_dim: usize },
     /// src: [kv_rows, cache-leaf]; writes rows into the cache at the
     /// current position. Output aliases the cache buffer.
     StoreKv { kv_heads: usize, head_dim: usize, max_seq: usize },
     /// src: [q, k_cache, v_cache] → [rows, heads*head_dim].
     Attention { heads: usize, kv_heads: usize, head_dim: usize, max_seq: usize },
-    /// src: [a] → silu(a).
+    /// src: `[a]` → silu(a).
     Silu,
     /// src: [a, b] → a + b.
     Add,
@@ -34,9 +34,9 @@ pub enum OpKind {
     Mul,
     /// src: [gate, up] → silu(gate) * up (fused).
     SwiGlu,
-    /// src: [x] → copy (Scatter desugars to per-node copies).
+    /// src: `[x]` → copy (Scatter desugars to per-node copies).
     Copy,
-    /// src: [x ([rows, d])] → x[row] as [1, d] (prefill takes the last
+    /// src: [x ([rows, d])] → `x[row]` as [1, d] (prefill takes the last
     /// row before the LM head so logits are computed once, not ×rows).
     SliceRow { row: usize },
     /// src: [p_0, ..., p_{G-1}] → Σ p_g (the Gather reduction).

@@ -20,6 +20,7 @@ use arclight::frontend::{ByteTokenizer, Engine, EngineOptions, Sampler};
 use arclight::model::{synth, ModelConfig};
 use arclight::numa::Topology;
 use arclight::report;
+use arclight::runtime::PjrtExecutor;
 use arclight::sched::SyncMode;
 use arclight::server::{BatcherConfig, ContinuousBatcher, EngineSlot, Router, ServerHandle};
 
@@ -296,9 +297,9 @@ fn cmd_trace(args: &Args) -> Result<()> {
 
 fn cmd_golden(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
-    let session = arclight::runtime::PjrtSession::load(&dir)?;
-    let prompt: Vec<i32> = (0..session.manifest.prompt_len as i32).collect();
-    let pjrt_tokens = session.generate(&prompt, 8)?;
+    let pjrt = PjrtExecutor::load(&dir)?;
+    let prompt: Vec<i32> = (0..pjrt.session.manifest.prompt_len as i32).collect();
+    let max_new = 8usize;
 
     let opts = EngineOptions {
         strategy: Strategy::arclight_single(),
@@ -309,7 +310,12 @@ fn cmd_golden(args: &Args) -> Result<()> {
         batch_slots: 1,
     };
     let mut engine = Engine::from_alf(&dir.join("tiny.alf"), &opts)?;
-    let res = engine.generate(&prompt, 8, &Sampler::greedy());
+    let res = engine.generate(&prompt, max_new, &Sampler::greedy());
+
+    // Drive the PJRT backend through the same object-safe `Executor`
+    // API the native engine routes every pass through.
+    let graph = engine.graphs.decode.clone();
+    let pjrt_tokens = pjrt.generate_greedy(&graph, &prompt, max_new);
     if pjrt_tokens == res.tokens {
         println!("golden check OK: native engine matches PJRT ({pjrt_tokens:?})");
         Ok(())

@@ -167,8 +167,20 @@ pub fn generate_alf(cfg: &ModelConfig, seed: u64, path: &std::path::Path) -> Res
     use crate::util::json::{obj, Json};
     let mut names = vec!["tok_emb".to_string()];
     for l in 0..cfg.n_layers {
-        for s in ["attn_norm", "wq", "wk", "wv", "wo", "q_norm", "k_norm",
-                  "mlp_norm", "w_gate", "w_up", "w_down"] {
+        let layer_weights = [
+            "attn_norm",
+            "wq",
+            "wk",
+            "wv",
+            "wo",
+            "q_norm",
+            "k_norm",
+            "mlp_norm",
+            "w_gate",
+            "w_up",
+            "w_down",
+        ];
+        for s in layer_weights {
             names.push(format!("layers.{l}.{s}"));
         }
     }

@@ -21,7 +21,7 @@ pub fn embed_rows(
     }
 }
 
-/// Accumulate: dst[i] += src[i] over [e0, e1) — the Gather operator's
+/// Accumulate: `dst[i] += src[i]` over [e0, e1) — the Gather operator's
 /// partial-sum reduction (§3.3: "collects and sums the output tensors
 /// from all subgraphs").
 pub fn accumulate(src: &[f32], dst: &mut [f32], e0: usize, e1: usize) {

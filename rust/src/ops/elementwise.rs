@@ -3,14 +3,14 @@
 //! All kernels operate on an explicit element range `[e0, e1)` so
 //! groups partition flat activations evenly.
 
-/// out[i] = a[i] + b[i] over [e0, e1).
+/// `out[i] = a[i] + b[i]` over [e0, e1).
 pub fn add(a: &[f32], b: &[f32], out: &mut [f32], e0: usize, e1: usize) {
     for i in e0..e1 {
         out[i] = a[i] + b[i];
     }
 }
 
-/// out[i] = a[i] * b[i] over [e0, e1).
+/// `out[i] = a[i] * b[i]` over [e0, e1).
 pub fn mul(a: &[f32], b: &[f32], out: &mut [f32], e0: usize, e1: usize) {
     for i in e0..e1 {
         out[i] = a[i] * b[i];
@@ -23,14 +23,14 @@ pub fn silu_scalar(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// out[i] = silu(a[i]) over [e0, e1).
+/// `out[i] = silu(a[i])` over [e0, e1).
 pub fn silu(a: &[f32], out: &mut [f32], e0: usize, e1: usize) {
     for i in e0..e1 {
         out[i] = silu_scalar(a[i]);
     }
 }
 
-/// Fused SwiGLU gate: out[i] = silu(gate[i]) * up[i] — saves one full
+/// Fused SwiGLU gate: `out[i] = silu(gate[i]) * up[i]` — saves one full
 /// activation pass vs separate silu+mul (used by the perf-optimized
 /// graph; both forms are tested equivalent).
 pub fn swiglu(gate: &[f32], up: &[f32], out: &mut [f32], e0: usize, e1: usize) {

@@ -1,0 +1,271 @@
+//! The `Kernel` abstraction: *what* an operator computes, separated
+//! from *how* executors partition, cost and place the work — the seam
+//! behind the paper's "compatibility with arbitrary CPU devices" (§1).
+//!
+//! One [`Kernel`] implementation exists per [`OpKind`] variant (matmul
+//! further split by weight dtype — see [`super::kernels`]). A kernel
+//! answers four questions about its operator:
+//!
+//! * [`Kernel::units`] — how many work units the operator partitions
+//!   across its thread group (the §2.7 row policy: matmul partitions
+//!   output features, attention/rope partition heads, element-wise ops
+//!   partition flat elements);
+//! * [`Kernel::cost`] — the analytic (FLOPs, bytes) profile of a unit
+//!   range, the contract between real execution and the simulator;
+//! * [`Kernel::traffic`] — the per-NUMA-node byte attribution of a
+//!   unit range for the virtual-time cost model;
+//! * [`Kernel::run`] — real execution of a unit range over the arena
+//!   views of [`OpCtx`].
+//!
+//! Kernels are stateless singletons registered in [`KernelRegistry`]
+//! and resolved **once per graph** at build time
+//! ([`crate::graph::Graph::resolve_kernels`]); executors dispatch
+//! through [`crate::graph::Graph::kernel`] and never match on
+//! [`OpKind`] themselves.
+
+use crate::graph::{Graph, OpKind, TensorMeta};
+use crate::memory::MemoryPool;
+use crate::numa::cost::Traffic;
+use crate::ops::OpCost;
+use crate::sched::ExecParams;
+use crate::tensor::{DType, TensorId};
+
+use super::kernels as k;
+
+/// Execution context of one operator instance — the **only** place the
+/// unsafe arena-view plumbing lives.
+///
+/// # Safety contract
+///
+/// The raw-pointer views returned by [`OpCtx::f32s_mut`] (and friends)
+/// are sound because of two invariants upheld together:
+///
+/// 1. a kernel's `run(ctx, u0, u1)` writes only the output region its
+///    unit range owns and treats every input as read-only;
+/// 2. the executors hand concurrent workers **disjoint** unit ranges
+///    via [`crate::util::chunk_range`] —
+///    [`crate::sched::debug_check_partition`] asserts in debug builds
+///    that those ranges are non-overlapping and tile `[0, units)`.
+pub struct OpCtx<'a> {
+    pub graph: &'a Graph,
+    pub pool: &'a MemoryPool,
+    /// The tensor whose producing operator is being executed.
+    pub id: TensorId,
+    pub params: &'a ExecParams,
+}
+
+impl<'a> OpCtx<'a> {
+    /// Header of the output tensor.
+    pub fn meta(&self) -> &'a TensorMeta {
+        self.graph.meta(self.id)
+    }
+
+    /// The `i`-th source tensor of the operator.
+    pub fn src(&self, i: usize) -> TensorId {
+        self.meta().src[i]
+    }
+
+    /// Immutable f32 view of a tensor's whole buffer.
+    ///
+    /// # Safety
+    /// No concurrent writer may overlap the range (see the type-level
+    /// safety contract).
+    pub unsafe fn f32s(&self, id: TensorId) -> &'a [f32] {
+        let b = self.graph.buf(id);
+        self.pool.arena(b.arena).f32s(b.off, b.len / 4)
+    }
+
+    /// Mutable f32 view of a tensor's whole buffer.
+    ///
+    /// # Safety
+    /// The written region must be disjoint from every other live view
+    /// (the unit partition guarantees this for well-behaved kernels).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn f32s_mut(&self, id: TensorId) -> &'a mut [f32] {
+        let b = self.graph.buf(id);
+        self.pool.arena(b.arena).f32s_mut(b.off, b.len / 4)
+    }
+
+    /// Immutable byte view (quantized weights).
+    ///
+    /// # Safety
+    /// As [`OpCtx::f32s`].
+    pub unsafe fn bytes(&self, id: TensorId) -> &'a [u8] {
+        let b = self.graph.buf(id);
+        self.pool.arena(b.arena).bytes(b.off, b.len)
+    }
+
+    /// Immutable i32 view (token buffers).
+    ///
+    /// # Safety
+    /// As [`OpCtx::f32s`].
+    pub unsafe fn i32s(&self, id: TensorId) -> &'a [i32] {
+        let b = self.graph.buf(id);
+        let raw = self.pool.arena(b.arena).bytes(b.off, b.len);
+        std::slice::from_raw_parts(raw.as_ptr() as *const i32, raw.len() / 4)
+    }
+}
+
+/// Simulator-side environment for one worker's traffic derivation.
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficEnv {
+    /// NUMA nodes on the simulated machine.
+    pub n_nodes: usize,
+    /// Workers on the same NUMA node executing this operator (shared
+    /// activation streams amortize over them — see the matmul kernel).
+    pub co_readers: usize,
+    /// Cache-dedup amortization of broadcast reads at m = 1.
+    pub bcast_amort: f64,
+}
+
+/// One operator implementation: unit policy, analytic profile, NUMA
+/// traffic attribution and real execution. Implementations are
+/// stateless singletons (op parameters ride in [`OpKind`]); resolution
+/// happens once per graph through [`KernelRegistry::resolve`].
+pub trait Kernel: Send + Sync {
+    /// Short name for traces, reports and error messages.
+    fn name(&self) -> &'static str;
+
+    /// Work units this operator partitions across its thread group —
+    /// the row policy of §2.7. Row counts come from tensor shapes,
+    /// clamped to the pass's active rows so a partially-filled batch
+    /// graph partitions correctly.
+    fn units(&self, meta: &TensorMeta, params: &ExecParams) -> usize;
+
+    /// Analytic resource profile of one worker computing units
+    /// `[u0, u1)` — the contract between real execution and the
+    /// virtual-time simulator.
+    fn cost(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        params: &ExecParams,
+        u0: usize,
+        u1: usize,
+    ) -> OpCost;
+
+    /// Per-NUMA-node byte/FLOP attribution of units `[u0, u1)`; node
+    /// attribution comes from each source tensor's placement. Callers
+    /// should prefer [`op_traffic`], which clips empty ranges.
+    fn traffic(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        params: &ExecParams,
+        u0: usize,
+        u1: usize,
+        env: &TrafficEnv,
+    ) -> Traffic;
+
+    /// Execute units `[u0, u1)` for real.
+    ///
+    /// # Safety
+    /// Caller must guarantee the [`OpCtx`] disjointness contract:
+    /// concurrent invocations carry non-overlapping unit ranges, and
+    /// `u0 <= u1 <= self.units(...)`.
+    unsafe fn run(&self, ctx: &OpCtx<'_>, u0: usize, u1: usize);
+}
+
+impl std::fmt::Debug for dyn Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Kernel({})", self.name())
+    }
+}
+
+/// Traffic of one worker computing units `[u0, u1)` of tensor `id`
+/// (empty ranges yield empty traffic).
+pub fn op_traffic(
+    graph: &Graph,
+    id: TensorId,
+    params: &ExecParams,
+    u0: usize,
+    u1: usize,
+    env: &TrafficEnv,
+) -> Traffic {
+    if u0 >= u1 {
+        return Traffic::new(env.n_nodes);
+    }
+    graph.kernel(id).traffic(graph, id, params, u0, u1, env)
+}
+
+/// The kernel registry: maps an [`OpKind`] (plus the weight dtype for
+/// matmul) to its singleton [`Kernel`]. Resolution is done once at
+/// graph build; the hot path only sees resolved `&'static dyn Kernel`
+/// references.
+pub struct KernelRegistry(());
+
+static REGISTRY: KernelRegistry = KernelRegistry(());
+
+impl KernelRegistry {
+    /// The process-wide registry.
+    pub fn global() -> &'static KernelRegistry {
+        &REGISTRY
+    }
+
+    /// Every registered kernel (completeness introspection for tests).
+    pub fn kernels(&self) -> &'static [&'static dyn Kernel] {
+        &k::ALL
+    }
+
+    /// Resolve the kernel for `op`. `weight_dtype` is the dtype of the
+    /// operator's second source when it has one — only matmul keys on
+    /// it (F32 / Q4_0 / Q8_0 variants).
+    ///
+    /// Panics on an unsupported combination (e.g. i32 matmul weights):
+    /// graphs that cannot execute are rejected at build time, not
+    /// mid-pass.
+    pub fn resolve(&self, op: &OpKind, weight_dtype: Option<DType>) -> &'static dyn Kernel {
+        match op {
+            OpKind::Leaf => &k::LEAF,
+            OpKind::Embed => &k::EMBED,
+            OpKind::RmsNorm { .. } => &k::RMSNORM,
+            OpKind::RmsNormHeads { .. } => &k::RMSNORM_HEADS,
+            OpKind::MatMul => match weight_dtype {
+                Some(DType::F32) => &k::MATMUL_F32,
+                Some(DType::Q4_0) => &k::MATMUL_Q4_0,
+                Some(DType::Q8_0) => &k::MATMUL_Q8_0,
+                other => panic!("no matmul kernel for weight dtype {other:?}"),
+            },
+            OpKind::Rope { .. } => &k::ROPE,
+            OpKind::StoreKv { .. } => &k::STORE_KV,
+            OpKind::Attention { .. } => &k::ATTENTION,
+            OpKind::Silu => &k::SILU,
+            OpKind::Add => &k::ADD,
+            OpKind::Mul => &k::MUL,
+            OpKind::SwiGlu => &k::SWIGLU,
+            OpKind::Copy => &k::COPY,
+            OpKind::SliceRow { .. } => &k::SLICE_ROW,
+            OpKind::AddN => &k::ADD_N,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lists_one_kernel_per_op_variant() {
+        let reg = KernelRegistry::global();
+        let names: std::collections::BTreeSet<&str> =
+            reg.kernels().iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), reg.kernels().len(), "duplicate kernel names");
+        for n in ["embed", "matmul_q4_0", "attention", "add_n"] {
+            assert!(names.contains(n), "missing kernel '{n}'");
+        }
+    }
+
+    #[test]
+    fn matmul_resolution_keys_on_weight_dtype() {
+        let reg = KernelRegistry::global();
+        assert_eq!(reg.resolve(&OpKind::MatMul, Some(DType::F32)).name(), "matmul_f32");
+        assert_eq!(reg.resolve(&OpKind::MatMul, Some(DType::Q4_0)).name(), "matmul_q4_0");
+        assert_eq!(reg.resolve(&OpKind::MatMul, Some(DType::Q8_0)).name(), "matmul_q8_0");
+    }
+
+    #[test]
+    #[should_panic(expected = "no matmul kernel")]
+    fn i32_matmul_weights_rejected_at_resolution() {
+        KernelRegistry::global().resolve(&OpKind::MatMul, Some(DType::I32));
+    }
+}

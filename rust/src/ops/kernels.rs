@@ -1,0 +1,1167 @@
+//! Kernel implementations: one [`Kernel`] per [`OpKind`] variant
+//! (matmul per weight dtype).
+//!
+//! Each impl owns all four facets of its operator — unit policy,
+//! analytic cost, NUMA traffic attribution and real execution — which
+//! used to live in three hand-synchronized `match OpKind` sites
+//! (`sched::exec_op::run_op`, `sched::partition_units`,
+//! `sched::traffic::op_traffic`). Adding an operator now means adding
+//! one kernel here and one [`super::kernel::KernelRegistry::resolve`]
+//! arm; executors pick the change up without edits.
+//!
+//! Byte formulas delegate to [`super::cost`]; node attribution comes
+//! from each source tensor's placement. Matmul weight rows and
+//! attention KV heads use exact row-range attribution (placement
+//! alignment is the paper's whole point); secondary streams use
+//! proportional spreading.
+
+use crate::graph::{Graph, OpKind, TensorMeta};
+use crate::numa::cost::Traffic;
+use crate::numa::Placement;
+use crate::sched::ExecParams;
+use crate::tensor::TensorId;
+
+use super::cost as oc;
+use super::kernel::{Kernel, OpCtx, TrafficEnv};
+use super::OpCost;
+use super::{attention, common, elementwise, gemm, norm, rope};
+
+pub(crate) static LEAF: LeafKernel = LeafKernel;
+pub(crate) static EMBED: EmbedKernel = EmbedKernel;
+pub(crate) static RMSNORM: RmsNormKernel = RmsNormKernel;
+pub(crate) static RMSNORM_HEADS: RmsNormHeadsKernel = RmsNormHeadsKernel;
+pub(crate) static MATMUL_F32: MatMulF32Kernel = MatMulF32Kernel;
+pub(crate) static MATMUL_Q4_0: MatMulQ40Kernel = MatMulQ40Kernel;
+pub(crate) static MATMUL_Q8_0: MatMulQ80Kernel = MatMulQ80Kernel;
+pub(crate) static ROPE: RopeKernel = RopeKernel;
+pub(crate) static STORE_KV: StoreKvKernel = StoreKvKernel;
+pub(crate) static ATTENTION: AttentionKernel = AttentionKernel;
+pub(crate) static SILU: SiluKernel = SiluKernel;
+pub(crate) static ADD: AddKernel = AddKernel;
+pub(crate) static MUL: MulKernel = MulKernel;
+pub(crate) static SWIGLU: SwiGluKernel = SwiGluKernel;
+pub(crate) static COPY: CopyKernel = CopyKernel;
+pub(crate) static SLICE_ROW: SliceRowKernel = SliceRowKernel;
+pub(crate) static ADD_N: AddNKernel = AddNKernel;
+
+pub(crate) static ALL: [&dyn Kernel; 17] = [
+    &LEAF,
+    &EMBED,
+    &RMSNORM,
+    &RMSNORM_HEADS,
+    &MATMUL_F32,
+    &MATMUL_Q4_0,
+    &MATMUL_Q8_0,
+    &ROPE,
+    &STORE_KV,
+    &ATTENTION,
+    &SILU,
+    &ADD,
+    &MUL,
+    &SWIGLU,
+    &COPY,
+    &SLICE_ROW,
+    &ADD_N,
+];
+
+// ---------------------------------------------------------------------------
+// shared helpers
+// ---------------------------------------------------------------------------
+
+/// Rows of the output actually computed this pass: tensor rows clamped
+/// to the active lanes of a partially-filled batch step (and sliced
+/// tails like the prefill last-row logits).
+fn act_rows(meta: &TensorMeta, params: &ExecParams) -> usize {
+    meta.rows().min(params.rows.max(1))
+}
+
+/// Flat-element unit count of element-wise operators.
+fn flat_units(meta: &TensorMeta, params: &ExecParams) -> usize {
+    act_rows(meta, params) * meta.row_len()
+}
+
+fn spread_into(t: &mut Traffic, placement: &Placement, bytes: f64) {
+    let n = t.bytes.len();
+    for (node, b) in placement.spread_bytes(bytes, n) {
+        t.add_bytes(node, b);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Leaf
+// ---------------------------------------------------------------------------
+
+/// No producer: weights, inputs, KV caches. Zero units, zero work.
+pub struct LeafKernel;
+
+impl Kernel for LeafKernel {
+    fn name(&self) -> &'static str {
+        "leaf"
+    }
+
+    fn units(&self, _meta: &TensorMeta, _params: &ExecParams) -> usize {
+        0
+    }
+
+    fn cost(
+        &self,
+        _graph: &Graph,
+        _id: TensorId,
+        _params: &ExecParams,
+        _u0: usize,
+        _u1: usize,
+    ) -> OpCost {
+        OpCost::default()
+    }
+
+    fn traffic(
+        &self,
+        _graph: &Graph,
+        _id: TensorId,
+        _params: &ExecParams,
+        _u0: usize,
+        _u1: usize,
+        env: &TrafficEnv,
+    ) -> Traffic {
+        Traffic::new(env.n_nodes)
+    }
+
+    unsafe fn run(&self, _ctx: &OpCtx<'_>, _u0: usize, _u1: usize) {}
+}
+
+// ---------------------------------------------------------------------------
+// Embed
+// ---------------------------------------------------------------------------
+
+/// src: [emb_table, tokens] → [rows, d] f32; units = token rows.
+pub struct EmbedKernel;
+
+impl Kernel for EmbedKernel {
+    fn name(&self) -> &'static str {
+        "embed"
+    }
+
+    fn units(&self, meta: &TensorMeta, params: &ExecParams) -> usize {
+        act_rows(meta, params)
+    }
+
+    fn cost(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        _params: &ExecParams,
+        u0: usize,
+        u1: usize,
+    ) -> OpCost {
+        oc::embed(graph.meta(id).row_len(), u0, u1)
+    }
+
+    fn traffic(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        params: &ExecParams,
+        u0: usize,
+        u1: usize,
+        env: &TrafficEnv,
+    ) -> Traffic {
+        let meta = graph.meta(id);
+        let c = self.cost(graph, id, params, u0, u1);
+        let mut t = Traffic::new(env.n_nodes);
+        t.flops += c.flops;
+        spread_into(&mut t, &graph.meta(meta.src[0]).placement, c.weight_bytes);
+        spread_into(&mut t, &meta.placement, c.output_bytes);
+        t
+    }
+
+    unsafe fn run(&self, ctx: &OpCtx<'_>, u0: usize, u1: usize) {
+        let table = ctx.f32s(ctx.src(0));
+        let tokens = ctx.i32s(ctx.src(1));
+        let out = ctx.f32s_mut(ctx.id);
+        let d = ctx.meta().row_len();
+        common::embed_rows(table, tokens, out, d, u0, u1);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RmsNorm
+// ---------------------------------------------------------------------------
+
+/// src: [x, gain]; RMS-normalize rows. Units = rows.
+pub struct RmsNormKernel;
+
+impl Kernel for RmsNormKernel {
+    fn name(&self) -> &'static str {
+        "rmsnorm"
+    }
+
+    fn units(&self, meta: &TensorMeta, params: &ExecParams) -> usize {
+        act_rows(meta, params)
+    }
+
+    fn cost(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        _params: &ExecParams,
+        u0: usize,
+        u1: usize,
+    ) -> OpCost {
+        oc::rmsnorm(graph.meta(id).row_len(), u0, u1)
+    }
+
+    fn traffic(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        params: &ExecParams,
+        u0: usize,
+        u1: usize,
+        env: &TrafficEnv,
+    ) -> Traffic {
+        let meta = graph.meta(id);
+        let d = meta.row_len();
+        let c = self.cost(graph, id, params, u0, u1);
+        let mut t = Traffic::new(env.n_nodes);
+        t.flops += c.flops;
+        let x = graph.meta(meta.src[0]);
+        t.add_placed(&x.placement, u0, u1, x.rows().max(1), d as f64 * 4.0);
+        spread_into(&mut t, &graph.meta(meta.src[1]).placement, c.weight_bytes);
+        t.add_placed(&meta.placement, u0, u1, meta.rows().max(1), d as f64 * 4.0);
+        t
+    }
+
+    unsafe fn run(&self, ctx: &OpCtx<'_>, u0: usize, u1: usize) {
+        let eps = match &ctx.meta().op {
+            OpKind::RmsNorm { eps } => *eps,
+            other => unreachable!("rmsnorm kernel on {}", other.name()),
+        };
+        let x = ctx.f32s(ctx.src(0));
+        let g = ctx.f32s(ctx.src(1));
+        let out = ctx.f32s_mut(ctx.id);
+        norm::rmsnorm(x, g, out, ctx.meta().row_len(), eps, u0, u1);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RmsNormHeads (Qwen3 QK-norm)
+// ---------------------------------------------------------------------------
+
+/// src: [x, gain]; per-head RMSNorm. Units = heads.
+pub struct RmsNormHeadsKernel;
+
+impl Kernel for RmsNormHeadsKernel {
+    fn name(&self) -> &'static str {
+        "rmsnorm_heads"
+    }
+
+    fn units(&self, meta: &TensorMeta, _params: &ExecParams) -> usize {
+        match &meta.op {
+            OpKind::RmsNormHeads { heads, .. } => *heads,
+            other => unreachable!("rmsnorm_heads kernel on {}", other.name()),
+        }
+    }
+
+    fn cost(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        _params: &ExecParams,
+        u0: usize,
+        u1: usize,
+    ) -> OpCost {
+        let meta = graph.meta(id);
+        let head_dim = match &meta.op {
+            OpKind::RmsNormHeads { head_dim, .. } => *head_dim,
+            other => unreachable!("rmsnorm_heads kernel on {}", other.name()),
+        };
+        let elems = (meta.rows() * (u1 - u0) * head_dim) as f64;
+        OpCost {
+            flops: elems * 3.0,
+            weight_bytes: 0.0,
+            input_bytes: elems * 4.0,
+            output_bytes: elems * 4.0,
+        }
+    }
+
+    fn traffic(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        params: &ExecParams,
+        u0: usize,
+        u1: usize,
+        env: &TrafficEnv,
+    ) -> Traffic {
+        let meta = graph.meta(id);
+        let c = self.cost(graph, id, params, u0, u1);
+        let mut t = Traffic::new(env.n_nodes);
+        t.flops += c.flops;
+        spread_into(&mut t, &graph.meta(meta.src[0]).placement, c.input_bytes);
+        spread_into(&mut t, &meta.placement, c.output_bytes);
+        t
+    }
+
+    unsafe fn run(&self, ctx: &OpCtx<'_>, u0: usize, u1: usize) {
+        let (eps, heads, head_dim) = match &ctx.meta().op {
+            OpKind::RmsNormHeads { eps, heads, head_dim } => (*eps, *heads, *head_dim),
+            other => unreachable!("rmsnorm_heads kernel on {}", other.name()),
+        };
+        let x = ctx.f32s(ctx.src(0));
+        let g = ctx.f32s(ctx.src(1));
+        let out = ctx.f32s_mut(ctx.id);
+        let rows = act_rows(ctx.meta(), ctx.params);
+        norm::rmsnorm_heads(x, g, out, rows, heads, head_dim, eps, u0, u1);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MatMul (per weight dtype)
+// ---------------------------------------------------------------------------
+
+/// Analytic profile shared by the matmul variants; `m` is the full row
+/// count of the activation operand (the simulator charges the built
+/// graph shape — active-lane clamping is a real-execution concern).
+fn matmul_cost(graph: &Graph, id: TensorId, u0: usize, u1: usize) -> OpCost {
+    let meta = graph.meta(id);
+    let x = graph.meta(meta.src[0]);
+    let w = graph.meta(meta.src[1]);
+    oc::gemm(x.rows(), w.row_len(), u0, u1, w.dtype)
+}
+
+/// NUMA attribution shared by the matmul variants.
+fn matmul_traffic(graph: &Graph, id: TensorId, u0: usize, u1: usize, env: &TrafficEnv) -> Traffic {
+    let meta = graph.meta(id);
+    let x = graph.meta(meta.src[0]);
+    let w = graph.meta(meta.src[1]);
+    let k = w.row_len();
+    let n = w.rows();
+    let m = x.rows();
+    let c = oc::gemm(m, k, u0, u1, w.dtype);
+    let mut t = Traffic::new(env.n_nodes);
+    t.flops += c.flops;
+    // exact row-range attribution for the dominant weight stream
+    t.add_placed(&w.placement, u0, u1, n, w.dtype.row_bytes(k) as f64);
+    // x is read in full by every worker of the stripe; with m > 1
+    // (prefill) the blocked-GEMM stream amortizes over the node's L3;
+    // at m = 1 (decode) partial cache dedup applies
+    let amortize = if m > 1 {
+        env.co_readers.max(1) as f64
+    } else {
+        env.bcast_amort.max(1.0)
+    };
+    spread_into(&mut t, &x.placement, c.input_bytes / amortize);
+    spread_into(&mut t, &meta.placement, c.output_bytes);
+    t
+}
+
+/// GEMM dimensions for real execution: `m` clamps to the pass's active
+/// rows so a partially-filled batch step does no wasted work.
+fn matmul_run_dims(ctx: &OpCtx<'_>) -> (usize, usize, usize) {
+    let w = ctx.graph.meta(ctx.src(1));
+    let m = ctx.graph.meta(ctx.src(0)).rows().min(ctx.params.rows.max(1));
+    (m, w.row_len(), w.rows())
+}
+
+macro_rules! matmul_kernel {
+    ($kernel:ident, $name:literal, $weights:ident, $gemm:path) => {
+        #[doc = concat!("src: [x, w] → x·wᵀ with ", $name, " weights; units = output features.")]
+        pub struct $kernel;
+
+        impl Kernel for $kernel {
+            fn name(&self) -> &'static str {
+                $name
+            }
+
+            fn units(&self, meta: &TensorMeta, _params: &ExecParams) -> usize {
+                meta.row_len()
+            }
+
+            fn cost(
+                &self,
+                graph: &Graph,
+                id: TensorId,
+                _params: &ExecParams,
+                u0: usize,
+                u1: usize,
+            ) -> OpCost {
+                matmul_cost(graph, id, u0, u1)
+            }
+
+            fn traffic(
+                &self,
+                graph: &Graph,
+                id: TensorId,
+                _params: &ExecParams,
+                u0: usize,
+                u1: usize,
+                env: &TrafficEnv,
+            ) -> Traffic {
+                matmul_traffic(graph, id, u0, u1, env)
+            }
+
+            unsafe fn run(&self, ctx: &OpCtx<'_>, u0: usize, u1: usize) {
+                let (m, k, n) = matmul_run_dims(ctx);
+                let x = ctx.f32s(ctx.src(0));
+                let w = ctx.$weights(ctx.src(1));
+                let out = ctx.f32s_mut(ctx.id);
+                $gemm(x, w, out, m, k, n, u0, u1);
+            }
+        }
+    };
+}
+
+matmul_kernel!(MatMulF32Kernel, "matmul_f32", f32s, gemm::gemm_f32);
+matmul_kernel!(MatMulQ40Kernel, "matmul_q4_0", bytes, gemm::gemm_q4_0);
+matmul_kernel!(MatMulQ80Kernel, "matmul_q8_0", bytes, gemm::gemm_q8_0);
+
+// ---------------------------------------------------------------------------
+// Rope
+// ---------------------------------------------------------------------------
+
+/// src: `[x]`; rotary embedding. Units = heads.
+pub struct RopeKernel;
+
+impl Kernel for RopeKernel {
+    fn name(&self) -> &'static str {
+        "rope"
+    }
+
+    fn units(&self, meta: &TensorMeta, _params: &ExecParams) -> usize {
+        match &meta.op {
+            OpKind::Rope { heads, .. } => *heads,
+            other => unreachable!("rope kernel on {}", other.name()),
+        }
+    }
+
+    fn cost(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        _params: &ExecParams,
+        u0: usize,
+        u1: usize,
+    ) -> OpCost {
+        let meta = graph.meta(id);
+        let head_dim = match &meta.op {
+            OpKind::Rope { head_dim, .. } => *head_dim,
+            other => unreachable!("rope kernel on {}", other.name()),
+        };
+        oc::rope(meta.rows(), head_dim, u0, u1)
+    }
+
+    fn traffic(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        params: &ExecParams,
+        u0: usize,
+        u1: usize,
+        env: &TrafficEnv,
+    ) -> Traffic {
+        let meta = graph.meta(id);
+        let c = self.cost(graph, id, params, u0, u1);
+        let mut t = Traffic::new(env.n_nodes);
+        t.flops += c.flops;
+        spread_into(&mut t, &graph.meta(meta.src[0]).placement, c.input_bytes);
+        spread_into(&mut t, &meta.placement, c.output_bytes);
+        t
+    }
+
+    unsafe fn run(&self, ctx: &OpCtx<'_>, u0: usize, u1: usize) {
+        let (theta, heads, head_dim) = match &ctx.meta().op {
+            OpKind::Rope { theta, heads, head_dim } => (*theta, *heads, *head_dim),
+            other => unreachable!("rope kernel on {}", other.name()),
+        };
+        let x = ctx.f32s(ctx.src(0));
+        let out = ctx.f32s_mut(ctx.id);
+        // copy the head range, then rotate in place
+        let rows = act_rows(ctx.meta(), ctx.params);
+        let d = heads * head_dim;
+        for r in 0..rows {
+            let lo = r * d + u0 * head_dim;
+            let hi = r * d + u1 * head_dim;
+            out[lo..hi].copy_from_slice(&x[lo..hi]);
+        }
+        match &ctx.params.batch {
+            Some(bv) => rope::rope_rows(out, heads, head_dim, &bv.pos, theta, u0, u1),
+            None => rope::rope(out, rows, heads, head_dim, ctx.params.pos, theta, u0, u1),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StoreKv
+// ---------------------------------------------------------------------------
+
+/// src: [kv_rows, cache-leaf]; writes rows into the cache at the
+/// current position (output aliases the cache buffer). Units = kv heads.
+pub struct StoreKvKernel;
+
+impl Kernel for StoreKvKernel {
+    fn name(&self) -> &'static str {
+        "store_kv"
+    }
+
+    fn units(&self, meta: &TensorMeta, _params: &ExecParams) -> usize {
+        match &meta.op {
+            OpKind::StoreKv { kv_heads, .. } => *kv_heads,
+            other => unreachable!("store_kv kernel on {}", other.name()),
+        }
+    }
+
+    fn cost(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        _params: &ExecParams,
+        u0: usize,
+        u1: usize,
+    ) -> OpCost {
+        let meta = graph.meta(id);
+        let head_dim = match &meta.op {
+            OpKind::StoreKv { head_dim, .. } => *head_dim,
+            other => unreachable!("store_kv kernel on {}", other.name()),
+        };
+        oc::store_kv(graph.meta(meta.src[0]).rows(), head_dim, u0, u1)
+    }
+
+    fn traffic(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        params: &ExecParams,
+        u0: usize,
+        u1: usize,
+        env: &TrafficEnv,
+    ) -> Traffic {
+        let meta = graph.meta(id);
+        let c = self.cost(graph, id, params, u0, u1);
+        let mut t = Traffic::new(env.n_nodes);
+        t.flops += c.flops;
+        spread_into(&mut t, &graph.meta(meta.src[0]).placement, c.input_bytes);
+        // writes land in the cache (src[1])
+        spread_into(&mut t, &graph.meta(meta.src[1]).placement, c.output_bytes);
+        t
+    }
+
+    unsafe fn run(&self, ctx: &OpCtx<'_>, u0: usize, u1: usize) {
+        let (kv_heads, head_dim, max_seq) = match &ctx.meta().op {
+            OpKind::StoreKv { kv_heads, head_dim, max_seq } => (*kv_heads, *head_dim, *max_seq),
+            other => unreachable!("store_kv kernel on {}", other.name()),
+        };
+        let kv = ctx.f32s(ctx.src(0));
+        // output aliases the cache (src[1]) buffer
+        let cache = ctx.f32s_mut(ctx.src(1));
+        let rows = ctx.graph.meta(ctx.src(0)).rows().min(ctx.params.rows.max(1));
+        match &ctx.params.batch {
+            Some(bv) => attention::store_kv_rows(
+                kv,
+                cache,
+                kv_heads,
+                head_dim,
+                max_seq,
+                &bv.kv_base,
+                &bv.pos,
+                u0,
+                u1,
+            ),
+            None => attention::store_kv(
+                kv,
+                cache,
+                rows,
+                kv_heads,
+                head_dim,
+                max_seq,
+                ctx.params.pos,
+                u0,
+                u1,
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Attention
+// ---------------------------------------------------------------------------
+
+/// src: [q, k_cache, v_cache] → [rows, heads*head_dim]. Units = query
+/// heads; the KV stream is the weight-like operand.
+pub struct AttentionKernel;
+
+impl AttentionKernel {
+    fn geometry(meta: &TensorMeta) -> (usize, usize, usize, usize) {
+        match &meta.op {
+            OpKind::Attention { heads, kv_heads, head_dim, max_seq } => {
+                (*heads, *kv_heads, *head_dim, *max_seq)
+            }
+            other => unreachable!("attention kernel on {}", other.name()),
+        }
+    }
+}
+
+impl Kernel for AttentionKernel {
+    fn name(&self) -> &'static str {
+        "attention"
+    }
+
+    fn units(&self, meta: &TensorMeta, _params: &ExecParams) -> usize {
+        Self::geometry(meta).0
+    }
+
+    fn cost(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        params: &ExecParams,
+        u0: usize,
+        u1: usize,
+    ) -> OpCost {
+        let meta = graph.meta(id);
+        let (heads, kv_heads, head_dim, max_seq) = Self::geometry(meta);
+        let kv_len = params.kv_len().min(max_seq);
+        oc::attention(
+            graph.meta(meta.src[0]).rows(),
+            heads,
+            kv_heads,
+            head_dim,
+            kv_len,
+            graph.meta(meta.src[1]).dtype,
+            u0,
+            u1,
+        )
+    }
+
+    fn traffic(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        params: &ExecParams,
+        u0: usize,
+        u1: usize,
+        env: &TrafficEnv,
+    ) -> Traffic {
+        let meta = graph.meta(id);
+        let (heads, kv_heads, head_dim, max_seq) = Self::geometry(meta);
+        let kv_len = params.kv_len().min(max_seq);
+        let c = self.cost(graph, id, params, u0, u1);
+        let mut t = Traffic::new(env.n_nodes);
+        t.flops += c.flops;
+        spread_into(&mut t, &graph.meta(meta.src[0]).placement, c.input_bytes);
+        // exact attribution of the K/V streams: kv head h occupies row
+        // block [h*max_seq, h*max_seq + kv_len) of the cache
+        let rep = (heads / kv_heads).max(1);
+        let kvh0 = u0 / rep;
+        let kvh1 = u1.div_ceil(rep);
+        let kc = graph.meta(meta.src[1]);
+        let vc = graph.meta(meta.src[2]);
+        let cache_rows = kv_heads * max_seq;
+        for h in kvh0..kvh1 {
+            let r0 = h * max_seq;
+            t.add_placed(&kc.placement, r0, r0 + kv_len, cache_rows, (head_dim * 4) as f64);
+            t.add_placed(&vc.placement, r0, r0 + kv_len, cache_rows, (head_dim * 4) as f64);
+        }
+        spread_into(&mut t, &meta.placement, c.output_bytes);
+        t
+    }
+
+    unsafe fn run(&self, ctx: &OpCtx<'_>, u0: usize, u1: usize) {
+        let (heads, kv_heads, head_dim, max_seq) = Self::geometry(ctx.meta());
+        let q = ctx.f32s(ctx.src(0));
+        let k = ctx.f32s(ctx.src(1));
+        let v = ctx.f32s(ctx.src(2));
+        let out = ctx.f32s_mut(ctx.id);
+        let rows = ctx.graph.meta(ctx.src(0)).rows().min(ctx.params.rows.max(1));
+        match &ctx.params.batch {
+            Some(bv) => attention::attention_rows(
+                q,
+                k,
+                v,
+                out,
+                heads,
+                kv_heads,
+                head_dim,
+                max_seq,
+                &bv.kv_base,
+                &bv.pos,
+                u0,
+                u1,
+            ),
+            None => attention::attention(
+                q,
+                k,
+                v,
+                out,
+                rows,
+                heads,
+                kv_heads,
+                head_dim,
+                max_seq,
+                ctx.params.pos,
+                u0,
+                u1,
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// element-wise family (flat-element units)
+// ---------------------------------------------------------------------------
+
+/// Traffic of a one-input streaming op (silu/copy/slice_row).
+fn unary_stream_traffic(
+    graph: &Graph,
+    id: TensorId,
+    u0: usize,
+    u1: usize,
+    env: &TrafficEnv,
+) -> Traffic {
+    let meta = graph.meta(id);
+    let c = oc::elementwise(1, u0, u1);
+    let mut t = Traffic::new(env.n_nodes);
+    t.flops += c.flops;
+    spread_into(&mut t, &graph.meta(meta.src[0]).placement, c.input_bytes);
+    spread_into(&mut t, &meta.placement, c.output_bytes);
+    t
+}
+
+/// Traffic of a two-input streaming op (add/mul/swiglu).
+fn binary_stream_traffic(
+    graph: &Graph,
+    id: TensorId,
+    u0: usize,
+    u1: usize,
+    env: &TrafficEnv,
+) -> Traffic {
+    let meta = graph.meta(id);
+    let c = oc::elementwise(2, u0, u1);
+    let mut t = Traffic::new(env.n_nodes);
+    t.flops += c.flops;
+    spread_into(&mut t, &graph.meta(meta.src[0]).placement, c.input_bytes / 2.0);
+    spread_into(&mut t, &graph.meta(meta.src[1]).placement, c.input_bytes / 2.0);
+    spread_into(&mut t, &meta.placement, c.output_bytes);
+    t
+}
+
+macro_rules! elementwise_kernel {
+    ($kernel:ident, $name:literal, $inputs:literal, $traffic:ident,
+     |$ctx:ident, $u0:ident, $u1:ident| $body:expr) => {
+        #[doc = concat!("Element-wise `", $name, "` over flat-element units.")]
+        pub struct $kernel;
+
+        impl Kernel for $kernel {
+            fn name(&self) -> &'static str {
+                $name
+            }
+
+            fn units(&self, meta: &TensorMeta, params: &ExecParams) -> usize {
+                flat_units(meta, params)
+            }
+
+            fn cost(
+                &self,
+                _graph: &Graph,
+                _id: TensorId,
+                _params: &ExecParams,
+                u0: usize,
+                u1: usize,
+            ) -> OpCost {
+                oc::elementwise($inputs, u0, u1)
+            }
+
+            fn traffic(
+                &self,
+                graph: &Graph,
+                id: TensorId,
+                _params: &ExecParams,
+                u0: usize,
+                u1: usize,
+                env: &TrafficEnv,
+            ) -> Traffic {
+                $traffic(graph, id, u0, u1, env)
+            }
+
+            unsafe fn run(&self, $ctx: &OpCtx<'_>, $u0: usize, $u1: usize) {
+                $body
+            }
+        }
+    };
+}
+
+elementwise_kernel!(SiluKernel, "silu", 1, unary_stream_traffic, |ctx, u0, u1| {
+    let a = ctx.f32s(ctx.src(0));
+    let out = ctx.f32s_mut(ctx.id);
+    elementwise::silu(a, out, u0, u1);
+});
+
+elementwise_kernel!(AddKernel, "add", 2, binary_stream_traffic, |ctx, u0, u1| {
+    let a = ctx.f32s(ctx.src(0));
+    let b = ctx.f32s(ctx.src(1));
+    let out = ctx.f32s_mut(ctx.id);
+    elementwise::add(a, b, out, u0, u1);
+});
+
+elementwise_kernel!(MulKernel, "mul", 2, binary_stream_traffic, |ctx, u0, u1| {
+    let a = ctx.f32s(ctx.src(0));
+    let b = ctx.f32s(ctx.src(1));
+    let out = ctx.f32s_mut(ctx.id);
+    elementwise::mul(a, b, out, u0, u1);
+});
+
+elementwise_kernel!(SwiGluKernel, "swiglu", 2, binary_stream_traffic, |ctx, u0, u1| {
+    let g = ctx.f32s(ctx.src(0));
+    let u = ctx.f32s(ctx.src(1));
+    let out = ctx.f32s_mut(ctx.id);
+    elementwise::swiglu(g, u, out, u0, u1);
+});
+
+elementwise_kernel!(CopyKernel, "copy", 1, unary_stream_traffic, |ctx, u0, u1| {
+    let a = ctx.f32s(ctx.src(0));
+    let out = ctx.f32s_mut(ctx.id);
+    out[u0..u1].copy_from_slice(&a[u0..u1]);
+});
+
+// ---------------------------------------------------------------------------
+// SliceRow
+// ---------------------------------------------------------------------------
+
+/// src: [x ([rows, d])] → `x[row]` as [1, d]. Units = d.
+pub struct SliceRowKernel;
+
+impl Kernel for SliceRowKernel {
+    fn name(&self) -> &'static str {
+        "slice_row"
+    }
+
+    fn units(&self, meta: &TensorMeta, _params: &ExecParams) -> usize {
+        meta.row_len()
+    }
+
+    fn cost(
+        &self,
+        _graph: &Graph,
+        _id: TensorId,
+        _params: &ExecParams,
+        u0: usize,
+        u1: usize,
+    ) -> OpCost {
+        oc::elementwise(1, u0, u1)
+    }
+
+    fn traffic(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        _params: &ExecParams,
+        u0: usize,
+        u1: usize,
+        env: &TrafficEnv,
+    ) -> Traffic {
+        unary_stream_traffic(graph, id, u0, u1, env)
+    }
+
+    unsafe fn run(&self, ctx: &OpCtx<'_>, u0: usize, u1: usize) {
+        let row = match &ctx.meta().op {
+            OpKind::SliceRow { row } => *row,
+            other => unreachable!("slice_row kernel on {}", other.name()),
+        };
+        let a = ctx.f32s(ctx.src(0));
+        let out = ctx.f32s_mut(ctx.id);
+        let d = ctx.meta().row_len();
+        out[u0..u1].copy_from_slice(&a[row * d + u0..row * d + u1]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AddN (the Gather reduction)
+// ---------------------------------------------------------------------------
+
+/// src: [p_0, ..., p_{G-1}] → Σ p_g. Units = flat elements.
+pub struct AddNKernel;
+
+impl Kernel for AddNKernel {
+    fn name(&self) -> &'static str {
+        "add_n"
+    }
+
+    fn units(&self, meta: &TensorMeta, params: &ExecParams) -> usize {
+        flat_units(meta, params)
+    }
+
+    fn cost(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        _params: &ExecParams,
+        u0: usize,
+        u1: usize,
+    ) -> OpCost {
+        let streams = graph.meta(id).src.len() as f64;
+        let elems = (u1 - u0) as f64;
+        OpCost {
+            flops: elems * streams,
+            weight_bytes: 0.0,
+            input_bytes: elems * 4.0 * streams,
+            output_bytes: elems * 4.0,
+        }
+    }
+
+    fn traffic(
+        &self,
+        graph: &Graph,
+        id: TensorId,
+        _params: &ExecParams,
+        u0: usize,
+        u1: usize,
+        env: &TrafficEnv,
+    ) -> Traffic {
+        let meta = graph.meta(id);
+        let units = u1 - u0;
+        let bytes = (units * 4) as f64;
+        let mut t = Traffic::new(env.n_nodes);
+        t.flops += (units * meta.src.len()) as f64;
+        for s in &meta.src {
+            spread_into(&mut t, &graph.meta(*s).placement, bytes);
+        }
+        spread_into(&mut t, &meta.placement, bytes);
+        t
+    }
+
+    unsafe fn run(&self, ctx: &OpCtx<'_>, u0: usize, u1: usize) {
+        let out = ctx.f32s_mut(ctx.id);
+        let src = &ctx.meta().src;
+        let first = ctx.f32s(src[0]);
+        out[u0..u1].copy_from_slice(&first[u0..u1]);
+        for s in &src[1..] {
+            let p = ctx.f32s(*s);
+            common::accumulate(p, out, u0, u1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::memory::MemoryPool;
+    use crate::ops::kernel::op_traffic;
+    use crate::sched::BatchView;
+    use crate::tensor::{DType, TensorBundle};
+
+    fn env2() -> TrafficEnv {
+        TrafficEnv { n_nodes: 2, co_readers: 1, bcast_amort: 1.0 }
+    }
+
+    unsafe fn f32s<'a>(pool: &'a MemoryPool, graph: &Graph, id: TensorId) -> &'a [f32] {
+        let b = graph.buf(id);
+        pool.arena(b.arena).f32s(b.off, b.len / 4)
+    }
+
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn f32s_mut<'a>(pool: &'a MemoryPool, graph: &Graph, id: TensorId) -> &'a mut [f32] {
+        let b = graph.buf(id);
+        pool.arena(b.arena).f32s_mut(b.off, b.len / 4)
+    }
+
+    /// Execute units `[u0, u1)` of `id` through its resolved kernel.
+    fn run_units(
+        graph: &Graph,
+        pool: &MemoryPool,
+        id: TensorId,
+        params: &ExecParams,
+        u0: usize,
+        u1: usize,
+    ) {
+        if u0 >= u1 {
+            return;
+        }
+        let ctx = OpCtx { graph, pool, id, params };
+        unsafe { graph.kernel(id).run(&ctx, u0, u1) }
+    }
+
+    /// Build a tiny graph, fill leaves, execute serially, check numbers.
+    #[test]
+    fn serial_execution_of_small_chain() {
+        let pool = MemoryPool::new(1, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0], Placement::Node(0));
+        let x = b.leaf("x", DType::F32, vec![1, 4], Placement::Node(0));
+        let w = b.leaf("w", DType::F32, vec![2, 4], Placement::Node(0));
+        let y = b.matmul(&TensorBundle::one(x), &TensorBundle::one(w));
+        let z = b.add(&y, &y);
+        let (graph, pool) = b.finish();
+        let pool = pool.unwrap();
+
+        unsafe {
+            f32s_mut(&pool, &graph, x).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+            f32s_mut(&pool, &graph, w)
+                .copy_from_slice(&[1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        }
+        let params = ExecParams::dense(0, 1);
+        for entry in &graph.exec {
+            for id in entry.bundle.iter() {
+                let units = graph.kernel(id).units(graph.meta(id), &params);
+                run_units(&graph, &pool, id, &params, 0, units);
+            }
+        }
+        unsafe {
+            assert_eq!(f32s(&pool, &graph, y.single()), &[1.0, 2.0]);
+            assert_eq!(f32s(&pool, &graph, z.single()), &[2.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn addn_sums_partials() {
+        let pool = MemoryPool::new(2, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0, 1], Placement::Node(0));
+        let p0 = b.leaf("p0", DType::F32, vec![1, 4], Placement::Node(0));
+        let p1 = b.leaf("p1", DType::F32, vec![1, 4], Placement::Node(1));
+        let z = b.gather(&TensorBundle::new(vec![p0, p1]));
+        let (graph, pool) = b.finish();
+        let pool = pool.unwrap();
+        unsafe {
+            f32s_mut(&pool, &graph, p0).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+            f32s_mut(&pool, &graph, p1).copy_from_slice(&[10.0, 20.0, 30.0, 40.0]);
+        }
+        let params = ExecParams::dense(0, 1);
+        run_units(&graph, &pool, z.single(), &params, 0, 4);
+        unsafe {
+            assert_eq!(f32s(&pool, &graph, z.single()), &[11.0, 22.0, 33.0, 44.0]);
+        }
+    }
+
+    #[test]
+    fn batched_store_kv_targets_per_row_slots() {
+        // pooled cache of 2 slots × 4 positions; two rows land in their
+        // own slot's position (slot 0 pos 2, slot 1 pos 0)
+        let pool = MemoryPool::new(1, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0], Placement::Node(0));
+        let kvsrc = b.leaf("kv", DType::F32, vec![2, 4], Placement::Node(0));
+        let cache = b.kv_leaf("cache", vec![1, 8, 4], Placement::Node(0));
+        let stored = b.store_kv(&TensorBundle::one(kvsrc), &TensorBundle::one(cache), 1, 4, 8);
+        let (graph, pool) = b.finish();
+        let pool = pool.unwrap();
+        unsafe {
+            f32s_mut(&pool, &graph, kvsrc)
+                .copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        }
+        let view = BatchView::new(vec![0, 4], vec![2, 0]);
+        let params = ExecParams::batched(view);
+        run_units(&graph, &pool, stored.single(), &params, 0, 1);
+        unsafe {
+            let c = f32s(&pool, &graph, cache);
+            // row 0 → slot 0 position 2
+            assert_eq!(&c[2 * 4..3 * 4], &[1.0, 2.0, 3.0, 4.0]);
+            // row 1 → slot 1 (base 4) position 0
+            assert_eq!(&c[4 * 4..5 * 4], &[5.0, 6.0, 7.0, 8.0]);
+        }
+    }
+
+    #[test]
+    fn store_kv_aliases_cache() {
+        let pool = MemoryPool::new(1, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0], Placement::Node(0));
+        let kvsrc = b.leaf("kv", DType::F32, vec![1, 2 * 4], Placement::Node(0));
+        let cache = b.kv_leaf("cache", vec![2, 8, 4], Placement::Node(0));
+        let stored = b.store_kv(&TensorBundle::one(kvsrc), &TensorBundle::one(cache), 2, 4, 8);
+        let (graph, pool) = b.finish();
+        let pool = pool.unwrap();
+        assert_eq!(graph.buf(stored.single()), graph.buf(cache));
+        unsafe {
+            f32s_mut(&pool, &graph, kvsrc)
+                .copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        }
+        let params = ExecParams::dense(3, 1);
+        run_units(&graph, &pool, stored.single(), &params, 0, 2);
+        unsafe {
+            let c = f32s(&pool, &graph, cache);
+            // head 0 slot 3
+            assert_eq!(&c[3 * 4..4 * 4], &[1.0, 2.0, 3.0, 4.0]);
+            // head 1 slot 3 (head stride = 8 slots × 4)
+            assert_eq!(&c[8 * 4 + 3 * 4..8 * 4 + 4 * 4], &[5.0, 6.0, 7.0, 8.0]);
+        }
+    }
+
+    // --- traffic attribution (ported from the old sched::traffic) ----------
+
+    #[test]
+    fn matmul_weight_bytes_go_to_weight_node() {
+        let mut b = GraphBuilder::sim(vec![0, 1], Placement::Node(0));
+        let x = b.leaf("x", DType::F32, vec![1, 64], Placement::Node(0));
+        let w = b.leaf("w", DType::Q4_0, vec![32, 64], Placement::Node(1));
+        let y = b.matmul(&TensorBundle::one(x), &TensorBundle::one(w));
+        let (g, _) = b.finish();
+        let t = op_traffic(&g, y.single(), &ExecParams::dense(0, 1), 0, 32, &env2());
+        // weights (36 B/row × 32 rows) on node 1
+        assert!(t.bytes[1] >= 32.0 * 36.0);
+        // activation (64×4) on node 0
+        assert!(t.bytes[0] >= 256.0);
+        assert_eq!(t.flops, 2.0 * 64.0 * 32.0);
+    }
+
+    #[test]
+    fn matmul_row_range_attribution_is_exact() {
+        // weights sharded: rows 0..16 node0, 16..32 node1; a worker doing
+        // rows 0..16 must read weights ONLY from node 0
+        let mut b = GraphBuilder::sim(vec![0, 1], Placement::Node(0));
+        let x = b.leaf("x", DType::F32, vec![1, 64], Placement::Node(0));
+        let w = b.leaf("w", DType::F32, vec![32, 64], Placement::even_shards(32, 2));
+        let y = b.matmul(&TensorBundle::one(x), &TensorBundle::one(w));
+        let (g, _) = b.finish();
+        let t = op_traffic(&g, y.single(), &ExecParams::dense(0, 1), 0, 16, &env2());
+        // node1 gets only output-spread bytes (output on node 0) → 0
+        assert_eq!(t.bytes[1], 0.0);
+    }
+
+    #[test]
+    fn attention_kv_stream_is_charged_to_cache_node() {
+        let mut b = GraphBuilder::sim(vec![0, 1], Placement::Node(0));
+        let q = b.leaf("q", DType::F32, vec![1, 64], Placement::Node(0));
+        let kc = b.kv_leaf("k", vec![2, 16, 16], Placement::Node(1));
+        let vc = b.kv_leaf("v", vec![2, 16, 16], Placement::Node(1));
+        let o = b.attention(
+            &TensorBundle::one(q),
+            &TensorBundle::one(kc),
+            &TensorBundle::one(vc),
+            4,
+            2,
+            16,
+            16,
+        );
+        let (g, _) = b.finish();
+        let p = ExecParams::dense(7, 1);
+        let t = op_traffic(&g, o.single(), &p, 0, 4, &env2());
+        // kv_len = 8; 2 kv heads × 8 pos × 16 dim × 4 B × 2 (K+V)
+        let expect = 2.0 * 8.0 * 16.0 * 4.0 * 2.0;
+        assert!((t.bytes[1] - expect).abs() < 1e-6, "{} vs {expect}", t.bytes[1]);
+    }
+
+    #[test]
+    fn partition_halves_traffic() {
+        let mut b = GraphBuilder::sim(vec![0], Placement::Node(0));
+        let x = b.leaf("x", DType::F32, vec![1, 64], Placement::Node(0));
+        let w = b.leaf("w", DType::Q4_0, vec![32, 64], Placement::Node(0));
+        let y = b.matmul(&TensorBundle::one(x), &TensorBundle::one(w));
+        let (g, _) = b.finish();
+        let e = TrafficEnv { n_nodes: 1, co_readers: 1, bcast_amort: 1.0 };
+        let full = op_traffic(&g, y.single(), &ExecParams::dense(0, 1), 0, 32, &e);
+        let half = op_traffic(&g, y.single(), &ExecParams::dense(0, 1), 0, 16, &e);
+        // weight stream halves; activation stream does not
+        let w_bytes = 32.0 * 36.0;
+        assert!(full.bytes[0] - half.bytes[0] > w_bytes / 2.0 * 0.9);
+        assert!(full.flops / half.flops > 1.99 && full.flops / half.flops < 2.01);
+    }
+
+    #[test]
+    fn empty_unit_range_yields_empty_traffic() {
+        let mut b = GraphBuilder::sim(vec![0], Placement::Node(0));
+        let x = b.leaf("x", DType::F32, vec![1, 64], Placement::Node(0));
+        let w = b.leaf("w", DType::Q4_0, vec![32, 64], Placement::Node(0));
+        let y = b.matmul(&TensorBundle::one(x), &TensorBundle::one(w));
+        let (g, _) = b.finish();
+        let e = TrafficEnv { n_nodes: 1, co_readers: 1, bcast_amort: 1.0 };
+        let t = op_traffic(&g, y.single(), &ExecParams::dense(0, 1), 5, 5, &e);
+        assert_eq!(t.total_bytes(), 0.0);
+        assert_eq!(t.flops, 0.0);
+    }
+}

@@ -2,10 +2,18 @@
 //!
 //! Hardware-agnostic operations (copy/reshape) live in [`common`];
 //! CPU-hot operations (GEMM, attention, norms) have row/head-partitioned
-//! kernels: every entry point computes an explicit `[r0, r1)` slice of
+//! entry points: every function computes an explicit `[r0, r1)` slice of
 //! the output so the thread manager can hand disjoint ranges to the
 //! workers of a group — the same work-splitting llama.cpp's compute
 //! threads use, made explicit.
+//!
+//! The [`kernel::Kernel`] trait ties the pieces together: one
+//! implementation per graph [`crate::graph::OpKind`] (see [`kernels`])
+//! owns its unit policy, analytic cost ([`cost`]), NUMA traffic
+//! attribution and real execution, registered in
+//! [`kernel::KernelRegistry`] and resolved once per graph at build
+//! time. Executors dispatch through the trait and carry no per-op
+//! knowledge.
 //!
 //! The paper reuses llama.cpp's NEON kernels; this reproduction ships
 //! portable Rust with identical block layouts (`crate::quant`) and an
@@ -19,8 +27,11 @@ pub mod common;
 pub mod cost;
 pub mod elementwise;
 pub mod gemm;
+pub mod kernel;
+pub mod kernels;
 pub mod norm;
 pub mod rope;
 pub mod softmax;
 
 pub use cost::OpCost;
+pub use kernel::{Kernel, KernelRegistry, OpCtx, TrafficEnv};

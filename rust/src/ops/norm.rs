@@ -23,7 +23,7 @@ pub fn rmsnorm(
 }
 
 /// Per-head RMSNorm over `head_dim` segments (Qwen3's q_norm/k_norm):
-/// `x` is [rows, heads*head_dim]; the gain `g` is [head_dim], shared by
+/// `x` is [rows, heads*head_dim]; the gain `g` is `[head_dim]`, shared by
 /// all heads. Normalizes heads `[h0, h1)` of every row.
 #[allow(clippy::too_many_arguments)]
 pub fn rmsnorm_heads(

@@ -3,8 +3,8 @@
 
 use crate::baseline::Strategy;
 use crate::model::{ModelConfig, ModelGraphs};
-use crate::numa::{CostModel, Topology};
-use crate::sched::{ExecParams, SimExecutor};
+use crate::numa::Topology;
+use crate::sched::{ExecParams, Executor};
 
 /// One measured configuration.
 #[derive(Clone, Debug)]
@@ -23,16 +23,11 @@ pub struct FigureSeries {
     pub ys: Vec<f64>,
 }
 
-fn sim_executor(strategy: Strategy, threads: usize, topo: &Topology) -> SimExecutor {
-    let cores = strategy.bind_cores(topo, threads);
-    let (single, tp) = strategy.organizations(&cores);
-    SimExecutor::new(CostModel::new(topo.clone()), cores, single, tp, strategy.sync())
-}
-
 /// Decode throughput (token/s) of one configuration: prompt ingested,
 /// then `gen` steps. Step latency is sampled at `samples` evenly-spaced
 /// positions (attention cost is linear in KV length, so the sampled
-/// mean matches the full sum).
+/// mean matches the full sum). The simulator is driven through the
+/// backend-agnostic `Executor` trait.
 pub fn decode_tok_s(
     cfg: &ModelConfig,
     strategy: Strategy,
@@ -44,14 +39,14 @@ pub fn decode_tok_s(
 ) -> SimPoint {
     let spec = strategy.build_spec(cfg.clone(), topo.n_nodes()).with_sim_only(true);
     let m = ModelGraphs::build(spec);
-    let ex = sim_executor(strategy, threads, topo);
+    let ex = strategy.sim_executor(topo, threads);
 
     let samples = samples.max(1).min(gen);
     let mut total = 0.0;
     let mut remote = 0.0;
     for s in 0..samples {
         let pos = prompt + (gen - 1) * s / samples.max(1);
-        let rep = ex.run(&m.decode, ExecParams::dense(pos, 1), s as u64 + 1);
+        let rep = ex.run(&m.decode, &ExecParams::dense(pos, 1).with_seed(s as u64 + 1));
         total += rep.elapsed;
         remote += rep.remote_fraction();
     }
@@ -77,11 +72,10 @@ pub fn prefill_tok_s(
         .with_sim_only(true)
         .with_prefill(prompt);
     let m = ModelGraphs::build(spec);
-    let ex = sim_executor(strategy, threads, topo);
+    let ex = strategy.sim_executor(topo, threads);
     let rep = ex.run(
         m.prefill.as_ref().expect("prefill graph"),
-        ExecParams::dense(0, prompt),
-        1,
+        &ExecParams::dense(0, prompt).with_seed(1),
     );
     SimPoint {
         strategy: strategy.name(),

@@ -5,8 +5,8 @@
 
 use crate::graph::Graph;
 use crate::numa::CostModel;
-use crate::sched::traffic::op_traffic;
-use crate::sched::{partition_units, ExecParams};
+use crate::ops::kernel::{op_traffic, TrafficEnv};
+use crate::sched::ExecParams;
 use crate::threads::Organization;
 use crate::util::chunk_range;
 use crate::util::json::{obj, Json};
@@ -48,15 +48,19 @@ pub fn trace_pass(
         if width == 1 {
             let id = entry.bundle.single();
             let meta = graph.meta(id);
-            let units = partition_units(meta, &params);
+            let units = graph.kernel(id).units(meta, &params);
             let start = clocks.iter().copied().fold(0.0, f64::max);
             let workers: Vec<(usize, crate::numa::cost::Traffic)> = cores
                 .iter()
                 .enumerate()
                 .map(|(wi, c)| {
                     let (u0, u1) = chunk_range(units, w, wi);
-                    let amort = model.topo.bcast_amort;
-                    (c.id, op_traffic(graph, id, &params, u0, u1, nn, per_node[c.node], amort))
+                    let env = TrafficEnv {
+                        n_nodes: nn,
+                        co_readers: per_node[c.node],
+                        bcast_amort: model.topo.bcast_amort,
+                    };
+                    (c.id, op_traffic(graph, id, &params, u0, u1, &env))
                 })
                 .collect();
             let times = model.op_times(&workers, ei as u64);
@@ -75,7 +79,7 @@ pub fn trace_pass(
             for (gi, g) in org_tp.groups.iter().enumerate() {
                 let id = entry.bundle.get(gi);
                 let meta = graph.meta(id);
-                let units = partition_units(meta, &params);
+                let units = graph.kernel(id).units(meta, &params);
                 let start = g.workers.iter().map(|&wk| clocks[wk]).fold(0.0, f64::max);
                 let workers: Vec<(usize, crate::numa::cost::Traffic)> = g
                     .workers
@@ -83,9 +87,12 @@ pub fn trace_pass(
                     .enumerate()
                     .map(|(rank, &wk)| {
                         let (u0, u1) = chunk_range(units, g.size(), rank);
-                        let amort = model.topo.bcast_amort;
-                        let node = per_node[cores[wk].node];
-                        (cores[wk].id, op_traffic(graph, id, &params, u0, u1, nn, node, amort))
+                        let env = TrafficEnv {
+                            n_nodes: nn,
+                            co_readers: per_node[cores[wk].node],
+                            bcast_amort: model.topo.bcast_amort,
+                        };
+                        (cores[wk].id, op_traffic(graph, id, &params, u0, u1, &env))
                     })
                     .collect();
                 let times = model.op_times(&workers, ei as u64);

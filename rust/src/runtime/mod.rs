@@ -8,6 +8,7 @@
 //! compare the native engine against this path on identical ALF bytes.
 
 pub mod artifacts;
+pub mod exec;
 
 /// The real PJRT bridge binds to the vendored `xla` (xla_extension)
 /// crate, which only the fully-vendored evaluation environment ships.
@@ -21,4 +22,5 @@ pub mod pjrt;
 pub mod pjrt;
 
 pub use artifacts::{ArgSpec, Manifest};
+pub use exec::PjrtExecutor;
 pub use pjrt::{PjrtModel, PjrtSession};

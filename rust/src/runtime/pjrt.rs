@@ -8,7 +8,9 @@
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
-use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+use xla::{ElementType, PjRtClient, PjRtLoadedExecutable};
+
+pub use xla::Literal;
 
 use crate::model::AlfFile;
 use crate::quant::dequantize_row_q4_0;

@@ -1,4 +1,4 @@
-//! Graph computation scheduler (paper §2.6, §3.3–3.4).
+//! Graph computation scheduling (paper §2.6, §3.3–3.4).
 //!
 //! The scheduler walks the static execution list in order. Width-1
 //! entries run on the whole pool (every worker computes a slice of the
@@ -13,16 +13,41 @@
 //!   their independent streams, hiding stragglers (the paper's
 //!   "asynchronous subgraph execution", worth ≈5 tok/s).
 //!
-//! Two executors share all partitioning code: [`real::RealExecutor`]
-//! runs actual kernels on the worker pool; [`sim::SimExecutor`] charges
-//! the identical work to the NUMA cost model in virtual time.
+//! ## Kernels and executors
+//!
+//! Operator semantics live behind the [`crate::ops::kernel::Kernel`]
+//! trait — one implementation per `OpKind` (matmul per weight dtype),
+//! resolved once at graph build into [`crate::graph::Graph::kernel`].
+//! A kernel owns its unit policy (`units`), analytic profile (`cost`),
+//! NUMA byte attribution (`traffic`) and real execution (`run`);
+//! executors carry no per-op knowledge and never match on `OpKind`.
+//!
+//! Backends implement the object-safe [`Executor`] trait — a single
+//! `run(graph, params) -> StepReport` — so the engine, the serving
+//! layer, the report generators and the benches drive
+//! [`real::RealExecutor`] (wall-clock kernels on the worker pool),
+//! [`sim::SimExecutor`] (the identical work charged to the NUMA cost
+//! model in virtual time) and the feature-gated PJRT bridge
+//! (`crate::runtime::PjrtExecutor`) through one API. Both native
+//! executors split work with the same `Kernel::units` +
+//! [`crate::util::chunk_range`] partition, so a strategy comparison
+//! differs only in placement, binding and synchronization.
+//!
+//! ## Safety contract
+//!
+//! Real execution writes through raw-pointer arena views held by
+//! [`crate::ops::kernel::OpCtx`] — the single place unsafe buffer
+//! plumbing lives. Soundness rests on kernels writing only the output
+//! region their unit range owns, plus [`debug_check_partition`]
+//! asserting (in debug builds) that the ranges handed to concurrent
+//! workers are disjoint and tile `[0, units)`.
 
-pub mod exec_op;
 pub mod real;
 pub mod sim;
-pub mod traffic;
 
 use std::sync::Arc;
+
+use crate::graph::Graph;
 
 pub use real::RealExecutor;
 pub use sim::{SimExecutor, SimReport};
@@ -81,18 +106,28 @@ pub struct ExecParams {
     /// Per-row sequence state for multi-sequence (continuous-batching)
     /// passes; `None` for the classic single-sequence graphs.
     pub batch: Option<Arc<BatchView>>,
+    /// Deterministic per-pass tag: seeds the simulator's op jitter
+    /// (pass the decode step index so successive tokens draw fresh
+    /// jitter); the real backends ignore it.
+    pub seed: u64,
 }
 
 impl ExecParams {
     /// A dense single-sequence pass: `rows` tokens starting at `pos`.
     pub fn dense(pos: usize, rows: usize) -> Self {
-        ExecParams { pos, rows, batch: None }
+        ExecParams { pos, rows, batch: None, seed: 0 }
     }
 
     /// A multi-sequence pass described row-by-row.
     pub fn batched(view: BatchView) -> Self {
         let rows = view.rows();
-        ExecParams { pos: 0, rows, batch: Some(Arc::new(view)) }
+        ExecParams { pos: 0, rows, batch: Some(Arc::new(view)), seed: 0 }
+    }
+
+    /// Tag the pass with a deterministic jitter seed (simulator only).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
     }
 
     /// KV positions live after this pass completes (dense passes; for
@@ -102,75 +137,109 @@ impl ExecParams {
     }
 }
 
-/// Work units an operator partitions across its thread group — the row
-/// policy of §2.7 (matmul: weight rows; attention/rope: heads;
-/// element-wise: flat elements). Row counts come from tensor shapes,
-/// clamped to the pass's active rows so a partially-filled batch graph
-/// (and sliced tails like the prefill last-row logits) partitions
-/// correctly.
-pub fn partition_units(meta: &crate::graph::TensorMeta, params: &ExecParams) -> usize {
-    use crate::graph::OpKind::*;
-    let act_rows = meta.rows().min(params.rows.max(1));
-    match &meta.op {
-        Leaf => 0,
-        Embed => act_rows,
-        RmsNorm { .. } => act_rows,
-        RmsNormHeads { heads, .. } => *heads,
-        MatMul => meta.row_len(), // output features N
-        Rope { heads, .. } => *heads,
-        StoreKv { kv_heads, .. } => *kv_heads,
-        Attention { heads, .. } => *heads,
-        SliceRow { .. } => meta.row_len(),
-        Silu | Add | Mul | SwiGlu | Copy | AddN => act_rows * meta.row_len(),
+/// Report of one executed pass, common to every backend.
+#[derive(Clone, Debug, Default)]
+pub struct StepReport {
+    /// Pass latency in the backend's time domain: wall-clock seconds
+    /// for real/PJRT execution, virtual seconds for the simulator.
+    pub elapsed: f64,
+    /// Execution-list entries processed.
+    pub ops: usize,
+    /// Work units of every executed operator, in execution order (TP
+    /// entries contribute one count per group) — the partition-parity
+    /// surface checked across backends.
+    pub unit_counts: Vec<usize>,
+    /// Simulator detail (`None` for real backends).
+    pub sim: Option<SimReport>,
+}
+
+impl StepReport {
+    /// Cross-NUMA traffic share of the pass. Guarded: backends (or
+    /// passes) that move no modelled bytes report 0.0, never NaN.
+    pub fn remote_fraction(&self) -> f64 {
+        self.sim.as_ref().map(SimReport::remote_fraction).unwrap_or(0.0)
+    }
+}
+
+/// A backend that executes one pass of a static graph.
+///
+/// Object-safe on purpose: `frontend::Engine` owns a
+/// `Box<dyn Executor>`, and the report/bench drivers swap real, sim
+/// and PJRT backends behind `&dyn Executor` without parallel code
+/// paths.
+pub trait Executor {
+    /// Short backend name for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Execute one pass of `graph` under `params`.
+    fn run(&self, graph: &Arc<Graph>, params: &ExecParams) -> StepReport;
+}
+
+/// Debug-build check that [`crate::util::chunk_range`] hands out
+/// disjoint, complete unit ranges: worker `i`'s range must end exactly
+/// where worker `i+1`'s begins and the union must tile `[0, units)`.
+/// Together with the kernels' output-ownership rule this is what makes
+/// the raw-pointer arena views of `ops::kernel::OpCtx` sound.
+#[inline]
+pub fn debug_check_partition(units: usize, parts: usize) {
+    #[cfg(debug_assertions)]
+    {
+        let mut end = 0;
+        for i in 0..parts {
+            let (a, b) = crate::util::chunk_range(units, parts, i);
+            debug_assert!(a == end && b >= a, "unit range overlap at worker {i}");
+            end = b;
+        }
+        debug_assert_eq!(end, units, "unit ranges do not tile [0, units)");
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        let _ = (units, parts);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{OpKind, TensorMeta};
-    use crate::numa::Placement;
-    use crate::tensor::DType;
-
-    fn meta(op: OpKind, shape: Vec<usize>) -> TensorMeta {
-        TensorMeta {
-            name: "t".into(),
-            dtype: DType::F32,
-            shape,
-            op,
-            src: vec![],
-            placement: Placement::Node(0),
-            buf: None,
-            group: None,
-        }
-    }
 
     #[test]
-    fn units_per_op() {
+    fn dense_params_track_kv_len() {
         let p = ExecParams::dense(4, 2);
         assert_eq!(p.kv_len(), 6);
-        assert_eq!(partition_units(&meta(OpKind::MatMul, vec![2, 96]), &p), 96);
-        let attn = OpKind::Attention { heads: 8, kv_heads: 2, head_dim: 16, max_seq: 64 };
-        assert_eq!(partition_units(&meta(attn, vec![2, 128]), &p), 8);
-        assert_eq!(partition_units(&meta(OpKind::Add, vec![2, 64]), &p), 128);
-        assert_eq!(partition_units(&meta(OpKind::RmsNorm { eps: 1e-6 }, vec![2, 64]), &p), 2);
+        assert_eq!(p.seed, 0);
+        assert_eq!(p.with_seed(7).seed, 7);
     }
 
     #[test]
-    fn units_clamp_to_active_rows() {
-        // a batch graph built for 8 rows running 3 active lanes
+    fn batched_params_count_rows() {
         let p = ExecParams::batched(BatchView::new(vec![0, 64, 128], vec![5, 0, 9]));
         assert_eq!(p.rows, 3);
-        assert_eq!(partition_units(&meta(OpKind::Embed, vec![8, 64]), &p), 3);
-        assert_eq!(partition_units(&meta(OpKind::Add, vec![8, 64]), &p), 3 * 64);
-        assert_eq!(partition_units(&meta(OpKind::RmsNorm { eps: 1e-6 }, vec![8, 64]), &p), 3);
-        // matmul still partitions output features, not rows
-        assert_eq!(partition_units(&meta(OpKind::MatMul, vec![8, 96]), &p), 96);
+        assert!(p.batch.is_some());
     }
 
     #[test]
     #[should_panic(expected = "row mismatch")]
     fn batch_view_rejects_ragged_rows() {
         BatchView::new(vec![0, 64], vec![1]);
+    }
+
+    #[test]
+    fn step_report_remote_fraction_is_guarded() {
+        // no simulator detail → 0.0, not NaN
+        let rep = StepReport::default();
+        assert_eq!(rep.remote_fraction(), 0.0);
+        // zero-traffic simulator detail → still 0.0
+        let rep = StepReport { sim: Some(SimReport::default()), ..Default::default() };
+        assert_eq!(rep.remote_fraction(), 0.0);
+        assert!(rep.remote_fraction().is_finite());
+    }
+
+    #[test]
+    fn partition_check_accepts_chunk_range() {
+        for units in [0usize, 1, 7, 96, 1000] {
+            for parts in [1usize, 2, 3, 48] {
+                debug_check_partition(units, parts);
+            }
+        }
     }
 }

@@ -9,15 +9,22 @@
 //! * width-G runs under **Sync B** → one dispatch per *run*: each
 //!   worker streams through its group's operators with only the
 //!   group-local spin barrier in between.
+//!
+//! Per-op work comes from the kernel resolved at graph build
+//! (`graph.kernel(id)`): workers split `Kernel::units` with
+//! [`chunk_range`] and execute their slice through `Kernel::run` over
+//! an [`OpCtx`]. The executor itself carries no operator knowledge.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::graph::Graph;
 use crate::memory::MemoryPool;
+use crate::ops::kernel::OpCtx;
 use crate::threads::{Organization, ThreadPool};
 use crate::util::chunk_range;
 
-use super::{exec_op::run_op, partition_units, ExecParams, SyncMode};
+use super::{debug_check_partition, ExecParams, Executor, StepReport, SyncMode};
 
 /// Executes graphs on a shared pool/organization.
 pub struct RealExecutor {
@@ -41,47 +48,23 @@ impl RealExecutor {
         RealExecutor { pool, threads, org_single, org_tp, sync }
     }
 
-    /// Run the whole execution list for one pass.
-    pub fn run(&self, graph: &Arc<Graph>, params: ExecParams) {
-        let n_groups = self.org_tp.n_groups();
-        let mut i = 0;
-        let exec = &graph.exec;
-        while i < exec.len() {
-            let width = exec[i].bundle.width();
-            if width == 1 {
-                self.run_single(graph, &params, i);
-                i += 1;
-            } else {
-                assert_eq!(width, n_groups, "entry width {} vs {} groups", width, n_groups);
-                // maximal run of parallel entries
-                let mut j = i;
-                while j < exec.len() && exec[j].bundle.width() == width {
-                    j += 1;
-                }
-                match self.sync {
-                    SyncMode::SyncA => {
-                        for e in i..j {
-                            self.run_parallel_lockstep(graph, &params, e);
-                        }
-                    }
-                    SyncMode::SyncB => self.run_parallel_async(graph, &params, i, j),
-                }
-                i = j;
-            }
-        }
-    }
-
-    /// Width-1 entry: whole pool partitions one operator.
-    fn run_single(&self, graph: &Arc<Graph>, params: &ExecParams, entry: usize) {
+    /// Width-1 entry: whole pool partitions one operator. `units` is
+    /// the kernel's unit count, computed once by the caller (shared
+    /// with the pass report).
+    fn run_single(&self, graph: &Arc<Graph>, params: &ExecParams, entry: usize, units: usize) {
         let id = graph.exec[entry].bundle.single();
-        let units = partition_units(graph.meta(id), params);
+        let kernel = graph.kernel(id);
         let n = self.threads.len();
+        debug_check_partition(units, n);
         let graph = graph.clone();
         let pool = self.pool.clone();
         let params = params.clone();
         self.threads.run_all(Arc::new(move |ctx: &crate::threads::WorkerCtx| {
             let (u0, u1) = chunk_range(units, n, ctx.worker);
-            run_op(&graph, &pool, id, &params, u0, u1);
+            if u0 < u1 {
+                let op = OpCtx { graph: &graph, pool: &pool, id, params: &params };
+                unsafe { kernel.run(&op, u0, u1) };
+            }
         }));
     }
 
@@ -95,10 +78,14 @@ impl RealExecutor {
         self.threads.run_all(Arc::new(move |ctx: &crate::threads::WorkerCtx| {
             if let Some((gi, rank)) = org.assignment(ctx.worker) {
                 let id = graph.exec[entry].bundle.get(gi);
-                let units = partition_units(graph.meta(id), &params);
+                let kernel = graph.kernel(id);
+                let units = kernel.units(graph.meta(id), &params);
                 let size = org.groups[gi].size();
                 let (u0, u1) = chunk_range(units, size, rank);
-                run_op(&graph, &pool, id, &params, u0, u1);
+                if u0 < u1 {
+                    let op = OpCtx { graph: &graph, pool: &pool, id, params: &params };
+                    unsafe { kernel.run(&op, u0, u1) };
+                }
             }
         }));
     }
@@ -116,15 +103,73 @@ impl RealExecutor {
                 let size = group.size();
                 for e in i..j {
                     let id = graph.exec[e].bundle.get(gi);
-                    let units = partition_units(graph.meta(id), &params);
+                    let kernel = graph.kernel(id);
+                    let units = kernel.units(graph.meta(id), &params);
                     let (u0, u1) = chunk_range(units, size, rank);
-                    run_op(&graph, &pool, id, &params, u0, u1);
+                    if u0 < u1 {
+                        let op = OpCtx { graph: &graph, pool: &pool, id, params: &params };
+                        unsafe { kernel.run(&op, u0, u1) };
+                    }
                     // local barrier: next op of THIS group may depend on
                     // this op; other groups are independent (§3.4)
                     group.barrier().wait();
                 }
             }
         }));
+    }
+}
+
+impl Executor for RealExecutor {
+    fn name(&self) -> &'static str {
+        "real"
+    }
+
+    /// Run the whole execution list for one pass; `elapsed` is host
+    /// wall-clock seconds.
+    fn run(&self, graph: &Arc<Graph>, params: &ExecParams) -> StepReport {
+        let t0 = Instant::now();
+        let mut rep = StepReport::default();
+        let n_groups = self.org_tp.n_groups();
+        let exec = &graph.exec;
+        let mut i = 0;
+        while i < exec.len() {
+            let width = exec[i].bundle.width();
+            if width == 1 {
+                let id = exec[i].bundle.single();
+                let units = graph.kernel(id).units(graph.meta(id), params);
+                rep.unit_counts.push(units);
+                rep.ops += 1;
+                self.run_single(graph, params, i, units);
+                i += 1;
+            } else {
+                assert_eq!(width, n_groups, "entry width {} vs {} groups", width, n_groups);
+                // maximal run of parallel entries
+                let mut j = i;
+                while j < exec.len() && exec[j].bundle.width() == width {
+                    j += 1;
+                }
+                for e in i..j {
+                    for gi in 0..width {
+                        let id = exec[e].bundle.get(gi);
+                        let units = graph.kernel(id).units(graph.meta(id), params);
+                        debug_check_partition(units, self.org_tp.groups[gi].size());
+                        rep.unit_counts.push(units);
+                    }
+                    rep.ops += 1;
+                }
+                match self.sync {
+                    SyncMode::SyncA => {
+                        for e in i..j {
+                            self.run_parallel_lockstep(graph, params, e);
+                        }
+                    }
+                    SyncMode::SyncB => self.run_parallel_async(graph, params, i, j),
+                }
+                i = j;
+            }
+        }
+        rep.elapsed = t0.elapsed().as_secs_f64();
+        rep
     }
 }
 
@@ -187,7 +232,12 @@ mod tests {
             Arc::new(Organization::by_node(&cores)),
             sync,
         );
-        ex.run(&graph, ExecParams::dense(0, 1));
+        let rep = ex.run(&graph, &ExecParams::dense(0, 1));
+        // scatter + 2 parallel matmul entries... exec entries: scatter,
+        // matmul (width 2 each) and the gather
+        assert_eq!(rep.ops, graph.exec.len());
+        assert!(!rep.unit_counts.is_empty());
+        assert!(rep.sim.is_none());
         read(&pool, &graph, z, 2)
     }
 

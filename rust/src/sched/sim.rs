@@ -1,18 +1,22 @@
 //! Virtual-time graph execution on the simulated many-core machine.
 //!
 //! Walks the same execution list as [`super::RealExecutor`] with the
-//! same partitioning, charging each worker's traffic to the
-//! [`CostModel`] and advancing per-worker virtual clocks through the
-//! same barrier structure. The output is the pass latency the paper's
-//! figures are built from (tokens/s = 1 / decode-pass latency).
+//! same `Kernel::units` partitioning, charging each worker's
+//! `Kernel::traffic` to the [`CostModel`] and advancing per-worker
+//! virtual clocks through the same barrier structure. The output is
+//! the pass latency the paper's figures are built from
+//! (tokens/s = 1 / decode-pass latency).
+
+use std::sync::Arc;
 
 use crate::graph::Graph;
 use crate::numa::cost::Traffic;
 use crate::numa::{Core, CostModel};
+use crate::ops::kernel::{op_traffic, TrafficEnv};
 use crate::threads::Organization;
 use crate::util::chunk_range;
 
-use super::{partition_units, traffic::op_traffic, ExecParams, SyncMode};
+use super::{debug_check_partition, ExecParams, Executor, StepReport, SyncMode};
 
 /// Breakdown of where virtual time went during a pass.
 #[derive(Clone, Debug, Default)]
@@ -33,7 +37,8 @@ pub struct SimReport {
 
 impl SimReport {
     /// Fraction of remote (off-node) traffic — the paper's "cross-NUMA
-    /// memory access" share.
+    /// memory access" share. Guarded against zero-traffic passes: a
+    /// report that moved no bytes returns 0.0, never NaN.
     pub fn remote_fraction(&self) -> f64 {
         let mut local = 0.0;
         let mut total = 0.0;
@@ -73,9 +78,11 @@ impl SimExecutor {
         SimExecutor { model, cores, org_single, org_tp, sync }
     }
 
-    /// Simulate one pass; `step_tag` seeds the per-op jitter (pass the
-    /// decode step index so successive tokens draw fresh jitter).
-    pub fn run(&self, graph: &Graph, params: ExecParams, step_tag: u64) -> SimReport {
+    /// Simulate one pass with full virtual-time detail; `step_tag`
+    /// seeds the per-op jitter (pass the decode step index so
+    /// successive tokens draw fresh jitter). The [`Executor`] trait
+    /// wraps this, taking the tag from `ExecParams::seed`.
+    pub fn simulate(&self, graph: &Graph, params: &ExecParams, step_tag: u64) -> SimReport {
         let w = self.cores.len();
         let nn = self.model.n_nodes();
         let mut clocks = vec![0.0f64; w];
@@ -89,7 +96,7 @@ impl SimExecutor {
         while i < exec.len() {
             let width = exec[i].bundle.width();
             if width == 1 {
-                self.step_single(graph, &params, i, step_tag, &mut clocks, &mut rep);
+                self.step_single(graph, params, i, step_tag, &mut clocks, &mut rep);
                 i += 1;
             } else {
                 let mut j = i;
@@ -98,7 +105,7 @@ impl SimExecutor {
                 }
                 let lock = self.sync == SyncMode::SyncA;
                 for e in i..j {
-                    self.step_parallel(graph, &params, e, step_tag, lock, &mut clocks, &mut rep);
+                    self.step_parallel(graph, params, e, step_tag, lock, &mut clocks, &mut rep);
                 }
                 // region boundary: the Gather (or next single op) starts
                 // only after every group finished — global barrier
@@ -108,6 +115,14 @@ impl SimExecutor {
         }
         rep.elapsed = clocks.iter().copied().fold(0.0, f64::max);
         rep
+    }
+
+    fn env(&self, co_readers: usize) -> TrafficEnv {
+        TrafficEnv {
+            n_nodes: self.model.n_nodes(),
+            co_readers,
+            bcast_amort: self.model.topo.bcast_amort,
+        }
     }
 
     /// Width-1 entry: whole pool, global barrier after.
@@ -121,9 +136,10 @@ impl SimExecutor {
         rep: &mut SimReport,
     ) {
         let id = graph.exec[entry].bundle.single();
-        let units = partition_units(graph.meta(id), params);
+        let units = graph.kernel(id).units(graph.meta(id), params);
         let w = self.cores.len();
         let nn = self.model.n_nodes();
+        debug_check_partition(units, w);
         // co-located readers per node for the shared-stream amortization
         let mut per_node = vec![0usize; nn];
         for core in &self.cores {
@@ -132,8 +148,8 @@ impl SimExecutor {
         let mut workers: Vec<(usize, Traffic)> = Vec::with_capacity(w);
         for (wi, core) in self.cores.iter().enumerate() {
             let (u0, u1) = chunk_range(units, w, wi);
-            let amort = self.model.topo.bcast_amort;
-            let t = op_traffic(graph, id, params, u0, u1, nn, per_node[core.node], amort);
+            let env = self.env(per_node[core.node]);
+            let t = op_traffic(graph, id, params, u0, u1, &env);
             workers.push((core.id, t));
         }
         self.advance(&workers, entry as u64 + step_tag * 131_071, clocks, rep, None);
@@ -156,6 +172,12 @@ impl SimExecutor {
         rep: &mut SimReport,
     ) {
         let nn = self.model.n_nodes();
+        #[cfg(debug_assertions)]
+        for gi in 0..self.org_tp.n_groups() {
+            let id = graph.exec[entry].bundle.get(gi);
+            let units = graph.kernel(id).units(graph.meta(id), params);
+            debug_check_partition(units, self.org_tp.groups[gi].size());
+        }
         let mut per_node = vec![0usize; nn];
         for core in &self.cores {
             per_node[core.node] += 1;
@@ -165,11 +187,11 @@ impl SimExecutor {
         for (wi, core) in self.cores.iter().enumerate() {
             if let Some((gi, rank)) = self.org_tp.assignment(wi) {
                 let id = graph.exec[entry].bundle.get(gi);
-                let units = partition_units(graph.meta(id), params);
+                let units = graph.kernel(id).units(graph.meta(id), params);
                 let size = self.org_tp.groups[gi].size();
                 let (u0, u1) = chunk_range(units, size, rank);
-                let amort = self.model.topo.bcast_amort;
-                let t = op_traffic(graph, id, params, u0, u1, nn, per_node[core.node], amort);
+                let env = self.env(per_node[core.node]);
+                let t = op_traffic(graph, id, params, u0, u1, &env);
                 workers.push((core.id, t));
                 worker_idx.push(wi);
             }
@@ -238,6 +260,28 @@ impl SimExecutor {
     }
 }
 
+impl Executor for SimExecutor {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    /// One simulated pass; `elapsed` is virtual seconds and `sim`
+    /// carries the full [`SimReport`]. The jitter tag comes from
+    /// `ExecParams::seed`. Unit counts are recorded here (execution
+    /// order, one per TP group) — the partition-parity surface the
+    /// real executor records identically.
+    fn run(&self, graph: &Arc<Graph>, params: &ExecParams) -> StepReport {
+        let rep = self.simulate(graph, params, params.seed);
+        let mut unit_counts = Vec::with_capacity(graph.exec.len());
+        for entry in &graph.exec {
+            for id in entry.bundle.iter() {
+                unit_counts.push(graph.kernel(id).units(graph.meta(id), params));
+            }
+        }
+        StepReport { elapsed: rep.elapsed, ops: rep.ops, unit_counts, sim: Some(rep) }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,8 +314,8 @@ mod tests {
         let topo = Topology::kunpeng920();
         let sim = sim_for(topo, 48, 1, SyncMode::SyncA);
         let p = ExecParams::dense(0, 1);
-        let local = sim.run(&local_matmul_graph(Placement::Node(0)), p.clone(), 0);
-        let remote = sim.run(&local_matmul_graph(Placement::Node(1)), p, 0);
+        let local = sim.simulate(&local_matmul_graph(Placement::Node(0)), &p, 0);
+        let remote = sim.simulate(&local_matmul_graph(Placement::Node(1)), &p, 0);
         let ratio = remote.elapsed / local.elapsed;
         // Table 1: local ≈ 102 GB/s vs remote 26 GB/s → ≈ 3.9×
         assert!(ratio > 3.0 && ratio < 5.0, "ratio {ratio}");
@@ -282,10 +326,10 @@ mod tests {
         let topo = Topology::kunpeng920();
         let p = ExecParams::dense(0, 1);
         let t6 = sim_for(topo.clone(), 6, 1, SyncMode::SyncA)
-            .run(&local_matmul_graph(Placement::Node(0)), p.clone(), 0)
+            .simulate(&local_matmul_graph(Placement::Node(0)), &p, 0)
             .elapsed;
         let t48 = sim_for(topo, 48, 1, SyncMode::SyncA)
-            .run(&local_matmul_graph(Placement::Node(0)), p, 0)
+            .simulate(&local_matmul_graph(Placement::Node(0)), &p, 0)
             .elapsed;
         // bandwidth-bound: scaling helps but saturates (shared channel)
         assert!(t6 > t48, "6 threads {t6} vs 48 {t48}");
@@ -300,7 +344,7 @@ mod tests {
         let w = b.leaf("w", DType::Q4_0, vec![4096, 4096], Placement::even_shards(4096, 4));
         b.matmul(&TensorBundle::one(x), &TensorBundle::one(w));
         let g = b.finish().0;
-        let rep = sim.run(&g, ExecParams::dense(0, 1), 0);
+        let rep = sim.simulate(&g, &ExecParams::dense(0, 1), 0);
         // activations interleaved → ~3/4 of activation reads are remote
         assert!(rep.remote_fraction() > 0.05, "{}", rep.remote_fraction());
     }
@@ -322,8 +366,8 @@ mod tests {
         b.gather(&cur);
         let g = b.finish().0;
         let p = ExecParams::dense(0, 1);
-        let a = sim_for(topo.clone(), 8, 2, SyncMode::SyncA).run(&g, p.clone(), 3).elapsed;
-        let bt = sim_for(topo, 8, 2, SyncMode::SyncB).run(&g, p, 3).elapsed;
+        let a = sim_for(topo.clone(), 8, 2, SyncMode::SyncA).simulate(&g, &p, 3).elapsed;
+        let bt = sim_for(topo, 8, 2, SyncMode::SyncB).simulate(&g, &p, 3).elapsed;
         assert!(bt <= a * 1.001, "syncB {bt} vs syncA {a}");
     }
 
@@ -332,11 +376,43 @@ mod tests {
         let topo = Topology::kunpeng920();
         let sim = sim_for(topo, 8, 1, SyncMode::SyncA);
         let rep =
-            sim.run(&local_matmul_graph(Placement::Node(0)), ExecParams::dense(0, 1), 0);
+            sim.simulate(&local_matmul_graph(Placement::Node(0)), &ExecParams::dense(0, 1), 0);
         let total: f64 = rep.channel_bytes.iter().flatten().sum();
         // at least the weight bytes must be accounted
         assert!(total >= 4096.0 * 4096.0 * 0.5625);
         assert_eq!(rep.ops, 1);
         assert!(rep.elapsed > 0.0);
+    }
+
+    #[test]
+    fn remote_fraction_guards_zero_traffic() {
+        // a default (zero-channel) report must report 0.0, not NaN
+        let rep = SimReport::default();
+        assert_eq!(rep.remote_fraction(), 0.0);
+        assert!(rep.remote_fraction().is_finite());
+        // a pass over a graph with no executable entries charges no
+        // traffic and must be equally well-behaved
+        let b = GraphBuilder::sim(vec![0], Placement::Node(0));
+        let g = b.finish().0;
+        let sim = sim_for(Topology::kunpeng920(), 4, 1, SyncMode::SyncA);
+        let rep = sim.simulate(&g, &ExecParams::dense(0, 1), 0);
+        assert_eq!(rep.remote_fraction(), 0.0);
+        assert!(rep.remote_fraction().is_finite());
+    }
+
+    #[test]
+    fn trait_run_carries_sim_detail_and_seed() {
+        let topo = Topology::kunpeng920();
+        let sim = sim_for(topo, 8, 1, SyncMode::SyncA);
+        let g = Arc::new(local_matmul_graph(Placement::Node(0)));
+        let p = ExecParams::dense(0, 1).with_seed(9);
+        let via_trait = Executor::run(&sim, &g, &p);
+        let direct = sim.simulate(&g, &p, 9);
+        assert_eq!(via_trait.elapsed, direct.elapsed);
+        assert_eq!(via_trait.ops, direct.ops);
+        // the matmul partitions its 4096 output features
+        assert_eq!(via_trait.unit_counts, vec![4096]);
+        assert!(via_trait.sim.is_some());
+        assert_eq!(Executor::name(&sim), "sim");
     }
 }

@@ -1,0 +1,87 @@
+//! Executor parity: the real and simulated backends driven through the
+//! unified `sched::Executor` trait must partition work identically
+//! (same op count, same unit counts in the same order), and batched
+//! decode routed through the trait stays token-identical to serial
+//! decode (PR 2's determinism guarantee, re-pinned on the new API).
+
+use arclight::baseline::Strategy;
+use arclight::frontend::{Engine, EngineOptions, Sampler};
+use arclight::model::{ModelConfig, ModelGraphs};
+use arclight::numa::Topology;
+use arclight::sched::{ExecParams, Executor, SyncMode};
+
+/// Run one dense pass through both backends as `&dyn Executor` and
+/// compare their per-op partition surface.
+fn unit_parity(strategy: Strategy, threads: usize) {
+    let topo = Topology::uniform(4, 4, 100.0, 25.0);
+    let m = ModelGraphs::build(strategy.build_spec(ModelConfig::tiny(), topo.n_nodes()));
+    let pool = m.pool.clone().expect("real build has buffers");
+    let real = strategy.real_executor(pool, &topo, threads);
+    let sim = strategy.sim_executor(&topo, threads);
+    let backends: [&dyn Executor; 2] = [&real, &sim];
+    assert_eq!(backends[0].name(), "real");
+    assert_eq!(backends[1].name(), "sim");
+    for params in [ExecParams::dense(0, 1), ExecParams::dense(3, 1)] {
+        let reps: Vec<_> = backends.iter().map(|e| e.run(&m.decode, &params)).collect();
+        let name = strategy.name();
+        assert_eq!(reps[0].ops, reps[1].ops, "{name}: op count diverged");
+        assert_eq!(reps[0].ops, m.decode.exec.len(), "{name}: entries skipped");
+        assert_eq!(reps[0].unit_counts, reps[1].unit_counts, "{name}: unit counts diverged");
+        assert!(reps[0].unit_counts.iter().all(|&u| u > 0), "{name}: zero-unit op");
+        assert!(reps[0].sim.is_none(), "{name}: real backend carries sim detail");
+        assert!(reps[1].sim.is_some(), "{name}: sim backend lost its detail");
+        assert!(reps[1].elapsed > 0.0);
+    }
+}
+
+#[test]
+fn single_node_unit_parity() {
+    unit_parity(Strategy::arclight_single(), 2);
+}
+
+#[test]
+fn tp2_unit_parity_both_sync_modes() {
+    unit_parity(Strategy::arclight_tp(2, SyncMode::SyncA), 4);
+    unit_parity(Strategy::arclight_tp(2, SyncMode::SyncB), 4);
+}
+
+#[test]
+fn llama_strategy_unit_parity() {
+    unit_parity(Strategy::llama_isolate(), 2);
+}
+
+#[test]
+fn batched_decode_token_identical_to_serial_through_trait() {
+    // Engine routes every pass through its Box<dyn Executor>; the
+    // continuous-batching lane must still reproduce serial decode
+    // token for token.
+    let opts = |slots: usize| EngineOptions {
+        strategy: Strategy::arclight_single(),
+        threads: 2,
+        topo: Topology::uniform(2, 2, 100.0, 25.0),
+        prefill_rows: None,
+        seed: 11,
+        batch_slots: slots,
+    };
+    let mut serial = Engine::new_synthetic(ModelConfig::tiny(), &opts(1)).unwrap();
+    let prompt = [5i32, 9, 2, 7];
+    let want = serial.generate(&prompt, 6, &Sampler::greedy());
+
+    let mut batched = Engine::new_synthetic(ModelConfig::tiny(), &opts(2)).unwrap();
+    let seq = batched.seq_alloc().unwrap();
+    let mut logits = Vec::new();
+    for &t in &prompt {
+        logits = batched.step_batch(&[(seq, t)]).remove(0);
+    }
+    let greedy = Sampler::greedy();
+    let mut toks = Vec::new();
+    for step in 0..6 {
+        let next = greedy.sample(&logits, step);
+        toks.push(next);
+        if step + 1 < 6 {
+            logits = batched.step_batch(&[(seq, next)]).remove(0);
+        }
+    }
+    batched.seq_free(seq);
+    assert_eq!(toks, want.tokens, "batched lane diverged from serial decode");
+}

@@ -7,9 +7,9 @@
 use std::path::PathBuf;
 
 use arclight::baseline::Strategy;
-use arclight::frontend::{Engine, EngineOptions};
+use arclight::frontend::{Engine, EngineOptions, Sampler};
 use arclight::numa::Topology;
-use arclight::runtime::PjrtSession;
+use arclight::runtime::{PjrtExecutor, PjrtSession};
 use arclight::sched::SyncMode;
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -124,6 +124,32 @@ fn greedy_generation_matches_pjrt() {
     let pjrt_tokens = session.generate(&prompt, 12).unwrap();
 
     let mut eng = engine(Strategy::arclight_single(), 2, Some(prompt.len()));
-    let res = eng.generate(&prompt, 12, &arclight::frontend::Sampler::greedy());
+    let res = eng.generate(&prompt, 12, &Sampler::greedy());
     assert_eq!(pjrt_tokens, res.tokens, "greedy token streams diverge");
+}
+
+/// The PJRT backend driven through the unified `sched::Executor` trait
+/// (the same code path `arclight golden` uses) must reproduce the
+/// native engine's greedy stream.
+#[test]
+fn executor_trait_generation_matches_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let pjrt = match PjrtExecutor::load(&dir) {
+        Ok(x) => x,
+        Err(e) if cfg!(feature = "pjrt") => panic!("PJRT executor load failed: {e}"),
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let prompt: Vec<i32> = (0..pjrt.session.manifest.prompt_len as i32).collect();
+    let mut eng = engine(Strategy::arclight_single(), 2, Some(prompt.len()));
+    let res = eng.generate(&prompt, 8, &Sampler::greedy());
+
+    let graph = eng.graphs.decode.clone();
+    let toks = pjrt.generate_greedy(&graph, &prompt, 8);
+    assert_eq!(toks, res.tokens, "Executor-trait PJRT drive diverges from native");
 }

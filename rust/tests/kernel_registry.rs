@@ -1,0 +1,131 @@
+//! Registry completeness: every `OpKind` a `ModelGraphs` build can
+//! emit must resolve to a kernel whose `units()` matches the legacy
+//! `sched::partition_units` row policy — the PR-2 function is pinned
+//! here verbatim (as `legacy_units`) before it was deleted, so a
+//! kernel silently changing its partition policy fails this suite.
+
+use arclight::graph::{OpKind, TensorMeta};
+use arclight::model::{BuildSpec, ModelConfig, ModelGraphs};
+use arclight::numa::Placement;
+use arclight::ops::kernel::KernelRegistry;
+use arclight::sched::{BatchView, ExecParams};
+use arclight::tensor::DType;
+
+/// The pre-refactor `sched::partition_units` (PR 2), kept as the
+/// behavioral pin for `Kernel::units`.
+fn legacy_units(meta: &TensorMeta, params: &ExecParams) -> usize {
+    use OpKind::*;
+    let act_rows = meta.rows().min(params.rows.max(1));
+    match &meta.op {
+        Leaf => 0,
+        Embed => act_rows,
+        RmsNorm { .. } => act_rows,
+        RmsNormHeads { heads, .. } => *heads,
+        MatMul => meta.row_len(), // output features N
+        Rope { heads, .. } => *heads,
+        StoreKv { kv_heads, .. } => *kv_heads,
+        Attention { heads, .. } => *heads,
+        SliceRow { .. } => meta.row_len(),
+        Silu | Add | Mul | SwiGlu | Copy | AddN => act_rows * meta.row_len(),
+    }
+}
+
+fn meta(op: OpKind, shape: Vec<usize>) -> TensorMeta {
+    TensorMeta {
+        name: "t".into(),
+        dtype: DType::F32,
+        shape,
+        op,
+        src: vec![],
+        placement: Placement::Node(0),
+        buf: None,
+        group: None,
+    }
+}
+
+/// The exact unit-count table the old `sched/mod.rs` tests pinned,
+/// replayed against registry-resolved kernels.
+#[test]
+fn units_table_matches_legacy_values() {
+    let reg = KernelRegistry::global();
+    let units =
+        |m: &TensorMeta, p: &ExecParams| reg.resolve(&m.op, Some(DType::F32)).units(m, p);
+
+    let p = ExecParams::dense(4, 2);
+    assert_eq!(p.kv_len(), 6);
+    assert_eq!(units(&meta(OpKind::MatMul, vec![2, 96]), &p), 96);
+    let attn = OpKind::Attention { heads: 8, kv_heads: 2, head_dim: 16, max_seq: 64 };
+    assert_eq!(units(&meta(attn, vec![2, 128]), &p), 8);
+    assert_eq!(units(&meta(OpKind::Add, vec![2, 64]), &p), 128);
+    assert_eq!(units(&meta(OpKind::RmsNorm { eps: 1e-6 }, vec![2, 64]), &p), 2);
+
+    // a batch graph built for 8 rows running 3 active lanes
+    let p = ExecParams::batched(BatchView::new(vec![0, 64, 128], vec![5, 0, 9]));
+    assert_eq!(p.rows, 3);
+    assert_eq!(units(&meta(OpKind::Embed, vec![8, 64]), &p), 3);
+    assert_eq!(units(&meta(OpKind::Add, vec![8, 64]), &p), 3 * 64);
+    assert_eq!(units(&meta(OpKind::RmsNorm { eps: 1e-6 }, vec![8, 64]), &p), 3);
+    // matmul still partitions output features, not rows
+    assert_eq!(units(&meta(OpKind::MatMul, vec![8, 96]), &p), 96);
+}
+
+/// Every op every graph construction mode emits (single, TP, prefill,
+/// batched, llama-placement) resolves, and its unit policy matches the
+/// legacy partitioner under dense, prefill and batched params.
+#[test]
+fn registry_covers_every_graph_op() {
+    let specs = vec![
+        BuildSpec::arclight(ModelConfig::tiny(), 1)
+            .with_prefill(5)
+            .with_batch(3)
+            .with_sim_only(true),
+        BuildSpec::arclight(ModelConfig::tiny(), 2).with_sim_only(true),
+        BuildSpec::llama_cpp(ModelConfig::tiny(), 4, 4).with_sim_only(true),
+    ];
+    let param_sets = [
+        ExecParams::dense(3, 1),
+        ExecParams::dense(0, 5),
+        ExecParams::batched(BatchView::new(vec![0, 64], vec![2, 0])),
+    ];
+    let mut checked = 0usize;
+    for spec in specs {
+        let m = ModelGraphs::build(spec);
+        let graphs: Vec<_> = [Some(&m.decode), m.prefill.as_ref(), m.decode_batch.as_ref()]
+            .into_iter()
+            .flatten()
+            .collect();
+        for g in graphs {
+            for entry in &g.exec {
+                for id in entry.bundle.iter() {
+                    // resolution happened at graph build; a missing
+                    // kernel would have panicked there
+                    let k = g.kernel(id);
+                    for p in &param_sets {
+                        assert_eq!(
+                            k.units(g.meta(id), p),
+                            legacy_units(g.meta(id), p),
+                            "units mismatch for '{}' (kernel {})",
+                            g.meta(id).name,
+                            k.name()
+                        );
+                    }
+                    checked += 1;
+                }
+            }
+        }
+    }
+    assert!(checked > 100, "expected a real op population, checked {checked}");
+}
+
+/// The registry's kernel listing is total over the OpKind space the
+/// builders emit (spot-check the names executors would log).
+#[test]
+fn registry_listing_names_are_unique() {
+    let reg = KernelRegistry::global();
+    let names: Vec<&str> = reg.kernels().iter().map(|k| k.name()).collect();
+    let set: std::collections::BTreeSet<&&str> = names.iter().collect();
+    assert_eq!(set.len(), names.len());
+    for n in ["leaf", "embed", "rmsnorm", "rmsnorm_heads", "rope", "store_kv"] {
+        assert!(names.contains(&n), "missing {n}");
+    }
+}

@@ -1,7 +1,9 @@
 //! Real wall-clock microbenchmarks of the operator hot paths (the §Perf
-//! targets): Q4_0 GEMV/GEMM, fused attention, RMSNorm, and the end-to-end
-//! decode step of the real engine on the small model — single-sequence
-//! and continuous-batched.
+//! targets): Q4_0 GEMV/GEMM, the scheduler's dispatch overhead (per-op
+//! jobs vs one compiled pass), fused attention, RMSNorm, and the
+//! end-to-end decode step of the real engine on the small model —
+//! single-sequence and continuous-batched. The JSON report carries
+//! `dispatches_per_token` for the perf trajectory.
 //!
 //! These are host-machine numbers (1 core in this environment), used for
 //! the optimization loop — the paper-figure numbers come from the
@@ -13,6 +15,7 @@
 //! `--json <path>` writes the measured per-iteration seconds as a JSON
 //! report (the perf-trajectory artifact).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use arclight::baseline::Strategy;
@@ -21,6 +24,7 @@ use arclight::model::ModelConfig;
 use arclight::numa::Topology;
 use arclight::ops;
 use arclight::quant::quantize_matrix_q4_0;
+use arclight::threads::{ThreadPool, WorkerCtx};
 use arclight::util::json::{obj, Json};
 use arclight::util::stats::{fmt_duration, Summary};
 use arclight::util::Rng;
@@ -113,6 +117,42 @@ fn main() {
         tm / t
     );
 
+    // --- dispatch overhead: per-op jobs vs one compiled pass -----------------
+    // The §3.3 scheduling tax in isolation: N empty "operators" run
+    // either as N boxed-job dispatches (send + alloc + latch each, the
+    // legacy walk) or as ONE run_pass dispatch whose workers walk N
+    // barrier-separated phases themselves (the PassPlan model).
+    {
+        let workers = 4usize;
+        let n_ops = if quick { 64usize } else { 256usize };
+        let disp_iters = if quick { 5 } else { 20 };
+        let topo = Topology::kunpeng920();
+        let cores: Vec<_> = (0..workers).map(|i| topo.core(i)).collect();
+        let pool = ThreadPool::new(cores);
+        let name_old = format!("dispatch {n_ops} empty ops, per-op path");
+        let t_old = bench(rep, &name_old, disp_iters, || {
+            for _ in 0..n_ops {
+                pool.run_all(Arc::new(|_: &WorkerCtx| {}));
+            }
+        });
+        let gb = pool.global_barrier();
+        let name_new = format!("dispatch {n_ops} empty ops, pass path");
+        let t_new = bench(rep, &name_new, disp_iters, || {
+            let gb = gb.clone();
+            pool.run_pass(Arc::new(move |_: &WorkerCtx| {
+                for _ in 0..n_ops {
+                    gb.wait();
+                }
+            }));
+        });
+        println!(
+            "{:42} {:.2}x dispatch-tax reduction ({} dispatches -> 1 per pass)",
+            "",
+            t_old / t_new,
+            n_ops
+        );
+    }
+
     // --- fused attention over the KV cache -----------------------------------
     let (heads, kvh, hd) = (16usize, 8usize, 64usize);
     let (max_seq, kv_len) = if quick { (128usize, 96usize) } else { (512usize, 384usize) };
@@ -139,6 +179,9 @@ fn main() {
     let cfg = if quick { ModelConfig::tiny() } else { ModelConfig::small_25m() };
     let thread_counts: &[usize] = if quick { &[2] } else { &[1, 2, 4] };
     let step_iters = if quick { 4 } else { 12 };
+    // dispatch tax of a real decode pass: pool dispatches per decoded
+    // token (1 under the compiled-pass scheduler)
+    let mut dispatches_per_token = 0.0f64;
     for &threads in thread_counts {
         let mut engine = Engine::new_synthetic(cfg.clone(), &engine_opts(threads, 1)).unwrap();
         engine.prefill(&[1, 2, 3, 4]);
@@ -153,7 +196,16 @@ fn main() {
                 engine.prefill(&[1, 2, 3, 4]);
             }
         });
-        println!("{:42} {:>8.1} tok/s", "", 1.0 / t);
+        dispatches_per_token = engine
+            .last_step_report()
+            .map(|r| r.dispatches as f64)
+            .unwrap_or(0.0);
+        println!(
+            "{:42} {:>8.1} tok/s ({} dispatch/token)",
+            "",
+            1.0 / t,
+            dispatches_per_token
+        );
     }
 
     // --- batched decode step (continuous batching, 4 live sequences) ---------
@@ -191,6 +243,7 @@ fn main() {
         let j = obj(vec![
             ("benchmark", "ops_hotpath".into()),
             ("quick", quick.into()),
+            ("dispatches_per_token", dispatches_per_token.into()),
             ("results", Json::Arr(entries)),
         ]);
         if let Some(parent) = std::path::Path::new(&path).parent() {

@@ -25,7 +25,7 @@ use crate::memory::MemoryPool;
 use crate::model::synth;
 use crate::model::{AlfFile, ModelConfig, ModelGraphs};
 use crate::numa::Topology;
-use crate::sched::{BatchView, ExecParams, Executor};
+use crate::sched::{BatchView, ExecParams, Executor, StepReport};
 
 use super::sampler::Sampler;
 
@@ -116,6 +116,10 @@ pub struct Engine {
     slots: SlotAllocator,
     /// Tokens ingested so far per slot.
     seq_pos: Vec<usize>,
+    /// Report of the most recent graph pass (dispatch accounting,
+    /// unit counts) — the observability hook the serving metrics and
+    /// the one-dispatch-per-pass assertions read.
+    last_report: Option<StepReport>,
 }
 
 impl Engine {
@@ -169,11 +173,19 @@ impl Engine {
             pos: 0,
             slots: SlotAllocator::new(n_slots),
             seq_pos: vec![0; n_slots],
+            last_report: None,
         })
     }
 
     pub fn cfg(&self) -> &ModelConfig {
         &self.graphs.cfg
+    }
+
+    /// The [`StepReport`] of the most recent pass (`None` before the
+    /// first). Every pass through any backend updates it; the batcher
+    /// reads `dispatches` off it for the serve metrics.
+    pub fn last_step_report(&self) -> Option<&StepReport> {
+        self.last_report.as_ref()
     }
 
     pub fn position(&self) -> usize {
@@ -261,7 +273,7 @@ impl Engine {
         let tokens_id = self.graphs.decode_batch_tokens.expect("batch tokens leaf");
         self.write_tokens(&graph, tokens_id, &toks);
         let params = ExecParams::batched(BatchView::new(kv_base, pos));
-        self.executor.run(&graph, &params);
+        self.last_report = Some(self.executor.run(&graph, &params));
         let logits_id = self.graphs.decode_batch_logits.expect("batch logits");
         let all = self.read_logits(&graph, logits_id);
         let vocab = self.cfg().vocab;
@@ -291,7 +303,7 @@ impl Engine {
         let graph = self.graphs.decode.clone();
         self.write_tokens(&graph, self.graphs.decode_tokens, &[token]);
         let params = ExecParams::dense(self.pos, 1);
-        self.executor.run(&graph, &params);
+        self.last_report = Some(self.executor.run(&graph, &params));
         self.pos += 1;
         self.read_logits(&graph, self.graphs.decode_logits)
     }
@@ -311,7 +323,7 @@ impl Engine {
                 let pg = pg.clone();
                 self.write_tokens(&pg, ptoks, tokens);
                 let params = ExecParams::dense(0, rows);
-                self.executor.run(&pg, &params);
+                self.last_report = Some(self.executor.run(&pg, &params));
                 self.pos = rows;
                 return self.read_logits(&pg, plogits);
             }
@@ -428,6 +440,34 @@ mod tests {
             engine.seq_free(s);
         }
         out
+    }
+
+    #[test]
+    fn decode_issues_one_pool_dispatch_per_pass() {
+        // the PassPlan contract: a whole decode pass (hundreds of
+        // operators on real models) is a single ThreadPool dispatch
+        let mut e = tiny_engine(Strategy::arclight_single(), 2, None);
+        assert!(e.last_step_report().is_none());
+        for t in [5, 9, 2] {
+            e.decode_step(t);
+            let rep = e.last_step_report().expect("pass ran");
+            assert_eq!(rep.dispatches, 1, "decode pass must be one dispatch");
+            assert_eq!(rep.ops, e.graphs.decode.exec.len());
+            assert!(rep.ops > 1, "plan must cover many operators");
+        }
+        // TP decode (both barrier topologies in one pass) too
+        let mut tp = tiny_engine(
+            Strategy::arclight_tp(2, crate::sched::SyncMode::SyncB),
+            4,
+            None,
+        );
+        tp.decode_step(5);
+        assert_eq!(tp.last_step_report().unwrap().dispatches, 1);
+        // and the batched graph
+        let mut b = tiny_engine_slots(Strategy::arclight_single(), 2, None, 2);
+        let s = b.seq_alloc().unwrap();
+        b.step_batch(&[(s, 7)]);
+        assert_eq!(b.last_step_report().unwrap().dispatches, 1);
     }
 
     #[test]

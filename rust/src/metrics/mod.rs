@@ -18,6 +18,10 @@ pub struct Metrics {
     pub decode_steps: AtomicU64,
     /// Lanes summed over all steps; occupancy = lanes / steps.
     pub decode_lanes: AtomicU64,
+    /// Pool dispatches summed over all steps. With the compiled-pass
+    /// scheduler this is 1 per step, so `dispatches_per_token` ≈
+    /// 1/lanes — the legacy per-op walk paid ≈`ops` per step.
+    pub pass_dispatches: AtomicU64,
     latency: Mutex<Summary>,
     ttft: Mutex<Summary>,
     /// Enqueue → admission into the running batch.
@@ -55,10 +59,12 @@ impl Metrics {
         self.requests_failed.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// One continuous-batching step that processed `lanes` lanes.
-    pub fn record_step(&self, lanes: usize) {
+    /// One continuous-batching step that processed `lanes` lanes with
+    /// `dispatches` pool dispatches (1 under the PassPlan scheduler).
+    pub fn record_step(&self, lanes: usize, dispatches: usize) {
         self.decode_steps.fetch_add(1, Ordering::Relaxed);
         self.decode_lanes.fetch_add(lanes as u64, Ordering::Relaxed);
+        self.pass_dispatches.fetch_add(dispatches as u64, Ordering::Relaxed);
     }
 
     /// Enqueue → admission latency of one request.
@@ -74,6 +80,17 @@ impl Metrics {
             return 0.0;
         }
         self.decode_lanes.load(Ordering::Relaxed) as f64 / steps as f64
+    }
+
+    /// Mean pool dispatches per processed token (0 when no batched
+    /// steps ran). The dispatch-tax gauge: 1/lanes under the compiled
+    /// per-pass scheduler, ≈ops under a per-op dispatcher.
+    pub fn dispatches_per_token(&self) -> f64 {
+        let lanes = self.decode_lanes.load(Ordering::Relaxed);
+        if lanes == 0 {
+            return 0.0;
+        }
+        self.pass_dispatches.load(Ordering::Relaxed) as f64 / lanes as f64
     }
 
     /// Aggregate decode throughput since startup (token/s).
@@ -107,6 +124,8 @@ impl Metrics {
             ("req_decode_tok_per_s_p50", rate.p50().into()),
             ("decode_steps", load(&self.decode_steps).into()),
             ("batch_occupancy", self.batch_occupancy().into()),
+            ("pass_dispatches", load(&self.pass_dispatches).into()),
+            ("dispatches_per_token", self.dispatches_per_token().into()),
             ("queue_wait_p50_s", qw.p50().into()),
             ("queue_wait_p95_s", qw.p95().into()),
             ("latency_p50_s", lat.p50().into()),
@@ -146,13 +165,28 @@ mod tests {
     fn occupancy_is_lanes_per_step() {
         let m = Metrics::new();
         assert_eq!(m.batch_occupancy(), 0.0);
-        m.record_step(4);
-        m.record_step(2);
-        m.record_step(3);
+        m.record_step(4, 1);
+        m.record_step(2, 1);
+        m.record_step(3, 1);
         assert!((m.batch_occupancy() - 3.0).abs() < 1e-9);
         let s = m.snapshot();
         assert_eq!(s.get("decode_steps").unwrap().as_usize(), Some(3));
         assert!((s.get("batch_occupancy").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dispatches_per_token_tracks_the_pass_model() {
+        let m = Metrics::new();
+        assert_eq!(m.dispatches_per_token(), 0.0); // guarded, not NaN
+        // 3 steps × 1 dispatch over 9 decoded lanes → 1/3 per token
+        m.record_step(4, 1);
+        m.record_step(2, 1);
+        m.record_step(3, 1);
+        assert!((m.dispatches_per_token() - 1.0 / 3.0).abs() < 1e-9);
+        let s = m.snapshot();
+        assert_eq!(s.get("pass_dispatches").unwrap().as_usize(), Some(3));
+        let dpt = s.get("dispatches_per_token").unwrap().as_f64().unwrap();
+        assert!((dpt - 1.0 / 3.0).abs() < 1e-9);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 use crate::graph::Graph;
 use crate::numa::CostModel;
 use crate::ops::kernel::{op_traffic, TrafficEnv};
-use crate::sched::ExecParams;
+use crate::sched::{ExecParams, PassPlan, SyncMode};
 use crate::threads::Organization;
 use crate::util::chunk_range;
 use crate::util::json::{obj, Json};
@@ -24,9 +24,9 @@ pub struct TraceEvent {
 }
 
 /// Trace one pass over the graph with per-*group* granularity (a slice
-/// per operator per thread group, placed at the group's clock). Uses
-/// the same partitioning and cost model as [`crate::sched::SimExecutor`]
-/// in Sync-B discipline.
+/// per operator per thread group, placed at the group's clock).
+/// Compiles the same [`PassPlan`] the executors consume (Sync-B
+/// discipline) so traced unit partitions match executed ones exactly.
 pub fn trace_pass(
     graph: &Graph,
     model: &CostModel,
@@ -34,6 +34,7 @@ pub fn trace_pass(
     org_tp: &Organization,
     params: ExecParams,
 ) -> Vec<TraceEvent> {
+    let plan = PassPlan::compile(graph, &params, cores.len(), org_tp, SyncMode::SyncB);
     let nn = model.n_nodes();
     let w = cores.len();
     let mut clocks = vec![0.0f64; w];
@@ -43,24 +44,23 @@ pub fn trace_pass(
         per_node[c.node] += 1;
     }
 
-    for (ei, entry) in graph.exec.iter().enumerate() {
-        let width = entry.bundle.width();
-        if width == 1 {
-            let id = entry.bundle.single();
-            let meta = graph.meta(id);
-            let units = graph.kernel(id).units(meta, &params);
+    for step in &plan.steps {
+        let ei = step.entry;
+        if step.width == 1 {
+            let part = &plan.parts[step.part0];
+            let meta = graph.meta(part.id);
             let start = clocks.iter().copied().fold(0.0, f64::max);
             let workers: Vec<(usize, crate::numa::cost::Traffic)> = cores
                 .iter()
                 .enumerate()
                 .map(|(wi, c)| {
-                    let (u0, u1) = chunk_range(units, w, wi);
+                    let (u0, u1) = chunk_range(part.units, w, wi);
                     let env = TrafficEnv {
                         n_nodes: nn,
                         co_readers: per_node[c.node],
                         bcast_amort: model.topo.bcast_amort,
                     };
-                    (c.id, op_traffic(graph, id, &params, u0, u1, &env))
+                    (c.id, op_traffic(graph, part.id, &params, u0, u1, &env))
                 })
                 .collect();
             let times = model.op_times(&workers, ei as u64);
@@ -77,22 +77,21 @@ pub fn trace_pass(
             });
         } else {
             for (gi, g) in org_tp.groups.iter().enumerate() {
-                let id = entry.bundle.get(gi);
-                let meta = graph.meta(id);
-                let units = graph.kernel(id).units(meta, &params);
+                let part = &plan.parts[step.part0 + gi];
+                let meta = graph.meta(part.id);
                 let start = g.workers.iter().map(|&wk| clocks[wk]).fold(0.0, f64::max);
                 let workers: Vec<(usize, crate::numa::cost::Traffic)> = g
                     .workers
                     .iter()
                     .enumerate()
                     .map(|(rank, &wk)| {
-                        let (u0, u1) = chunk_range(units, g.size(), rank);
+                        let (u0, u1) = chunk_range(part.units, g.size(), rank);
                         let env = TrafficEnv {
                             n_nodes: nn,
                             co_readers: per_node[cores[wk].node],
                             bcast_amort: model.topo.bcast_amort,
                         };
-                        (cores[wk].id, op_traffic(graph, id, &params, u0, u1, &env))
+                        (cores[wk].id, op_traffic(graph, part.id, &params, u0, u1, &env))
                     })
                     .collect();
                 let times = model.op_times(&workers, ei as u64);

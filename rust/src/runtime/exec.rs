@@ -155,6 +155,9 @@ impl Executor for PjrtExecutor {
             elapsed: t0.elapsed().as_secs_f64(),
             ops: 1,
             unit_counts: Vec::new(),
+            // one device execution per pass — the PJRT analogue of the
+            // native backends' single pool dispatch
+            dispatches: 1,
             sim: None,
         }
     }

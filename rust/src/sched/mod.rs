@@ -1,10 +1,23 @@
 //! Graph computation scheduling (paper §2.6, §3.3–3.4).
 //!
-//! The scheduler walks the static execution list in order. Width-1
-//! entries run on the whole pool (every worker computes a slice of the
-//! same operator, barrier after each — llama.cpp's model). Width-G
-//! entries are TP subgraphs executed by the per-node thread groups
-//! under one of two synchronization disciplines (Fig. 9):
+//! ## Pass plans and persistent workers
+//!
+//! A pass is **compiled before it is executed**: [`plan::PassPlan`]
+//! lowers the static execution list into a flat step list with the
+//! kernel reference, unit count and barrier discipline of every step
+//! resolved up front. The real backend then makes **one** pool
+//! dispatch per pass ([`crate::threads::ThreadPool::run_pass`]) and
+//! the workers walk the plan themselves, synchronizing on spin
+//! barriers — no per-operator channel sends, closure boxing or
+//! completion-latch round trips on the decode hot path
+//! ([`StepReport::dispatches`] records the reduction: ≈`exec.len()`
+//! dispatches per pass under the legacy per-op walk, 1 now).
+//!
+//! Width-1 steps run on the whole pool (every worker computes a slice
+//! of the same operator, global barrier after each — llama.cpp's
+//! model). Width-G steps are TP subgraphs executed by the per-node
+//! thread groups under one of two synchronization disciplines
+//! (Fig. 9):
 //!
 //! * **Sync A** — a *global* barrier after every operator: all groups
 //!   finish operator `i` before any starts `i+1`;
@@ -29,9 +42,10 @@
 //! [`sim::SimExecutor`] (the identical work charged to the NUMA cost
 //! model in virtual time) and the feature-gated PJRT bridge
 //! (`crate::runtime::PjrtExecutor`) through one API. Both native
-//! executors split work with the same `Kernel::units` +
-//! [`crate::util::chunk_range`] partition, so a strategy comparison
-//! differs only in placement, binding and synchronization.
+//! executors consume the **same compiled [`plan::PassPlan`]** — unit
+//! accounting (`StepReport::unit_counts`) is computed once at plan
+//! compile and reported verbatim by every backend, so a strategy
+//! comparison differs only in placement, binding and synchronization.
 //!
 //! ## Safety contract
 //!
@@ -39,9 +53,14 @@
 //! [`crate::ops::kernel::OpCtx`] — the single place unsafe buffer
 //! plumbing lives. Soundness rests on kernels writing only the output
 //! region their unit range owns, plus [`debug_check_partition`]
-//! asserting (in debug builds) that the ranges handed to concurrent
-//! workers are disjoint and tile `[0, units)`.
+//! asserting (at plan compile, debug builds) that the ranges handed to
+//! concurrent workers are disjoint and tile `[0, units)`. Under the
+//! single-dispatch model, cross-step ordering comes from the barrier
+//! ending each plan step (release/acquire inside
+//! [`crate::threads::SpinBarrier::wait`]) instead of the completion
+//! latch — see [`plan::PassPlan::run_worker`] for the full argument.
 
+pub mod plan;
 pub mod real;
 pub mod sim;
 
@@ -49,6 +68,7 @@ use std::sync::Arc;
 
 use crate::graph::Graph;
 
+pub use plan::{PassPlan, PlanPart, PlanStep, StepBarrier};
 pub use real::RealExecutor;
 pub use sim::{SimExecutor, SimReport};
 
@@ -149,6 +169,11 @@ pub struct StepReport {
     /// entries contribute one count per group) — the partition-parity
     /// surface checked across backends.
     pub unit_counts: Vec<usize>,
+    /// Pool dispatches issued for the pass: 1 for every plan-walking
+    /// backend (one `run_pass` covering the whole execution list) —
+    /// the per-op dispatch tax this counter proves gone (legacy walk:
+    /// ≈`exec.len()` per pass).
+    pub dispatches: usize,
     /// Simulator detail (`None` for real backends).
     pub sim: Option<SimReport>,
 }

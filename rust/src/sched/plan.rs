@@ -1,0 +1,365 @@
+//! Pass compilation: the execution list lowered to a [`PassPlan`].
+//!
+//! The per-operator dispatch model (one pool job + completion latch per
+//! operator) pays an mpsc send, a closure allocation and a mutex/condvar
+//! round trip **per operator** — hundreds of heavyweight dispatches per
+//! decoded token, the first-order CPU-inference tax the paper's thread
+//! scheduler is built to avoid (§3.3–3.4). A [`PassPlan`] removes it:
+//! the pass is compiled once into a flat step list with everything the
+//! workers need resolved up front — the kernel reference, the unit
+//! count, and the barrier each step ends with — so the executor makes
+//! **one** pool dispatch per pass and the workers walk the plan
+//! themselves, synchronizing on spin barriers only.
+//!
+//! Barrier discipline per step (Fig. 6/9):
+//!
+//! * width-1 steps end at the pool-**global** barrier (every worker
+//!   computed a slice of the same operator);
+//! * width-G steps under **Sync A** end at the global barrier (all
+//!   groups in lockstep after every operator);
+//! * width-G steps under **Sync B** end at the **group-local** barrier,
+//!   except the last step of the region, which ends at the global
+//!   barrier (the Gather boundary) — a global barrier subsumes the
+//!   local one, so the region exit needs no double wait.
+//!
+//! The plan is also the cross-backend accounting surface:
+//! [`PassPlan::unit_counts`] is computed here once and consumed
+//! verbatim by the real executor, the simulator and the trace layer,
+//! so `StepReport::unit_counts` cannot drift between backends.
+
+use crate::graph::Graph;
+use crate::memory::MemoryPool;
+use crate::ops::kernel::{Kernel, OpCtx};
+use crate::threads::{Organization, SpinBarrier};
+use crate::util::chunk_range;
+
+use super::{debug_check_partition, ExecParams, SyncMode};
+
+/// Which barrier a worker passes after finishing a plan step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepBarrier {
+    /// The pool-wide barrier ([`crate::threads::ThreadPool::global_barrier`]).
+    Global,
+    /// The worker's group barrier ([`crate::threads::GroupView::barrier`]);
+    /// workers idle under the TP view skip it.
+    Local,
+}
+
+/// One resolved operator instance: everything a worker needs to execute
+/// its slice without touching the registry or the tensor table.
+#[derive(Clone, Copy)]
+pub struct PlanPart {
+    /// Output tensor of the operator.
+    pub id: crate::tensor::TensorId,
+    /// Kernel resolved at graph build.
+    pub kernel: &'static dyn Kernel,
+    /// Work units the operator partitions across its thread group.
+    pub units: usize,
+}
+
+/// One step of a compiled pass: an execution-list entry plus its
+/// precomputed barrier discipline.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanStep {
+    /// Index into `graph.exec` (also the simulator's jitter tag input).
+    pub entry: usize,
+    /// 1 (whole pool) or the TP group count.
+    pub width: usize,
+    /// First of `width` consecutive entries in [`PassPlan::parts`].
+    pub part0: usize,
+    /// Barrier the step ends with.
+    pub barrier: StepBarrier,
+    /// Last step of a width-G region (the Gather boundary — the
+    /// simulator charges the region's global barrier here).
+    pub region_end: bool,
+}
+
+/// A pass compiled for one `(graph, params)` pair: the flat step list
+/// the persistent workers walk under a single pool dispatch.
+pub struct PassPlan {
+    pub steps: Vec<PlanStep>,
+    /// Flat per-group parts; step `s` owns `parts[s.part0 .. s.part0 + s.width]`.
+    pub parts: Vec<PlanPart>,
+    /// Work units of every part in execution order (TP entries
+    /// contribute one count per group) — the partition-parity surface
+    /// every backend reports verbatim.
+    pub unit_counts: Vec<usize>,
+    /// Synchronization discipline the plan was compiled under.
+    pub sync: SyncMode,
+}
+
+impl PassPlan {
+    /// Compile `graph`'s execution list for one pass. `pool_size` is
+    /// the worker count splitting width-1 entries; `org_tp` supplies
+    /// the group sizes splitting width-G entries. Panics when a
+    /// width-G entry does not match the TP view's group count (the
+    /// same build-time invariant the per-op walk asserted).
+    pub fn compile(
+        graph: &Graph,
+        params: &ExecParams,
+        pool_size: usize,
+        org_tp: &Organization,
+        sync: SyncMode,
+    ) -> PassPlan {
+        let n_groups = org_tp.n_groups();
+        let exec = &graph.exec;
+        let mut steps = Vec::with_capacity(exec.len());
+        let mut parts = Vec::with_capacity(exec.len());
+        let mut unit_counts = Vec::with_capacity(exec.len());
+        let mut i = 0;
+        while i < exec.len() {
+            let width = exec[i].bundle.width();
+            if width == 1 {
+                let id = exec[i].bundle.single();
+                let kernel = graph.kernel(id);
+                let units = kernel.units(graph.meta(id), params);
+                debug_check_partition(units, pool_size);
+                unit_counts.push(units);
+                steps.push(PlanStep {
+                    entry: i,
+                    width: 1,
+                    part0: parts.len(),
+                    barrier: StepBarrier::Global,
+                    region_end: false,
+                });
+                parts.push(PlanPart { id, kernel, units });
+                i += 1;
+            } else {
+                assert_eq!(width, n_groups, "entry width {} vs {} groups", width, n_groups);
+                // maximal run of parallel entries: one TP region
+                let mut j = i;
+                while j < exec.len() && exec[j].bundle.width() == width {
+                    j += 1;
+                }
+                for e in i..j {
+                    let part0 = parts.len();
+                    for gi in 0..width {
+                        let id = exec[e].bundle.get(gi);
+                        let kernel = graph.kernel(id);
+                        let units = kernel.units(graph.meta(id), params);
+                        debug_check_partition(units, org_tp.groups[gi].size());
+                        unit_counts.push(units);
+                        parts.push(PlanPart { id, kernel, units });
+                    }
+                    let region_end = e + 1 == j;
+                    let barrier = match sync {
+                        SyncMode::SyncA => StepBarrier::Global,
+                        SyncMode::SyncB if region_end => StepBarrier::Global,
+                        SyncMode::SyncB => StepBarrier::Local,
+                    };
+                    steps.push(PlanStep { entry: e, width, part0, barrier, region_end });
+                }
+                i = j;
+            }
+        }
+        PassPlan { steps, parts, unit_counts, sync }
+    }
+
+    /// Execution-list entries the plan covers (`StepReport::ops`).
+    pub fn ops(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Pool dispatches the legacy per-operator walk would have issued
+    /// for this plan: one per width-1 or Sync-A entry, one per Sync-B
+    /// region — the `dispatches` baseline the single-dispatch model is
+    /// measured against.
+    pub fn legacy_dispatches(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| {
+                s.width == 1 || self.sync == SyncMode::SyncA || s.region_end
+            })
+            .count()
+    }
+
+    /// Walk the whole plan as pool worker `worker` — the body of the
+    /// single per-pass dispatch. Every worker of the pool runs this
+    /// with the same plan, so all of them pass the same sequence of
+    /// global barriers; workers idle under the TP view skip width-G
+    /// compute and local barriers but still park at every global one.
+    ///
+    /// **Panic discipline.** A panicking kernel must not strand the
+    /// other workers at a spin barrier (they would wait for an arrival
+    /// that never comes). The panic is caught and *deferred*: this
+    /// worker stops computing but keeps walking the remaining barrier
+    /// schedule, then re-raises after the walk — so its peers complete
+    /// the pass, the pool's completion latch poisons, and the leader
+    /// surfaces the panic instead of deadlocking.
+    ///
+    /// # Safety contract
+    ///
+    /// Soundness of the concurrent arena writes is the [`OpCtx`]
+    /// argument: `compile` asserted (debug builds) that every step's
+    /// unit ranges are disjoint and tile `[0, units)`, and the barrier
+    /// ending step `k` orders its writes before every read in step
+    /// `k+1` (release/acquire pairs inside [`SpinBarrier::wait`]).
+    /// Under Sync B, groups drift between local barriers — but a
+    /// group's stream only reads tensors its own group produced, and
+    /// cross-group reads happen only after the region's global barrier.
+    pub fn run_worker(
+        &self,
+        graph: &Graph,
+        pool: &MemoryPool,
+        params: &ExecParams,
+        org_tp: &Organization,
+        pool_size: usize,
+        worker: usize,
+        global: &SpinBarrier,
+    ) {
+        use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+        let assignment = org_tp.assignment(worker);
+        let mut deferred: Option<Box<dyn std::any::Any + Send>> = None;
+        for step in &self.steps {
+            if deferred.is_none() {
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    if step.width == 1 {
+                        let part = &self.parts[step.part0];
+                        let (u0, u1) = chunk_range(part.units, pool_size, worker);
+                        if u0 < u1 {
+                            let op = OpCtx { graph, pool, id: part.id, params };
+                            unsafe { part.kernel.run(&op, u0, u1) };
+                        }
+                    } else if let Some((gi, rank)) = assignment {
+                        let part = &self.parts[step.part0 + gi];
+                        let size = org_tp.groups[gi].size();
+                        let (u0, u1) = chunk_range(part.units, size, rank);
+                        if u0 < u1 {
+                            let op = OpCtx { graph, pool, id: part.id, params };
+                            unsafe { part.kernel.run(&op, u0, u1) };
+                        }
+                    }
+                }));
+                if let Err(p) = r {
+                    deferred = Some(p);
+                }
+            }
+            match step.barrier {
+                StepBarrier::Global => {
+                    global.wait();
+                }
+                StepBarrier::Local => {
+                    if let Some((gi, _)) = assignment {
+                        org_tp.groups[gi].barrier().wait();
+                    }
+                }
+            }
+        }
+        if let Some(p) = deferred {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl std::fmt::Debug for PassPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PassPlan")
+            .field("steps", &self.steps.len())
+            .field("parts", &self.parts.len())
+            .field("sync", &self.sync)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::numa::{Placement, Topology};
+    use crate::tensor::{DType, TensorBundle};
+
+    /// scatter → 3 parallel matmuls → gather, with a width-1 matmul on
+    /// each side of the TP region.
+    fn mixed_graph() -> Graph {
+        let mut b = GraphBuilder::sim(vec![0, 1], Placement::Node(0));
+        let x = b.leaf("x", DType::F32, vec![1, 8], Placement::Node(0));
+        let w = b.leaf("w", DType::F32, vec![8, 8], Placement::Node(0));
+        let w0 = b.leaf("w0", DType::F32, vec![4, 8], Placement::Node(0));
+        let w1 = b.leaf("w1", DType::F32, vec![4, 8], Placement::Node(1));
+        let wq0 = b.leaf("wq0", DType::F32, vec![4, 4], Placement::Node(0));
+        let wq1 = b.leaf("wq1", DType::F32, vec![4, 4], Placement::Node(1));
+        let w2 = b.leaf("w2", DType::F32, vec![8, 4], Placement::Node(0));
+        let h = b.matmul(&TensorBundle::one(x), &TensorBundle::one(w));
+        let hs = b.scatter(&h);
+        let mut cur = b.matmul(&hs, &TensorBundle::new(vec![w0, w1]));
+        for _ in 0..2 {
+            cur = b.matmul(&cur, &TensorBundle::new(vec![wq0, wq1]));
+        }
+        let g = b.gather(&cur);
+        b.matmul(&g, &TensorBundle::one(w2));
+        b.finish().0
+    }
+
+    fn org2() -> (Organization, usize) {
+        let t = Topology::uniform(2, 2, 100.0, 25.0);
+        let cores: Vec<_> = (0..4).map(|i| t.core(i)).collect();
+        (Organization::by_node(&cores), cores.len())
+    }
+
+    #[test]
+    fn compile_matches_the_legacy_per_op_walk() {
+        let g = mixed_graph();
+        let (org, n) = org2();
+        let params = ExecParams::dense(0, 1);
+        let plan = PassPlan::compile(&g, &params, n, &org, SyncMode::SyncB);
+        assert_eq!(plan.ops(), g.exec.len(), "one step per exec entry");
+        // unit counts: identical to walking exec and asking each kernel
+        let mut want = Vec::new();
+        for entry in &g.exec {
+            for id in entry.bundle.iter() {
+                want.push(g.kernel(id).units(g.meta(id), &params));
+            }
+        }
+        assert_eq!(plan.unit_counts, want);
+        assert_eq!(plan.parts.len(), want.len());
+        for (part, &u) in plan.parts.iter().zip(&want) {
+            assert_eq!(part.units, u);
+        }
+    }
+
+    #[test]
+    fn sync_b_regions_end_globally_and_sync_locally_inside() {
+        let g = mixed_graph();
+        let (org, n) = org2();
+        let plan = PassPlan::compile(&g, &ExecParams::dense(0, 1), n, &org, SyncMode::SyncB);
+        let wide: Vec<&PlanStep> = plan.steps.iter().filter(|s| s.width == 2).collect();
+        assert!(wide.len() >= 4, "scatter + 3 matmuls expected in the region");
+        for s in &wide[..wide.len() - 1] {
+            assert_eq!(s.barrier, StepBarrier::Local);
+            assert!(!s.region_end);
+        }
+        let last = wide.last().unwrap();
+        assert_eq!(last.barrier, StepBarrier::Global);
+        assert!(last.region_end);
+        for s in plan.steps.iter().filter(|s| s.width == 1) {
+            assert_eq!(s.barrier, StepBarrier::Global);
+            assert!(!s.region_end);
+        }
+    }
+
+    #[test]
+    fn sync_a_uses_the_global_barrier_everywhere() {
+        let g = mixed_graph();
+        let (org, n) = org2();
+        let plan = PassPlan::compile(&g, &ExecParams::dense(0, 1), n, &org, SyncMode::SyncA);
+        assert!(plan.steps.iter().all(|s| s.barrier == StepBarrier::Global));
+        // sync choice must not change the accounting surface
+        let plan_b = PassPlan::compile(&g, &ExecParams::dense(0, 1), n, &org, SyncMode::SyncB);
+        assert_eq!(plan.unit_counts, plan_b.unit_counts);
+        assert_eq!(plan.ops(), plan_b.ops());
+    }
+
+    #[test]
+    fn legacy_dispatch_baseline_counts_ops_not_regions() {
+        let g = mixed_graph();
+        let (org, n) = org2();
+        let params = ExecParams::dense(0, 1);
+        let a = PassPlan::compile(&g, &params, n, &org, SyncMode::SyncA);
+        // Sync A: every entry was its own dispatch
+        assert_eq!(a.legacy_dispatches(), g.exec.len());
+        let b = PassPlan::compile(&g, &params, n, &org, SyncMode::SyncB);
+        // Sync B: the 4-entry region was one dispatch
+        assert_eq!(b.legacy_dispatches(), g.exec.len() - 3);
+        assert!(b.legacy_dispatches() > 1, "the reduction target is > 1");
+    }
+}

@@ -1,30 +1,34 @@
 //! Real (wall-clock) graph execution on the worker pool.
 //!
-//! Mirrors the simulator's barrier structure exactly:
+//! One pass = one pool dispatch. The execution list is compiled into a
+//! [`PassPlan`] (resolved kernels, unit counts and barrier discipline
+//! per step), handed to every worker through
+//! [`ThreadPool::run_pass`], and the workers stream through it
+//! themselves:
 //!
-//! * width-1 entries → whole pool, one dispatch per operator (the
-//!   completion latch is the post-op barrier);
-//! * width-G runs under **Sync A** → one dispatch per operator, all
-//!   groups in lockstep (global barrier semantics);
-//! * width-G runs under **Sync B** → one dispatch per *run*: each
-//!   worker streams through its group's operators with only the
-//!   group-local spin barrier in between.
+//! * width-1 steps → every worker computes a slice of the operator,
+//!   then passes the pool-global [`crate::threads::SpinBarrier`];
+//! * width-G steps under **Sync A** → each group computes its part,
+//!   global barrier after every operator (lockstep);
+//! * width-G steps under **Sync B** → group-local barriers between the
+//!   operators of a group's stream; the global barrier fires only at
+//!   the region end (the Gather boundary).
 //!
-//! Per-op work comes from the kernel resolved at graph build
-//! (`graph.kernel(id)`): workers split `Kernel::units` with
-//! [`chunk_range`] and execute their slice through `Kernel::run` over
-//! an [`OpCtx`]. The executor itself carries no operator knowledge.
+//! The per-operator mpsc send + `Box<Job>` allocation + latch round
+//! trip of the legacy walk are gone from the decode hot path;
+//! [`StepReport::dispatches`] records the single dispatch. Per-op work
+//! still comes from the kernel resolved at graph build — the plan
+//! carries `&'static dyn Kernel` references, and the executor itself
+//! has no operator knowledge.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::graph::Graph;
 use crate::memory::MemoryPool;
-use crate::ops::kernel::OpCtx;
 use crate::threads::{Organization, ThreadPool};
-use crate::util::chunk_range;
 
-use super::{debug_check_partition, ExecParams, Executor, StepReport, SyncMode};
+use super::{ExecParams, Executor, PassPlan, StepReport, SyncMode};
 
 /// Executes graphs on a shared pool/organization.
 pub struct RealExecutor {
@@ -47,76 +51,6 @@ impl RealExecutor {
     ) -> Self {
         RealExecutor { pool, threads, org_single, org_tp, sync }
     }
-
-    /// Width-1 entry: whole pool partitions one operator. `units` is
-    /// the kernel's unit count, computed once by the caller (shared
-    /// with the pass report).
-    fn run_single(&self, graph: &Arc<Graph>, params: &ExecParams, entry: usize, units: usize) {
-        let id = graph.exec[entry].bundle.single();
-        let kernel = graph.kernel(id);
-        let n = self.threads.len();
-        debug_check_partition(units, n);
-        let graph = graph.clone();
-        let pool = self.pool.clone();
-        let params = params.clone();
-        self.threads.run_all(Arc::new(move |ctx: &crate::threads::WorkerCtx| {
-            let (u0, u1) = chunk_range(units, n, ctx.worker);
-            if u0 < u1 {
-                let op = OpCtx { graph: &graph, pool: &pool, id, params: &params };
-                unsafe { kernel.run(&op, u0, u1) };
-            }
-        }));
-    }
-
-    /// One TP entry, all groups in lockstep (Sync A: the completion
-    /// latch across the whole pool is the global barrier).
-    fn run_parallel_lockstep(&self, graph: &Arc<Graph>, params: &ExecParams, entry: usize) {
-        let graph = graph.clone();
-        let pool = self.pool.clone();
-        let org = self.org_tp.clone();
-        let params = params.clone();
-        self.threads.run_all(Arc::new(move |ctx: &crate::threads::WorkerCtx| {
-            if let Some((gi, rank)) = org.assignment(ctx.worker) {
-                let id = graph.exec[entry].bundle.get(gi);
-                let kernel = graph.kernel(id);
-                let units = kernel.units(graph.meta(id), &params);
-                let size = org.groups[gi].size();
-                let (u0, u1) = chunk_range(units, size, rank);
-                if u0 < u1 {
-                    let op = OpCtx { graph: &graph, pool: &pool, id, params: &params };
-                    unsafe { kernel.run(&op, u0, u1) };
-                }
-            }
-        }));
-    }
-
-    /// A run `[i, j)` of TP entries under Sync B: each group streams its
-    /// own operator sequence with local barriers only.
-    fn run_parallel_async(&self, graph: &Arc<Graph>, params: &ExecParams, i: usize, j: usize) {
-        let graph = graph.clone();
-        let pool = self.pool.clone();
-        let org = self.org_tp.clone();
-        let params = params.clone();
-        self.threads.run_all(Arc::new(move |ctx: &crate::threads::WorkerCtx| {
-            if let Some((gi, rank)) = org.assignment(ctx.worker) {
-                let group = &org.groups[gi];
-                let size = group.size();
-                for e in i..j {
-                    let id = graph.exec[e].bundle.get(gi);
-                    let kernel = graph.kernel(id);
-                    let units = kernel.units(graph.meta(id), &params);
-                    let (u0, u1) = chunk_range(units, size, rank);
-                    if u0 < u1 {
-                        let op = OpCtx { graph: &graph, pool: &pool, id, params: &params };
-                        unsafe { kernel.run(&op, u0, u1) };
-                    }
-                    // local barrier: next op of THIS group may depend on
-                    // this op; other groups are independent (§3.4)
-                    group.barrier().wait();
-                }
-            }
-        }));
-    }
 }
 
 impl Executor for RealExecutor {
@@ -124,52 +58,30 @@ impl Executor for RealExecutor {
         "real"
     }
 
-    /// Run the whole execution list for one pass; `elapsed` is host
-    /// wall-clock seconds.
+    /// Compile the pass and run it under a single pool dispatch;
+    /// `elapsed` is host wall-clock seconds (compile included — it is
+    /// a cheap linear walk, part of the pass by design).
     fn run(&self, graph: &Arc<Graph>, params: &ExecParams) -> StepReport {
         let t0 = Instant::now();
-        let mut rep = StepReport::default();
-        let n_groups = self.org_tp.n_groups();
-        let exec = &graph.exec;
-        let mut i = 0;
-        while i < exec.len() {
-            let width = exec[i].bundle.width();
-            if width == 1 {
-                let id = exec[i].bundle.single();
-                let units = graph.kernel(id).units(graph.meta(id), params);
-                rep.unit_counts.push(units);
-                rep.ops += 1;
-                self.run_single(graph, params, i, units);
-                i += 1;
-            } else {
-                assert_eq!(width, n_groups, "entry width {} vs {} groups", width, n_groups);
-                // maximal run of parallel entries
-                let mut j = i;
-                while j < exec.len() && exec[j].bundle.width() == width {
-                    j += 1;
-                }
-                for e in i..j {
-                    for gi in 0..width {
-                        let id = exec[e].bundle.get(gi);
-                        let units = graph.kernel(id).units(graph.meta(id), params);
-                        debug_check_partition(units, self.org_tp.groups[gi].size());
-                        rep.unit_counts.push(units);
-                    }
-                    rep.ops += 1;
-                }
-                match self.sync {
-                    SyncMode::SyncA => {
-                        for e in i..j {
-                            self.run_parallel_lockstep(graph, params, e);
-                        }
-                    }
-                    SyncMode::SyncB => self.run_parallel_async(graph, params, i, j),
-                }
-                i = j;
-            }
+        let n = self.threads.len();
+        let plan = Arc::new(PassPlan::compile(graph, params, n, &self.org_tp, self.sync));
+        let ops = plan.ops();
+        let unit_counts = plan.unit_counts.clone();
+        let graph = graph.clone();
+        let pool = self.pool.clone();
+        let org = self.org_tp.clone();
+        let params = params.clone();
+        let global = self.threads.global_barrier();
+        self.threads.run_pass(Arc::new(move |ctx: &crate::threads::WorkerCtx| {
+            plan.run_worker(&graph, &pool, &params, &org, n, ctx.worker, &global);
+        }));
+        StepReport {
+            elapsed: t0.elapsed().as_secs_f64(),
+            ops,
+            unit_counts,
+            dispatches: 1,
+            sim: None,
         }
-        rep.elapsed = t0.elapsed().as_secs_f64();
-        rep
     }
 }
 
@@ -216,28 +128,34 @@ mod tests {
         unsafe { pool.arena(b.arena).f32s(b.off, n).to_vec() }
     }
 
-    fn run_with(sync: SyncMode) -> Vec<f32> {
+    fn executor_for(sync: SyncMode) -> (RealExecutor, TpGraph) {
         let topo = Topology::uniform(2, 2, 100.0, 25.0);
         let cores: Vec<_> = (0..4).map(|i| topo.core(i)).collect();
         let pool_mem = MemoryPool::new(2, 1 << 20, 1 << 20, 1 << 20);
-        let (graph, pool, x, z, ws) = build_tp_graph(pool_mem);
-        fill(&pool, &graph, x, &[1.0, 2.0, 3.0, 4.0]);
-        fill(&pool, &graph, ws[0], &[1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
-        fill(&pool, &graph, ws[1], &[0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+        let built = build_tp_graph(pool_mem);
         let threads = Arc::new(ThreadPool::new(cores.clone()));
         let ex = RealExecutor::new(
-            pool.clone(),
+            built.1.clone(),
             threads,
             Arc::new(Organization::single(&cores)),
             Arc::new(Organization::by_node(&cores)),
             sync,
         );
+        (ex, built)
+    }
+
+    fn run_with(sync: SyncMode) -> Vec<f32> {
+        let (ex, (graph, pool, x, z, ws)) = executor_for(sync);
+        fill(&pool, &graph, x, &[1.0, 2.0, 3.0, 4.0]);
+        fill(&pool, &graph, ws[0], &[1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        fill(&pool, &graph, ws[1], &[0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
         let rep = ex.run(&graph, &ExecParams::dense(0, 1));
         // scatter + 2 parallel matmul entries... exec entries: scatter,
         // matmul (width 2 each) and the gather
         assert_eq!(rep.ops, graph.exec.len());
         assert!(!rep.unit_counts.is_empty());
         assert!(rep.sim.is_none());
+        assert_eq!(rep.dispatches, 1, "whole pass must be one dispatch");
         read(&pool, &graph, z, 2)
     }
 
@@ -250,5 +168,19 @@ mod tests {
     #[test]
     fn tp_sync_b_matches_sync_a() {
         assert_eq!(run_with(SyncMode::SyncB), run_with(SyncMode::SyncA));
+    }
+
+    #[test]
+    fn one_pool_dispatch_per_pass() {
+        let (ex, (graph, pool, x, _z, ws)) = executor_for(SyncMode::SyncB);
+        fill(&pool, &graph, x, &[1.0; 4]);
+        fill(&pool, &graph, ws[0], &[0.5; 8]);
+        fill(&pool, &graph, ws[1], &[0.25; 8]);
+        for pass in 1..=10usize {
+            let d0 = ex.threads.dispatches();
+            let rep = ex.run(&graph, &ExecParams::dense(0, 1));
+            assert_eq!(ex.threads.dispatches() - d0, 1, "pass {pass}");
+            assert_eq!(rep.dispatches, 1);
+        }
     }
 }

@@ -1,11 +1,13 @@
 //! Virtual-time graph execution on the simulated many-core machine.
 //!
-//! Walks the same execution list as [`super::RealExecutor`] with the
-//! same `Kernel::units` partitioning, charging each worker's
+//! Consumes the same compiled [`PassPlan`] as [`super::RealExecutor`]
+//! — identical steps, kernels and unit counts — charging each worker's
 //! `Kernel::traffic` to the [`CostModel`] and advancing per-worker
-//! virtual clocks through the same barrier structure. The output is
-//! the pass latency the paper's figures are built from
-//! (tokens/s = 1 / decode-pass latency).
+//! virtual clocks through the plan's barrier structure. Because both
+//! backends read their partition surface off one plan,
+//! `StepReport::unit_counts` is bit-identical across them by
+//! construction. The output is the pass latency the paper's figures
+//! are built from (tokens/s = 1 / decode-pass latency).
 
 use std::sync::Arc;
 
@@ -16,7 +18,8 @@ use crate::ops::kernel::{op_traffic, TrafficEnv};
 use crate::threads::Organization;
 use crate::util::chunk_range;
 
-use super::{debug_check_partition, ExecParams, Executor, StepReport, SyncMode};
+use super::plan::{PassPlan, PlanStep};
+use super::{ExecParams, Executor, StepReport, SyncMode};
 
 /// Breakdown of where virtual time went during a pass.
 #[derive(Clone, Debug, Default)]
@@ -81,8 +84,24 @@ impl SimExecutor {
     /// Simulate one pass with full virtual-time detail; `step_tag`
     /// seeds the per-op jitter (pass the decode step index so
     /// successive tokens draw fresh jitter). The [`Executor`] trait
-    /// wraps this, taking the tag from `ExecParams::seed`.
+    /// wraps this, taking the tag from `ExecParams::seed`. Compiles a
+    /// fresh [`PassPlan`] — use [`SimExecutor::simulate_plan`] to share
+    /// one with other consumers.
     pub fn simulate(&self, graph: &Graph, params: &ExecParams, step_tag: u64) -> SimReport {
+        let plan = PassPlan::compile(graph, params, self.cores.len(), &self.org_tp, self.sync);
+        self.simulate_plan(graph, &plan, params, step_tag)
+    }
+
+    /// Charge one compiled pass to the cost model — the same plan the
+    /// real executor's workers walk, so unit accounting cannot drift
+    /// between backends.
+    pub fn simulate_plan(
+        &self,
+        graph: &Graph,
+        plan: &PassPlan,
+        params: &ExecParams,
+        step_tag: u64,
+    ) -> SimReport {
         let w = self.cores.len();
         let nn = self.model.n_nodes();
         let mut clocks = vec![0.0f64; w];
@@ -91,26 +110,20 @@ impl SimExecutor {
             ..Default::default()
         };
 
-        let exec = &graph.exec;
-        let mut i = 0;
-        while i < exec.len() {
-            let width = exec[i].bundle.width();
-            if width == 1 {
-                self.step_single(graph, params, i, step_tag, &mut clocks, &mut rep);
-                i += 1;
+        for step in &plan.steps {
+            if step.width == 1 {
+                self.step_single(graph, params, plan, step, step_tag, &mut clocks, &mut rep);
             } else {
-                let mut j = i;
-                while j < exec.len() && exec[j].bundle.width() == width {
-                    j += 1;
-                }
                 let lock = self.sync == SyncMode::SyncA;
-                for e in i..j {
-                    self.step_parallel(graph, params, e, step_tag, lock, &mut clocks, &mut rep);
+                self.step_parallel(
+                    graph, params, plan, step, step_tag, lock, &mut clocks, &mut rep,
+                );
+                if step.region_end {
+                    // region boundary: the Gather (or next single op)
+                    // starts only after every group finished — global
+                    // barrier
+                    self.global_sync(&mut clocks, &mut rep);
                 }
-                // region boundary: the Gather (or next single op) starts
-                // only after every group finished — global barrier
-                self.global_sync(&mut clocks, &mut rep);
-                i = j;
             }
         }
         rep.elapsed = clocks.iter().copied().fold(0.0, f64::max);
@@ -125,21 +138,22 @@ impl SimExecutor {
         }
     }
 
-    /// Width-1 entry: whole pool, global barrier after.
+    /// Width-1 plan step: whole pool, global barrier after. Units come
+    /// precomputed (and partition-checked) from the plan part.
+    #[allow(clippy::too_many_arguments)]
     fn step_single(
         &self,
         graph: &Graph,
         params: &ExecParams,
-        entry: usize,
+        plan: &PassPlan,
+        step: &PlanStep,
         step_tag: u64,
         clocks: &mut [f64],
         rep: &mut SimReport,
     ) {
-        let id = graph.exec[entry].bundle.single();
-        let units = graph.kernel(id).units(graph.meta(id), params);
+        let part = &plan.parts[step.part0];
         let w = self.cores.len();
         let nn = self.model.n_nodes();
-        debug_check_partition(units, w);
         // co-located readers per node for the shared-stream amortization
         let mut per_node = vec![0usize; nn];
         for core in &self.cores {
@@ -147,37 +161,32 @@ impl SimExecutor {
         }
         let mut workers: Vec<(usize, Traffic)> = Vec::with_capacity(w);
         for (wi, core) in self.cores.iter().enumerate() {
-            let (u0, u1) = chunk_range(units, w, wi);
+            let (u0, u1) = chunk_range(part.units, w, wi);
             let env = self.env(per_node[core.node]);
-            let t = op_traffic(graph, id, params, u0, u1, &env);
+            let t = op_traffic(graph, part.id, params, u0, u1, &env);
             workers.push((core.id, t));
         }
-        self.advance(&workers, entry as u64 + step_tag * 131_071, clocks, rep, None);
+        self.advance(&workers, step.entry as u64 + step_tag * 131_071, clocks, rep, None);
         self.global_sync(clocks, rep);
         rep.ops += 1;
     }
 
-    /// Width-G entry: each group computes its part. `lockstep == true`
-    /// (Sync A) adds a global barrier; otherwise each group syncs
+    /// Width-G plan step: each group computes its part. `lockstep ==
+    /// true` (Sync A) adds a global barrier; otherwise each group syncs
     /// locally only.
     #[allow(clippy::too_many_arguments)]
     fn step_parallel(
         &self,
         graph: &Graph,
         params: &ExecParams,
-        entry: usize,
+        plan: &PassPlan,
+        step: &PlanStep,
         step_tag: u64,
         lockstep: bool,
         clocks: &mut [f64],
         rep: &mut SimReport,
     ) {
         let nn = self.model.n_nodes();
-        #[cfg(debug_assertions)]
-        for gi in 0..self.org_tp.n_groups() {
-            let id = graph.exec[entry].bundle.get(gi);
-            let units = graph.kernel(id).units(graph.meta(id), params);
-            debug_check_partition(units, self.org_tp.groups[gi].size());
-        }
         let mut per_node = vec![0usize; nn];
         for core in &self.cores {
             per_node[core.node] += 1;
@@ -186,17 +195,17 @@ impl SimExecutor {
         let mut worker_idx: Vec<usize> = Vec::new();
         for (wi, core) in self.cores.iter().enumerate() {
             if let Some((gi, rank)) = self.org_tp.assignment(wi) {
-                let id = graph.exec[entry].bundle.get(gi);
-                let units = graph.kernel(id).units(graph.meta(id), params);
+                let part = &plan.parts[step.part0 + gi];
                 let size = self.org_tp.groups[gi].size();
-                let (u0, u1) = chunk_range(units, size, rank);
+                let (u0, u1) = chunk_range(part.units, size, rank);
                 let env = self.env(per_node[core.node]);
-                let t = op_traffic(graph, id, params, u0, u1, &env);
+                let t = op_traffic(graph, part.id, params, u0, u1, &env);
                 workers.push((core.id, t));
                 worker_idx.push(wi);
             }
         }
-        self.advance_indexed(&workers, &worker_idx, entry as u64 + step_tag * 131_071, clocks, rep);
+        let tag = step.entry as u64 + step_tag * 131_071;
+        self.advance_indexed(&workers, &worker_idx, tag, clocks, rep);
         if lockstep {
             self.global_sync(clocks, rep);
         } else {
@@ -267,18 +276,20 @@ impl Executor for SimExecutor {
 
     /// One simulated pass; `elapsed` is virtual seconds and `sim`
     /// carries the full [`SimReport`]. The jitter tag comes from
-    /// `ExecParams::seed`. Unit counts are recorded here (execution
-    /// order, one per TP group) — the partition-parity surface the
-    /// real executor records identically.
+    /// `ExecParams::seed`. Unit counts are read off the compiled
+    /// [`PassPlan`] — the same surface the real executor reports, so
+    /// parity holds by construction. `dispatches` is 1: the plan the
+    /// real backend walks under one dispatch is the plan charged here.
     fn run(&self, graph: &Arc<Graph>, params: &ExecParams) -> StepReport {
-        let rep = self.simulate(graph, params, params.seed);
-        let mut unit_counts = Vec::with_capacity(graph.exec.len());
-        for entry in &graph.exec {
-            for id in entry.bundle.iter() {
-                unit_counts.push(graph.kernel(id).units(graph.meta(id), params));
-            }
+        let plan = PassPlan::compile(graph, params, self.cores.len(), &self.org_tp, self.sync);
+        let rep = self.simulate_plan(graph, &plan, params, params.seed);
+        StepReport {
+            elapsed: rep.elapsed,
+            ops: rep.ops,
+            unit_counts: plan.unit_counts,
+            dispatches: 1,
+            sim: Some(rep),
         }
-        StepReport { elapsed: rep.elapsed, ops: rep.ops, unit_counts, sim: Some(rep) }
     }
 }
 

@@ -303,7 +303,8 @@ impl ContinuousBatcher {
             }
         }
         let logits = self.engine.step_batch(&lanes);
-        router.metrics.record_step(lanes.len());
+        let dispatches = self.engine.last_step_report().map(|r| r.dispatches).unwrap_or(0);
+        router.metrics.record_step(lanes.len(), dispatches);
 
         let mut finished: Vec<usize> = Vec::new();
         for (li, &(ai, sample)) in owners.iter().enumerate() {
@@ -535,6 +536,13 @@ mod tests {
             "occupancy {}",
             router.metrics.batch_occupancy()
         );
+        // and every batched step was a single pool dispatch
+        assert_eq!(
+            router.metrics.pass_dispatches.load(Ordering::Relaxed),
+            router.metrics.decode_steps.load(Ordering::Relaxed),
+            "one dispatch per batched step"
+        );
+        assert!(router.metrics.dispatches_per_token() <= 1.0);
     }
 
     #[test]

@@ -13,6 +13,12 @@
 //!   every operator of that group's stream;
 //! * **global barrier** — across the entire pool, passed at TP region
 //!   boundaries (and after every operator in Sync-A mode, §3.4).
+//!
+//! The scheduler drives the pool through
+//! [`pool::ThreadPool::run_pass`]: one shared job per pass whose
+//! workers walk a compiled [`crate::sched::PassPlan`], firing the
+//! barriers above themselves — per-operator job dispatch exists only
+//! for ad-hoc work ([`pool::ThreadPool::run_on`]).
 
 pub mod barrier;
 pub mod group;

@@ -2,11 +2,19 @@
 //!
 //! Workers are spawned once (before inference) and bound to *simulated*
 //! cores — the `Core` tag flows into the cost model; on the real host
-//! the OS schedules them freely. Jobs are closures dispatched to an
-//! explicit subset of workers; the scheduler composes them with group /
-//! global barriers to realize Sync-A or Sync-B execution (§3.4).
+//! the OS schedules them freely. Two dispatch shapes exist:
+//!
+//! * [`ThreadPool::run_on`]/[`ThreadPool::run_all`] — a boxed closure
+//!   per worker with a completion latch. General-purpose, but one call
+//!   per operator is the dispatch tax the scheduler no longer pays.
+//! * [`ThreadPool::run_pass`] — the persistent-worker entry point: one
+//!   *shared* job (an `Arc` clone per worker, no per-op boxing) that
+//!   every worker runs to completion, typically walking a compiled
+//!   [`crate::sched::PassPlan`] and synchronizing on the global/group
+//!   spin barriers itself. One call == one pool dispatch per pass.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -24,24 +32,31 @@ pub struct WorkerCtx {
 }
 
 type Job = Box<dyn FnOnce(&WorkerCtx) + Send>;
+type SharedJob = Arc<dyn Fn(&WorkerCtx) + Send + Sync>;
 
 enum Msg {
     Run(Job, Arc<Latch>),
+    RunShared(SharedJob, Arc<Latch>),
     Shutdown,
 }
 
-/// Countdown latch for leader-side completion waits.
+/// Countdown latch for leader-side completion waits, poisoned when a
+/// worker's job panicked (the worker survives; the leader surfaces).
 pub struct Latch {
     remaining: Mutex<usize>,
+    poisoned: AtomicBool,
     cv: Condvar,
 }
 
 impl Latch {
     fn new(n: usize) -> Self {
-        Latch { remaining: Mutex::new(n), cv: Condvar::new() }
+        Latch { remaining: Mutex::new(n), poisoned: AtomicBool::new(false), cv: Condvar::new() }
     }
 
-    fn count_down(&self) {
+    fn count_down(&self, panicked: bool) {
+        if panicked {
+            self.poisoned.store(true, Ordering::Release);
+        }
         let mut r = self.remaining.lock().unwrap();
         *r -= 1;
         if *r == 0 {
@@ -49,11 +64,14 @@ impl Latch {
         }
     }
 
-    fn wait(&self) {
+    /// Block until every party counted down; `true` when any of them
+    /// panicked (the caller must surface this, not swallow it).
+    fn wait(&self) -> bool {
         let mut r = self.remaining.lock().unwrap();
         while *r > 0 {
             r = self.cv.wait(r).unwrap();
         }
+        self.poisoned.load(Ordering::Acquire)
     }
 }
 
@@ -64,6 +82,7 @@ pub struct ThreadPool {
     cores: Vec<Core>,
     global_barrier: Arc<SpinBarrier>,
     jobs_dispatched: AtomicUsize,
+    dispatches: AtomicUsize,
 }
 
 impl ThreadPool {
@@ -82,10 +101,18 @@ impl ThreadPool {
                     .name(format!("arclight-w{i}"))
                     .spawn(move || {
                         while let Ok(msg) = rx.recv() {
+                            // A panicking job must not kill the worker
+                            // (the pool would deadlock every later
+                            // dispatch): catch, poison the latch, keep
+                            // serving. The leader re-raises.
                             match msg {
                                 Msg::Run(job, latch) => {
-                                    job(&ctx);
-                                    latch.count_down();
+                                    let r = catch_unwind(AssertUnwindSafe(|| job(&ctx)));
+                                    latch.count_down(r.is_err());
+                                }
+                                Msg::RunShared(job, latch) => {
+                                    let r = catch_unwind(AssertUnwindSafe(|| job(&ctx)));
+                                    latch.count_down(r.is_err());
                                 }
                                 Msg::Shutdown => break,
                             }
@@ -100,6 +127,7 @@ impl ThreadPool {
             cores,
             global_barrier: Arc::new(SpinBarrier::new(n)),
             jobs_dispatched: AtomicUsize::new(0),
+            dispatches: AtomicUsize::new(0),
         }
     }
 
@@ -122,18 +150,31 @@ impl ThreadPool {
         self.global_barrier.clone()
     }
 
-    /// Total jobs dispatched (metrics).
+    /// Total per-worker jobs dispatched (metrics).
     pub fn jobs_dispatched(&self) -> usize {
         self.jobs_dispatched.load(Ordering::Relaxed)
     }
 
+    /// Dispatch *events* issued (one per `run_on`/`run_all`/`run_pass`
+    /// call, regardless of worker count) — the counter the per-pass
+    /// scheduler is measured by: one pass, one dispatch.
+    pub fn dispatches(&self) -> usize {
+        self.dispatches.load(Ordering::Relaxed)
+    }
+
     /// Run `f` on the given workers and block until all finish.
     /// `f(ctx)` — rank/size bookkeeping is the caller's (the scheduler
-    /// knows each worker's group assignment).
+    /// knows each worker's group assignment). Panics if any worker's
+    /// job panicked (the latch surfaces the poisoned state instead of
+    /// deadlocking the leader; the workers themselves survive).
     pub fn run_on<F>(&self, workers: &[usize], f: Arc<F>)
     where
         F: Fn(&WorkerCtx) + Send + Sync + 'static,
     {
+        // count before blocking on the latch so a concurrent metrics
+        // reader never observes a leader mid-wait on an uncounted job
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.jobs_dispatched.fetch_add(workers.len(), Ordering::Relaxed);
         let latch = Arc::new(Latch::new(workers.len()));
         for &w in workers {
             let f = f.clone();
@@ -142,8 +183,9 @@ impl ThreadPool {
                 .send(Msg::Run(job, latch.clone()))
                 .expect("worker alive");
         }
-        self.jobs_dispatched.fetch_add(workers.len(), Ordering::Relaxed);
-        latch.wait();
+        if latch.wait() {
+            panic!("worker panicked during a dispatched job (latch poisoned)");
+        }
     }
 
     /// Run `f` on every worker.
@@ -153,6 +195,35 @@ impl ThreadPool {
     {
         let all: Vec<usize> = (0..self.len()).collect();
         self.run_on(&all, f);
+    }
+
+    /// Persistent-worker pass entry point: hand every worker the
+    /// **same** shared job — one `Arc` clone per worker, no per-op
+    /// closure boxing — and block until all finish. One call is one
+    /// pool dispatch; the job typically walks a compiled
+    /// [`crate::sched::PassPlan`], doing its own global/group barrier
+    /// synchronization between operators. Panics if any worker
+    /// panicked mid-pass (poisoned latch), like [`ThreadPool::run_on`].
+    /// Caveat: a job that synchronizes on barriers must keep its
+    /// barrier discipline panic-safe itself, or peers stall at the
+    /// barrier before the latch can surface anything —
+    /// `PassPlan::run_worker` does (it defers a caught kernel panic,
+    /// finishes the barrier walk, then re-raises).
+    pub fn run_pass<F>(&self, f: Arc<F>)
+    where
+        F: Fn(&WorkerCtx) + Send + Sync + 'static,
+    {
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.jobs_dispatched.fetch_add(self.len(), Ordering::Relaxed);
+        let latch = Arc::new(Latch::new(self.len()));
+        let shared: SharedJob = f;
+        for tx in &self.senders {
+            tx.send(Msg::RunShared(shared.clone(), latch.clone()))
+                .expect("worker alive");
+        }
+        if latch.wait() {
+            panic!("worker panicked during a dispatched pass (latch poisoned)");
+        }
     }
 }
 
@@ -235,5 +306,85 @@ mod tests {
             pool.run_all(Arc::new(|_: &WorkerCtx| {}));
         }
         assert_eq!(pool.jobs_dispatched(), 300);
+        assert_eq!(pool.dispatches(), 100);
+    }
+
+    #[test]
+    fn run_pass_reaches_every_worker_in_one_dispatch() {
+        let pool = ThreadPool::new(cores(5));
+        let hits = Arc::new(Mutex::new(vec![0usize; 5]));
+        let h2 = hits.clone();
+        pool.run_pass(Arc::new(move |ctx: &WorkerCtx| {
+            h2.lock().unwrap()[ctx.worker] += 1;
+        }));
+        assert_eq!(*hits.lock().unwrap(), vec![1; 5]);
+        assert_eq!(pool.dispatches(), 1, "one pass == one dispatch");
+        assert_eq!(pool.jobs_dispatched(), 5);
+    }
+
+    #[test]
+    fn run_pass_supports_barrier_phases_inside_one_dispatch() {
+        // the plan-walk shape: many barrier-separated phases under a
+        // single dispatch, with cross-phase visibility guaranteed
+        let pool = ThreadPool::new(cores(4));
+        let gb = pool.global_barrier();
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = counter.clone();
+        pool.run_pass(Arc::new(move |_ctx: &WorkerCtx| {
+            for phase in 1..=16usize {
+                c2.fetch_add(1, Ordering::SeqCst);
+                gb.wait();
+                assert_eq!(c2.load(Ordering::SeqCst), 4 * phase);
+                gb.wait();
+            }
+        }));
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+        assert_eq!(pool.dispatches(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "latch poisoned")]
+    fn panicking_job_surfaces_instead_of_deadlocking() {
+        let pool = ThreadPool::new(cores(2));
+        pool.run_on(&[0], Arc::new(|_: &WorkerCtx| panic!("kernel bug")));
+    }
+
+    #[test]
+    fn panicking_pass_surfaces_and_pool_survives() {
+        let pool = ThreadPool::new(cores(3));
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_pass(Arc::new(|ctx: &WorkerCtx| {
+                if ctx.worker == 1 {
+                    panic!("bad pass");
+                }
+            }));
+        }));
+        assert!(r.is_err(), "leader must re-raise a mid-pass panic");
+        let c = Arc::new(AtomicUsize::new(0));
+        let c2 = c.clone();
+        pool.run_pass(Arc::new(move |_: &WorkerCtx| {
+            c2.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(c.load(Ordering::SeqCst), 3, "pool must keep serving passes");
+    }
+
+    #[test]
+    fn workers_survive_a_panicked_job() {
+        let pool = ThreadPool::new(cores(2));
+        let poisoned = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_on(&[0, 1], Arc::new(|ctx: &WorkerCtx| {
+                if ctx.worker == 0 {
+                    panic!("one bad worker");
+                }
+            }));
+        }));
+        assert!(poisoned.is_err(), "leader must re-raise the worker panic");
+        // the pool still serves jobs afterwards — no dead worker thread
+        let hits = Arc::new(Mutex::new(vec![0usize; 2]));
+        let h2 = hits.clone();
+        pool.run_all(Arc::new(move |ctx: &WorkerCtx| {
+            h2.lock().unwrap()[ctx.worker] += 1;
+        }));
+        assert_eq!(*hits.lock().unwrap(), vec![1, 1]);
     }
 }

@@ -31,6 +31,9 @@ fn unit_parity(strategy: Strategy, threads: usize) {
         assert!(reps[0].sim.is_none(), "{name}: real backend carries sim detail");
         assert!(reps[1].sim.is_some(), "{name}: sim backend lost its detail");
         assert!(reps[1].elapsed > 0.0);
+        // both backends consume one compiled PassPlan per pass
+        assert_eq!(reps[0].dispatches, 1, "{name}: real pass was not a single dispatch");
+        assert_eq!(reps[1].dispatches, 1, "{name}: sim dispatch accounting diverged");
     }
 }
 

@@ -1,0 +1,283 @@
+//! PassPlan invariants: the compiled per-pass schedule must (a) agree
+//! with the legacy per-operator walk on every count it replaced, for
+//! arbitrary graphs (std-only property test, deterministic seeds), and
+//! (b) survive thousands of mixed width-1 / Sync-A / Sync-B passes on
+//! small pools without deadlocking or perturbing outputs — the barrier
+//! topology under the single-dispatch model is exactly what a per-op
+//! latch can no longer paper over.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use arclight::graph::{Graph, GraphBuilder, TensorMeta};
+use arclight::memory::MemoryPool;
+use arclight::numa::cost::Traffic;
+use arclight::numa::{Placement, Topology};
+use arclight::ops::kernel::{Kernel, OpCtx, TrafficEnv};
+use arclight::ops::OpCost;
+use arclight::sched::{
+    ExecParams, Executor, PassPlan, RealExecutor, StepBarrier, SyncMode,
+};
+use arclight::tensor::{DType, TensorBundle, TensorId};
+use arclight::threads::{Organization, ThreadPool};
+use arclight::util::Rng;
+
+// ---------------------------------------------------------------------------
+// property: plan counts == legacy per-op walk, for arbitrary graphs
+// ---------------------------------------------------------------------------
+
+/// Random mix of width-1 matmul chains and 2-group TP regions, K kept
+/// consistent with square weights.
+fn random_graph(rng: &mut Rng, d: usize) -> Graph {
+    let mut b = GraphBuilder::sim(vec![0, 1], Placement::Node(0));
+    let x = b.leaf("x", DType::F32, vec![1, d], Placement::Node(0));
+    let w = b.leaf("w", DType::F32, vec![d, d], Placement::Node(0));
+    let w0 = b.leaf("w0", DType::F32, vec![d, d], Placement::Node(0));
+    let w1 = b.leaf("w1", DType::F32, vec![d, d], Placement::Node(1));
+    let mut cur = TensorBundle::one(x);
+    for _ in 0..rng.range(1, 6) {
+        if rng.below(2) == 0 {
+            // serial segment
+            for _ in 0..rng.range(1, 4) {
+                cur = b.matmul(&cur, &TensorBundle::one(w));
+            }
+        } else {
+            // TP region: scatter → 1..4 parallel matmuls → gather
+            let parts = b.scatter(&cur);
+            let mut p = parts;
+            for _ in 0..rng.range(1, 4) {
+                p = b.matmul(&p, &TensorBundle::new(vec![w0, w1]));
+            }
+            cur = b.gather(&p);
+        }
+    }
+    b.finish().0
+}
+
+#[test]
+fn prop_plan_counts_match_legacy_walk() {
+    let mut rng = Rng::new(0x9A55);
+    let topo = Topology::uniform(2, 2, 100.0, 25.0);
+    let cores: Vec<_> = (0..4).map(|i| topo.core(i)).collect();
+    let org = Organization::by_node(&cores);
+    for case in 0..40 {
+        let g = random_graph(&mut rng, 8);
+        let params = ExecParams::dense(0, 1);
+        for sync in [SyncMode::SyncA, SyncMode::SyncB] {
+            let plan = PassPlan::compile(&g, &params, cores.len(), &org, sync);
+            // one plan step per execution-list entry
+            assert_eq!(plan.ops(), g.exec.len(), "case {case}: step count");
+            // unit counts identical to asking every kernel directly, in
+            // execution order (the surface executor_parity pins)
+            let mut want = Vec::new();
+            for entry in &g.exec {
+                for id in entry.bundle.iter() {
+                    want.push(g.kernel(id).units(g.meta(id), &params));
+                }
+            }
+            assert_eq!(plan.unit_counts, want, "case {case}: unit counts");
+            // part table is the flattened bundle table
+            let widths: usize = g.exec.iter().map(|e| e.bundle.width()).sum();
+            assert_eq!(plan.parts.len(), widths, "case {case}: parts");
+            // barrier topology: width-1 steps and Sync-A steps end at
+            // the global barrier; Sync-B regions are local inside and
+            // global exactly at the region end
+            for (si, step) in plan.steps.iter().enumerate() {
+                if step.width == 1 || sync == SyncMode::SyncA {
+                    assert_eq!(step.barrier, StepBarrier::Global, "case {case} step {si}");
+                } else {
+                    let ends = step.region_end;
+                    let want = if ends { StepBarrier::Global } else { StepBarrier::Local };
+                    assert_eq!(step.barrier, want, "case {case} step {si}");
+                }
+            }
+            // the legacy walk dispatched at least as often — strictly
+            // more whenever the graph has more than one entry
+            let legacy = plan.legacy_dispatches();
+            assert!(legacy >= 1);
+            if g.exec.len() > 1 && sync == SyncMode::SyncA {
+                assert!(legacy > 1, "case {case}: no reduction to prove");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stress: thousands of mixed passes on small pools — no deadlock,
+// stable outputs
+// ---------------------------------------------------------------------------
+
+type Built = (Arc<Graph>, Arc<MemoryPool>, TensorId, TensorId, Vec<TensorId>);
+
+/// x[1,4] → matmul(w) → scatter(2) → 2×matmul chain → gather: a pass
+/// mixing whole-pool steps, a TP region, and the Gather boundary.
+fn mixed_tp_graph(pool: MemoryPool) -> Built {
+    let mut b = GraphBuilder::new(Some(pool), vec![0, 1], Placement::Node(0));
+    let x = b.leaf("x", DType::F32, vec![1, 4], Placement::Node(0));
+    let w = b.leaf("w", DType::F32, vec![4, 4], Placement::Node(0));
+    let w0 = b.leaf("w0", DType::F32, vec![4, 4], Placement::Node(0));
+    let w1 = b.leaf("w1", DType::F32, vec![4, 4], Placement::Node(1));
+    let h = b.matmul(&TensorBundle::one(x), &TensorBundle::one(w));
+    let hs = b.scatter(&h);
+    let mut p = b.matmul(&hs, &TensorBundle::new(vec![w0, w1]));
+    p = b.matmul(&p, &TensorBundle::new(vec![w0, w1]));
+    let z = b.gather(&p);
+    let (g, pool) = b.finish();
+    (Arc::new(g), Arc::new(pool.unwrap()), x, z.single(), vec![w, w0, w1])
+}
+
+fn fill(pool: &MemoryPool, graph: &Graph, id: TensorId, data: &[f32]) {
+    let b = graph.buf(id);
+    unsafe {
+        pool.arena(b.arena).f32s_mut(b.off, data.len()).copy_from_slice(data);
+    }
+}
+
+fn read4(pool: &MemoryPool, graph: &Graph, id: TensorId) -> Vec<f32> {
+    let b = graph.buf(id);
+    unsafe { pool.arena(b.arena).f32s(b.off, 4).to_vec() }
+}
+
+#[test]
+fn stress_mixed_barrier_passes_do_not_deadlock() {
+    // two executors (Sync A / Sync B) with their own small pools over
+    // the SAME graph and memory; alternate them for thousands of
+    // passes and require bit-stable outputs every time
+    let topo = Topology::uniform(2, 2, 100.0, 25.0);
+    let cores: Vec<_> = (0..4).map(|i| topo.core(i)).collect();
+    let (graph, mem, x, z, ws) = mixed_tp_graph(MemoryPool::new(2, 1 << 20, 1 << 20, 1 << 20));
+    fill(&mem, &graph, x, &[1.0, 2.0, 3.0, 4.0]);
+    // identity weights keep the expected output analytic: z = 2 * x
+    // (gather sums two identical partial streams)
+    let ident = [
+        1.0, 0.0, 0.0, 0.0, //
+        0.0, 1.0, 0.0, 0.0, //
+        0.0, 0.0, 1.0, 0.0, //
+        0.0, 0.0, 0.0, 1.0,
+    ];
+    for &wid in &ws {
+        fill(&mem, &graph, wid, &ident);
+    }
+    let mk = |sync: SyncMode, cs: Vec<arclight::numa::Core>| {
+        RealExecutor::new(
+            mem.clone(),
+            Arc::new(ThreadPool::new(cs.clone())),
+            Arc::new(Organization::single(&cs)),
+            Arc::new(Organization::by_node(&cs)),
+            sync,
+        )
+    };
+    // 4-worker (2 groups of 2) and 2-worker (2 groups of 1 — every
+    // worker is its own group) pools; cores 0/1 are node 0, 2/3 node 1
+    let tiny = vec![cores[0], cores[2]];
+    let executors = [
+        mk(SyncMode::SyncA, cores.clone()),
+        mk(SyncMode::SyncB, cores.clone()),
+        mk(SyncMode::SyncA, tiny.clone()),
+        mk(SyncMode::SyncB, tiny),
+    ];
+    let want = vec![2.0, 4.0, 6.0, 8.0];
+    let params = ExecParams::dense(0, 1);
+    for pass in 0..3000usize {
+        let ex = &executors[pass % executors.len()];
+        let rep = ex.run(&graph, &params);
+        assert_eq!(rep.dispatches, 1, "pass {pass}");
+        assert_eq!(read4(&mem, &graph, z), want, "pass {pass} output drifted");
+    }
+    for ex in &executors {
+        assert_eq!(ex.threads.dispatches(), 3000 / executors.len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// panic discipline: a panicking kernel must not strand peers at a
+// barrier — the walk defers the panic past the barrier schedule
+// ---------------------------------------------------------------------------
+
+/// A kernel that always panics when run (its accounting facets are
+/// inert) — stands in for a kernel bug mid-pass.
+struct BoomKernel;
+
+impl Kernel for BoomKernel {
+    fn name(&self) -> &'static str {
+        "boom"
+    }
+
+    fn units(&self, _meta: &TensorMeta, _params: &ExecParams) -> usize {
+        2
+    }
+
+    fn cost(
+        &self,
+        _graph: &Graph,
+        _id: TensorId,
+        _params: &ExecParams,
+        _u0: usize,
+        _u1: usize,
+    ) -> OpCost {
+        OpCost::default()
+    }
+
+    fn traffic(
+        &self,
+        _graph: &Graph,
+        _id: TensorId,
+        _params: &ExecParams,
+        _u0: usize,
+        _u1: usize,
+        env: &TrafficEnv,
+    ) -> Traffic {
+        Traffic::new(env.n_nodes)
+    }
+
+    unsafe fn run(&self, _ctx: &OpCtx<'_>, _u0: usize, _u1: usize) {
+        panic!("boom kernel");
+    }
+}
+
+static BOOM: BoomKernel = BoomKernel;
+
+#[test]
+fn panicking_kernel_mid_pass_surfaces_without_stranding_peers() {
+    // Poison ONE group's matmul inside the TP region: group 0's workers
+    // panic mid-plan while group 1 and the width-1 steps continue to
+    // the global barriers. Without the deferred-panic walk, group 1
+    // (and the leader) would spin forever; with it, the pass completes,
+    // the latch poisons and run_pass re-raises.
+    let topo = Topology::uniform(2, 2, 100.0, 25.0);
+    let cores: Vec<_> = (0..4).map(|i| topo.core(i)).collect();
+    let (graph, mem, x, _z, ws) = mixed_tp_graph(MemoryPool::new(2, 1 << 20, 1 << 20, 1 << 20));
+    fill(&mem, &graph, x, &[1.0; 4]);
+    for &wid in &ws {
+        fill(&mem, &graph, wid, &[0.0; 16]);
+    }
+    let org_tp = Arc::new(Organization::by_node(&cores));
+    let params = ExecParams::dense(0, 1);
+    let mut plan = PassPlan::compile(&graph, &params, cores.len(), &org_tp, SyncMode::SyncB);
+    let victim = plan
+        .steps
+        .iter()
+        .find(|s| s.width == 2 && !s.region_end)
+        .expect("TP region step")
+        .part0;
+    plan.parts[victim].kernel = &BOOM; // group 0's stream now panics
+    let plan = Arc::new(plan);
+    let pool = Arc::new(ThreadPool::new(cores.clone()));
+    let surfaced = catch_unwind(AssertUnwindSafe(|| {
+        let (graph, mem, org, params, global) =
+            (graph.clone(), mem.clone(), org_tp.clone(), params.clone(), pool.global_barrier());
+        let plan = plan.clone();
+        let n = cores.len();
+        pool.run_pass(Arc::new(move |ctx: &arclight::threads::WorkerCtx| {
+            plan.run_worker(&graph, &mem, &params, &org, n, ctx.worker, &global);
+        }));
+    }));
+    assert!(surfaced.is_err(), "leader must re-raise the kernel panic");
+    // every worker finished the pass — the pool is still serviceable
+    let hits = Arc::new(std::sync::Mutex::new(0usize));
+    let h2 = hits.clone();
+    pool.run_pass(Arc::new(move |_: &arclight::threads::WorkerCtx| {
+        *h2.lock().unwrap() += 1;
+    }));
+    assert_eq!(*hits.lock().unwrap(), 4);
+}

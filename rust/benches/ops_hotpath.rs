@@ -9,17 +9,20 @@
 //! the optimization loop — the paper-figure numbers come from the
 //! simulated testbed instead.
 //!
-//!     cargo bench --bench ops_hotpath [-- --quick] [-- --json <path>]
+//!     cargo bench --bench ops_hotpath [-- --quick] [-- --json <path>] [-- --pin]
 //!
 //! `--quick` shrinks sizes/iterations for the CI bench-smoke leg;
 //! `--json <path>` writes the measured per-iteration seconds as a JSON
-//! report (the perf-trajectory artifact).
+//! report (the perf-trajectory artifact); `--pin` runs the end-to-end
+//! engines on the detected host platform with pinned workers and
+//! first-touch arenas (degrades to simulated when unavailable).
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use arclight::baseline::Strategy;
 use arclight::frontend::{Engine, EngineOptions, Sampler};
+use arclight::hw::{membind, Platform};
 use arclight::model::ModelConfig;
 use arclight::numa::Topology;
 use arclight::ops;
@@ -54,25 +57,44 @@ fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
     v
 }
 
-fn engine_opts(threads: usize, batch_slots: usize) -> EngineOptions {
+fn engine_opts(
+    platform: &Platform,
+    pin: bool,
+    threads: usize,
+    batch_slots: usize,
+) -> EngineOptions {
     EngineOptions {
         strategy: Strategy::arclight_single(),
         threads,
-        topo: Topology::kunpeng920(),
+        platform: platform.clone(),
         prefill_rows: None,
         seed: 0,
         batch_slots,
+        pin,
     }
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
+    let pin = args.iter().any(|a| a == "--pin");
     let json_path = args
         .iter()
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    // worker threads the end-to-end engine sections below actually use
+    let max_engine_threads = if quick { 2 } else { 4 };
+    let platform = if pin {
+        let (p, note) = Platform::host_with_membind(max_engine_threads);
+        if let Some(why) = note {
+            println!("--pin requested but {why}; running simulated");
+        }
+        p
+    } else {
+        Platform::simulated()
+    };
+    let mut pinned_workers = 0usize;
     let mut report: Vec<(String, f64)> = Vec::new();
     let rep = &mut report;
 
@@ -183,7 +205,9 @@ fn main() {
     // token (1 under the compiled-pass scheduler)
     let mut dispatches_per_token = 0.0f64;
     for &threads in thread_counts {
-        let mut engine = Engine::new_synthetic(cfg.clone(), &engine_opts(threads, 1)).unwrap();
+        let mut engine =
+            Engine::new_synthetic(cfg.clone(), &engine_opts(&platform, pin, threads, 1)).unwrap();
+        pinned_workers = pinned_workers.max(engine.pinned_workers());
         engine.prefill(&[1, 2, 3, 4]);
         let horizon = cfg.max_seq - 24;
         let mut step = 0usize;
@@ -211,7 +235,8 @@ fn main() {
     // --- batched decode step (continuous batching, 4 live sequences) ---------
     {
         let slots = 4usize;
-        let mut engine = Engine::new_synthetic(cfg.clone(), &engine_opts(2, slots)).unwrap();
+        let mut engine =
+            Engine::new_synthetic(cfg.clone(), &engine_opts(&platform, pin, 2, slots)).unwrap();
         let mut seqs: Vec<_> = (0..slots).map(|_| engine.seq_alloc().unwrap()).collect();
         let horizon = cfg.max_seq - 24;
         let mut step = 0usize;
@@ -229,7 +254,7 @@ fn main() {
     }
 
     // --- generation sanity ----------------------------------------------------
-    let mut engine = Engine::new_synthetic(cfg, &engine_opts(2, 1)).unwrap();
+    let mut engine = Engine::new_synthetic(cfg, &engine_opts(&platform, pin, 2, 1)).unwrap();
     let res = engine.generate(&[1, 2, 3, 4, 5], if quick { 8 } else { 32 }, &Sampler::greedy());
     println!("\ngenerate {} tokens: {:.1} tok/s decode", res.decode_tokens, res.decode_tok_per_s());
 
@@ -243,6 +268,9 @@ fn main() {
         let j = obj(vec![
             ("benchmark", "ops_hotpath".into()),
             ("quick", quick.into()),
+            ("platform", platform.name().into()),
+            ("pinned_workers", pinned_workers.into()),
+            ("node_local_bytes", (membind::node_local_bytes() as usize).into()),
             ("dispatches_per_token", dispatches_per_token.into()),
             ("results", Json::Arr(entries)),
         ]);

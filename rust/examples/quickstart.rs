@@ -5,8 +5,8 @@
 
 use arclight::baseline::Strategy;
 use arclight::frontend::{ByteTokenizer, Engine, EngineOptions, Sampler};
+use arclight::hw::Platform;
 use arclight::model::ModelConfig;
-use arclight::numa::Topology;
 
 fn main() -> anyhow::Result<()> {
     // A ~25M-parameter Qwen3-geometry model with deterministic synthetic
@@ -23,10 +23,11 @@ fn main() -> anyhow::Result<()> {
     let opts = EngineOptions {
         strategy: Strategy::arclight_single(),
         threads: 4,
-        topo: Topology::kunpeng920(),
+        platform: Platform::simulated(),
         prefill_rows: None,
         seed: 0,
         batch_slots: 1,
+        pin: false,
     };
     let mut engine = Engine::new_synthetic(cfg, &opts)?;
 
@@ -48,10 +49,11 @@ fn main() -> anyhow::Result<()> {
     let opts_tp = EngineOptions {
         strategy: Strategy::arclight_tp(2, arclight::sched::SyncMode::SyncB),
         threads: 4,
-        topo: Topology::kunpeng920(),
+        platform: Platform::simulated(),
         prefill_rows: None,
         seed: 0,
         batch_slots: 1,
+        pin: false,
     };
     let mut engine_tp = Engine::new_synthetic(ModelConfig::small_25m(), &opts_tp)?;
     let res_tp = engine_tp.generate(&prompt, 48, &Sampler::greedy());

@@ -18,7 +18,10 @@
 //!     make artifacts && cargo run --release --example serve_batch
 //!
 //! Flags: `--quick` (CI-sized run), `--report <path>` (write a JSON
-//! report for the perf-trajectory artifact).
+//! report for the perf-trajectory artifact), `--pin` (detect the host
+//! NUMA platform, pin workers and first-touch arenas; degrades to the
+//! simulated testbed when the `host` feature is off or the machine is
+//! too small — shared CI runners included).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -26,8 +29,8 @@ use std::time::Instant;
 
 use arclight::baseline::Strategy;
 use arclight::frontend::{Engine, EngineOptions};
+use arclight::hw::{membind, Platform};
 use arclight::model::ModelConfig;
-use arclight::numa::Topology;
 use arclight::server::{
     BatcherConfig, ContinuousBatcher, EngineSlot, GenRequest, Router, ServerClient, ServerHandle,
 };
@@ -39,14 +42,35 @@ fn artifacts_dir() -> Option<PathBuf> {
     dir.join("manifest.json").exists().then_some(dir)
 }
 
-fn build_engine(threads: usize, batch_slots: usize) -> anyhow::Result<(Engine, bool)> {
+/// Resolve `--pin`: a detected host platform big enough for `threads`
+/// workers (with the first-touch arena map installed), else the
+/// simulated testbed. Shared runners land here via graceful pin
+/// failure, not a crash.
+fn resolve_platform(pin: bool, threads: usize) -> Platform {
+    if !pin {
+        return Platform::simulated();
+    }
+    let (p, note) = Platform::host_with_membind(threads);
+    if let Some(why) = note {
+        println!("--pin requested but {why}; running simulated");
+    }
+    p
+}
+
+fn build_engine(
+    platform: &Platform,
+    pin: bool,
+    threads: usize,
+    batch_slots: usize,
+) -> anyhow::Result<(Engine, bool)> {
     let opts = EngineOptions {
         strategy: Strategy::arclight_single(),
         threads,
-        topo: Topology::kunpeng920(),
+        platform: platform.clone(),
         prefill_rows: None,
         seed: 0,
         batch_slots,
+        pin,
     };
     if let Some(dir) = artifacts_dir() {
         Ok((Engine::from_alf(&dir.join("tiny.alf"), &opts)?, true))
@@ -114,6 +138,7 @@ fn fire_clients(
 }
 
 fn run_sequential(
+    platform: &Platform,
     threads_total: usize,
     slots: usize,
     n_requests: usize,
@@ -123,7 +148,12 @@ fn run_sequential(
     let mut slot_threads = Vec::new();
     let mut from_artifacts = false;
     for _ in 0..slots {
-        let (engine, real) = build_engine(threads_total / slots, 1)?;
+        // never pinned: every slot engine derives the same cpu map
+        // (bind_cores starts at core 0), so pinning N slot pools would
+        // stack them onto the same cpus and unfairly slow the baseline
+        // the continuous scheduler is measured against. The host
+        // platform (and its first-touch arena placement) still applies.
+        let (engine, real) = build_engine(platform, false, threads_total / slots, 1)?;
         from_artifacts = real;
         let r = router.clone();
         slot_threads.push(std::thread::spawn(move || EngineSlot::new(engine).serve(r)));
@@ -152,13 +182,15 @@ fn run_sequential(
 }
 
 fn run_continuous(
+    platform: &Platform,
+    pin: bool,
     threads_total: usize,
     batch: usize,
     n_requests: usize,
     max_new: usize,
 ) -> anyhow::Result<(PhaseResult, String, ServerHandle, std::thread::JoinHandle<()>)> {
     let router = Router::new(BatcherConfig::default());
-    let (engine, _) = build_engine(threads_total, batch)?;
+    let (engine, _) = build_engine(platform, pin, threads_total, batch)?;
     let r = router.clone();
     let batcher_thread = std::thread::spawn(move || ContinuousBatcher::new(engine).serve(r));
     let server = ServerHandle::start("127.0.0.1:0", router.clone())?;
@@ -184,6 +216,7 @@ fn run_continuous(
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
+    let pin = args.iter().any(|a| a == "--pin");
     let report_path = args
         .iter()
         .position(|a| a == "--report")
@@ -193,14 +226,17 @@ fn main() -> anyhow::Result<()> {
     let threads_total = 4usize;
     let batch = 8usize;
     let (n_requests, max_new) = if quick { (8, 8) } else { (16, 24) };
+    let platform = resolve_platform(pin, threads_total);
     println!(
         "serve_batch: {n_requests} concurrent requests × {max_new} new tokens, \
-         {threads_total} worker threads{}",
-        if quick { " (quick mode)" } else { "" }
+         {threads_total} worker threads{} | platform {}",
+        if quick { " (quick mode)" } else { "" },
+        platform.name()
     );
 
     // --- phase 1: sequential-slot baseline ---------------------------------
-    let (mut seq, from_artifacts) = run_sequential(threads_total, 2, n_requests, max_new)?;
+    let (mut seq, from_artifacts) =
+        run_sequential(&platform, threads_total, 2, n_requests, max_new)?;
     println!(
         "[{}] model: {}",
         seq.name,
@@ -217,8 +253,11 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- phase 2: continuous batching --------------------------------------
+    // node_local_bytes is a process-cumulative counter; snapshot it so
+    // the report attributes only the continuous engine's arenas
+    let nlb_before_continuous = membind::node_local_bytes();
     let (mut cont, addr, server, batcher_thread) =
-        run_continuous(threads_total, batch, n_requests, max_new)?;
+        run_continuous(&platform, pin, threads_total, batch, n_requests, max_new)?;
     println!(
         "[{}] decoded {} tok in {:.2}s → {:.1} tok/s aggregate | p50 {:.3}s p95 {:.3}s | \
          occupancy {:.2}",
@@ -262,6 +301,11 @@ fn main() -> anyhow::Result<()> {
 
     // --- JSON report (perf trajectory artifact) ----------------------------
     if let Some(path) = report_path {
+        let pinned_workers = cont
+            .metrics
+            .get("pinned_workers")
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
         let report = obj(vec![
             ("benchmark", "serve_batch".into()),
             ("quick", quick.into()),
@@ -270,6 +314,13 @@ fn main() -> anyhow::Result<()> {
             ("threads", threads_total.into()),
             ("batch_slots", batch.into()),
             ("from_artifacts", from_artifacts.into()),
+            ("platform", platform.name().into()),
+            ("pinned_workers", pinned_workers.into()),
+            // the continuous serving engine's node-locally placed bytes
+            (
+                "node_local_bytes",
+                ((membind::node_local_bytes() - nlb_before_continuous) as usize).into(),
+            ),
             ("speedup_continuous_vs_sequential", speedup.into()),
             ("phases", Json::Arr(vec![seq.to_json(), cont.to_json()])),
         ]);

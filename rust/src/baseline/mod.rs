@@ -13,6 +13,7 @@
 
 use std::sync::Arc;
 
+use crate::hw::Platform;
 use crate::memory::{MemoryPool, PlanMode};
 use crate::model::{BuildSpec, ModelConfig};
 use crate::numa::{Core, CostModel, Topology};
@@ -127,18 +128,23 @@ impl Strategy {
     }
 
     /// Build the real (wall-clock) backend for this strategy: bind
-    /// `threads` workers to cores, derive the single/TP organizations
-    /// and wrap them with the memory pool. The engine and the parity
+    /// `threads` workers to cores of the platform's topology, derive
+    /// the single/TP organizations and wrap them with the memory pool.
+    /// On a detected [`Platform::Host`] with `pin` set, each worker
+    /// additionally pins itself to the OS cpu backing its `Core`
+    /// (best effort — see `hw::affinity`). The engine and the parity
     /// tests drive the result through the `sched::Executor` trait.
     pub fn real_executor(
         &self,
         pool: Arc<MemoryPool>,
-        topo: &Topology,
+        platform: &Platform,
         threads: usize,
+        pin: bool,
     ) -> RealExecutor {
-        let cores = self.bind_cores(topo, threads);
+        let cores = self.bind_cores(platform.topology(), threads);
+        let cpu_map = if pin { platform.cpu_map(&cores) } else { None };
         let (single, tp) = self.organizations(&cores);
-        let workers = Arc::new(ThreadPool::new(cores));
+        let workers = Arc::new(ThreadPool::with_affinity(cores, cpu_map));
         RealExecutor::new(pool, workers, Arc::new(single), Arc::new(tp), self.sync())
     }
 

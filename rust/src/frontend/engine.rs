@@ -21,10 +21,10 @@ use anyhow::{bail, Result};
 
 use crate::baseline::Strategy;
 use crate::graph::SlotAllocator;
+use crate::hw::Platform;
 use crate::memory::MemoryPool;
 use crate::model::synth;
 use crate::model::{AlfFile, ModelConfig, ModelGraphs};
-use crate::numa::Topology;
 use crate::sched::{BatchView, ExecParams, Executor, StepReport};
 
 use super::sampler::Sampler;
@@ -34,7 +34,9 @@ use super::sampler::Sampler;
 pub struct EngineOptions {
     pub strategy: Strategy,
     pub threads: usize,
-    pub topo: Topology,
+    /// Machine source: the simulated cost-model testbed (default) or a
+    /// host detected via [`Platform::detect`].
+    pub platform: Platform,
     /// Build a one-pass prefill graph for prompts of exactly this
     /// length (other lengths fall back to token-by-token prefill).
     pub prefill_rows: Option<usize>,
@@ -43,6 +45,9 @@ pub struct EngineOptions {
     /// KV-pool sequence slots; > 1 builds the batched decode graph and
     /// enables the multi-sequence API (continuous batching).
     pub batch_slots: usize,
+    /// Pin each pool worker to the OS cpu backing its assigned core
+    /// (host platform only; best effort — see `hw::affinity`).
+    pub pin: bool,
 }
 
 impl EngineOptions {
@@ -56,10 +61,11 @@ impl Default for EngineOptions {
         EngineOptions {
             strategy: Strategy::arclight_single(),
             threads: 1,
-            topo: Topology::kunpeng920(),
+            platform: Platform::simulated(),
             prefill_rows: None,
             seed: 0,
             batch_slots: 1,
+            pin: false,
         }
     }
 }
@@ -120,6 +126,10 @@ pub struct Engine {
     /// unit counts) — the observability hook the serving metrics and
     /// the one-dispatch-per-pass assertions read.
     last_report: Option<StepReport>,
+    /// Platform the engine was built on (`"simulated"` / `"host"`).
+    platform_name: &'static str,
+    /// Workers the pool successfully pinned to host cpus.
+    pinned_workers: usize,
 }
 
 impl Engine {
@@ -157,14 +167,16 @@ impl Engine {
         if opts.batch_slots == 0 {
             bail!("batch_slots must be at least 1");
         }
-        let total_nodes = opts.topo.n_nodes();
+        let total_nodes = opts.platform.topology().n_nodes();
         let mut spec = opts.strategy.build_spec(cfg, total_nodes).with_batch(opts.batch_slots);
         if let Some(rows) = opts.prefill_rows {
             spec = spec.with_prefill(rows);
         }
         let graphs = ModelGraphs::build(spec);
         let pool = graphs.pool.clone().expect("real engine needs buffers");
-        let executor = opts.strategy.real_executor(pool.clone(), &opts.topo, opts.threads);
+        let executor =
+            opts.strategy.real_executor(pool.clone(), &opts.platform, opts.threads, opts.pin);
+        let pinned_workers = executor.threads.pinned_workers();
         let n_slots = graphs.batch_slots();
         Ok(Engine {
             graphs,
@@ -174,6 +186,8 @@ impl Engine {
             slots: SlotAllocator::new(n_slots),
             seq_pos: vec![0; n_slots],
             last_report: None,
+            platform_name: opts.platform.name(),
+            pinned_workers,
         })
     }
 
@@ -190,6 +204,18 @@ impl Engine {
 
     pub fn position(&self) -> usize {
         self.pos
+    }
+
+    /// The platform the engine was built on (`"simulated"`/`"host"`) —
+    /// recorded into serving metrics and bench JSON.
+    pub fn platform(&self) -> &'static str {
+        self.platform_name
+    }
+
+    /// Pool workers successfully pinned to host cpus (0 on the
+    /// simulated platform or when pinning was off/failed).
+    pub fn pinned_workers(&self) -> usize {
+        self.pinned_workers
     }
 
     /// Clear the KV cache, rewind to position 0 and free every
@@ -388,10 +414,11 @@ mod tests {
         let opts = EngineOptions {
             strategy,
             threads,
-            topo: Topology::uniform(4, 4, 100.0, 25.0),
+            platform: Platform::Simulated(Topology::uniform(4, 4, 100.0, 25.0)),
             prefill_rows: prefill,
             seed: 42,
             batch_slots,
+            pin: false,
         };
         Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
     }
@@ -468,6 +495,39 @@ mod tests {
         let s = b.seq_alloc().unwrap();
         b.step_batch(&[(s, 7)]);
         assert_eq!(b.last_step_report().unwrap().dispatches, 1);
+    }
+
+    #[test]
+    fn pass_plans_cached_per_graph_and_batch_shape() {
+        // plan-cache contract: same (graph, rows) reuses the compiled
+        // plan; a batch-shape change recompiles (and re-caches)
+        let mut e = tiny_engine_slots(Strategy::arclight_single(), 2, None, 3);
+        let s = e.seq_alloc().unwrap();
+        e.step_batch(&[(s, 1)]);
+        assert!(!e.last_step_report().unwrap().plan_cached, "first shape must compile");
+        e.step_batch(&[(s, 2)]);
+        assert!(e.last_step_report().unwrap().plan_cached, "same shape must reuse the plan");
+        let s2 = e.seq_alloc().unwrap();
+        e.step_batch(&[(s, 3), (s2, 4)]);
+        assert!(!e.last_step_report().unwrap().plan_cached, "new batch shape must recompile");
+        e.step_batch(&[(s, 5), (s2, 6)]);
+        assert!(e.last_step_report().unwrap().plan_cached);
+        // dropping back to the old shape hits its retained entry
+        e.step_batch(&[(s2, 7)]);
+        assert!(e.last_step_report().unwrap().plan_cached);
+        // the single-sequence decode graph is a distinct cache entry
+        let mut d = tiny_engine(Strategy::arclight_single(), 2, None);
+        d.decode_step(1);
+        assert!(!d.last_step_report().unwrap().plan_cached);
+        d.decode_step(2);
+        assert!(d.last_step_report().unwrap().plan_cached);
+    }
+
+    #[test]
+    fn engine_reports_platform_and_pinning() {
+        let e = tiny_engine(Strategy::arclight_single(), 2, None);
+        assert_eq!(e.platform(), "simulated");
+        assert_eq!(e.pinned_workers(), 0, "simulated platform never pins");
     }
 
     #[test]

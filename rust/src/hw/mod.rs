@@ -1,0 +1,232 @@
+//! Host platform layer: real topology discovery, core pinning and
+//! node-local memory placement.
+//!
+//! Everything NUMA elsewhere in the crate is a *model*: the
+//! [`crate::numa::Topology`] the cost model charges against, the
+//! `Core` tags workers carry, the node tags on arenas. This module is
+//! where the model meets a real machine:
+//!
+//! * [`topology`] — discover nodes/cpus/distances from the Linux sysfs
+//!   tree (fixture-injectable, so it unit-tests in CI) and lower them
+//!   into the existing `Topology` so the cost model, strategy binding
+//!   and every bench work unchanged on detected hardware;
+//! * [`affinity`] — `sched_setaffinity` pinning for pool workers (the
+//!   ROADMAP "core pinning" item), best effort, surfaced per worker;
+//! * [`membind`] — first-touch (and optional `mbind`) placement so an
+//!   arena's pages physically live on its tagged node.
+//!
+//! The whole layer is gated on the `host` cargo feature and Linux;
+//! feature-off / off-Linux builds compile the same API as no-op stubs
+//! (detection returns the simulated fallback, pinning returns
+//! `false`), so nothing above this module needs a `cfg`.
+//!
+//! [`Platform`] is the engine-facing handle: *where does the machine
+//! description come from* — the hand-written simulated testbed or the
+//! detected host.
+
+pub mod affinity;
+pub mod membind;
+pub mod topology;
+
+use std::sync::Arc;
+
+pub use topology::{HostNode, HostTopology};
+
+use crate::numa::{Core, Topology};
+
+/// The machine source an engine executes against.
+///
+/// Both variants expose the same [`Topology`] model — strategies,
+/// the cost model and plan compilation are platform-agnostic; only
+/// worker pinning and arena placement behave differently.
+#[derive(Clone, Debug)]
+pub enum Platform {
+    /// The cost-model testbed (default: the paper's Kunpeng-920).
+    /// Workers are never pinned; arena nodes are tags for the
+    /// simulator.
+    Simulated(Topology),
+    /// A machine detected from sysfs, lowered into the same model.
+    /// Workers can pin to the backing OS cpus and arenas can
+    /// first-touch onto their tagged node.
+    Host {
+        /// The raw detected machine (cpu lists, memory, distances).
+        host: Arc<HostTopology>,
+        /// Its lowering into the cost-model [`Topology`].
+        topo: Topology,
+    },
+}
+
+impl Platform {
+    /// The default simulated testbed (the paper's 4-node Kunpeng-920).
+    pub fn simulated() -> Platform {
+        Platform::Simulated(Topology::kunpeng920())
+    }
+
+    /// Detect the host machine; falls back to [`Platform::simulated`]
+    /// when detection is unavailable (feature off, non-Linux, no sysfs
+    /// NUMA tree).
+    pub fn detect() -> Platform {
+        match HostTopology::discover() {
+            Some(h) => Platform::from_host(h),
+            None => Platform::simulated(),
+        }
+    }
+
+    /// Wrap an already-parsed host topology (fixture tests, custom
+    /// roots).
+    pub fn from_host(host: HostTopology) -> Platform {
+        let topo = host.to_topology();
+        Platform::Host { host: Arc::new(host), topo }
+    }
+
+    /// `"simulated"` or `"host"` — recorded in metrics and bench JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Platform::Simulated(_) => "simulated",
+            Platform::Host { .. } => "host",
+        }
+    }
+
+    pub fn is_host(&self) -> bool {
+        matches!(self, Platform::Host { .. })
+    }
+
+    /// The cost-model view every strategy binds against.
+    pub fn topology(&self) -> &Topology {
+        match self {
+            Platform::Simulated(t) => t,
+            Platform::Host { topo, .. } => topo,
+        }
+    }
+
+    /// OS cpus backing `cores`, in worker order. `None` on the
+    /// simulated platform (nothing to pin to) or when a core has no
+    /// backing cpu — callers run unpinned.
+    pub fn cpu_map(&self, cores: &[Core]) -> Option<Vec<usize>> {
+        match self {
+            Platform::Simulated(_) => None,
+            Platform::Host { host, .. } => host.cpu_map(cores),
+        }
+    }
+
+    /// Whether the platform is big enough to bind `threads` workers.
+    /// Detected hosts can be smaller than what a strategy asks for
+    /// (laptops, CI runners); callers degrade to the simulated testbed.
+    pub fn supports_threads(&self, threads: usize) -> bool {
+        threads <= self.topology().n_cores()
+    }
+
+    /// Detect the host and check it can bind `threads` workers — the
+    /// shared `--pin` resolution path of the CLI and the benches.
+    /// `Err` carries the reason the caller should print before
+    /// falling back to [`Platform::simulated`]. Does **not** install
+    /// the first-touch map: callers that pin memory call
+    /// [`Platform::install_membind`] themselves, before engine build.
+    pub fn host_for(threads: usize) -> Result<Platform, String> {
+        let p = Platform::detect();
+        if !p.is_host() {
+            return Err(
+                "no host NUMA topology detected (feature `host` off, non-Linux, or no sysfs \
+                 tree)"
+                    .into(),
+            );
+        }
+        if !p.supports_threads(threads) {
+            return Err(format!(
+                "detected host has {} cpus < {} requested threads",
+                p.topology().n_cores(),
+                threads
+            ));
+        }
+        Ok(p)
+    }
+
+    /// One-call `--pin` resolution for benches/examples:
+    /// [`Platform::host_for`] plus [`Platform::install_membind`] on
+    /// success. Returns the platform to run on and, on fallback to
+    /// the simulated testbed, the reason for the caller to print.
+    pub fn host_with_membind(threads: usize) -> (Platform, Option<String>) {
+        match Platform::host_for(threads) {
+            Ok(p) => {
+                p.install_membind();
+                (p, None)
+            }
+            Err(why) => (Platform::simulated(), Some(why)),
+        }
+    }
+
+    /// Install this platform's first-touch placement map for
+    /// [`crate::memory::Arena`] allocation (one representative cpu per
+    /// node). Must run **before** the engine is built — arenas are
+    /// allocated during graph planning. Returns `false` (and installs
+    /// nothing) on the simulated platform.
+    pub fn install_membind(&self) -> bool {
+        if let Platform::Host { host, .. } = self {
+            let cpus: Vec<usize> =
+                host.nodes.iter().filter_map(|n| n.cpus.first().copied()).collect();
+            if cpus.len() == host.n_nodes() {
+                membind::install_first_touch(cpus);
+                return true;
+            }
+        }
+        false
+    }
+}
+
+impl From<Topology> for Platform {
+    fn from(t: Topology) -> Platform {
+        Platform::Simulated(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_platform_reports_the_model() {
+        let p = Platform::simulated();
+        assert_eq!(p.name(), "simulated");
+        assert!(!p.is_host());
+        assert_eq!(p.topology().n_nodes(), 4);
+        assert!(p.cpu_map(&[p.topology().core(0)]).is_none());
+        assert!(p.supports_threads(192));
+        assert!(!p.supports_threads(193));
+        assert!(!p.install_membind());
+    }
+
+    #[test]
+    fn detect_falls_back_to_simulated_without_host_support() {
+        let p = Platform::detect();
+        if !affinity::available() {
+            assert_eq!(p.name(), "simulated");
+        }
+        // either way the lowered model is usable
+        assert!(p.topology().n_nodes() >= 1);
+        assert!(p.topology().n_cores() >= 1);
+    }
+
+    #[test]
+    fn host_for_refuses_without_detection_or_capacity() {
+        if !affinity::available() {
+            // stub builds: detection itself is the refusal reason
+            assert!(Platform::host_for(1).is_err());
+        }
+        // an absurd thread count is refused on every machine
+        let err = Platform::host_for(usize::MAX).unwrap_err();
+        assert!(!err.is_empty());
+        // the one-call resolver falls back with the reason (no
+        // global-map assertion here: membind's own tests exercise the
+        // map concurrently in this binary)
+        let (p, note) = Platform::host_with_membind(usize::MAX);
+        assert_eq!(p.name(), "simulated");
+        assert!(note.is_some());
+    }
+
+    #[test]
+    fn from_topology_wraps_simulated() {
+        let p: Platform = Topology::uniform(2, 4, 100.0, 25.0).into();
+        assert_eq!(p.name(), "simulated");
+        assert_eq!(p.topology().n_cores(), 8);
+    }
+}

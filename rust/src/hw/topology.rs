@@ -1,0 +1,277 @@
+//! Real-machine NUMA topology discovery from the Linux sysfs tree.
+//!
+//! The kernel exports one directory per NUMA node under
+//! `/sys/devices/system/node/node<N>/` with (among others):
+//!
+//! * `cpulist` — the node's online cpus as a range list (`0-3,8-11`);
+//! * `meminfo` — per-node memory counters (`Node 0 MemTotal: ... kB`);
+//! * `distance` — the node's row of the ACPI SLIT matrix (local is
+//!   conventionally 10, remote 2–4× that).
+//!
+//! [`HostTopology::from_root`] parses an **injectable root directory**
+//! so the parser is unit-testable in CI against fixture trees (a 1-node
+//! laptop, a 2-node Xeon with hyperthread-split cpulists, a 4-node
+//! Kunpeng-920 with offline cpus — see `tests/hw_topology.rs`);
+//! [`HostTopology::discover`] points it at the live `/sys` when the
+//! `host` feature is on and the target is Linux, and returns `None`
+//! otherwise so every caller degrades to the simulated testbed.
+//!
+//! [`HostTopology::to_topology`] lowers the detected machine into the
+//! existing [`crate::numa::Topology`] cost model so `Strategy`
+//! binding, the cost model and every bench run unchanged on detected
+//! hardware. Bandwidth *ratios* come from the SLIT distances
+//! (`bw[i][j] = local · d[i][i] / d[i][j]`); the absolute scale is the
+//! [`DEFAULT_LOCAL_GB`] placeholder until measured (the Table-1 bench
+//! can calibrate it). Everything else (compute rates, barrier costs)
+//! inherits the Kunpeng-920 calibration — see DESIGN.md "Host
+//! platform layer" for exactly what stays simulated.
+
+use std::path::Path;
+
+use crate::numa::{Core, NodeId, Topology};
+
+/// Assumed local-node bandwidth (GB/s) when lowering SLIT distances
+/// into a bandwidth matrix. Only the *ratios* are measured (distances);
+/// the absolute scale is this placeholder until a streaming benchmark
+/// calibrates it per machine.
+pub const DEFAULT_LOCAL_GB: f64 = 100.0;
+
+/// One detected NUMA node.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HostNode {
+    pub id: NodeId,
+    /// OS cpu ids of the node, ascending. May be non-contiguous
+    /// (hyperthread sibling enumeration, offline cpus).
+    pub cpus: Vec<usize>,
+    /// The node's `MemTotal` in kB (0 when `meminfo` is absent).
+    pub mem_total_kb: u64,
+}
+
+/// The detected machine: nodes plus the SLIT distance matrix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HostTopology {
+    /// Nodes in id order (ids are contiguous from 0).
+    pub nodes: Vec<HostNode>,
+    /// `distance[i][j]` — ACPI SLIT relative memory distance (local is
+    /// conventionally 10).
+    pub distance: Vec<Vec<u32>>,
+}
+
+impl HostTopology {
+    /// Discover the live machine from `/sys/devices/system/node`.
+    /// `None` when the `host` feature is off, off-Linux, or the sysfs
+    /// NUMA tree is absent/unparseable — callers fall back to the
+    /// simulated testbed.
+    pub fn discover() -> Option<HostTopology> {
+        if cfg!(all(feature = "host", target_os = "linux")) {
+            Self::from_root(Path::new("/sys/devices/system/node"))
+        } else {
+            None
+        }
+    }
+
+    /// Parse a sysfs-node-style directory tree (the injectable fixture
+    /// root). Returns `None` unless the tree holds ≥ 1 `node<N>`
+    /// directory with contiguous ids from 0, each with ≥ 1 cpu and a
+    /// full `distance` row.
+    pub fn from_root(root: &Path) -> Option<HostTopology> {
+        let mut found: Vec<(usize, std::path::PathBuf)> = Vec::new();
+        for entry in std::fs::read_dir(root).ok()?.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(id) = name.strip_prefix("node") else { continue };
+            let Ok(id) = id.parse::<usize>() else { continue };
+            found.push((id, entry.path()));
+        }
+        if found.is_empty() {
+            return None;
+        }
+        found.sort_by_key(|(id, _)| *id);
+        let n = found.len();
+        if found.last().map(|(id, _)| *id) != Some(n - 1) {
+            return None; // non-contiguous node ids (memory holes)
+        }
+        let mut nodes = Vec::with_capacity(n);
+        let mut distance = Vec::with_capacity(n);
+        for (id, dir) in found {
+            let cpus = parse_cpulist(&std::fs::read_to_string(dir.join("cpulist")).ok()?);
+            if cpus.is_empty() {
+                return None; // cpu-less (memory-only) nodes unsupported
+            }
+            let row = parse_distance(&std::fs::read_to_string(dir.join("distance")).ok()?);
+            if row.len() != n {
+                return None;
+            }
+            let mem_total_kb = std::fs::read_to_string(dir.join("meminfo"))
+                .ok()
+                .and_then(|s| parse_meminfo_total_kb(&s))
+                .unwrap_or(0);
+            nodes.push(HostNode { id, cpus, mem_total_kb });
+            distance.push(row);
+        }
+        Some(HostTopology { nodes, distance })
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// All online cpus across nodes.
+    pub fn total_cpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).sum()
+    }
+
+    /// Cores per node in the lowered model: the *minimum* across nodes,
+    /// so every simulated core maps onto a real cpu even when offline
+    /// cpus leave the nodes unequal.
+    pub fn cores_per_node(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).min().unwrap_or(1).max(1)
+    }
+
+    /// Lower the detected machine into the simulated-platform model:
+    /// same node count, [`HostTopology::cores_per_node`] cores, and a
+    /// bandwidth matrix whose ratios follow the SLIT distances
+    /// (`bw[i][j] = DEFAULT_LOCAL_GB · d[i][i] / d[i][j]`). Cost-model
+    /// calibration constants inherit the Kunpeng-920 defaults.
+    pub fn to_topology(&self) -> Topology {
+        let n = self.n_nodes();
+        let bw_gb: Vec<Vec<f64>> = (0..n)
+            .map(|i| {
+                let local = self.distance[i][i].max(1) as f64;
+                (0..n)
+                    .map(|j| DEFAULT_LOCAL_GB * local / self.distance[i][j].max(1) as f64)
+                    .collect()
+            })
+            .collect();
+        Topology::from_bandwidth_gb(bw_gb, self.cores_per_node())
+    }
+
+    /// The OS cpu backing one simulated core of the lowered topology
+    /// (`None` when the core is out of range).
+    pub fn os_cpu(&self, core: Core) -> Option<usize> {
+        let node = self.nodes.get(core.node)?;
+        let idx = core.id.checked_sub(core.node * self.cores_per_node())?;
+        node.cpus.get(idx).copied()
+    }
+
+    /// OS cpus backing `cores` in order; `None` when any core has no
+    /// backing cpu (callers then run unpinned).
+    pub fn cpu_map(&self, cores: &[Core]) -> Option<Vec<usize>> {
+        cores.iter().map(|&c| self.os_cpu(c)).collect()
+    }
+}
+
+/// Parse a sysfs cpulist (`"0-3,8-11"`) into ascending cpu ids.
+/// Malformed pieces are skipped; an empty/blank list parses to `[]`.
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for piece in s.trim().split(',') {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        match piece.split_once('-') {
+            Some((a, b)) => {
+                if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                    if a <= b {
+                        cpus.extend(a..=b);
+                    }
+                }
+            }
+            None => {
+                if let Ok(v) = piece.parse::<usize>() {
+                    cpus.push(v);
+                }
+            }
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    cpus
+}
+
+/// Render cpu ids back into the compact sysfs range form
+/// (`[0,1,2,3,8]` → `"0-3,8"`) for `arclight topo` output.
+pub fn format_cpulist(cpus: &[usize]) -> String {
+    let mut out = String::new();
+    let mut i = 0;
+    while i < cpus.len() {
+        let start = cpus[i];
+        let mut end = start;
+        while i + 1 < cpus.len() && cpus[i + 1] == end + 1 {
+            i += 1;
+            end = cpus[i];
+        }
+        if !out.is_empty() {
+            out.push(',');
+        }
+        if start == end {
+            out.push_str(&start.to_string());
+        } else {
+            out.push_str(&format!("{start}-{end}"));
+        }
+        i += 1;
+    }
+    out
+}
+
+/// One SLIT row: whitespace-separated distances.
+fn parse_distance(s: &str) -> Vec<u32> {
+    s.split_whitespace().filter_map(|t| t.parse().ok()).collect()
+}
+
+/// Extract `MemTotal` (kB) from a per-node `meminfo` blob
+/// (`"Node 0 MemTotal:  32624132 kB"`).
+fn parse_meminfo_total_kb(s: &str) -> Option<u64> {
+    for line in s.lines() {
+        let mut toks = line.split_whitespace();
+        while let Some(t) = toks.next() {
+            if t == "MemTotal:" {
+                return toks.next().and_then(|v| v.parse().ok());
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parses_ranges_singletons_and_blanks() {
+        assert_eq!(parse_cpulist("0-3,8-11\n"), vec![0, 1, 2, 3, 8, 9, 10, 11]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist("3,1,2"), vec![1, 2, 3]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("  \n"), Vec::<usize>::new());
+        // malformed pieces are skipped, not fatal
+        assert_eq!(parse_cpulist("0-1,x,4"), vec![0, 1, 4]);
+    }
+
+    #[test]
+    fn cpulist_formats_back_to_ranges() {
+        for list in ["0-3,8-11", "5", "0", "0-191", "1,3,5"] {
+            assert_eq!(format_cpulist(&parse_cpulist(list)), list);
+        }
+        assert_eq!(format_cpulist(&[]), "");
+    }
+
+    #[test]
+    fn meminfo_total_is_extracted() {
+        let blob = "Node 2 MemUsed:  100 kB\nNode 2 MemTotal:       32624132 kB\n";
+        assert_eq!(parse_meminfo_total_kb(blob), Some(32624132));
+        assert_eq!(parse_meminfo_total_kb("no such field"), None);
+    }
+
+    #[test]
+    fn distance_row_parses() {
+        assert_eq!(parse_distance("10 21 21 21\n"), vec![10, 21, 21, 21]);
+        assert_eq!(parse_distance("10"), vec![10]);
+    }
+
+    #[test]
+    fn missing_root_is_none() {
+        assert!(HostTopology::from_root(Path::new("/definitely/not/here")).is_none());
+    }
+}

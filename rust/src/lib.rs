@@ -9,6 +9,7 @@
 pub mod baseline;
 pub mod frontend;
 pub mod graph;
+pub mod hw;
 pub mod memory;
 pub mod metrics;
 pub mod model;

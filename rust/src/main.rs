@@ -7,8 +7,16 @@
 //!             default; --mode slots for the sequential baseline)
 //!   report    regenerate the paper's Table 1 / Figures 10–13
 //!   probe     print the simulated machine + bandwidth matrix
+//!   topo      print the detected host NUMA topology vs the simulated
+//!             testbed (host feature; falls back to simulated)
 //!   trace     export a Chrome-trace of one simulated decode step
 //!   golden    cross-check the native engine against PJRT artifacts
+//!
+//! Engine-building commands (`run`, `serve`) accept `--platform
+//! sim|host` and `--pin`: `--pin` implies host detection, binds each
+//! pool worker to its core's OS cpu and first-touches arenas onto
+//! their tagged node. Both degrade to the simulated testbed when the
+//! host layer is unavailable or too small for `--threads`.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -17,6 +25,7 @@ use anyhow::{bail, Context, Result};
 
 use arclight::baseline::Strategy;
 use arclight::frontend::{ByteTokenizer, Engine, EngineOptions, Sampler};
+use arclight::hw::{self, Platform};
 use arclight::model::{synth, ModelConfig};
 use arclight::numa::Topology;
 use arclight::report;
@@ -36,9 +45,18 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                let val = argv.get(i + 1).cloned().unwrap_or_else(|| "true".into());
-                flags.insert(key.to_string(), val);
-                i += 2;
+                // boolean flags (`--pin`) may be followed directly by
+                // the next `--flag`; only a non-flag token is a value
+                match argv.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => {
+                        flags.insert(key.to_string(), "true".into());
+                        i += 1;
+                    }
+                }
             } else {
                 bail!("unexpected argument '{a}'");
             }
@@ -48,6 +66,11 @@ impl Args {
 
     fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(String::as_str)
+    }
+
+    /// Boolean flag: present and not explicitly `false`/`0`.
+    fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some(v) if v != "false" && v != "0")
     }
 
     fn usize(&self, key: &str, default: usize) -> usize {
@@ -87,14 +110,43 @@ fn sync_mode(args: &Args) -> Result<SyncMode> {
     }
 }
 
+/// Resolve `--platform sim|host` / `--pin` into a [`Platform`],
+/// degrading to the simulated testbed (with a note) when host
+/// detection is unavailable or the machine is smaller than `threads`.
+fn platform_opt(args: &Args, threads: usize) -> Platform {
+    let pin = args.flag("pin");
+    let choice = args.str_or("platform", if pin { "host" } else { "sim" });
+    if choice != "host" {
+        return Platform::simulated();
+    }
+    match Platform::host_for(threads) {
+        Ok(p) => p,
+        Err(why) => {
+            eprintln!("note: {why}; using the simulated Kunpeng-920 testbed");
+            Platform::simulated()
+        }
+    }
+}
+
 fn engine_opts(args: &Args) -> Result<EngineOptions> {
+    let threads = args.usize("threads", 4);
+    let pin = args.flag("pin");
+    let platform = platform_opt(args, threads);
+    if platform.is_host() {
+        // node-local arena placement applies to every host-platform
+        // engine, pinned or not (slot baselines keep it after dropping
+        // --pin); must precede engine construction — arenas are placed
+        // at build
+        platform.install_membind();
+    }
     Ok(EngineOptions {
         strategy: strategy(args)?,
-        threads: args.usize("threads", 4),
-        topo: Topology::kunpeng920(),
+        threads,
+        platform,
         prefill_rows: args.get("prefill-rows").and_then(|v| v.parse().ok()),
         seed: args.usize("seed", 0) as u64,
         batch_slots: args.usize("batch", 1),
+        pin,
     })
 }
 
@@ -170,8 +222,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "slots" => {
             // sequential-slot baseline: N engines, one request at a time
             let slots = args.usize("slots", 2);
+            // Every slot engine derives the same cpu map (bind_cores
+            // starts at core 0), so pinning N > 1 of them would stack
+            // N pools onto the same cpus. Keep the host platform (and
+            // first-touch placement) but drop the pin — `--pin`
+            // implied `--platform host`, so pin that choice explicitly
+            // before removing the flag.
+            let mut flags = args.flags.clone();
+            if args.flag("pin") && slots > 1 {
+                eprintln!(
+                    "note: --pin disabled for --mode slots: {slots} slot engines would pin \
+                     to the same cpus (oversubscription); host platform kept"
+                );
+                flags.entry("platform".into()).or_insert_with(|| "host".into());
+                flags.remove("pin");
+            }
+            let slot_args = Args { flags };
             for i in 0..slots {
-                let engine = load_engine(args).with_context(|| format!("building slot {i}"))?;
+                let engine =
+                    load_engine(&slot_args).with_context(|| format!("building slot {i}"))?;
                 let r = router.clone();
                 std::thread::spawn(move || EngineSlot::new(engine).serve(r));
             }
@@ -268,6 +337,60 @@ fn cmd_probe(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `arclight topo`: the detected host NUMA machine next to the
+/// simulated testbed the figures run on.
+fn cmd_topo(_args: &Args) -> Result<()> {
+    println!("host pinning support compiled in: {}", hw::affinity::available());
+    let detected = Platform::detect();
+    match &detected {
+        Platform::Host { host, topo } => {
+            println!(
+                "detected host platform: {} NUMA node(s), {} online cpu(s)",
+                host.n_nodes(),
+                host.total_cpus()
+            );
+            for n in &host.nodes {
+                println!(
+                    "  node {}: {:3} cpus [{}]  mem {:.1} GiB",
+                    n.id,
+                    n.cpus.len(),
+                    hw::topology::format_cpulist(&n.cpus),
+                    n.mem_total_kb as f64 / (1024.0 * 1024.0)
+                );
+            }
+            println!("  SLIT distances:");
+            for row in &host.distance {
+                let cells: Vec<String> = row.iter().map(|d| format!("{d:3}")).collect();
+                println!("    {}", cells.join(" "));
+            }
+            println!(
+                "  lowered model: {} nodes x {} cores, local bw {:.0} GB/s (distance-ratio \
+                 scale, uncalibrated)",
+                topo.n_nodes(),
+                topo.cores_per_node,
+                topo.bandwidth(0, 0) / 1e9
+            );
+        }
+        Platform::Simulated(_) => {
+            println!(
+                "no host NUMA topology detected (feature `host` off, non-Linux, or no sysfs \
+                 tree) — engines fall back to the simulated testbed"
+            );
+        }
+    }
+    let sim = Topology::kunpeng920();
+    println!(
+        "simulated testbed (paper): {} NUMA nodes x {} cores = {} cores, local {:.0} / \
+         remote ~{:.0} GB/s",
+        sim.n_nodes(),
+        sim.cores_per_node,
+        sim.n_cores(),
+        sim.bandwidth(0, 0) / 1e9,
+        sim.bandwidth(0, 1) / 1e9
+    );
+    Ok(())
+}
+
 fn cmd_trace(args: &Args) -> Result<()> {
     let topo = Topology::kunpeng920();
     let cfg = preset(args.str_or("preset", "qwen3-4b"))?;
@@ -304,10 +427,11 @@ fn cmd_golden(args: &Args) -> Result<()> {
     let opts = EngineOptions {
         strategy: Strategy::arclight_single(),
         threads: 2,
-        topo: Topology::kunpeng920(),
+        platform: Platform::simulated(),
         prefill_rows: Some(prompt.len()),
         seed: 0,
         batch_slots: 1,
+        pin: false,
     };
     let mut engine = Engine::from_alf(&dir.join("tiny.alf"), &opts)?;
     let res = engine.generate(&prompt, max_new, &Sampler::greedy());
@@ -327,7 +451,7 @@ fn cmd_golden(args: &Args) -> Result<()> {
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().map(String::as_str) else {
-        eprintln!("usage: arclight <generate|run|serve|report|probe|trace|golden> [--flags]");
+        eprintln!("usage: arclight <generate|run|serve|report|probe|topo|trace|golden> [--flags]");
         std::process::exit(2);
     };
     let rest = Args::parse(&argv[1..])?;
@@ -340,6 +464,7 @@ fn main() -> Result<()> {
             cmd_report(&rest, &which)
         }
         "probe" => cmd_probe(&rest),
+        "topo" => cmd_topo(&rest),
         "trace" => cmd_trace(&rest),
         "golden" => cmd_golden(&rest),
         other => bail!("unknown command '{other}'"),

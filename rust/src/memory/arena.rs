@@ -41,11 +41,19 @@ unsafe impl Sync for Arena {}
 unsafe impl Send for Arena {}
 
 impl Arena {
+    /// Allocate the zeroed backing store through
+    /// [`crate::hw::membind::alloc_arena`] — the one centralized place
+    /// arena *placement* is decided. The old `vec![0u8; capacity]`
+    /// path hid a first-touch hazard: whichever thread faulted the
+    /// pages in decided which NUMA node they landed on, regardless of
+    /// the `node` tag. The membind path allocates untouched kernel
+    /// zero pages and (when a placement map is installed) faults them
+    /// in from a thread pinned to `node`.
     pub fn new(node: NodeId, capacity: usize) -> Self {
         Arena {
             node,
             used: 0,
-            data: UnsafeCell::new(vec![0u8; capacity].into_boxed_slice()),
+            data: UnsafeCell::new(crate::hw::membind::alloc_arena(node, capacity)),
         }
     }
 
@@ -195,6 +203,22 @@ mod tests {
                 assert!(all[t * 16..(t + 1) * 16].iter().all(|&v| v == t as f32));
             }
         }
+    }
+
+    #[test]
+    fn fresh_arena_reads_zero() {
+        // the membind allocation path must preserve the zeroed-storage
+        // contract the old vec![0u8; capacity] provided
+        let mut a = Arena::new(2, 4096);
+        let off = a.alloc(256 * 4);
+        unsafe {
+            assert!(a.f32s(off, 256).iter().all(|&v| v == 0.0));
+            assert!(a.bytes(0, 4096).iter().all(|&b| b == 0));
+        }
+        assert_eq!(a.node(), 2);
+        // zero-capacity arenas are legal (unused KV pools)
+        let z = Arena::new(0, 0);
+        assert_eq!(z.capacity(), 0);
     }
 
     #[test]

@@ -22,6 +22,11 @@ pub struct Metrics {
     /// scheduler this is 1 per step, so `dispatches_per_token` ≈
     /// 1/lanes — the legacy per-op walk paid ≈`ops` per step.
     pub pass_dispatches: AtomicU64,
+    /// Workers the serving engine's pool pinned to host cpus.
+    pub pinned_workers: AtomicU64,
+    /// Execution platform of the serving engine (`"simulated"` /
+    /// `"host"`; empty until a scheduler registers its engine).
+    platform: Mutex<&'static str>,
     latency: Mutex<Summary>,
     ttft: Mutex<Summary>,
     /// Enqueue → admission into the running batch.
@@ -57,6 +62,15 @@ impl Metrics {
 
     pub fn record_failure(&self) {
         self.requests_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Register the serving engine's execution platform and pin count
+    /// (called by each scheduler at serve start). Last registration
+    /// wins: with several sequential slot engines the values describe
+    /// one engine's pool, not a sum across slots.
+    pub fn set_platform(&self, platform: &'static str, pinned_workers: usize) {
+        *self.platform.lock().unwrap() = platform;
+        self.pinned_workers.store(pinned_workers as u64, Ordering::Relaxed);
     }
 
     /// One continuous-batching step that processed `lanes` lanes with
@@ -115,7 +129,16 @@ impl Metrics {
         let mut qw = self.queue_wait.lock().unwrap().clone();
         let mut rate = self.req_decode_tok_s.lock().unwrap().clone();
         let load = |c: &AtomicU64| c.load(Ordering::Relaxed) as usize;
+        let mut platform = *self.platform.lock().unwrap();
+        if platform.is_empty() {
+            platform = "unset";
+        }
         obj(vec![
+            ("platform", platform.into()),
+            ("pinned_workers", load(&self.pinned_workers).into()),
+            // bytes of arena storage faulted in node-locally (host
+            // first-touch placement; 0 on the simulated platform)
+            ("node_local_bytes", (crate::hw::membind::node_local_bytes() as usize).into()),
             ("requests_total", load(&self.requests_total).into()),
             ("requests_failed", load(&self.requests_failed).into()),
             ("tokens_prefilled", load(&self.tokens_prefilled).into()),
@@ -152,6 +175,19 @@ mod tests {
         assert_eq!(s.get("tokens_decoded").unwrap().as_usize(), Some(384));
         let p50 = s.get("latency_p50_s").unwrap().as_f64().unwrap();
         assert!((p50 - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn platform_fields_reported() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.get("platform").unwrap().as_str(), Some("unset"));
+        assert_eq!(s.get("pinned_workers").unwrap().as_usize(), Some(0));
+        assert!(s.get("node_local_bytes").unwrap().as_usize().is_some());
+        m.set_platform("simulated", 3);
+        let s = m.snapshot();
+        assert_eq!(s.get("platform").unwrap().as_str(), Some("simulated"));
+        assert_eq!(s.get("pinned_workers").unwrap().as_usize(), Some(3));
     }
 
     #[test]

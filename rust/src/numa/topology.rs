@@ -92,6 +92,19 @@ impl Topology {
             .with_cores_per_node(cores_per_node)
     }
 
+    /// A topology from an explicit bandwidth matrix (GB/s). Cost-model
+    /// calibration constants (compute rates, barrier costs, dispatch
+    /// overhead) inherit the Kunpeng-920 defaults — this is how
+    /// [`crate::hw::topology::HostTopology::to_topology`] lowers a
+    /// detected machine into the model.
+    pub fn from_bandwidth_gb(bw_gb: Vec<Vec<f64>>, cores_per_node: usize) -> Self {
+        let n = bw_gb.len();
+        assert!(n > 0, "bandwidth matrix needs at least one node");
+        assert!(bw_gb.iter().all(|row| row.len() == n), "bandwidth matrix must be square");
+        let bw = bw_gb.iter().map(|row| row.iter().map(|gb| gb * 1e9).collect()).collect();
+        Topology { bw, ..Topology::kunpeng920() }.with_cores_per_node(cores_per_node)
+    }
+
     pub fn with_cores_per_node(mut self, c: usize) -> Self {
         self.cores_per_node = c;
         self
@@ -211,6 +224,16 @@ mod tests {
         let cores2 = t.bind_cores(96, true, 2);
         assert_eq!(cores2.iter().filter(|c| c.node == 0).count(), 48);
         assert_eq!(cores2.iter().filter(|c| c.node == 1).count(), 48);
+    }
+
+    #[test]
+    fn explicit_bandwidth_matrix() {
+        let t = Topology::from_bandwidth_gb(vec![vec![90.0, 45.0], vec![45.0, 90.0]], 12);
+        assert_eq!(t.n_nodes(), 2);
+        assert_eq!(t.n_cores(), 24);
+        assert_eq!(t.bandwidth(0, 1), 45e9);
+        // calibration constants come from the Kunpeng-920 defaults
+        assert_eq!(t.core_flops, Topology::kunpeng920().core_flops);
     }
 
     #[test]

@@ -158,6 +158,8 @@ impl Executor for PjrtExecutor {
             // one device execution per pass — the PJRT analogue of the
             // native backends' single pool dispatch
             dispatches: 1,
+            // the HLO is AOT-compiled; there is no per-pass plan to cache
+            plan_cached: false,
             sim: None,
         }
     }

@@ -174,6 +174,10 @@ pub struct StepReport {
     /// the per-op dispatch tax this counter proves gone (legacy walk:
     /// ≈`exec.len()` per pass).
     pub dispatches: usize,
+    /// Whether the pass reused a cached [`PassPlan`] instead of
+    /// compiling one (real executor's per-`(graph, rows)` cache;
+    /// `false` for backends that compile per pass).
+    pub plan_cached: bool,
     /// Simulator detail (`None` for real backends).
     pub sim: Option<SimReport>,
 }

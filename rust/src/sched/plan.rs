@@ -59,7 +59,7 @@ pub struct PlanPart {
 
 /// One step of a compiled pass: an execution-list entry plus its
 /// precomputed barrier discipline.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PlanStep {
     /// Index into `graph.exec` (also the simulator's jitter tag input).
     pub entry: usize,
@@ -158,6 +158,29 @@ impl PassPlan {
     /// Execution-list entries the plan covers (`StepReport::ops`).
     pub fn ops(&self) -> usize {
         self.steps.len()
+    }
+
+    /// Structural equality of two compiled plans: same step list, same
+    /// unit accounting, same resolved kernels (compared by identity —
+    /// both plans resolve through the same graph's kernel table, so a
+    /// matching part must hold the very same `&'static` reference).
+    /// This is the cached-vs-fresh assertion surface of the executor's
+    /// plan cache: a cache hit in debug builds recompiles and demands
+    /// `same_as`, which is what proves unit counts are
+    /// position-independent for a given `(graph, rows)` shape.
+    pub fn same_as(&self, other: &PassPlan) -> bool {
+        self.sync == other.sync
+            && self.steps == other.steps
+            && self.unit_counts == other.unit_counts
+            && self.parts.len() == other.parts.len()
+            && self.parts.iter().zip(&other.parts).all(|(a, b)| {
+                a.id == b.id
+                    && a.units == b.units
+                    && std::ptr::eq(
+                        a.kernel as *const dyn Kernel as *const u8,
+                        b.kernel as *const dyn Kernel as *const u8,
+                    )
+            })
     }
 
     /// Pool dispatches the legacy per-operator walk would have issued
@@ -347,6 +370,23 @@ mod tests {
         let plan_b = PassPlan::compile(&g, &ExecParams::dense(0, 1), n, &org, SyncMode::SyncB);
         assert_eq!(plan.unit_counts, plan_b.unit_counts);
         assert_eq!(plan.ops(), plan_b.ops());
+    }
+
+    #[test]
+    fn recompiled_plans_are_structurally_identical() {
+        // the plan-cache debug assertion: compiling the same (graph,
+        // params) twice — or at a different position with the same row
+        // count — must yield step-for-step identical plans
+        let g = mixed_graph();
+        let (org, n) = org2();
+        let a = PassPlan::compile(&g, &ExecParams::dense(0, 1), n, &org, SyncMode::SyncB);
+        let b = PassPlan::compile(&g, &ExecParams::dense(0, 1), n, &org, SyncMode::SyncB);
+        assert!(a.same_as(&b));
+        let later = PassPlan::compile(&g, &ExecParams::dense(7, 1), n, &org, SyncMode::SyncB);
+        assert!(a.same_as(&later), "unit counts must be position-independent");
+        // a different sync discipline is a different plan
+        let sync_a = PassPlan::compile(&g, &ExecParams::dense(0, 1), n, &org, SyncMode::SyncA);
+        assert!(!a.same_as(&sync_a));
     }
 
     #[test]

@@ -288,6 +288,7 @@ impl Executor for SimExecutor {
             ops: rep.ops,
             unit_counts: plan.unit_counts,
             dispatches: 1,
+            plan_cached: false,
             sim: Some(rep),
         }
     }

@@ -221,6 +221,7 @@ impl ContinuousBatcher {
     /// Serve until the router shuts down *and* the queue and batch have
     /// drained.
     pub fn serve(mut self, router: Arc<Router>) {
+        router.metrics.set_platform(self.engine.platform(), self.engine.pinned_workers());
         let slots = self.engine.batch_slots();
         let mut active: Vec<ActiveSeq> = Vec::new();
         loop {
@@ -382,6 +383,7 @@ impl EngineSlot {
 
     /// Serve until the router shuts down.
     pub fn serve(mut self, router: Arc<Router>) {
+        router.metrics.set_platform(self.engine.platform(), self.engine.pinned_workers());
         while let Some(batch) = router.next_batch() {
             for p in batch {
                 let resp = self.run_one(&p);
@@ -423,6 +425,7 @@ mod tests {
     use super::*;
     use crate::baseline::Strategy;
     use crate::frontend::EngineOptions;
+    use crate::hw::Platform;
     use crate::model::ModelConfig;
     use crate::numa::Topology;
 
@@ -430,10 +433,11 @@ mod tests {
         EngineOptions {
             strategy: Strategy::arclight_single(),
             threads: 2,
-            topo: Topology::uniform(2, 2, 100.0, 25.0),
+            platform: Platform::Simulated(Topology::uniform(2, 2, 100.0, 25.0)),
             prefill_rows: None,
             seed: 1,
             batch_slots,
+            pin: false,
         }
     }
 
@@ -543,6 +547,10 @@ mod tests {
             "one dispatch per batched step"
         );
         assert!(router.metrics.dispatches_per_token() <= 1.0);
+        // the scheduler registered its engine's platform at serve start
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.get("platform").unwrap().as_str(), Some("simulated"));
+        assert_eq!(snap.get("pinned_workers").unwrap().as_usize(), Some(0));
     }
 
     #[test]

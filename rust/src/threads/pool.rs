@@ -1,8 +1,16 @@
 //! The worker thread pool.
 //!
-//! Workers are spawned once (before inference) and bound to *simulated*
-//! cores — the `Core` tag flows into the cost model; on the real host
-//! the OS schedules them freely. Two dispatch shapes exist:
+//! Workers are spawned once (before inference) and carry a *simulated*
+//! [`Core`] tag that flows into the cost model. By default the OS
+//! schedules them freely; [`ThreadPool::with_affinity`] additionally
+//! binds each worker to a real OS cpu via
+//! [`crate::hw::affinity::pin_current_thread`] **before it serves its
+//! first job**, so the persistent-worker pass loop stops migrating
+//! mid-pass on real NUMA hosts. Pinning is best effort: per-worker
+//! success is recorded and surfaced ([`ThreadPool::pinned_workers`]);
+//! a failed pin leaves the worker running unpinned. Workers are named
+//! `arclight-w{rank}-n{node}` so `perf`/`htop` sessions on real hosts
+//! attribute time to nodes. Two dispatch shapes exist:
 //!
 //! * [`ThreadPool::run_on`]/[`ThreadPool::run_all`] — a boxed closure
 //!   per worker with a completion latch. General-purpose, but one call
@@ -83,23 +91,51 @@ pub struct ThreadPool {
     global_barrier: Arc<SpinBarrier>,
     jobs_dispatched: AtomicUsize,
     dispatches: AtomicUsize,
+    /// Per-worker host-pin outcome (`false` everywhere when spawned
+    /// without a cpu map or when pinning is unavailable).
+    pinned: Vec<bool>,
 }
 
 impl ThreadPool {
-    /// Spawn one worker per core.
+    /// Spawn one worker per core (no host pinning).
     pub fn new(cores: Vec<Core>) -> Self {
+        Self::with_affinity(cores, None)
+    }
+
+    /// Spawn one worker per core; when `cpu_map` is given, worker `i`
+    /// pins itself to OS cpu `cpu_map[i]` before serving its first
+    /// job. The constructor blocks until every worker has reported its
+    /// pin outcome, so [`ThreadPool::pinned_workers`] is exact from
+    /// the moment the pool exists. A failed pin (restricted mask,
+    /// stub build) leaves that worker running unpinned.
+    pub fn with_affinity(cores: Vec<Core>, cpu_map: Option<Vec<usize>>) -> Self {
         let n = cores.len();
         assert!(n > 0);
+        if let Some(map) = &cpu_map {
+            assert_eq!(map.len(), n, "cpu map must cover every worker");
+        }
         let mut senders = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
+        let pin_state: Arc<Vec<AtomicBool>> =
+            Arc::new((0..n).map(|_| AtomicBool::new(false)).collect());
+        let started = Arc::new(Latch::new(n));
         for (i, core) in cores.iter().copied().enumerate() {
             let (tx, rx) = channel::<Msg>();
             senders.push(tx);
             let ctx = WorkerCtx { worker: i, core };
+            let pin_cpu = cpu_map.as_ref().map(|m| m[i]);
+            let pin_state = pin_state.clone();
+            let started = started.clone();
             handles.push(
                 std::thread::Builder::new()
-                    .name(format!("arclight-w{i}"))
+                    .name(format!("arclight-w{i}-n{}", core.node))
                     .spawn(move || {
+                        if let Some(cpu) = pin_cpu {
+                            if crate::hw::affinity::pin_current_thread(cpu) {
+                                pin_state[i].store(true, Ordering::Release);
+                            }
+                        }
+                        started.count_down(false);
                         while let Ok(msg) = rx.recv() {
                             // A panicking job must not kill the worker
                             // (the pool would deadlock every later
@@ -121,6 +157,8 @@ impl ThreadPool {
                     .expect("spawn worker"),
             );
         }
+        started.wait();
+        let pinned = pin_state.iter().map(|b| b.load(Ordering::Acquire)).collect();
         ThreadPool {
             senders,
             handles,
@@ -128,6 +166,7 @@ impl ThreadPool {
             global_barrier: Arc::new(SpinBarrier::new(n)),
             jobs_dispatched: AtomicUsize::new(0),
             dispatches: AtomicUsize::new(0),
+            pinned,
         }
     }
 
@@ -141,6 +180,17 @@ impl ThreadPool {
 
     pub fn cores(&self) -> &[Core] {
         &self.cores
+    }
+
+    /// Per-worker host-pin outcome, in worker order.
+    pub fn pinned(&self) -> &[bool] {
+        &self.pinned
+    }
+
+    /// Workers successfully pinned to a host cpu (0 without a cpu map
+    /// or on builds where pinning is unavailable).
+    pub fn pinned_workers(&self) -> usize {
+        self.pinned.iter().filter(|&&p| p).count()
     }
 
     /// Barrier spanning every worker of the pool (the paper's *global
@@ -340,6 +390,41 @@ mod tests {
         }));
         assert_eq!(counter.load(Ordering::SeqCst), 64);
         assert_eq!(pool.dispatches(), 1);
+    }
+
+    #[test]
+    fn unpinned_pool_reports_zero_pinned_workers() {
+        let pool = ThreadPool::new(cores(4));
+        assert_eq!(pool.pinned_workers(), 0);
+        assert_eq!(pool.pinned(), &[false; 4]);
+    }
+
+    #[test]
+    fn pinning_degrades_gracefully_and_pool_still_serves() {
+        // cpu map targeting cpus 0..n: on host builds the pins may or
+        // may not succeed (restricted runners); on stub builds they
+        // all fail. Either way the pool must be fully functional and
+        // the count must be consistent with the per-worker outcomes.
+        let cs = cores(3);
+        let pool = ThreadPool::with_affinity(cs, Some(vec![0, 1, 2]));
+        assert_eq!(pool.pinned().len(), 3);
+        let n_pinned = pool.pinned().iter().filter(|&&p| p).count();
+        assert_eq!(pool.pinned_workers(), n_pinned);
+        if !crate::hw::affinity::available() {
+            assert_eq!(n_pinned, 0, "stub builds must never report pinned workers");
+        }
+        let hits = Arc::new(Mutex::new(vec![0usize; 3]));
+        let h2 = hits.clone();
+        pool.run_pass(Arc::new(move |ctx: &WorkerCtx| {
+            h2.lock().unwrap()[ctx.worker] += 1;
+        }));
+        assert_eq!(*hits.lock().unwrap(), vec![1; 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cpu map must cover every worker")]
+    fn short_cpu_map_is_rejected() {
+        let _ = ThreadPool::with_affinity(cores(4), Some(vec![0, 1]));
     }
 
     #[test]

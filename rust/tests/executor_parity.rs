@@ -6,6 +6,7 @@
 
 use arclight::baseline::Strategy;
 use arclight::frontend::{Engine, EngineOptions, Sampler};
+use arclight::hw::Platform;
 use arclight::model::{ModelConfig, ModelGraphs};
 use arclight::numa::Topology;
 use arclight::sched::{ExecParams, Executor, SyncMode};
@@ -16,7 +17,7 @@ fn unit_parity(strategy: Strategy, threads: usize) {
     let topo = Topology::uniform(4, 4, 100.0, 25.0);
     let m = ModelGraphs::build(strategy.build_spec(ModelConfig::tiny(), topo.n_nodes()));
     let pool = m.pool.clone().expect("real build has buffers");
-    let real = strategy.real_executor(pool, &topo, threads);
+    let real = strategy.real_executor(pool, &Platform::Simulated(topo.clone()), threads, false);
     let sim = strategy.sim_executor(&topo, threads);
     let backends: [&dyn Executor; 2] = [&real, &sim];
     assert_eq!(backends[0].name(), "real");
@@ -61,10 +62,11 @@ fn batched_decode_token_identical_to_serial_through_trait() {
     let opts = |slots: usize| EngineOptions {
         strategy: Strategy::arclight_single(),
         threads: 2,
-        topo: Topology::uniform(2, 2, 100.0, 25.0),
+        platform: Platform::Simulated(Topology::uniform(2, 2, 100.0, 25.0)),
         prefill_rows: None,
         seed: 11,
         batch_slots: slots,
+        pin: false,
     };
     let mut serial = Engine::new_synthetic(ModelConfig::tiny(), &opts(1)).unwrap();
     let prompt = [5i32, 9, 2, 7];

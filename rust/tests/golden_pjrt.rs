@@ -37,10 +37,11 @@ fn engine(strategy: Strategy, threads: usize, prefill: Option<usize>) -> Engine 
     let opts = EngineOptions {
         strategy,
         threads,
-        topo: Topology::uniform(4, 4, 100.0, 25.0),
+        platform: arclight::hw::Platform::Simulated(Topology::uniform(4, 4, 100.0, 25.0)),
         prefill_rows: prefill,
         seed: 0,
         batch_slots: 1,
+        pin: false,
     };
     Engine::from_alf(&dir.join("tiny.alf"), &opts).unwrap()
 }

@@ -1,0 +1,193 @@
+//! `hw::topology` fixture tests: the sysfs parser against synthetic
+//! node trees for three machines (a 1-node laptop, a 2-node Xeon with
+//! hyperthread-split cpulists, a 4-node Kunpeng-920 with offline
+//! cpus), pinning the exact lowered `Topology` (nodes, cores per
+//! node, distance-derived bandwidth ratios), plus the no-sysfs
+//! fallback. Runs in the default feature set — the parser itself is
+//! std-only and always compiled.
+
+use std::fs;
+use std::path::PathBuf;
+
+use arclight::hw::topology::DEFAULT_LOCAL_GB;
+use arclight::hw::{HostTopology, Platform};
+use arclight::numa::Core;
+
+/// A throwaway sysfs-node-style tree under the system temp dir.
+struct Fixture {
+    root: PathBuf,
+}
+
+impl Fixture {
+    fn new(name: &str) -> Fixture {
+        let root = std::env::temp_dir()
+            .join(format!("arclight-hw-fixture-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(&root).unwrap();
+        Fixture { root }
+    }
+
+    fn node(&self, id: usize, cpulist: &str, mem_kb: u64, distance: &str) {
+        let dir = self.root.join(format!("node{id}"));
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("cpulist"), format!("{cpulist}\n")).unwrap();
+        fs::write(dir.join("distance"), format!("{distance}\n")).unwrap();
+        fs::write(
+            dir.join("meminfo"),
+            format!("Node {id} MemFree:        1024 kB\nNode {id} MemTotal:  {mem_kb} kB\n"),
+        )
+        .unwrap();
+    }
+
+    fn parse(&self) -> HostTopology {
+        HostTopology::from_root(&self.root).expect("fixture must parse")
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+#[test]
+fn one_node_laptop() {
+    let f = Fixture::new("laptop");
+    f.node(0, "0-7", 16 * 1024 * 1024, "10");
+    let h = f.parse();
+    assert_eq!(h.n_nodes(), 1);
+    assert_eq!(h.total_cpus(), 8);
+    assert_eq!(h.nodes[0].cpus, (0..8).collect::<Vec<_>>());
+    assert_eq!(h.nodes[0].mem_total_kb, 16 * 1024 * 1024);
+    assert_eq!(h.distance, vec![vec![10]]);
+
+    let t = h.to_topology();
+    assert_eq!(t.n_nodes(), 1);
+    assert_eq!(t.cores_per_node, 8);
+    assert_eq!(t.n_cores(), 8);
+    assert_eq!(t.bandwidth(0, 0), DEFAULT_LOCAL_GB * 1e9);
+    assert_eq!(h.os_cpu(Core { id: 3, node: 0 }), Some(3));
+    assert_eq!(h.os_cpu(Core { id: 8, node: 0 }), None, "past the last cpu");
+}
+
+#[test]
+fn two_node_xeon_with_hyperthread_split_cpulists() {
+    // a 2-socket Xeon enumerates hyperthread siblings in a second
+    // block, so each node's cpulist is non-contiguous
+    let f = Fixture::new("xeon");
+    f.node(0, "0-11,24-35", 96 * 1024 * 1024, "10 21");
+    f.node(1, "12-23,36-47", 96 * 1024 * 1024, "21 10");
+    let h = f.parse();
+    assert_eq!(h.n_nodes(), 2);
+    assert_eq!(h.total_cpus(), 48);
+    assert_eq!(h.cores_per_node(), 24);
+
+    let t = h.to_topology();
+    assert_eq!((t.n_nodes(), t.cores_per_node, t.n_cores()), (2, 24, 48));
+    // bandwidth ratios come straight from the SLIT row: local/remote
+    // = 21/10
+    assert_eq!(t.bandwidth(0, 0), DEFAULT_LOCAL_GB * 1e9);
+    assert_eq!(t.bandwidth(1, 1), DEFAULT_LOCAL_GB * 1e9);
+    let ratio = t.bandwidth(0, 0) / t.bandwidth(0, 1);
+    assert!((ratio - 2.1).abs() < 1e-9, "local/remote ratio {ratio}");
+
+    // core→cpu map follows the split enumeration: node0 core 11 → cpu
+    // 11 but core 12 → cpu 24; node1's first core → cpu 12
+    assert_eq!(h.os_cpu(Core { id: 11, node: 0 }), Some(11));
+    assert_eq!(h.os_cpu(Core { id: 12, node: 0 }), Some(24));
+    assert_eq!(h.os_cpu(Core { id: 24, node: 1 }), Some(12));
+    assert_eq!(h.os_cpu(Core { id: 47, node: 1 }), Some(47));
+    // and the whole bind_cores surface works against the lowering
+    let cores = t.bind_cores(8, true, 2);
+    let map = h.cpu_map(&cores).expect("every bound core has a backing cpu");
+    assert_eq!(map.len(), 8);
+    assert_eq!(map[0], 0);
+    assert!(map.iter().filter(|&&c| (12..24).contains(&c)).count() == 4, "{map:?}");
+}
+
+#[test]
+fn four_node_kunpeng_with_offline_cpus() {
+    // node2 has cpus 126-127 offline, so nodes are unequal and the
+    // lowered model clamps to the minimum (46 cores/node)
+    let f = Fixture::new("kunpeng");
+    let mem = 128 * 1024 * 1024;
+    f.node(0, "0-47", mem, "10 12 20 22");
+    f.node(1, "48-95", mem, "12 10 22 24");
+    f.node(2, "96-125,128-143", mem, "20 22 10 12");
+    f.node(3, "144-191", mem, "22 24 12 10");
+    let h = f.parse();
+    assert_eq!(h.n_nodes(), 4);
+    assert_eq!(h.total_cpus(), 190);
+    assert_eq!(h.nodes[2].cpus.len(), 46);
+    assert_eq!(h.cores_per_node(), 46);
+
+    let t = h.to_topology();
+    assert_eq!((t.n_nodes(), t.cores_per_node, t.n_cores()), (4, 46, 184));
+    // distance-derived ratios: near-remote 10/12, far-remote 10/20 and
+    // 10/22 off node 0
+    assert_eq!(t.bandwidth(0, 0), DEFAULT_LOCAL_GB * 1e9);
+    assert!((t.bandwidth(0, 1) - DEFAULT_LOCAL_GB * 1e9 * 10.0 / 12.0).abs() < 1.0);
+    assert!((t.bandwidth(0, 2) - DEFAULT_LOCAL_GB * 1e9 * 10.0 / 20.0).abs() < 1.0);
+    assert!((t.bandwidth(0, 3) - DEFAULT_LOCAL_GB * 1e9 * 10.0 / 22.0).abs() < 1.0);
+    // the local ≈ 2x far-remote structure survives into the model
+    assert!(t.bandwidth(0, 0) / t.bandwidth(0, 2) >= 2.0);
+
+    // node2's map skips the offline pair: its 30th core is cpu 125,
+    // its 31st jumps to 128
+    let base2 = 2 * t.cores_per_node;
+    assert_eq!(h.os_cpu(Core { id: base2 + 29, node: 2 }), Some(125));
+    assert_eq!(h.os_cpu(Core { id: base2 + 30, node: 2 }), Some(128));
+}
+
+#[test]
+fn fallback_when_sysfs_is_absent() {
+    assert!(HostTopology::from_root(&PathBuf::from("/nonexistent/sysfs/node")).is_none());
+    // an existing dir without node entries is also not a NUMA tree
+    let f = Fixture::new("empty");
+    assert!(HostTopology::from_root(&f.root).is_none());
+    // and Platform::detect degrades to the simulated testbed whenever
+    // the host layer is unavailable (always true in feature-off CI)
+    if !arclight::hw::affinity::available() {
+        assert_eq!(Platform::detect().name(), "simulated");
+    }
+}
+
+#[test]
+fn malformed_trees_are_rejected_not_misparsed() {
+    // non-contiguous node ids
+    let f = Fixture::new("holes");
+    f.node(0, "0-3", 1024, "10 21");
+    f.node(2, "4-7", 1024, "21 10");
+    assert!(HostTopology::from_root(&f.root).is_none());
+
+    // distance row shorter than the node count
+    let g = Fixture::new("shortrow");
+    g.node(0, "0-3", 1024, "10");
+    g.node(1, "4-7", 1024, "10 21");
+    assert!(HostTopology::from_root(&g.root).is_none());
+
+    // a cpu-less node
+    let e = Fixture::new("nocpus");
+    e.node(0, "0-3", 1024, "10 21");
+    e.node(1, "", 1024, "21 10");
+    assert!(HostTopology::from_root(&e.root).is_none());
+}
+
+#[test]
+fn platform_from_fixture_behaves_like_a_host() {
+    let f = Fixture::new("platform");
+    f.node(0, "0-3", 1024, "10 20");
+    f.node(1, "4-7", 1024, "20 10");
+    let p = Platform::from_host(f.parse());
+    assert_eq!(p.name(), "host");
+    assert!(p.is_host());
+    assert!(p.supports_threads(8));
+    assert!(!p.supports_threads(9));
+    let cores: Vec<Core> = (0..8).map(|i| p.topology().core(i)).collect();
+    assert_eq!(p.cpu_map(&cores), Some((0..8).collect()));
+    // installing the first-touch map succeeds (one cpu per node) and
+    // is undone so other tests see pristine global state
+    assert!(p.install_membind());
+    assert!(arclight::hw::membind::first_touch_installed());
+    arclight::hw::membind::clear_first_touch();
+}

@@ -132,10 +132,11 @@ fn prop_engine_deterministic_across_random_configs() {
         let opts = EngineOptions {
             strategy,
             threads,
-            topo: topo.clone(),
+            platform: arclight::hw::Platform::Simulated(topo.clone()),
             prefill_rows: None,
             seed: 31,
             batch_slots: 1,
+            pin: false,
         };
         let mut e = Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap();
         let res = e.generate(&[5, 9, 2], 10, &arclight::frontend::Sampler::greedy());

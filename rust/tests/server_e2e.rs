@@ -17,10 +17,11 @@ fn tiny_engine(batch_slots: usize) -> Engine {
     let opts = EngineOptions {
         strategy: Strategy::arclight_single(),
         threads: 2,
-        topo: Topology::uniform(2, 2, 100.0, 25.0),
+        platform: arclight::hw::Platform::Simulated(Topology::uniform(2, 2, 100.0, 25.0)),
         prefill_rows: None,
         seed: 7,
         batch_slots,
+        pin: false,
     };
     Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
 }

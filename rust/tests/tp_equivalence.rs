@@ -13,10 +13,11 @@ fn engine(strategy: Strategy, threads: usize) -> Engine {
     let opts = EngineOptions {
         strategy,
         threads,
-        topo: Topology::uniform(4, 4, 100.0, 25.0),
+        platform: arclight::hw::Platform::Simulated(Topology::uniform(4, 4, 100.0, 25.0)),
         prefill_rows: None,
         seed: 99,
         batch_slots: 1,
+        pin: false,
     };
     Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
 }
@@ -76,10 +77,11 @@ fn four_way_tp_rejected_on_tiny() {
     let opts = EngineOptions {
         strategy: Strategy::arclight_tp(4, SyncMode::SyncB),
         threads: 8,
-        topo: Topology::uniform(4, 4, 100.0, 25.0),
+        platform: arclight::hw::Platform::Simulated(Topology::uniform(4, 4, 100.0, 25.0)),
         prefill_rows: None,
         seed: 99,
         batch_slots: 1,
+        pin: false,
     };
     let r = std::panic::catch_unwind(|| Engine::new_synthetic(ModelConfig::tiny(), &opts));
     assert!(r.is_err(), "tiny model must reject 4-way TP (2 kv heads)");
@@ -92,10 +94,11 @@ fn small_model_four_way_tp_agrees() {
         let opts = EngineOptions {
             strategy: s,
             threads: t,
-            topo: topo.clone(),
+            platform: arclight::hw::Platform::Simulated(topo.clone()),
             prefill_rows: None,
             seed: 5,
             batch_slots: 1,
+            pin: false,
         };
         Engine::new_synthetic(ModelConfig::small_25m(), &opts).unwrap()
     };

@@ -3,19 +3,27 @@
 //! jobs vs one compiled pass), fused attention, RMSNorm, and the
 //! end-to-end decode step of the real engine on the small model —
 //! single-sequence and continuous-batched. The JSON report carries
-//! `dispatches_per_token` for the perf trajectory.
+//! `dispatches_per_token` for the perf trajectory, plus per-kernel
+//! achieved GB/s: each kernel row pairs its measured p50 with the
+//! analytic bytes-touched figure from `ops::cost`, read against one
+//! NUMA node's local bandwidth (`roofline_frac`; compare with
+//! `arclight topo`).
 //!
 //! These are host-machine numbers (1 core in this environment), used for
 //! the optimization loop — the paper-figure numbers come from the
 //! simulated testbed instead.
 //!
-//!     cargo bench --bench ops_hotpath [-- --quick] [-- --json <path>] [-- --pin]
+//!     cargo bench --bench ops_hotpath [-- --quick] [-- --json <path>]
+//!         [-- --pin] [-- --tier scalar|avx2|avx512|neon]
 //!
 //! `--quick` shrinks sizes/iterations for the CI bench-smoke leg;
 //! `--json <path>` writes the measured per-iteration seconds as a JSON
 //! report (the perf-trajectory artifact); `--pin` runs the end-to-end
 //! engines on the detected host platform with pinned workers and
-//! first-touch arenas (degrades to simulated when unavailable).
+//! first-touch arenas (degrades to simulated when unavailable);
+//! `--tier` forces the SIMD kernel tier (default: auto-detect). The
+//! Q4_0 GEMV section always benches the scalar oracle next to the
+//! active tier so the SIMD speedup is visible in one run.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -26,15 +34,27 @@ use arclight::hw::{membind, Platform};
 use arclight::model::ModelConfig;
 use arclight::numa::Topology;
 use arclight::ops;
+use arclight::ops::cost;
 use arclight::quant::quantize_matrix_q4_0;
+use arclight::report::BenchRow;
+use arclight::simd::KernelTier;
+use arclight::tensor::DType;
 use arclight::threads::{ThreadPool, WorkerCtx};
 use arclight::util::json::{obj, Json};
 use arclight::util::stats::{fmt_duration, Summary};
 use arclight::util::Rng;
 
 /// warmup + timed iterations; returns per-iteration seconds and logs
-/// the sample into `report`.
-fn bench<F: FnMut()>(report: &mut Vec<(String, f64)>, name: &str, iters: usize, mut f: F) -> f64 {
+/// the row — with its `ops::cost` traffic model, when one exists —
+/// into `report`.
+fn bench<F: FnMut()>(
+    report: &mut Vec<BenchRow>,
+    name: &str,
+    iters: usize,
+    bytes: Option<f64>,
+    tier: &'static str,
+    mut f: F,
+) -> f64 {
     for _ in 0..3 {
         f();
     }
@@ -46,8 +66,17 @@ fn bench<F: FnMut()>(report: &mut Vec<(String, f64)>, name: &str, iters: usize, 
     }
     let p50 = s.p50();
     println!("{name:42} {:>12}/iter  (min {:>12})", fmt_duration(p50), fmt_duration(s.min()));
-    report.push((name.to_string(), p50));
+    report.push(BenchRow { name: name.to_string(), p50_s: p50, bytes_touched: bytes, tier });
     p50
+}
+
+/// Achieved-GB/s line for the last benched row, against one node's
+/// local memory bandwidth.
+fn print_gbs(row: &BenchRow, node_bw: f64) {
+    if let Some(gbs) = row.gbs() {
+        let frac = if node_bw > 0.0 { gbs * 1e9 / node_bw * 100.0 } else { 0.0 };
+        println!("{:42} {gbs:>8.2} GB/s achieved ({frac:.0}% of node bw)", "");
+    }
 }
 
 fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
@@ -83,6 +112,19 @@ fn main() {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    if let Some(name) = args.iter().position(|a| a == "--tier").and_then(|i| args.get(i + 1)) {
+        if name != "auto" {
+            let t = KernelTier::parse(name).unwrap_or_else(|| {
+                eprintln!("unknown tier '{name}' (scalar|avx2|avx512|neon|auto)");
+                std::process::exit(2);
+            });
+            if let Err(e) = KernelTier::set_active(t) {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let tier = KernelTier::active();
     // worker threads the end-to-end engine sections below actually use
     let max_engine_threads = if quick { 2 } else { 4 };
     let platform = if pin {
@@ -94,13 +136,16 @@ fn main() {
     } else {
         Platform::simulated()
     };
+    // roofline reference: one node's local memory bandwidth
+    let node_bw = platform.topology().bandwidth(0, 0);
     let mut pinned_workers = 0usize;
-    let mut report: Vec<(String, f64)> = Vec::new();
+    let mut report: Vec<BenchRow> = Vec::new();
     let rep = &mut report;
 
     println!(
-        "== operator hot paths (host wall-clock{}) ==\n",
-        if quick { ", quick mode" } else { "" }
+        "== operator hot paths (host wall-clock{}, {tier} tier, node bw {:.0} GB/s) ==\n",
+        if quick { ", quick mode" } else { "" },
+        node_bw / 1e9
     );
 
     // --- Q4_0 GEMV: the decode inner loop -----------------------------------
@@ -110,28 +155,43 @@ fn main() {
     let wq = quantize_matrix_q4_0(&w, n, k);
     let x = rand_vec(k, 2);
     let mut out = vec![0.0f32; n];
-    let t = bench(rep, &format!("q4_0 gemv {n}x{k}"), gemv_iters, || {
-        ops::gemm::gemm_q4_0(&x, &wq, &mut out, 1, k, n, 0, n);
+    let gemv_bytes = cost::gemm(1, k, 0, n, DType::Q4_0).total_bytes();
+    let name_q4 = format!("q4_0 gemv {n}x{k}");
+    let t = bench(rep, &name_q4, gemv_iters, Some(gemv_bytes), tier.name(), || {
+        ops::gemm::gemm_q4_0_t(tier, &x, &wq, &mut out, 1, k, n, 0, n);
     });
-    let bytes = wq.len() as f64;
-    let gbs = bytes / t / 1e9;
+    print_gbs(rep.last().unwrap(), node_bw);
     let gflops = 2.0 * (n * k) as f64 / t / 1e9;
-    println!("{:42} {gbs:>8.2} GB/s weight stream, {gflops:>6.2} GFLOP/s", "");
+    println!("{:42} {gflops:>8.2} GFLOP/s", "");
+    // the scalar oracle next to the active tier: the SIMD speedup
+    if tier != KernelTier::Scalar {
+        let name = format!("q4_0 gemv {n}x{k} (scalar oracle)");
+        let ts = bench(rep, &name, gemv_iters, Some(gemv_bytes), "scalar", || {
+            ops::gemm::gemm_q4_0_t(KernelTier::Scalar, &x, &wq, &mut out, 1, k, n, 0, n);
+        });
+        println!("{:42} {tier} speedup over scalar: {:.2}x", "", ts / t);
+    }
 
     // --- f32 GEMV reference --------------------------------------------------
     let mut out_f = vec![0.0f32; n];
-    let tf = bench(rep, &format!("f32 gemv {n}x{k}"), gemv_iters, || {
-        ops::gemm::gemm_f32(&x, &w, &mut out_f, 1, k, n, 0, n);
+    let f32_bytes = cost::gemm(1, k, 0, n, DType::F32).total_bytes();
+    let name_f32 = format!("f32 gemv {n}x{k}");
+    let tf = bench(rep, &name_f32, gemv_iters, Some(f32_bytes), tier.name(), || {
+        ops::gemm::gemm_f32_t(tier, &x, &w, &mut out_f, 1, k, n, 0, n);
     });
+    print_gbs(rep.last().unwrap(), node_bw);
     println!("{:42} q4/f32 time ratio: {:.2} (q4 moves 7.1x fewer bytes)", "", t / tf);
 
     // --- batched GEMM (m = 8): the continuous-batching decode shape ----------
     let m = 8usize;
     let xm = rand_vec(m * k, 3);
     let mut outm = vec![0.0f32; m * n];
-    let tm = bench(rep, &format!("q4_0 gemm {m}x{k} · {n}x{k}ᵀ"), gemv_iters.max(10), || {
-        ops::gemm::gemm_q4_0(&xm, &wq, &mut outm, m, k, n, 0, n);
+    let gemm_bytes = cost::gemm(m, k, 0, n, DType::Q4_0).total_bytes();
+    let name_m = format!("q4_0 gemm {m}x{k} · {n}x{k}ᵀ");
+    let tm = bench(rep, &name_m, gemv_iters.max(10), Some(gemm_bytes), tier.name(), || {
+        ops::gemm::gemm_q4_0_t(tier, &xm, &wq, &mut outm, m, k, n, 0, n);
     });
+    print_gbs(rep.last().unwrap(), node_bw);
     println!(
         "{:42} {:>8.2} GFLOP/s, {:.2}x the GEMV time for {m}x the tokens",
         "",
@@ -152,14 +212,14 @@ fn main() {
         let cores: Vec<_> = (0..workers).map(|i| topo.core(i)).collect();
         let pool = ThreadPool::new(cores);
         let name_old = format!("dispatch {n_ops} empty ops, per-op path");
-        let t_old = bench(rep, &name_old, disp_iters, || {
+        let t_old = bench(rep, &name_old, disp_iters, None, tier.name(), || {
             for _ in 0..n_ops {
                 pool.run_all(Arc::new(|_: &WorkerCtx| {}));
             }
         });
         let gb = pool.global_barrier();
         let name_new = format!("dispatch {n_ops} empty ops, pass path");
-        let t_new = bench(rep, &name_new, disp_iters, || {
+        let t_new = bench(rep, &name_new, disp_iters, None, tier.name(), || {
             let gb = gb.clone();
             pool.run_pass(Arc::new(move |_: &WorkerCtx| {
                 for _ in 0..n_ops {
@@ -182,19 +242,28 @@ fn main() {
     let kc = rand_vec(kvh * max_seq * hd, 5);
     let vc = rand_vec(kvh * max_seq * hd, 6);
     let mut ao = vec![0.0f32; heads * hd];
-    bench(rep, &format!("attention decode H={heads} kv_len={kv_len}"), gemv_iters, || {
+    // the traffic model the --quick JSON used to omit for attention
+    let attn_bytes = cost::attention(1, heads, kvh, hd, kv_len, DType::F32, 0, heads).total_bytes();
+    let name_a = format!("attention decode H={heads} kv_len={kv_len}");
+    bench(rep, &name_a, gemv_iters, Some(attn_bytes), tier.name(), || {
         let p0 = kv_len - 1;
-        ops::attention::attention(&q, &kc, &vc, &mut ao, 1, heads, kvh, hd, max_seq, p0, 0, heads);
+        ops::attention::attention_t(
+            tier, &q, &kc, &vc, &mut ao, 1, heads, kvh, hd, max_seq, p0, 0, heads,
+        );
     });
+    print_gbs(rep.last().unwrap(), node_bw);
 
     // --- RMSNorm -------------------------------------------------------------
     let d = 2048usize;
     let xr = rand_vec(d, 7);
     let g = rand_vec(d, 8);
     let mut outn = vec![0.0f32; d];
-    bench(rep, &format!("rmsnorm d={d}"), if quick { 10 } else { 50 }, || {
-        ops::norm::rmsnorm(&xr, &g, &mut outn, d, 1e-6, 0, 1);
+    let norm_bytes = cost::rmsnorm(d, 0, 1).total_bytes();
+    let norm_iters = if quick { 10 } else { 50 };
+    bench(rep, &format!("rmsnorm d={d}"), norm_iters, Some(norm_bytes), tier.name(), || {
+        ops::norm::rmsnorm_t(tier, &xr, &g, &mut outn, d, 1e-6, 0, 1);
     });
+    print_gbs(rep.last().unwrap(), node_bw);
 
     // --- end-to-end decode step (real engine, small model) -------------------
     println!("\n== end-to-end decode (small-25m, real engine) ==\n");
@@ -211,7 +280,8 @@ fn main() {
         engine.prefill(&[1, 2, 3, 4]);
         let horizon = cfg.max_seq - 24;
         let mut step = 0usize;
-        let t = bench(rep, &format!("decode step, {threads} worker(s)"), step_iters, || {
+        let name_e = format!("decode step, {threads} worker(s)");
+        let t = bench(rep, &name_e, step_iters, None, tier.name(), || {
             let logits = engine.decode_step((step % 200) as i32 + 5);
             step += 1;
             std::hint::black_box(&logits);
@@ -240,7 +310,8 @@ fn main() {
         let mut seqs: Vec<_> = (0..slots).map(|_| engine.seq_alloc().unwrap()).collect();
         let horizon = cfg.max_seq - 24;
         let mut step = 0usize;
-        let t = bench(rep, &format!("batched decode step, {slots} lanes"), step_iters, || {
+        let name_b = format!("batched decode step, {slots} lanes");
+        let t = bench(rep, &name_b, step_iters, None, tier.name(), || {
             let lanes: Vec<_> = seqs.iter().map(|&s| (s, (step % 200) as i32 + 5)).collect();
             let logits = engine.step_batch(&lanes);
             step += 1;
@@ -259,16 +330,13 @@ fn main() {
     println!("\ngenerate {} tokens: {:.1} tok/s decode", res.decode_tokens, res.decode_tok_per_s());
 
     if let Some(path) = json_path {
-        let entries: Vec<Json> = report
-            .iter()
-            .map(|(name, secs)| {
-                obj(vec![("name", name.as_str().into()), ("p50_s", (*secs).into())])
-            })
-            .collect();
+        let entries: Vec<Json> = report.iter().map(|row| row.to_json(node_bw)).collect();
         let j = obj(vec![
             ("benchmark", "ops_hotpath".into()),
             ("quick", quick.into()),
             ("platform", platform.name().into()),
+            ("tier", tier.name().into()),
+            ("node_bandwidth_gb", (node_bw / 1e9).into()),
             ("pinned_workers", pinned_workers.into()),
             ("node_local_bytes", (membind::node_local_bytes() as usize).into()),
             ("dispatches_per_token", dispatches_per_token.into()),

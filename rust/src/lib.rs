@@ -20,6 +20,7 @@ pub mod report;
 pub mod runtime;
 pub mod sched;
 pub mod server;
+pub mod simd;
 pub mod tensor;
 pub mod threads;
 pub mod util;

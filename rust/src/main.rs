@@ -17,6 +17,11 @@
 //! pool worker to its core's OS cpu and first-touches arenas onto
 //! their tagged node. Both degrade to the simulated testbed when the
 //! host layer is unavailable or too small for `--threads`.
+//!
+//! Every subcommand accepts `--tier scalar|avx2|avx512|neon|auto` to
+//! force the SIMD kernel tier (default: auto-detect at startup; scalar
+//! is the parity oracle). `avx512` additionally needs the
+//! `simd-avx512` cargo feature.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -31,6 +36,7 @@ use arclight::numa::Topology;
 use arclight::report;
 use arclight::runtime::PjrtExecutor;
 use arclight::sched::SyncMode;
+use arclight::simd::KernelTier;
 use arclight::server::{BatcherConfig, ContinuousBatcher, EngineSlot, Router, ServerHandle};
 
 /// Tiny std-only flag parser: `--key value` pairs after the subcommand.
@@ -79,6 +85,21 @@ impl Args {
 
     fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
+    }
+}
+
+/// Resolve `--tier` into the process-wide SIMD tier. No flag (or
+/// `auto`) keeps the startup detection; an unknown or unsupported tier
+/// is an error rather than a silent fallback.
+fn apply_tier(args: &Args) -> Result<()> {
+    match args.get("tier") {
+        None | Some("auto") => Ok(()),
+        Some(name) => {
+            let tier = KernelTier::parse(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown tier '{name}' (scalar|avx2|avx512|neon|auto)")
+            })?;
+            KernelTier::set_active(tier).map_err(|e| anyhow::anyhow!(e))
+        }
     }
 }
 
@@ -341,6 +362,11 @@ fn cmd_probe(args: &Args) -> Result<()> {
 /// simulated testbed the figures run on.
 fn cmd_topo(_args: &Args) -> Result<()> {
     println!("host pinning support compiled in: {}", hw::affinity::available());
+    println!(
+        "kernel tier: {} active ({} detected)",
+        KernelTier::active(),
+        KernelTier::detect()
+    );
     let detected = Platform::detect();
     match &detected {
         Platform::Host { host, topo } => {
@@ -455,6 +481,7 @@ fn main() -> Result<()> {
         std::process::exit(2);
     };
     let rest = Args::parse(&argv[1..])?;
+    apply_tier(&rest)?;
     match cmd {
         "generate" => cmd_generate(&rest),
         "run" => cmd_run(&rest),

@@ -135,6 +135,8 @@ impl Metrics {
         }
         obj(vec![
             ("platform", platform.into()),
+            // SIMD tier the vectorized kernels dispatch on (process-wide)
+            ("kernel_tier", crate::simd::KernelTier::active().name().into()),
             ("pinned_workers", load(&self.pinned_workers).into()),
             // bytes of arena storage faulted in node-locally (host
             // first-touch placement; 0 on the simulated platform)
@@ -182,6 +184,9 @@ mod tests {
         let m = Metrics::new();
         let s = m.snapshot();
         assert_eq!(s.get("platform").unwrap().as_str(), Some("unset"));
+        let tier = s.get("kernel_tier").unwrap().as_str().unwrap();
+        assert!(!tier.is_empty(), "kernel_tier must name the active tier");
+        assert_eq!(tier, crate::simd::KernelTier::active().name());
         assert_eq!(s.get("pinned_workers").unwrap().as_usize(), Some(0));
         assert!(s.get("node_local_bytes").unwrap().as_usize().is_some());
         m.set_platform("simulated", 3);

@@ -9,13 +9,56 @@
 //! Layout: `q` is [rows, heads*head_dim] (rows = new tokens);
 //! `k_cache`/`v_cache` are [kv_heads, max_seq, head_dim]; GQA maps query
 //! head `h` to kv head `h / (heads / kv_heads)`.
+//!
+//! Tier dispatch: the score dot product and the rescale-accumulate
+//! (`acc[i] = acc[i]·corr + p·v[i]`) are the vectorized inner loops.
+//! The axpy stays multiply + add on every tier, so only the dot
+//! reduction reassociates — the batched == serial determinism contract
+//! (see [`attention_rows`]) holds on every tier.
+
+use crate::simd::{self, KernelTier};
 
 /// Decode/prefill attention for query heads `[h0, h1)`.
 ///
 /// Row `r` of `q` sits at absolute position `pos0 + r` and attends
-/// causally to cache positions `0..=pos0+r`.
+/// causally to cache positions `0..=pos0+r`. Scalar tier — the parity
+/// oracle for [`attention_t`].
 #[allow(clippy::too_many_arguments)]
 pub fn attention(
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    heads: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    max_seq: usize,
+    pos0: usize,
+    h0: usize,
+    h1: usize,
+) {
+    attention_t(
+        KernelTier::Scalar,
+        q,
+        k_cache,
+        v_cache,
+        out,
+        rows,
+        heads,
+        kv_heads,
+        head_dim,
+        max_seq,
+        pos0,
+        h0,
+        h1,
+    );
+}
+
+/// [`attention`] with the dot/axpy inner loops dispatched on `tier`.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_t(
+    tier: KernelTier,
     q: &[f32],
     k_cache: &[f32],
     v_cache: &[f32],
@@ -52,15 +95,13 @@ pub fn attention(
             acc.fill(0.0);
             for t in 0..kv_len {
                 let kv = &k_cache[kbase + t * head_dim..kbase + (t + 1) * head_dim];
-                let s = super::gemm::dot_f32(qv, kv) * scale;
+                let s = simd::dot_f32(tier, qv, kv) * scale;
                 let m_new = m.max(s);
                 let corr = if m.is_finite() { (m - m_new).exp() } else { 0.0 };
                 let p = (s - m_new).exp();
                 l = l * corr + p;
                 let vv = &v_cache[vbase + t * head_dim..vbase + (t + 1) * head_dim];
-                for i in 0..head_dim {
-                    acc[i] = acc[i] * corr + p * vv[i];
-                }
+                simd::axpy_rescale(tier, &mut acc, corr, p, vv);
                 m = m_new;
             }
             let inv = if l > 0.0 { 1.0 / l } else { 0.0 };
@@ -109,9 +150,46 @@ pub fn store_kv(
 /// Per-row arithmetic (dot order, online-softmax recurrence) is
 /// identical to [`attention`], so a batched step is bit-equal to the
 /// serial single-sequence step — the determinism contract the batcher
-/// tests pin down.
+/// tests pin down. Scalar tier — the parity oracle for
+/// [`attention_rows_t`].
 #[allow(clippy::too_many_arguments)]
 pub fn attention_rows(
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    out: &mut [f32],
+    heads: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    capacity: usize,
+    kv_base: &[usize],
+    pos: &[usize],
+    h0: usize,
+    h1: usize,
+) {
+    attention_rows_t(
+        KernelTier::Scalar,
+        q,
+        k_cache,
+        v_cache,
+        out,
+        heads,
+        kv_heads,
+        head_dim,
+        capacity,
+        kv_base,
+        pos,
+        h0,
+        h1,
+    );
+}
+
+/// [`attention_rows`] with the dot/axpy inner loops dispatched on
+/// `tier`. The per-row arithmetic matches [`attention_t`] on the same
+/// tier, so batched == serial holds tier by tier.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_rows_t(
+    tier: KernelTier,
     q: &[f32],
     k_cache: &[f32],
     v_cache: &[f32],
@@ -149,15 +227,13 @@ pub fn attention_rows(
             acc.fill(0.0);
             for t in 0..kv_len {
                 let kv = &k_cache[base + t * head_dim..base + (t + 1) * head_dim];
-                let s = super::gemm::dot_f32(qv, kv) * scale;
+                let s = simd::dot_f32(tier, qv, kv) * scale;
                 let m_new = m.max(s);
                 let corr = if m.is_finite() { (m - m_new).exp() } else { 0.0 };
                 let p = (s - m_new).exp();
                 l = l * corr + p;
                 let vv = &v_cache[base + t * head_dim..base + (t + 1) * head_dim];
-                for i in 0..head_dim {
-                    acc[i] = acc[i] * corr + p * vv[i];
-                }
+                simd::axpy_rescale(tier, &mut acc, corr, p, vv);
                 m = m_new;
             }
             let inv = if l > 0.0 { 1.0 / l } else { 0.0 };

@@ -11,6 +11,7 @@ use crate::tensor::DType;
 /// Resource profile of a worker's share of one operator.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct OpCost {
+    /// Floating-point operations (multiply-adds count as 2).
     pub flops: f64,
     /// Bytes streamed from the weight-like operand (partitioned rows).
     pub weight_bytes: f64,

@@ -10,14 +10,31 @@
 //! (`dot_q4_0_f32`): on real hardware this is the bandwidth-bound
 //! stream the whole paper is about.
 
-use crate::quant::dot_q8_0_f32;
+use crate::simd::{self, KernelTier};
 use crate::tensor::dtype::{Q4_0_BLOCK_BYTES, Q8_0_BLOCK_BYTES, QK4_0, QK8_0};
 
 /// f32 GEMM: `out[m, n] = Σ_k x[m, k] · w[n, k]` for `n ∈ [n0, n1)`.
 /// `out` is the full `[M, N]` buffer; this call writes columns
-/// `n0..n1` of each row.
+/// `n0..n1` of each row. Scalar tier — the parity oracle for
+/// [`gemm_f32_t`].
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_f32(
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    n0: usize,
+    n1: usize,
+) {
+    gemm_f32_t(KernelTier::Scalar, x, w, out, m, k, n, n0, n1);
+}
+
+/// [`gemm_f32`] with the inner dot product dispatched on `tier`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_t(
+    tier: KernelTier,
     x: &[f32],
     w: &[f32],
     out: &mut [f32],
@@ -35,7 +52,7 @@ pub fn gemm_f32(
         let or = &mut out[mi * n..(mi + 1) * n];
         for ni in n0..n1 {
             let wr = &w[ni * k..(ni + 1) * k];
-            or[ni] = dot_f32(xr, wr);
+            or[ni] = simd::dot_f32(tier, xr, wr);
         }
     }
 }
@@ -44,9 +61,26 @@ pub fn gemm_f32(
 ///
 /// The activation row's per-block sums are computed once and shared by
 /// all `n1 - n0` weight rows (`dot_q4_0_f32_presum`), hoisting the Q4_0
-/// bias correction out of the hot loop.
+/// bias correction out of the hot loop. Scalar tier — the parity
+/// oracle for [`gemm_q4_0_t`].
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_q4_0(
+    x: &[f32],
+    w: &[u8],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    n0: usize,
+    n1: usize,
+) {
+    gemm_q4_0_t(KernelTier::Scalar, x, w, out, m, k, n, n0, n1);
+}
+
+/// [`gemm_q4_0`] with the presum dot product dispatched on `tier`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_q4_0_t(
+    tier: KernelTier,
     x: &[f32],
     w: &[u8],
     out: &mut [f32],
@@ -67,14 +101,31 @@ pub fn gemm_q4_0(
         let or = &mut out[mi * n..(mi + 1) * n];
         for ni in n0..n1 {
             let wr = &w[ni * row_bytes..(ni + 1) * row_bytes];
-            or[ni] = crate::quant::dot_q4_0_f32_presum(wr, xr, &xsums);
+            or[ni] = simd::dot_q4_0_presum(tier, wr, xr, &xsums);
         }
     }
 }
 
-/// Q8_0 GEMM (quantized-KV attention scores use this layout).
+/// Q8_0 GEMM (quantized-KV attention scores use this layout). Scalar
+/// tier — the parity oracle for [`gemm_q8_0_t`].
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_q8_0(
+    x: &[f32],
+    w: &[u8],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    n0: usize,
+    n1: usize,
+) {
+    gemm_q8_0_t(KernelTier::Scalar, x, w, out, m, k, n, n0, n1);
+}
+
+/// [`gemm_q8_0`] with the block dot product dispatched on `tier`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_q8_0_t(
+    tier: KernelTier,
     x: &[f32],
     w: &[u8],
     out: &mut [f32],
@@ -91,7 +142,7 @@ pub fn gemm_q8_0(
         let or = &mut out[mi * n..(mi + 1) * n];
         for ni in n0..n1 {
             let wr = &w[ni * row_bytes..(ni + 1) * row_bytes];
-            or[ni] = dot_q8_0_f32(wr, xr);
+            or[ni] = simd::dot_q8_0(tier, wr, xr);
         }
     }
 }

@@ -28,6 +28,7 @@ use crate::memory::MemoryPool;
 use crate::numa::cost::Traffic;
 use crate::ops::OpCost;
 use crate::sched::ExecParams;
+use crate::simd::KernelTier;
 use crate::tensor::{DType, TensorId};
 
 use super::kernels as k;
@@ -164,6 +165,15 @@ pub trait Kernel: Send + Sync {
     /// concurrent invocations carry non-overlapping unit ranges, and
     /// `u0 <= u1 <= self.units(...)`.
     unsafe fn run(&self, ctx: &OpCtx<'_>, u0: usize, u1: usize);
+
+    /// The SIMD tier this kernel's [`Kernel::run`] dispatches on.
+    ///
+    /// Vectorized kernels (matmul, rmsnorm, attention) override this to
+    /// report the process-wide [`KernelTier::active`] tier; kernels
+    /// with no vector path keep the default and report `Scalar`.
+    fn tier(&self) -> KernelTier {
+        KernelTier::Scalar
+    }
 }
 
 impl std::fmt::Debug for dyn Kernel {
@@ -267,5 +277,26 @@ mod tests {
     #[should_panic(expected = "no matmul kernel")]
     fn i32_matmul_weights_rejected_at_resolution() {
         KernelRegistry::global().resolve(&OpKind::MatMul, Some(DType::I32));
+    }
+
+    #[test]
+    fn registry_resolves_tier_per_kernel() {
+        // vectorized kernels report the process-wide active tier;
+        // kernels without a vector path stay scalar
+        let reg = KernelRegistry::global();
+        let active = KernelTier::active();
+        for op in [
+            reg.resolve(&OpKind::MatMul, Some(DType::Q4_0)),
+            reg.resolve(&OpKind::MatMul, Some(DType::F32)),
+            reg.resolve(&OpKind::RmsNorm { eps: 1e-6 }, None),
+            reg.resolve(
+                &OpKind::Attention { heads: 2, kv_heads: 2, head_dim: 4, max_seq: 8 },
+                None,
+            ),
+        ] {
+            assert_eq!(op.tier(), active, "{} tier", op.name());
+        }
+        assert_eq!(reg.resolve(&OpKind::Leaf, None).tier(), KernelTier::Scalar);
+        assert_eq!(reg.resolve(&OpKind::Add, None).tier(), KernelTier::Scalar);
     }
 }

@@ -19,6 +19,7 @@ use crate::graph::{Graph, OpKind, TensorMeta};
 use crate::numa::cost::Traffic;
 use crate::numa::Placement;
 use crate::sched::ExecParams;
+use crate::simd::KernelTier;
 use crate::tensor::TensorId;
 
 use super::cost as oc;
@@ -239,7 +240,11 @@ impl Kernel for RmsNormKernel {
         let x = ctx.f32s(ctx.src(0));
         let g = ctx.f32s(ctx.src(1));
         let out = ctx.f32s_mut(ctx.id);
-        norm::rmsnorm(x, g, out, ctx.meta().row_len(), eps, u0, u1);
+        norm::rmsnorm_t(self.tier(), x, g, out, ctx.meta().row_len(), eps, u0, u1);
+    }
+
+    fn tier(&self) -> KernelTier {
+        KernelTier::active()
     }
 }
 
@@ -311,7 +316,11 @@ impl Kernel for RmsNormHeadsKernel {
         let g = ctx.f32s(ctx.src(1));
         let out = ctx.f32s_mut(ctx.id);
         let rows = act_rows(ctx.meta(), ctx.params);
-        norm::rmsnorm_heads(x, g, out, rows, heads, head_dim, eps, u0, u1);
+        norm::rmsnorm_heads_t(self.tier(), x, g, out, rows, heads, head_dim, eps, u0, u1);
+    }
+
+    fn tier(&self) -> KernelTier {
+        KernelTier::active()
     }
 }
 
@@ -405,15 +414,19 @@ macro_rules! matmul_kernel {
                 let x = ctx.f32s(ctx.src(0));
                 let w = ctx.$weights(ctx.src(1));
                 let out = ctx.f32s_mut(ctx.id);
-                $gemm(x, w, out, m, k, n, u0, u1);
+                $gemm(self.tier(), x, w, out, m, k, n, u0, u1);
+            }
+
+            fn tier(&self) -> KernelTier {
+                KernelTier::active()
             }
         }
     };
 }
 
-matmul_kernel!(MatMulF32Kernel, "matmul_f32", f32s, gemm::gemm_f32);
-matmul_kernel!(MatMulQ40Kernel, "matmul_q4_0", bytes, gemm::gemm_q4_0);
-matmul_kernel!(MatMulQ80Kernel, "matmul_q8_0", bytes, gemm::gemm_q8_0);
+matmul_kernel!(MatMulF32Kernel, "matmul_f32", f32s, gemm::gemm_f32_t);
+matmul_kernel!(MatMulQ40Kernel, "matmul_q4_0", bytes, gemm::gemm_q4_0_t);
+matmul_kernel!(MatMulQ80Kernel, "matmul_q8_0", bytes, gemm::gemm_q8_0_t);
 
 // ---------------------------------------------------------------------------
 // Rope
@@ -673,7 +686,8 @@ impl Kernel for AttentionKernel {
         let out = ctx.f32s_mut(ctx.id);
         let rows = ctx.graph.meta(ctx.src(0)).rows().min(ctx.params.rows.max(1));
         match &ctx.params.batch {
-            Some(bv) => attention::attention_rows(
+            Some(bv) => attention::attention_rows_t(
+                self.tier(),
                 q,
                 k,
                 v,
@@ -687,7 +701,8 @@ impl Kernel for AttentionKernel {
                 u0,
                 u1,
             ),
-            None => attention::attention(
+            None => attention::attention_t(
+                self.tier(),
                 q,
                 k,
                 v,
@@ -702,6 +717,10 @@ impl Kernel for AttentionKernel {
                 u1,
             ),
         }
+    }
+
+    fn tier(&self) -> KernelTier {
+        KernelTier::active()
     }
 }
 

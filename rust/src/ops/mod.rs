@@ -21,6 +21,15 @@
 //! §Hardware-Adaptation). [`cost`] carries each operator's analytic
 //! (flops, bytes) profile — the contract between real execution and the
 //! virtual-time simulator.
+//!
+//! The hot operators additionally come in `_t` variants
+//! ([`gemm::gemm_q4_0_t`], [`norm::rmsnorm_t`],
+//! [`attention::attention_t`], …) taking a [`crate::simd::KernelTier`]
+//! first: the tier-less entry points are the **scalar oracles**
+//! (unchanged semantics, what the parity suites pin against) and the
+//! `_t` forms dispatch their inner loops onto the process-active SIMD
+//! tier. Tier choice never affects unit partitioning; see
+//! `rust/KERNELS.md` for per-kernel contracts and tolerances.
 
 pub mod attention;
 pub mod common;

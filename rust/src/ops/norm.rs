@@ -1,7 +1,31 @@
 //! RMSNorm — full-row and per-head (Qwen3 QK-norm) variants.
+//!
+//! Each kernel exists as a scalar parity oracle (`rmsnorm`,
+//! `rmsnorm_heads`) and a tier-dispatched variant (`*_t`) whose
+//! mean-square reduction may reassociate; the gain apply step
+//! (`x[i] * inv * g[i]`) is bit-exact across tiers.
+
+use crate::simd::{self, KernelTier};
 
 /// RMSNorm rows `[r0, r1)` of `x` ([rows, d]) into `out` with gain `g`.
+/// Scalar tier — the parity oracle for [`rmsnorm_t`].
 pub fn rmsnorm(
+    x: &[f32],
+    g: &[f32],
+    out: &mut [f32],
+    d: usize,
+    eps: f32,
+    r0: usize,
+    r1: usize,
+) {
+    rmsnorm_t(KernelTier::Scalar, x, g, out, d, eps, r0, r1);
+}
+
+/// [`rmsnorm`] with the sum-of-squares reduction and gain apply
+/// dispatched on `tier`.
+#[allow(clippy::too_many_arguments)]
+pub fn rmsnorm_t(
+    tier: KernelTier,
     x: &[f32],
     g: &[f32],
     out: &mut [f32],
@@ -14,19 +38,36 @@ pub fn rmsnorm(
     for r in r0..r1 {
         let xr = &x[r * d..(r + 1) * d];
         let or = &mut out[r * d..(r + 1) * d];
-        let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let ms: f32 = simd::sum_squares(tier, xr) / d as f32;
         let inv = 1.0 / (ms + eps).sqrt();
-        for i in 0..d {
-            or[i] = xr[i] * inv * g[i];
-        }
+        simd::scale_gain(tier, xr, g, or, inv);
     }
 }
 
 /// Per-head RMSNorm over `head_dim` segments (Qwen3's q_norm/k_norm):
 /// `x` is [rows, heads*head_dim]; the gain `g` is `[head_dim]`, shared by
-/// all heads. Normalizes heads `[h0, h1)` of every row.
+/// all heads. Normalizes heads `[h0, h1)` of every row. Scalar tier —
+/// the parity oracle for [`rmsnorm_heads_t`].
 #[allow(clippy::too_many_arguments)]
 pub fn rmsnorm_heads(
+    x: &[f32],
+    g: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    heads: usize,
+    head_dim: usize,
+    eps: f32,
+    h0: usize,
+    h1: usize,
+) {
+    rmsnorm_heads_t(KernelTier::Scalar, x, g, out, rows, heads, head_dim, eps, h0, h1);
+}
+
+/// [`rmsnorm_heads`] with the per-head reduction and gain apply
+/// dispatched on `tier`.
+#[allow(clippy::too_many_arguments)]
+pub fn rmsnorm_heads_t(
+    tier: KernelTier,
     x: &[f32],
     g: &[f32],
     out: &mut [f32],
@@ -43,12 +84,10 @@ pub fn rmsnorm_heads(
         for h in h0..h1 {
             let base = r * d + h * head_dim;
             let xr = &x[base..base + head_dim];
-            let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() / head_dim as f32;
+            let ms: f32 = simd::sum_squares(tier, xr) / head_dim as f32;
             let inv = 1.0 / (ms + eps).sqrt();
             let or = &mut out[base..base + head_dim];
-            for i in 0..head_dim {
-                or[i] = xr[i] * inv * g[i];
-            }
+            simd::scale_gain(tier, xr, g, or, inv);
         }
     }
 }

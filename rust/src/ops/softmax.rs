@@ -1,22 +1,41 @@
 //! Numerically-stable row softmax.
+//!
+//! The tier-dispatched variant vectorizes only the row max and the
+//! final normalize multiply; the `exp` + running-sum loop stays scalar
+//! on every tier, so `softmax_rows_t` is **bit-exact** across tiers
+//! (max is exact, the multiply is per-element).
+
+use crate::simd::{self, KernelTier};
 
 /// Softmax rows `[r0, r1)` of `x` ([rows, n]) in place, over the first
 /// `valid` entries of each row (entries beyond `valid` are forced to 0 —
 /// the KV cache holds `max_seq` slots but only `kv_len` are live).
+/// Scalar tier — the parity oracle for [`softmax_rows_t`].
 pub fn softmax_rows(x: &mut [f32], n: usize, valid: usize, r0: usize, r1: usize) {
+    softmax_rows_t(KernelTier::Scalar, x, n, valid, r0, r1);
+}
+
+/// [`softmax_rows`] with the row max and normalize steps dispatched on
+/// `tier`. Bit-exact with the scalar kernel on every tier.
+pub fn softmax_rows_t(
+    tier: KernelTier,
+    x: &mut [f32],
+    n: usize,
+    valid: usize,
+    r0: usize,
+    r1: usize,
+) {
     debug_assert!(valid <= n);
     for r in r0..r1 {
         let row = &mut x[r * n..(r + 1) * n];
-        let m = row[..valid].iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let m = simd::max_f32(tier, &row[..valid]);
         let mut sum = 0.0;
         for v in row[..valid].iter_mut() {
             *v = (*v - m).exp();
             sum += *v;
         }
         let inv = if sum > 0.0 { 1.0 / sum } else { 0.0 };
-        for v in row[..valid].iter_mut() {
-            *v *= inv;
-        }
+        simd::scale_inplace(tier, &mut row[..valid], inv);
         for v in row[valid..].iter_mut() {
             *v = 0.0;
         }

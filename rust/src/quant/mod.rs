@@ -14,6 +14,15 @@
 //! from the *signed* value with the largest magnitude (`d = max / -8`),
 //! keeping the asymmetric [-8, 7] codebook anchored on the dominant
 //! sign.
+//!
+//! The scalar kernels here are the **parity oracles** for the SIMD
+//! tiers in [`crate::simd`]: every vectorized Q4_0/Q8_0 dot is tested
+//! against these implementations (see `tests/simd_parity.rs` and
+//! `rust/KERNELS.md` for the tolerance policy).
+
+// every public item in the quantization ABI must state its contract —
+// the byte layouts here are load-bearing for llama.cpp compatibility
+#![deny(missing_docs)]
 
 use crate::tensor::dtype::{Q4_0_BLOCK_BYTES, Q8_0_BLOCK_BYTES, QK4_0, QK8_0};
 use crate::util::{f16_to_f32, f32_to_f16};

@@ -1,0 +1,114 @@
+//! Bench-row model shared by the kernel benches (`ops_hotpath`).
+//!
+//! A [`BenchRow`] carries the measured p50 latency of one kernel plus
+//! the analytic bytes-touched figure from [`crate::ops::cost`], so the
+//! JSON report can state achieved GB/s and the roofline fraction
+//! against a node's memory bandwidth
+//! ([`crate::numa::Topology::bandwidth`]) instead of bare elapsed
+//! times. Keeping the row
+//! construction in the library (the bench binaries are compiled with
+//! `test = false`) lets the traffic-model plumbing be pinned by unit
+//! tests — the `bytes_touched`-missing-for-attention regression lives
+//! in [`tests`].
+
+use crate::util::json::{obj, Json};
+
+/// One benchmarked kernel: measured latency plus the analytic traffic
+/// model that turns it into achieved GB/s.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    /// Row label (kernel + shape, e.g. `"gemv_q4_0 n=2048 k=2048"`).
+    pub name: String,
+    /// Median seconds per iteration.
+    pub p50_s: f64,
+    /// Bytes touched per iteration per the [`crate::ops::cost`] model;
+    /// `None` for rows without a byte model (e.g. end-to-end decode).
+    pub bytes_touched: Option<f64>,
+    /// SIMD tier the kernel dispatched on (`KernelTier::name`).
+    pub tier: &'static str,
+}
+
+impl BenchRow {
+    /// Achieved GB/s: bytes over p50, `None` without a byte model or a
+    /// positive measurement.
+    pub fn gbs(&self) -> Option<f64> {
+        match self.bytes_touched {
+            Some(b) if self.p50_s > 0.0 => Some(b / self.p50_s / 1e9),
+            _ => None,
+        }
+    }
+
+    /// JSON row for the bench report. `node_bw` is one NUMA node's
+    /// local memory bandwidth in bytes/s; rows with a byte model get
+    /// `bytes_touched`, `gbs` and `roofline_frac` fields.
+    pub fn to_json(&self, node_bw: f64) -> Json {
+        let mut fields = vec![
+            ("name", Json::from(self.name.as_str())),
+            ("p50_s", self.p50_s.into()),
+            ("tier", self.tier.into()),
+        ];
+        if let Some(b) = self.bytes_touched {
+            fields.push(("bytes_touched", b.into()));
+        }
+        if let Some(g) = self.gbs() {
+            fields.push(("gbs", g.into()));
+            if node_bw > 0.0 {
+                fields.push(("roofline_frac", (g * 1e9 / node_bw).into()));
+            }
+        }
+        obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    #[test]
+    fn attention_rows_carry_bytes_touched() {
+        // regression: the --quick JSON used to omit bytes_touched for
+        // attention kernels because the cost.rs traffic model was never
+        // threaded into the bench row; the GB/s column needs it
+        let bytes = crate::ops::cost::attention(1, 16, 8, 64, 96, DType::F32, 0, 16).total_bytes();
+        assert!(bytes > 0.0);
+        let row = BenchRow {
+            name: "attention kv=96".into(),
+            p50_s: 1e-4,
+            bytes_touched: Some(bytes),
+            tier: "scalar",
+        };
+        let j = row.to_json(100.0e9);
+        assert_eq!(j.get("bytes_touched").unwrap().as_f64(), Some(bytes));
+        let gbs = j.get("gbs").unwrap().as_f64().unwrap();
+        assert!((gbs - bytes / 1e-4 / 1e9).abs() < 1e-9);
+        let frac = j.get("roofline_frac").unwrap().as_f64().unwrap();
+        assert!((frac - gbs * 1e9 / 100.0e9).abs() < 1e-12);
+        assert_eq!(j.get("tier").unwrap().as_str(), Some("scalar"));
+    }
+
+    #[test]
+    fn rows_without_byte_model_omit_gbs() {
+        let row =
+            BenchRow { name: "decode e2e".into(), p50_s: 0.01, bytes_touched: None, tier: "avx2" };
+        assert!(row.gbs().is_none());
+        let j = row.to_json(100.0e9);
+        assert!(j.get("bytes_touched").is_none());
+        assert!(j.get("gbs").is_none());
+        assert!(j.get("roofline_frac").is_none());
+        assert_eq!(j.get("p50_s").unwrap().as_f64(), Some(0.01));
+    }
+
+    #[test]
+    fn zero_time_rows_guard_against_inf() {
+        let row = BenchRow {
+            name: "degenerate".into(),
+            p50_s: 0.0,
+            bytes_touched: Some(1e6),
+            tier: "scalar",
+        };
+        assert!(row.gbs().is_none());
+        let j = row.to_json(100.0e9);
+        assert!(j.get("gbs").is_none());
+    }
+}

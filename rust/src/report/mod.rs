@@ -7,10 +7,12 @@
 //! who wins, by what factor, where the crossovers sit — is the
 //! reproduction target.
 
+pub mod bench;
 pub mod figures;
 pub mod table1;
 pub mod trace;
 
+pub use bench::BenchRow;
 pub use figures::{decode_tok_s, prefill_tok_s, FigureSeries, SimPoint};
 pub use table1::bandwidth_table;
 

@@ -160,6 +160,8 @@ impl Executor for PjrtExecutor {
             dispatches: 1,
             // the HLO is AOT-compiled; there is no per-pass plan to cache
             plan_cached: false,
+            // native SIMD tiers don't apply to XLA-compiled execution
+            tier: crate::simd::KernelTier::Scalar,
             sim: None,
         }
     }

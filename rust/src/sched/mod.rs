@@ -178,6 +178,10 @@ pub struct StepReport {
     /// compiling one (real executor's per-`(graph, rows)` cache;
     /// `false` for backends that compile per pass).
     pub plan_cached: bool,
+    /// SIMD tier the vectorized kernels dispatched on this pass
+    /// ([`crate::simd::KernelTier::active`] for the native backends;
+    /// `Scalar` for PJRT, where native tiers don't apply).
+    pub tier: crate::simd::KernelTier,
     /// Simulator detail (`None` for real backends).
     pub sim: Option<SimReport>,
 }

@@ -156,6 +156,7 @@ impl Executor for RealExecutor {
             unit_counts,
             dispatches: 1,
             plan_cached,
+            tier: crate::simd::KernelTier::active(),
             sim: None,
         }
     }

@@ -289,6 +289,7 @@ impl Executor for SimExecutor {
             unit_counts: plan.unit_counts,
             dispatches: 1,
             plan_cached: false,
+            tier: crate::simd::KernelTier::active(),
             sim: Some(rep),
         }
     }

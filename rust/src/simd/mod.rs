@@ -1,0 +1,396 @@
+//! Runtime-dispatched SIMD kernel tiers (see `rust/KERNELS.md`).
+//!
+//! The hot kernels — the Q4_0/Q8_0 GEMV dot products, the f32 dot,
+//! RMSNorm, softmax and the attention inner loops — exist in up to four
+//! implementations, one per [`KernelTier`]. The tier is detected once
+//! per process ([`KernelTier::active`], overridable with `--tier` /
+//! `ARCLIGHT_TIER`) and threaded through the dispatch functions below;
+//! the scalar implementations in [`crate::quant`] and [`crate::ops`]
+//! stay untouched as the **parity oracle** every vectorized path is
+//! tested against (`tests/simd_parity.rs`).
+//!
+//! ## Determinism contract
+//!
+//! Per-element kernels (`scale_gain`, `scale_inplace`, `axpy_rescale`,
+//! `max_f32`) are **bit-exact** across tiers: each output lane is the
+//! same IEEE expression the scalar loop evaluates (multiply + add, no
+//! FMA contraction). Only the reductions (`dot_*`, `sum_squares`)
+//! reassociate and may differ from scalar within the documented
+//! tolerance (KERNELS.md §Tolerance). Within one process the tier is
+//! fixed, so run-to-run determinism (batched == serial decode) holds
+//! on every tier.
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Vector-instruction tier of the hot kernels.
+///
+/// Resolved per-kernel by the registry ([`crate::ops::Kernel::tier`]):
+/// vectorized kernels report the process-wide [`KernelTier::active`]
+/// tier, kernels without a vector path report `Scalar`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelTier {
+    /// Portable scalar Rust — available everywhere; the parity oracle.
+    #[default]
+    Scalar,
+    /// 256-bit AVX2 + FMA (x86-64, runtime-detected).
+    Avx2,
+    /// 512-bit AVX-512F (x86-64; needs the `simd-avx512` build feature
+    /// — the 512-bit intrinsics stabilized above this crate's MSRV).
+    Avx512,
+    /// 128-bit NEON (aarch64). Covers the f32 primitives; the quantized
+    /// dot products stay scalar on this tier (KERNELS.md).
+    Neon,
+}
+
+/// Sentinel for "not resolved yet" in the process-wide tier cell.
+const TIER_UNSET: u8 = u8::MAX;
+static ACTIVE: AtomicU8 = AtomicU8::new(TIER_UNSET);
+
+impl KernelTier {
+    /// Every tier, in dispatch-preference order (widest last).
+    pub const ALL: [KernelTier; 4] =
+        [KernelTier::Scalar, KernelTier::Avx2, KernelTier::Avx512, KernelTier::Neon];
+
+    /// Stable lower-case name (CLI values, report/JSON fields).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Avx512 => "avx512",
+            KernelTier::Neon => "neon",
+        }
+    }
+
+    /// Parse a [`KernelTier::name`] string (the `--tier` CLI value).
+    pub fn parse(s: &str) -> Option<KernelTier> {
+        match s {
+            "scalar" => Some(KernelTier::Scalar),
+            "avx2" => Some(KernelTier::Avx2),
+            "avx512" => Some(KernelTier::Avx512),
+            "neon" => Some(KernelTier::Neon),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> KernelTier {
+        match v {
+            1 => KernelTier::Avx2,
+            2 => KernelTier::Avx512,
+            3 => KernelTier::Neon,
+            _ => KernelTier::Scalar,
+        }
+    }
+
+    /// Whether this tier can run on the current machine **and** build
+    /// (AVX-512 additionally requires the `simd-avx512` cargo feature).
+    pub fn supported(self) -> bool {
+        match self {
+            KernelTier::Scalar => true,
+            KernelTier::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                        && std::arch::is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            KernelTier::Avx512 => {
+                #[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+                {
+                    std::arch::is_x86_feature_detected!("avx512f")
+                        && std::arch::is_x86_feature_detected!("avx2")
+                        && std::arch::is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(all(target_arch = "x86_64", feature = "simd-avx512")))]
+                {
+                    false
+                }
+            }
+            KernelTier::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Best tier available on this machine: AVX-512 (when compiled in)
+    /// over AVX2 over NEON over scalar.
+    pub fn detect() -> KernelTier {
+        for t in [KernelTier::Avx512, KernelTier::Avx2, KernelTier::Neon] {
+            if t.supported() {
+                return t;
+            }
+        }
+        KernelTier::Scalar
+    }
+
+    /// The process-wide tier the vectorized kernels dispatch on.
+    ///
+    /// Resolved once: the `ARCLIGHT_TIER` environment variable (when it
+    /// names a supported tier) wins, otherwise [`KernelTier::detect`].
+    /// [`KernelTier::set_active`] (the `--tier` CLI flag) overrides it.
+    pub fn active() -> KernelTier {
+        match ACTIVE.load(Ordering::Relaxed) {
+            TIER_UNSET => {
+                let t = Self::initial();
+                ACTIVE.store(t as u8, Ordering::Relaxed);
+                t
+            }
+            v => Self::from_u8(v),
+        }
+    }
+
+    fn initial() -> KernelTier {
+        if let Ok(name) = std::env::var("ARCLIGHT_TIER") {
+            match Self::parse(&name) {
+                Some(t) if t.supported() => return t,
+                Some(t) => eprintln!(
+                    "note: ARCLIGHT_TIER={} not supported on this host; using detected tier",
+                    t.name()
+                ),
+                None if name == "auto" => {}
+                None => eprintln!("note: unknown ARCLIGHT_TIER='{name}'; using detected tier"),
+            }
+        }
+        Self::detect()
+    }
+
+    /// Force the process-wide tier (the `--tier` override). Fails when
+    /// the tier is not supported on this machine or build, so parity
+    /// runs can't silently execute the wrong code path.
+    pub fn set_active(tier: KernelTier) -> Result<(), String> {
+        if !tier.supported() {
+            let hint = if tier == KernelTier::Avx512 && !cfg!(feature = "simd-avx512") {
+                " (build with --features simd-avx512)"
+            } else {
+                ""
+            };
+            return Err(format!("kernel tier '{}' not supported on this host{hint}", tier.name()));
+        }
+        ACTIVE.store(tier as u8, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Tiers usable on this machine, scalar first — what the parity
+    /// test matrices iterate over.
+    pub fn supported_tiers() -> Vec<KernelTier> {
+        Self::ALL.iter().copied().filter(|t| t.supported()).collect()
+    }
+}
+
+impl std::fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Tier-dispatched f32 dot product (reduction — reassociates).
+/// Scalar arm is [`crate::ops::gemm::dot_f32`], the oracle.
+#[inline]
+pub fn dot_f32(tier: KernelTier, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert!(tier.supported(), "dispatch on unsupported tier {tier}");
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { x86::dot_f32_avx2(a, b) },
+        #[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+        KernelTier::Avx512 => unsafe { x86::dot_f32_avx512(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => unsafe { neon::dot_f32_neon(a, b) },
+        _ => crate::ops::gemm::dot_f32(a, b),
+    }
+}
+
+/// Tier-dispatched Q4_0 presum dot (reduction — reassociates). Scalar
+/// arm is [`crate::quant::dot_q4_0_f32_presum`], the oracle. NEON falls
+/// back to scalar (nibble unpack is not worth it on 128-bit lanes).
+#[inline]
+pub fn dot_q4_0_presum(tier: KernelTier, raw: &[u8], x: &[f32], xsums: &[f32]) -> f32 {
+    debug_assert!(tier.supported(), "dispatch on unsupported tier {tier}");
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { x86::dot_q4_0_presum_avx2(raw, x, xsums) },
+        #[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+        KernelTier::Avx512 => unsafe { x86::dot_q4_0_presum_avx512(raw, x, xsums) },
+        _ => crate::quant::dot_q4_0_f32_presum(raw, x, xsums),
+    }
+}
+
+/// Tier-dispatched Q8_0 dot (reduction — reassociates). Scalar arm is
+/// [`crate::quant::dot_q8_0_f32`], the oracle. NEON falls back to
+/// scalar.
+#[inline]
+pub fn dot_q8_0(tier: KernelTier, raw: &[u8], x: &[f32]) -> f32 {
+    debug_assert!(tier.supported(), "dispatch on unsupported tier {tier}");
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { x86::dot_q8_0_avx2(raw, x) },
+        #[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+        KernelTier::Avx512 => unsafe { x86::dot_q8_0_avx512(raw, x) },
+        _ => crate::quant::dot_q8_0_f32(raw, x),
+    }
+}
+
+/// Tier-dispatched `Σ x[i]²` (reduction — reassociates): the RMSNorm
+/// mean-square numerator. The AVX tiers share the 256-bit path (the op
+/// is bandwidth-bound; only the GEMV dots get true 512-bit variants).
+#[inline]
+pub fn sum_squares(tier: KernelTier, x: &[f32]) -> f32 {
+    debug_assert!(tier.supported(), "dispatch on unsupported tier {tier}");
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { x86::sum_squares_avx2(x) },
+        #[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+        KernelTier::Avx512 => unsafe { x86::sum_squares_avx2(x) },
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => unsafe { neon::sum_squares_neon(x) },
+        _ => x.iter().map(|v| v * v).sum::<f32>(),
+    }
+}
+
+/// `out[i] = x[i] * s * g[i]` — the RMSNorm apply step. Per-element:
+/// bit-exact across tiers (same multiply order as the scalar loop).
+#[inline]
+pub fn scale_gain(tier: KernelTier, x: &[f32], g: &[f32], out: &mut [f32], s: f32) {
+    debug_assert!(tier.supported(), "dispatch on unsupported tier {tier}");
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), out.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { x86::scale_gain_avx2(x, g, out, s) },
+        #[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+        KernelTier::Avx512 => unsafe { x86::scale_gain_avx2(x, g, out, s) },
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => unsafe { neon::scale_gain_neon(x, g, out, s) },
+        _ => {
+            for i in 0..x.len() {
+                out[i] = x[i] * s * g[i];
+            }
+        }
+    }
+}
+
+/// Max over a slice (`NEG_INFINITY` when empty) — the softmax and
+/// online-attention running max. Exact: max never rounds, so every
+/// tier returns the same value for finite inputs.
+#[inline]
+pub fn max_f32(tier: KernelTier, x: &[f32]) -> f32 {
+    debug_assert!(tier.supported(), "dispatch on unsupported tier {tier}");
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { x86::max_f32_avx2(x) },
+        #[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+        KernelTier::Avx512 => unsafe { x86::max_f32_avx2(x) },
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => unsafe { neon::max_f32_neon(x) },
+        _ => x.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+    }
+}
+
+/// `x[i] *= s` — the softmax normalize step. Per-element: bit-exact
+/// across tiers.
+#[inline]
+pub fn scale_inplace(tier: KernelTier, x: &mut [f32], s: f32) {
+    debug_assert!(tier.supported(), "dispatch on unsupported tier {tier}");
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { x86::scale_inplace_avx2(x, s) },
+        #[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+        KernelTier::Avx512 => unsafe { x86::scale_inplace_avx2(x, s) },
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => unsafe { neon::scale_inplace_neon(x, s) },
+        _ => {
+            for v in x.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+}
+
+/// `acc[i] = acc[i] * corr + p * v[i]` — the online-softmax rescale +
+/// accumulate of the attention inner loop. Per-element and implemented
+/// as multiply + add (**no FMA**) on every tier, so it is bit-exact
+/// with the scalar recurrence — the batched == serial determinism
+/// contract depends on this.
+#[inline]
+pub fn axpy_rescale(tier: KernelTier, acc: &mut [f32], corr: f32, p: f32, v: &[f32]) {
+    debug_assert!(tier.supported(), "dispatch on unsupported tier {tier}");
+    debug_assert_eq!(acc.len(), v.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { x86::axpy_rescale_avx2(acc, corr, p, v) },
+        #[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+        KernelTier::Avx512 => unsafe { x86::axpy_rescale_avx2(acc, corr, p, v) },
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => unsafe { neon::axpy_rescale_neon(acc, corr, p, v) },
+        _ => {
+            for i in 0..acc.len() {
+                acc[i] = acc[i] * corr + p * v[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for t in KernelTier::ALL {
+            assert_eq!(KernelTier::parse(t.name()), Some(t));
+            assert_eq!(format!("{t}"), t.name());
+        }
+        assert_eq!(KernelTier::parse("sse9000"), None);
+    }
+
+    #[test]
+    fn scalar_always_supported_and_detect_is_supported() {
+        assert!(KernelTier::Scalar.supported());
+        assert!(KernelTier::detect().supported());
+        let tiers = KernelTier::supported_tiers();
+        assert_eq!(tiers[0], KernelTier::Scalar);
+        assert!(tiers.contains(&KernelTier::detect()));
+    }
+
+    #[test]
+    fn set_active_rejects_unsupported() {
+        // at most one of AVX2 / NEON can be supported on one machine,
+        // so at least one rejection path is exercised everywhere
+        for t in [KernelTier::Avx2, KernelTier::Neon] {
+            if !t.supported() {
+                assert!(KernelTier::set_active(t).is_err());
+            }
+        }
+        #[cfg(not(feature = "simd-avx512"))]
+        {
+            let err = KernelTier::set_active(KernelTier::Avx512).unwrap_err();
+            assert!(err.contains("avx512"), "{err}");
+        }
+    }
+
+    #[test]
+    fn active_is_stable_and_supported() {
+        let a = KernelTier::active();
+        assert!(a.supported());
+        assert_eq!(KernelTier::active(), a);
+    }
+
+    #[test]
+    fn default_is_scalar() {
+        assert_eq!(KernelTier::default(), KernelTier::Scalar);
+    }
+}

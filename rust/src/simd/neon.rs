@@ -1,0 +1,155 @@
+//! aarch64 NEON implementations of the f32 primitives.
+//!
+//! Only the cheap 128-bit f32 paths are vectorized here (dot, sum of
+//! squares, max, the per-element scale/axpy kernels); the quantized
+//! dot products stay on the scalar tier for NEON — see `rust/KERNELS.md`
+//! for the rationale. Per-element kernels reproduce the scalar IEEE
+//! expression lane-for-lane (multiply + add, no fused contraction).
+
+use core::arch::aarch64::*;
+
+/// NEON dot product over `a.len()` elements.
+///
+/// # Safety
+/// CPU must support NEON; `a` and `b` must have equal length.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_f32_neon(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(ap.add(i + 4)), vld1q_f32(bp.add(i + 4)));
+        i += 8;
+    }
+    if i + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+        i += 4;
+    }
+    let mut sum = vaddvq_f32(vaddq_f32(acc0, acc1));
+    while i < n {
+        sum += *ap.add(i) * *bp.add(i);
+        i += 1;
+    }
+    sum
+}
+
+/// NEON `Σ x[i]²`.
+///
+/// # Safety
+/// CPU must support NEON.
+#[target_feature(enable = "neon")]
+pub unsafe fn sum_squares_neon(x: &[f32]) -> f32 {
+    let n = x.len();
+    let xp = x.as_ptr();
+    let mut acc = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let v = vld1q_f32(xp.add(i));
+        acc = vfmaq_f32(acc, v, v);
+        i += 4;
+    }
+    let mut sum = vaddvq_f32(acc);
+    while i < n {
+        let v = *xp.add(i);
+        sum += v * v;
+        i += 1;
+    }
+    sum
+}
+
+/// NEON `out[i] = x[i] * s * g[i]` — bit-exact with the scalar loop.
+///
+/// # Safety
+/// CPU must support NEON; the three slices must have equal length.
+#[target_feature(enable = "neon")]
+pub unsafe fn scale_gain_neon(x: &[f32], g: &[f32], out: &mut [f32], s: f32) {
+    let n = x.len();
+    let sv = vdupq_n_f32(s);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let t = vmulq_f32(vld1q_f32(x.as_ptr().add(i)), sv);
+        let t = vmulq_f32(t, vld1q_f32(g.as_ptr().add(i)));
+        vst1q_f32(out.as_mut_ptr().add(i), t);
+        i += 4;
+    }
+    while i < n {
+        out[i] = x[i] * s * g[i];
+        i += 1;
+    }
+}
+
+/// NEON max over a slice (`NEG_INFINITY` when empty). Exact for the
+/// finite inputs the softmax/attention paths produce.
+///
+/// # Safety
+/// CPU must support NEON.
+#[target_feature(enable = "neon")]
+pub unsafe fn max_f32_neon(x: &[f32]) -> f32 {
+    let n = x.len();
+    let xp = x.as_ptr();
+    let mut m = vdupq_n_f32(f32::NEG_INFINITY);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        m = vmaxq_f32(m, vld1q_f32(xp.add(i)));
+        i += 4;
+    }
+    let mut best = vmaxvq_f32(m);
+    while i < n {
+        best = best.max(*xp.add(i));
+        i += 1;
+    }
+    best
+}
+
+/// NEON `x[i] *= s` — bit-exact with the scalar loop.
+///
+/// # Safety
+/// CPU must support NEON.
+#[target_feature(enable = "neon")]
+pub unsafe fn scale_inplace_neon(x: &mut [f32], s: f32) {
+    let n = x.len();
+    let sv = vdupq_n_f32(s);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let p = x.as_mut_ptr().add(i);
+        vst1q_f32(p, vmulq_f32(vld1q_f32(p), sv));
+        i += 4;
+    }
+    while i < n {
+        x[i] *= s;
+        i += 1;
+    }
+}
+
+/// NEON `acc[i] = acc[i] * corr + p * v[i]` — multiply + add per lane
+/// (deliberately **not** fused) so the lanes match the scalar online
+/// softmax recurrence bit for bit.
+///
+/// # Safety
+/// CPU must support NEON; `acc` and `v` must have equal length.
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_rescale_neon(acc: &mut [f32], corr: f32, p: f32, v: &[f32]) {
+    debug_assert_eq!(acc.len(), v.len());
+    let n = acc.len();
+    let cv = vdupq_n_f32(corr);
+    let pv = vdupq_n_f32(p);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let ap = acc.as_mut_ptr().add(i);
+        let t = vaddq_f32(
+            vmulq_f32(vld1q_f32(ap), cv),
+            vmulq_f32(pv, vld1q_f32(v.as_ptr().add(i))),
+        );
+        vst1q_f32(ap, t);
+        i += 4;
+    }
+    while i < n {
+        acc[i] = acc[i] * corr + p * v[i];
+        i += 1;
+    }
+}

@@ -1,0 +1,378 @@
+//! x86-64 vector implementations of the hot kernels (AVX2+FMA, and
+//! AVX-512F behind the `simd-avx512` cargo feature).
+//!
+//! Every function here is `unsafe` with a `# Safety` contract: the
+//! caller must have verified the required CPU features (normally via
+//! [`super::KernelTier::supported`] — the dispatchers in [`super`] only
+//! route here for a supported tier). Per-element kernels reproduce the
+//! scalar IEEE expression lane-for-lane (multiply + add, no FMA);
+//! reductions use wide FMA accumulators and are covered by the
+//! tolerance policy in `rust/KERNELS.md`.
+
+use crate::util::f16_to_f32;
+use core::arch::x86_64::*;
+
+/// Horizontal sum of the 8 lanes of an AVX register.
+#[target_feature(enable = "avx2")]
+unsafe fn hsum256(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps(v, 1);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+    _mm_cvtss_f32(s)
+}
+
+/// AVX2+FMA dot product over `a.len()` elements.
+///
+/// # Safety
+/// CPU must support AVX2 and FMA; `a` and `b` must have equal length.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+        acc1 =
+            _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i + 8)), _mm256_loadu_ps(bp.add(i + 8)), acc1);
+        i += 16;
+    }
+    if i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+        i += 8;
+    }
+    let mut sum = hsum256(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        sum += *ap.add(i) * *bp.add(i);
+        i += 1;
+    }
+    sum
+}
+
+/// AVX2+FMA Q4_0 GEMV dot with precomputed per-block activation sums
+/// (same presum identity as [`crate::quant::dot_q4_0_f32_presum`]).
+///
+/// # Safety
+/// CPU must support AVX2 and FMA. `raw` must hold `raw.len() / 18`
+/// whole Q4_0 blocks, `x` at least `32 * blocks` elements and `xsums`
+/// at least `blocks` entries.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn dot_q4_0_presum_avx2(raw: &[u8], x: &[f32], xsums: &[f32]) -> f32 {
+    let blocks = raw.len() / 18;
+    debug_assert!(x.len() >= blocks * 32);
+    debug_assert!(xsums.len() >= blocks);
+    let mask = _mm_set1_epi8(0x0F);
+    let mut acc = _mm256_setzero_ps();
+    let mut dsum = 0.0f32;
+    for bi in 0..blocks {
+        let bp = raw.as_ptr().add(bi * 18);
+        let d = f16_to_f32(u16::from_le_bytes([*bp, *bp.add(1)]));
+        let qs = _mm_loadu_si128(bp.add(2) as *const __m128i);
+        // elems 0..16 are the low nibbles, elems 16..32 the high ones
+        let lo = _mm_and_si128(qs, mask);
+        let hi = _mm_and_si128(_mm_srli_epi16(qs, 4), mask);
+        let xp = x.as_ptr().add(bi * 32);
+        let mut t = _mm256_mul_ps(
+            _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(lo)),
+            _mm256_loadu_ps(xp),
+        );
+        t = _mm256_fmadd_ps(
+            _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128(lo, 8))),
+            _mm256_loadu_ps(xp.add(8)),
+            t,
+        );
+        t = _mm256_fmadd_ps(
+            _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(hi)),
+            _mm256_loadu_ps(xp.add(16)),
+            t,
+        );
+        t = _mm256_fmadd_ps(
+            _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128(hi, 8))),
+            _mm256_loadu_ps(xp.add(24)),
+            t,
+        );
+        acc = _mm256_fmadd_ps(_mm256_set1_ps(d), t, acc);
+        dsum += d * *xsums.as_ptr().add(bi);
+    }
+    hsum256(acc) - 8.0 * dsum
+}
+
+/// AVX2+FMA Q8_0 GEMV dot (same contract as
+/// [`crate::quant::dot_q8_0_f32`]).
+///
+/// # Safety
+/// CPU must support AVX2 and FMA. `raw` must hold `raw.len() / 34`
+/// whole Q8_0 blocks and `x` at least `32 * blocks` elements.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn dot_q8_0_avx2(raw: &[u8], x: &[f32]) -> f32 {
+    let blocks = raw.len() / 34;
+    debug_assert!(x.len() >= blocks * 32);
+    let mut acc = _mm256_setzero_ps();
+    for bi in 0..blocks {
+        let bp = raw.as_ptr().add(bi * 34);
+        let d = f16_to_f32(u16::from_le_bytes([*bp, *bp.add(1)]));
+        let qs = _mm256_loadu_si256(bp.add(2) as *const __m256i);
+        let lo = _mm256_castsi256_si128(qs);
+        let hi = _mm256_extracti128_si256(qs, 1);
+        let xp = x.as_ptr().add(bi * 32);
+        let mut t = _mm256_mul_ps(
+            _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(lo)),
+            _mm256_loadu_ps(xp),
+        );
+        t = _mm256_fmadd_ps(
+            _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_srli_si128(lo, 8))),
+            _mm256_loadu_ps(xp.add(8)),
+            t,
+        );
+        t = _mm256_fmadd_ps(
+            _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(hi)),
+            _mm256_loadu_ps(xp.add(16)),
+            t,
+        );
+        t = _mm256_fmadd_ps(
+            _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_srli_si128(hi, 8))),
+            _mm256_loadu_ps(xp.add(24)),
+            t,
+        );
+        acc = _mm256_fmadd_ps(_mm256_set1_ps(d), t, acc);
+    }
+    hsum256(acc)
+}
+
+/// AVX2+FMA `Σ x[i]²`.
+///
+/// # Safety
+/// CPU must support AVX2 and FMA.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn sum_squares_avx2(x: &[f32]) -> f32 {
+    let n = x.len();
+    let xp = x.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(xp.add(i));
+        acc = _mm256_fmadd_ps(v, v, acc);
+        i += 8;
+    }
+    let mut sum = hsum256(acc);
+    while i < n {
+        let v = *xp.add(i);
+        sum += v * v;
+        i += 1;
+    }
+    sum
+}
+
+/// AVX2 `out[i] = x[i] * s * g[i]` — bit-exact with the scalar loop
+/// (two ordered multiplies per lane, no FMA).
+///
+/// # Safety
+/// CPU must support AVX2; the three slices must have equal length.
+#[target_feature(enable = "avx2")]
+pub unsafe fn scale_gain_avx2(x: &[f32], g: &[f32], out: &mut [f32], s: f32) {
+    let n = x.len();
+    let sv = _mm256_set1_ps(s);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let t = _mm256_mul_ps(_mm256_loadu_ps(x.as_ptr().add(i)), sv);
+        let t = _mm256_mul_ps(t, _mm256_loadu_ps(g.as_ptr().add(i)));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), t);
+        i += 8;
+    }
+    while i < n {
+        out[i] = x[i] * s * g[i];
+        i += 1;
+    }
+}
+
+/// AVX2 max over a slice (`NEG_INFINITY` when empty). Exact for the
+/// finite inputs the softmax/attention paths produce.
+///
+/// # Safety
+/// CPU must support AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn max_f32_avx2(x: &[f32]) -> f32 {
+    let n = x.len();
+    let xp = x.as_ptr();
+    let mut m = _mm256_set1_ps(f32::NEG_INFINITY);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        m = _mm256_max_ps(m, _mm256_loadu_ps(xp.add(i)));
+        i += 8;
+    }
+    let lo = _mm256_castps256_ps128(m);
+    let hi = _mm256_extractf128_ps(m, 1);
+    let s = _mm_max_ps(lo, hi);
+    let s = _mm_max_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_max_ss(s, _mm_shuffle_ps(s, s, 1));
+    let mut best = _mm_cvtss_f32(s);
+    while i < n {
+        best = best.max(*xp.add(i));
+        i += 1;
+    }
+    best
+}
+
+/// AVX2 `x[i] *= s` — bit-exact with the scalar loop.
+///
+/// # Safety
+/// CPU must support AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn scale_inplace_avx2(x: &mut [f32], s: f32) {
+    let n = x.len();
+    let sv = _mm256_set1_ps(s);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let p = x.as_mut_ptr().add(i);
+        _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), sv));
+        i += 8;
+    }
+    while i < n {
+        x[i] *= s;
+        i += 1;
+    }
+}
+
+/// AVX2 `acc[i] = acc[i] * corr + p * v[i]` — multiply + add per lane
+/// (deliberately **not** FMA) so the lanes match the scalar online
+/// softmax recurrence bit for bit.
+///
+/// # Safety
+/// CPU must support AVX2; `acc` and `v` must have equal length.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_rescale_avx2(acc: &mut [f32], corr: f32, p: f32, v: &[f32]) {
+    debug_assert_eq!(acc.len(), v.len());
+    let n = acc.len();
+    let cv = _mm256_set1_ps(corr);
+    let pv = _mm256_set1_ps(p);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let ap = acc.as_mut_ptr().add(i);
+        let t = _mm256_add_ps(
+            _mm256_mul_ps(_mm256_loadu_ps(ap), cv),
+            _mm256_mul_ps(pv, _mm256_loadu_ps(v.as_ptr().add(i))),
+        );
+        _mm256_storeu_ps(ap, t);
+        i += 8;
+    }
+    while i < n {
+        acc[i] = acc[i] * corr + p * v[i];
+        i += 1;
+    }
+}
+
+#[cfg(feature = "simd-avx512")]
+mod avx512 {
+    //! 512-bit variants of the three GEMV dot products. Gated behind
+    //! the `simd-avx512` cargo feature because the `_mm512_*`
+    //! intrinsics stabilized well above this crate's MSRV.
+
+    use crate::util::f16_to_f32;
+    use core::arch::x86_64::*;
+
+    /// AVX-512F dot product over `a.len()` elements.
+    ///
+    /// # Safety
+    /// CPU must support AVX-512F; `a` and `b` must have equal length.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot_f32_avx512(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = _mm512_setzero_ps();
+        let mut acc1 = _mm512_setzero_ps();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            acc0 = _mm512_fmadd_ps(_mm512_loadu_ps(ap.add(i)), _mm512_loadu_ps(bp.add(i)), acc0);
+            acc1 = _mm512_fmadd_ps(
+                _mm512_loadu_ps(ap.add(i + 16)),
+                _mm512_loadu_ps(bp.add(i + 16)),
+                acc1,
+            );
+            i += 32;
+        }
+        if i + 16 <= n {
+            acc0 = _mm512_fmadd_ps(_mm512_loadu_ps(ap.add(i)), _mm512_loadu_ps(bp.add(i)), acc0);
+            i += 16;
+        }
+        let mut sum = _mm512_reduce_add_ps(_mm512_add_ps(acc0, acc1));
+        while i < n {
+            sum += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        sum
+    }
+
+    /// AVX-512F Q4_0 presum dot: one 16-lane vector per nibble half.
+    ///
+    /// # Safety
+    /// Same contract as [`super::dot_q4_0_presum_avx2`] with AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot_q4_0_presum_avx512(raw: &[u8], x: &[f32], xsums: &[f32]) -> f32 {
+        let blocks = raw.len() / 18;
+        debug_assert!(x.len() >= blocks * 32);
+        debug_assert!(xsums.len() >= blocks);
+        let mask = _mm_set1_epi8(0x0F);
+        let mut acc = _mm512_setzero_ps();
+        let mut dsum = 0.0f32;
+        for bi in 0..blocks {
+            let bp = raw.as_ptr().add(bi * 18);
+            let d = f16_to_f32(u16::from_le_bytes([*bp, *bp.add(1)]));
+            let qs = _mm_loadu_si128(bp.add(2) as *const __m128i);
+            let lo = _mm_and_si128(qs, mask);
+            let hi = _mm_and_si128(_mm_srli_epi16(qs, 4), mask);
+            let xp = x.as_ptr().add(bi * 32);
+            let mut t = _mm512_mul_ps(
+                _mm512_cvtepi32_ps(_mm512_cvtepu8_epi32(lo)),
+                _mm512_loadu_ps(xp),
+            );
+            t = _mm512_fmadd_ps(
+                _mm512_cvtepi32_ps(_mm512_cvtepu8_epi32(hi)),
+                _mm512_loadu_ps(xp.add(16)),
+                t,
+            );
+            acc = _mm512_fmadd_ps(_mm512_set1_ps(d), t, acc);
+            dsum += d * *xsums.as_ptr().add(bi);
+        }
+        _mm512_reduce_add_ps(acc) - 8.0 * dsum
+    }
+
+    /// AVX-512F Q8_0 dot: one 16-lane vector per 16-byte half block.
+    ///
+    /// # Safety
+    /// Same contract as [`super::dot_q8_0_avx2`] with AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot_q8_0_avx512(raw: &[u8], x: &[f32]) -> f32 {
+        let blocks = raw.len() / 34;
+        debug_assert!(x.len() >= blocks * 32);
+        let mut acc = _mm512_setzero_ps();
+        for bi in 0..blocks {
+            let bp = raw.as_ptr().add(bi * 34);
+            let d = f16_to_f32(u16::from_le_bytes([*bp, *bp.add(1)]));
+            let qs = _mm256_loadu_si256(bp.add(2) as *const __m256i);
+            let lo = _mm256_castsi256_si128(qs);
+            let hi = _mm256_extracti128_si256(qs, 1);
+            let xp = x.as_ptr().add(bi * 32);
+            let mut t = _mm512_mul_ps(
+                _mm512_cvtepi32_ps(_mm512_cvtepi8_epi32(lo)),
+                _mm512_loadu_ps(xp),
+            );
+            t = _mm512_fmadd_ps(
+                _mm512_cvtepi32_ps(_mm512_cvtepi8_epi32(hi)),
+                _mm512_loadu_ps(xp.add(16)),
+                t,
+            );
+            acc = _mm512_fmadd_ps(_mm512_set1_ps(d), t, acc);
+        }
+        _mm512_reduce_add_ps(acc)
+    }
+}
+
+#[cfg(feature = "simd-avx512")]
+pub use avx512::{dot_f32_avx512, dot_q4_0_presum_avx512, dot_q8_0_avx512};

@@ -3,6 +3,12 @@
 //! (same op count, same unit counts in the same order), and batched
 //! decode routed through the trait stays token-identical to serial
 //! decode (PR 2's determinism guarantee, re-pinned on the new API).
+//! The forced-tier matrix re-runs a decode step on every SIMD tier the
+//! host supports and pins tier choice as orthogonal to scheduling:
+//! same unit counts, near-identical logits, and a `StepReport` that
+//! names the tier it ran on.
+
+use std::sync::Mutex;
 
 use arclight::baseline::Strategy;
 use arclight::frontend::{Engine, EngineOptions, Sampler};
@@ -10,6 +16,12 @@ use arclight::hw::Platform;
 use arclight::model::{ModelConfig, ModelGraphs};
 use arclight::numa::Topology;
 use arclight::sched::{ExecParams, Executor, SyncMode};
+use arclight::simd::KernelTier;
+
+/// The active SIMD tier is process-wide; tests that force it (or that
+/// compare numeric outputs across two engine runs) serialize behind
+/// this lock so a concurrent tier flip can't skew the comparison.
+static TIER_LOCK: Mutex<()> = Mutex::new(());
 
 /// Run one dense pass through both backends as `&dyn Executor` and
 /// compare their per-op partition surface.
@@ -58,7 +70,10 @@ fn llama_strategy_unit_parity() {
 fn batched_decode_token_identical_to_serial_through_trait() {
     // Engine routes every pass through its Box<dyn Executor>; the
     // continuous-batching lane must still reproduce serial decode
-    // token for token.
+    // token for token. (Holds across tiers too — the attention and
+    // per-element kernels are bit-exact by construction — but the two
+    // engines here must run on the SAME tier, hence the lock.)
+    let _guard = TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let opts = |slots: usize| EngineOptions {
         strategy: Strategy::arclight_single(),
         threads: 2,
@@ -89,4 +104,47 @@ fn batched_decode_token_identical_to_serial_through_trait() {
     }
     batched.seq_free(seq);
     assert_eq!(toks, want.tokens, "batched lane diverged from serial decode");
+}
+
+#[test]
+fn forced_tier_matrix_units_and_logits_invariant() {
+    // Tier choice must be orthogonal to scheduling: forcing each
+    // supported tier in turn, one decode step after a short prefill
+    // must report the forced tier, partition into exactly the same
+    // units, and produce logits within the reduction tolerance of the
+    // scalar baseline (scalar runs first in supported_tiers()).
+    let _guard = TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = KernelTier::active();
+    let opts = EngineOptions {
+        strategy: Strategy::arclight_single(),
+        threads: 2,
+        platform: Platform::Simulated(Topology::uniform(2, 2, 100.0, 25.0)),
+        prefill_rows: None,
+        seed: 11,
+        batch_slots: 1,
+        pin: false,
+    };
+    let mut baseline: Option<(Vec<usize>, Vec<f32>)> = None;
+    for tier in KernelTier::supported_tiers() {
+        KernelTier::set_active(tier).unwrap();
+        let mut engine = Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap();
+        engine.prefill(&[3, 1, 4, 1]);
+        let logits = engine.decode_step(5);
+        let rep = engine.last_step_report().expect("decode produced a report").clone();
+        assert_eq!(rep.tier, tier, "StepReport must carry the forced tier");
+        match &baseline {
+            None => baseline = Some((rep.unit_counts, logits)),
+            Some((units, want)) => {
+                assert_eq!(&rep.unit_counts, units, "{tier}: unit partitioning changed with tier");
+                assert_eq!(logits.len(), want.len());
+                for (i, (&a, &b)) in logits.iter().zip(want).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                        "{tier}: logit {i} diverged from scalar ({a} vs {b})"
+                    );
+                }
+            }
+        }
+    }
+    KernelTier::set_active(prev).unwrap();
 }

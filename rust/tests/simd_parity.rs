@@ -1,0 +1,247 @@
+//! Scalar-vs-SIMD parity for every vectorized kernel (the tier
+//! contract from `rust/KERNELS.md`).
+//!
+//! The scalar implementations are the oracles: each dispatcher in
+//! `arclight::simd` is driven with an explicit tier argument (no
+//! process-wide state is touched), over odd lengths and block-tail
+//! cases, against either an f64 reference or the scalar kernel.
+//!
+//! Tolerance policy: per-element kernels (`scale_gain`,
+//! `scale_inplace`, `axpy_rescale`, `max_f32` — and therefore the
+//! whole of `softmax_rows_t`) must be **bit-exact** across tiers.
+//! Reductions (`dot_f32`, the quantized dots, `sum_squares`)
+//! reassociate, so they get an accumulated-rounding bound of
+//! `(2n + 64)·ε_f32 · Σ|terms| + 1e-6` — a standard worst-case
+//! summation-error envelope with slack for FMA-vs-mul+add differences.
+
+use arclight::ops::{attention, gemm, norm, softmax};
+use arclight::quant::{
+    block_sums_q4_0, dequantize_row_q4_0, dequantize_row_q8_0, quantize_matrix_q4_0,
+    quantize_row_q4_0, quantize_row_q8_0,
+};
+use arclight::simd::{self, KernelTier};
+use arclight::util::Rng;
+
+fn rand_vec(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    let mut v = vec![0.0; n];
+    r.fill_normal(&mut v, scale);
+    v
+}
+
+/// Accumulated-rounding envelope for an n-term f32 reduction whose
+/// terms have total magnitude `abs_terms`.
+fn red_tol(n_terms: usize, abs_terms: f64) -> f64 {
+    (2.0 * n_terms as f64 + 64.0) * f32::EPSILON as f64 * abs_terms + 1e-6
+}
+
+#[test]
+fn dot_f32_matches_f64_reference_across_tiers() {
+    let lens = [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 33, 63, 64, 65, 127, 130, 1023];
+    for seed in 0..3u64 {
+        for &n in &lens {
+            let a = rand_vec(n, 100 + seed * 2, 1.0);
+            let b = rand_vec(n, 101 + seed * 2, 1.0);
+            let reference: f64 =
+                a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let abs_terms: f64 =
+                a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+            let tol = red_tol(n, abs_terms);
+            for tier in KernelTier::supported_tiers() {
+                let got = simd::dot_f32(tier, &a, &b) as f64;
+                assert!(
+                    (got - reference).abs() <= tol,
+                    "dot_f32 n={n} seed={seed} tier={tier}: {got} vs {reference} (tol {tol})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn q4_0_presum_dot_parity_across_block_counts() {
+    // k must be a multiple of the 32-element block; the interesting
+    // tails are therefore odd block counts (1, 3, 5, 10 blocks)
+    for &k in &[32usize, 96, 160, 320, 512] {
+        for seed in 0..3u64 {
+            let w = rand_vec(k, 200 + seed, 0.5);
+            let x = rand_vec(k, 300 + seed, 1.0);
+            let mut raw = Vec::new();
+            quantize_row_q4_0(&w, &mut raw);
+            let mut wd = vec![0.0f32; k];
+            dequantize_row_q4_0(&raw, &mut wd);
+            let reference: f64 =
+                wd.iter().zip(&x).map(|(&a, &b)| a as f64 * b as f64).sum();
+            // intermediate terms before the -8·Σx debias are up to
+            // (15 + 8)·|x|·d per element — bound the envelope on those
+            let mut abs_terms = 0.0f64;
+            for (bi, xb) in x.chunks_exact(32).enumerate() {
+                let d = f16(&raw[bi * 18..]).abs() as f64;
+                abs_terms += d * 23.0 * xb.iter().map(|v| v.abs() as f64).sum::<f64>();
+            }
+            let tol = red_tol(k, abs_terms);
+            let mut xsums = Vec::new();
+            block_sums_q4_0(&x, &mut xsums);
+            for tier in KernelTier::supported_tiers() {
+                let got = simd::dot_q4_0_presum(tier, &raw, &x, &xsums) as f64;
+                assert!(
+                    (got - reference).abs() <= tol,
+                    "q4_0 dot k={k} seed={seed} tier={tier}: {got} vs {reference} (tol {tol})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn q8_0_dot_parity_across_block_counts() {
+    for &k in &[32usize, 64, 96, 320] {
+        for seed in 0..3u64 {
+            let w = rand_vec(k, 400 + seed, 1.0);
+            let x = rand_vec(k, 500 + seed, 1.0);
+            let mut raw = Vec::new();
+            quantize_row_q8_0(&w, &mut raw);
+            let mut wd = vec![0.0f32; k];
+            dequantize_row_q8_0(&raw, &mut wd);
+            let reference: f64 =
+                wd.iter().zip(&x).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let abs_terms: f64 =
+                wd.iter().zip(&x).map(|(&a, &b)| (a as f64 * b as f64).abs()).sum();
+            let tol = red_tol(k, abs_terms);
+            for tier in KernelTier::supported_tiers() {
+                let got = simd::dot_q8_0(tier, &raw, &x) as f64;
+                assert!(
+                    (got - reference).abs() <= tol,
+                    "q8_0 dot k={k} seed={seed} tier={tier}: {got} vs {reference} (tol {tol})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rmsnorm_parity_odd_lengths() {
+    // only the Σx² reduction reassociates; the apply step is
+    // per-element, so the output error is the inv-rms relative error
+    for &d in &[1usize, 3, 31, 32, 33, 100, 257, 1000] {
+        let rows = 2usize;
+        let x = rand_vec(rows * d, 600 + d as u64, 1.0);
+        let g = rand_vec(d, 601, 0.5);
+        let mut want = vec![0.0f32; rows * d];
+        norm::rmsnorm_t(KernelTier::Scalar, &x, &g, &mut want, d, 1e-6, 0, rows);
+        let rel = 4.0 * d as f64 * f32::EPSILON as f64;
+        for tier in KernelTier::supported_tiers() {
+            let mut got = vec![0.0f32; rows * d];
+            norm::rmsnorm_t(tier, &x, &g, &mut got, d, 1e-6, 0, rows);
+            for i in 0..rows * d {
+                let (a, b) = (got[i] as f64, want[i] as f64);
+                assert!(
+                    (a - b).abs() <= rel * b.abs() + 1e-7,
+                    "rmsnorm d={d} tier={tier} elem {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn softmax_rows_bit_exact_across_tiers() {
+    // max is exact and the normalize is per-element, so the whole
+    // kernel must be bit-identical on every tier — including the
+    // zeroed tail beyond `valid` and the empty-row edge case
+    for &(n, valid) in &[(8usize, 0usize), (8, 8), (17, 9), (33, 1), (64, 64), (130, 97)] {
+        let rows = 3usize;
+        let base = rand_vec(rows * n, 700 + n as u64, 2.0);
+        let mut want = base.clone();
+        softmax::softmax_rows_t(KernelTier::Scalar, &mut want, n, valid, 0, rows);
+        for tier in KernelTier::supported_tiers() {
+            let mut got = base.clone();
+            softmax::softmax_rows_t(tier, &mut got, n, valid, 0, rows);
+            for i in 0..rows * n {
+                assert_eq!(
+                    got[i].to_bits(),
+                    want[i].to_bits(),
+                    "softmax n={n} valid={valid} tier={tier} elem {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn attention_parity_across_tiers() {
+    // score dots reassociate; exp/probs amplify that only linearly, so
+    // a loose relative bound holds with wide margin — including GQA
+    // head sharing and an odd head_dim
+    for &(heads, kvh, hd, max_seq, p0) in
+        &[(4usize, 2usize, 8usize, 32usize, 17usize), (8, 8, 16, 64, 63), (3, 1, 5, 16, 7)]
+    {
+        let q = rand_vec(heads * hd, 800 + heads as u64, 1.0);
+        let kc = rand_vec(kvh * max_seq * hd, 801, 1.0);
+        let vc = rand_vec(kvh * max_seq * hd, 802, 1.0);
+        let mut want = vec![0.0f32; heads * hd];
+        attention::attention_t(
+            KernelTier::Scalar,
+            &q,
+            &kc,
+            &vc,
+            &mut want,
+            1,
+            heads,
+            kvh,
+            hd,
+            max_seq,
+            p0,
+            0,
+            heads,
+        );
+        for tier in KernelTier::supported_tiers() {
+            let mut got = vec![0.0f32; heads * hd];
+            attention::attention_t(
+                tier, &q, &kc, &vc, &mut got, 1, heads, kvh, hd, max_seq, p0, 0, heads,
+            );
+            for i in 0..heads * hd {
+                let (a, b) = (got[i] as f64, want[i] as f64);
+                assert!(
+                    (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                    "attention H={heads} kv={kvh} hd={hd} tier={tier} elem {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_q4_0_stripes_compose_bit_exactly_per_tier() {
+    // row stripes [n0, n1) partition independent output rows, so
+    // striped and whole-range runs must agree bitwise on any one tier
+    // (this is what makes tier choice orthogonal to unit partitioning)
+    let (m, k, n) = (3usize, 96usize, 17usize);
+    let w = rand_vec(n * k, 900, 0.5);
+    let wq = quantize_matrix_q4_0(&w, n, k);
+    let x = rand_vec(m * k, 901, 1.0);
+    for tier in KernelTier::supported_tiers() {
+        let mut whole = vec![0.0f32; m * n];
+        gemm::gemm_q4_0_t(tier, &x, &wq, &mut whole, m, k, n, 0, n);
+        let mut striped = vec![0.0f32; m * n];
+        for (n0, n1) in [(0usize, 5usize), (5, 6), (6, 17)] {
+            gemm::gemm_q4_0_t(tier, &x, &wq, &mut striped, m, k, n, n0, n1);
+        }
+        for i in 0..m * n {
+            assert_eq!(
+                whole[i].to_bits(),
+                striped[i].to_bits(),
+                "tier={tier} elem {i}: {} vs {}",
+                whole[i],
+                striped[i]
+            );
+        }
+    }
+}
+
+/// LE f16 at the head of a block.
+fn f16(raw: &[u8]) -> f32 {
+    arclight::util::f16_to_f32(u16::from_le_bytes([raw[0], raw[1]]))
+}

@@ -100,6 +100,8 @@ fn engine_opts(
         seed: 0,
         batch_slots,
         pin,
+        page_size: 16,
+        kv_pages: None,
     }
 }
 
@@ -307,18 +309,21 @@ fn main() {
         let slots = 4usize;
         let mut engine =
             Engine::new_synthetic(cfg.clone(), &engine_opts(&platform, pin, 2, slots)).unwrap();
-        let mut seqs: Vec<_> = (0..slots).map(|_| engine.seq_alloc().unwrap()).collect();
+        let budget = cfg.max_seq;
+        let mut seqs: Vec<_> = (0..slots).map(|_| engine.seq_start(budget).unwrap()).collect();
         let horizon = cfg.max_seq - 24;
         let mut step = 0usize;
         let name_b = format!("batched decode step, {slots} lanes");
         let t = bench(rep, &name_b, step_iters, None, tier.name(), || {
-            let lanes: Vec<_> = seqs.iter().map(|&s| (s, (step % 200) as i32 + 5)).collect();
+            let lanes: Vec<_> = seqs.iter().map(|s| (s, (step % 200) as i32 + 5)).collect();
             let logits = engine.step_batch(&lanes);
+            drop(lanes); // release the seq borrows before the reset check
             step += 1;
             std::hint::black_box(&logits);
-            if seqs.iter().any(|&s| engine.seq_pos(s) > horizon) {
+            if seqs.iter().any(|s| engine.seq_pos(s) > horizon) {
+                seqs.clear(); // RAII: drops return every page to the arena
                 engine.reset();
-                seqs = (0..slots).map(|_| engine.seq_alloc().unwrap()).collect();
+                seqs = (0..slots).map(|_| engine.seq_start(budget).unwrap()).collect();
             }
         });
         println!("{:42} {:>8.1} tok/s aggregate", "", slots as f64 / t);

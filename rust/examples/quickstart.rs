@@ -28,6 +28,8 @@ fn main() -> anyhow::Result<()> {
         seed: 0,
         batch_slots: 1,
         pin: false,
+        page_size: 16,
+        kv_pages: None,
     };
     let mut engine = Engine::new_synthetic(cfg, &opts)?;
 
@@ -54,6 +56,8 @@ fn main() -> anyhow::Result<()> {
         seed: 0,
         batch_slots: 1,
         pin: false,
+        page_size: 16,
+        kv_pages: None,
     };
     let mut engine_tp = Engine::new_synthetic(ModelConfig::small_25m(), &opts_tp)?;
     let res_tp = engine_tp.generate(&prompt, 48, &Sampler::greedy());
@@ -65,20 +69,22 @@ fn main() -> anyhow::Result<()> {
     // the same tokens as the serial loop above.
     let opts_batch = EngineOptions { batch_slots: 4, ..opts };
     let mut engine_b = Engine::new_synthetic(ModelConfig::small_25m(), &opts_batch)?;
-    let seq = engine_b.seq_alloc().expect("free slot");
+    // `seq_start` reserves KV pages for the whole token budget up
+    // front; the handle returns them to the arena when dropped (RAII).
+    let seq = engine_b.seq_start(prompt.len() + 16).expect("free pages");
     let mut logits = Vec::new();
     for &t in &prompt {
-        logits = engine_b.step_batch(&[(seq, t)]).remove(0);
+        logits = engine_b.step_batch(&[(&seq, t)]).remove(0);
     }
     let mut batched_tokens = Vec::with_capacity(16);
     for step in 0..16usize {
         let next = Sampler::greedy().sample(&logits, step);
         batched_tokens.push(next);
         if step + 1 < 16 {
-            logits = engine_b.step_batch(&[(seq, next)]).remove(0);
+            logits = engine_b.step_batch(&[(&seq, next)]).remove(0);
         }
     }
-    engine_b.seq_free(seq);
+    drop(seq);
     assert_eq!(&res.tokens[..16], &batched_tokens[..], "batched lane must match serial decode");
     println!("continuous-batching lane produced identical tokens ✓");
     Ok(())

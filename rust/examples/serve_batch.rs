@@ -8,12 +8,16 @@
 //!
 //! 1. **sequential-slots baseline** — 2 engine slots, each serving one
 //!    whole generation at a time (the pre-continuous design);
-//! 2. **continuous batching** — one engine whose KV pool holds 8
-//!    sequences, every decode step a single batched graph pass.
+//! 2. **continuous batching** — one engine with a *paged* KV arena
+//!    sized for only [`ARENA_SEQS`] full-length sequences, every decode
+//!    step a single batched graph pass. Short requests overcommit the
+//!    arena (≥ 3× the slot-equivalent concurrency) and identical
+//!    prompts share physical prefix pages.
 //!
 //! It reports aggregate tokens/s for both and asserts the continuous
-//! scheduler wins. When artifacts are present it also cross-checks one
-//! served response against PJRT token-for-token.
+//! scheduler wins, that page-granular admission overcommits the arena,
+//! and that prefix sharing reports hits. When artifacts are present it
+//! also cross-checks one served response against PJRT token-for-token.
 //!
 //!     make artifacts && cargo run --release --example serve_batch
 //!
@@ -36,6 +40,15 @@ use arclight::server::{
 };
 use arclight::util::json::{obj, Json};
 use arclight::util::stats::Summary;
+
+/// Paged-KV demo geometry: 4-token pages and an arena holding only
+/// this many full-length sequences. Short requests (≤ max_seq/4
+/// tokens each) must overcommit it to ≥ 3× concurrent lanes.
+const PAGE_SIZE: usize = 4;
+const ARENA_SEQS: usize = 2;
+/// Prompt shared by the warmup and every token-path client, so later
+/// admissions adopt the prefix pages the first request registered.
+const SHARED_TOKENS: [i32; 6] = [9, 8, 7, 6, 5, 4];
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -62,6 +75,8 @@ fn build_engine(
     pin: bool,
     threads: usize,
     batch_slots: usize,
+    page_size: usize,
+    kv_pages: Option<usize>,
 ) -> anyhow::Result<(Engine, bool)> {
     let opts = EngineOptions {
         strategy: Strategy::arclight_single(),
@@ -71,6 +86,8 @@ fn build_engine(
         seed: 0,
         batch_slots,
         pin,
+        page_size,
+        kv_pages,
     };
     if let Some(dir) = artifacts_dir() {
         Ok((Engine::from_alf(&dir.join("tiny.alf"), &opts)?, true))
@@ -105,7 +122,9 @@ impl PhaseResult {
 }
 
 /// Fire `n_requests` concurrent clients at `addr`; half text prompts,
-/// half pre-tokenized (covers both request paths).
+/// half pre-tokenized (covers both request paths). Prompts are short
+/// (6 tokens) so each request's page budget stays ≤ max_seq/4, and
+/// identical within each path so prefix pages get shared.
 fn fire_clients(
     addr: &str,
     n_requests: usize,
@@ -117,10 +136,10 @@ fn fire_clients(
         let addr = addr.to_string();
         clients.push(std::thread::spawn(move || -> anyhow::Result<_> {
             let mut c = ServerClient::connect(&addr)?;
-            let mut req = GenRequest::text(i as u64 + 1, "the quick brown fox", max_new);
+            let mut req = GenRequest::text(i as u64 + 1, "short", max_new);
             if i % 2 == 0 {
                 req.prompt = None;
-                req.tokens = Some((0..12).map(|k| (k * 17 + i as i32) % 256).collect());
+                req.tokens = Some(SHARED_TOKENS.to_vec());
             }
             c.generate(&req)
         }));
@@ -153,7 +172,7 @@ fn run_sequential(
         // stack them onto the same cpus and unfairly slow the baseline
         // the continuous scheduler is measured against. The host
         // platform (and its first-touch arena placement) still applies.
-        let (engine, real) = build_engine(platform, false, threads_total / slots, 1)?;
+        let (engine, real) = build_engine(platform, false, threads_total / slots, 1, 16, None)?;
         from_artifacts = real;
         let r = router.clone();
         slot_threads.push(std::thread::spawn(move || EngineSlot::new(engine).serve(r)));
@@ -188,13 +207,22 @@ fn run_continuous(
     batch: usize,
     n_requests: usize,
     max_new: usize,
+    kv_pages: usize,
 ) -> anyhow::Result<(PhaseResult, String, ServerHandle, std::thread::JoinHandle<()>)> {
     let router = Router::new(BatcherConfig::default());
-    let (engine, _) = build_engine(platform, pin, threads_total, batch)?;
+    let (engine, _) =
+        build_engine(platform, pin, threads_total, batch, PAGE_SIZE, Some(kv_pages))?;
     let r = router.clone();
     let batcher_thread = std::thread::spawn(move || ContinuousBatcher::new(engine).serve(r));
     let server = ServerHandle::start("127.0.0.1:0", router.clone())?;
     let addr = server.addr.to_string();
+    // warm the prefix index: one request whose pages every later
+    // token-path admission can adopt
+    let mut warm = ServerClient::connect(&addr)?;
+    let mut wreq = GenRequest::text(9_000, "", max_new);
+    wreq.prompt = None;
+    wreq.tokens = Some(SHARED_TOKENS.to_vec());
+    let _ = warm.generate(&wreq)?;
     let (wall_s, decoded, latency, ttft) = fire_clients(&addr, n_requests, max_new)?;
     let metrics = router.metrics.snapshot();
     Ok((
@@ -225,11 +253,23 @@ fn main() -> anyhow::Result<()> {
 
     let threads_total = 4usize;
     let batch = 8usize;
-    let (n_requests, max_new) = if quick { (8, 8) } else { (16, 24) };
+    let n_requests = if quick { 8 } else { 16 };
+    // Geometry of the served model (the AOT artifact is the tiny
+    // model); sizes the paged arena and the short-request budget.
+    let max_seq = if artifacts_dir().is_some() {
+        ModelConfig::tiny().max_seq
+    } else {
+        ModelConfig::small_25m().max_seq
+    };
+    // every request must fit in max_seq/4 tokens (prompt is 6 tokens)
+    // so the ARENA_SEQS-sized arena can hold ≥ 3×ARENA_SEQS of them
+    let max_new = (max_seq / 4 - 6).min(if quick { 8 } else { 24 });
+    let kv_pages = ARENA_SEQS * max_seq.div_ceil(PAGE_SIZE);
     let platform = resolve_platform(pin, threads_total);
     println!(
         "serve_batch: {n_requests} concurrent requests × {max_new} new tokens, \
-         {threads_total} worker threads{} | platform {}",
+         {threads_total} worker threads{} | platform {} | \
+         KV arena {kv_pages} pages × {PAGE_SIZE} tokens ({ARENA_SEQS} full sequences)",
         if quick { " (quick mode)" } else { "" },
         platform.name()
     );
@@ -257,7 +297,7 @@ fn main() -> anyhow::Result<()> {
     // the report attributes only the continuous engine's arenas
     let nlb_before_continuous = membind::node_local_bytes();
     let (mut cont, addr, server, batcher_thread) =
-        run_continuous(&platform, pin, threads_total, batch, n_requests, max_new)?;
+        run_continuous(&platform, pin, threads_total, batch, n_requests, max_new, kv_pages)?;
     println!(
         "[{}] decoded {} tok in {:.2}s → {:.1} tok/s aggregate | p50 {:.3}s p95 {:.3}s | \
          occupancy {:.2}",
@@ -272,6 +312,45 @@ fn main() -> anyhow::Result<()> {
 
     let speedup = cont.agg_tok_s / seq.agg_tok_s;
     println!("continuous / sequential speedup: {speedup:.2}×");
+
+    // --- paged-KV claims ----------------------------------------------------
+    let peak_seqs =
+        cont.metrics.get("peak_concurrent_seqs").and_then(Json::as_usize).unwrap_or(0);
+    let prefix_hit_tokens =
+        cont.metrics.get("prefix_hit_tokens").and_then(Json::as_usize).unwrap_or(0);
+    let kv_page_occupancy =
+        cont.metrics.get("kv_page_occupancy").and_then(Json::as_f64).unwrap_or(0.0);
+    println!(
+        "paged KV: peak {peak_seqs} concurrent sequences on a {ARENA_SEQS}-sequence arena | \
+         {prefix_hit_tokens} prefix-hit tokens | occupancy {kv_page_occupancy:.2}"
+    );
+    assert!(
+        peak_seqs >= 3 * ARENA_SEQS,
+        "page-granular admission must overcommit the {ARENA_SEQS}-sequence arena \
+         to ≥ {} short sequences (saw {peak_seqs})",
+        3 * ARENA_SEQS
+    );
+    assert!(
+        prefix_hit_tokens > 0,
+        "identical prompts must share prefix pages (prefix_hit_tokens stayed 0)"
+    );
+    // a second identical-prefix request adopts pages the batch left in
+    // the index and reports the hit on the wire
+    {
+        let mut c = ServerClient::connect(&addr)?;
+        let mut req = GenRequest::text(9_001, "", max_new);
+        req.prompt = None;
+        req.tokens = Some(SHARED_TOKENS.to_vec());
+        let resp = c.generate(&req)?;
+        assert!(
+            resp.prefix_hit_tokens > 0,
+            "repeat of a served prompt must report prefix_hit_tokens on the wire"
+        );
+        println!(
+            "repeat request adopted {} prompt tokens from shared pages ({} pages held) ✓",
+            resp.prefix_hit_tokens, resp.kv_pages_used
+        );
+    }
 
     // --- golden cross-check vs PJRT (when artifacts exist) ------------------
     // The PJRT session only loads in builds with the `pjrt` feature;
@@ -313,6 +392,11 @@ fn main() -> anyhow::Result<()> {
             ("max_new", max_new.into()),
             ("threads", threads_total.into()),
             ("batch_slots", batch.into()),
+            ("kv_page_size", PAGE_SIZE.into()),
+            ("kv_pages_total", kv_pages.into()),
+            ("kv_page_occupancy", kv_page_occupancy.into()),
+            ("prefix_hit_tokens", prefix_hit_tokens.into()),
+            ("peak_concurrent_seqs", peak_seqs.into()),
             ("from_artifacts", from_artifacts.into()),
             ("platform", platform.name().into()),
             ("pinned_workers", pinned_workers.into()),

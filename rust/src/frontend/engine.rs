@@ -7,20 +7,27 @@
 //!
 //! * the classic single-sequence loop (`prefill`, `decode_step`,
 //!   `generate`), and
-//! * the multi-sequence API behind continuous batching (`seq_alloc` /
-//!   `seq_free` / `step_batch`): up to `batch_slots` live sequences,
-//!   each owning one KV-pool slot, advanced one token per lane per
-//!   batched graph pass. Per-lane arithmetic is identical to the
-//!   single-sequence path, so interleaved decode is token-for-token
-//!   equal to serial decode.
+//! * the multi-sequence API behind continuous batching (`seq_start` /
+//!   `step_batch`): sequences are admitted against a **paged** KV
+//!   arena (admission reserves every page the sequence may ever need,
+//!   so decode can never hit out-of-memory mid-flight) and hold an
+//!   RAII [`SeqHandle`] that returns their pages on drop. Identical
+//!   prompt prefixes across sequences share physical pages through a
+//!   rolling-hash index, copied on first divergent append (CoW).
+//!   Per-lane arithmetic is identical to the single-sequence path, so
+//!   interleaved decode is token-for-token equal to serial decode.
+//!
+//! The single-sequence loop writes physical cache positions directly
+//! (its KV span is the whole arena) and must not be interleaved with
+//! live paged sequences without an [`Engine::reset`] in between.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::baseline::Strategy;
-use crate::graph::SlotAllocator;
+use crate::graph::{PageArena, PageTable};
 use crate::hw::Platform;
 use crate::memory::MemoryPool;
 use crate::model::synth;
@@ -42,12 +49,17 @@ pub struct EngineOptions {
     pub prefill_rows: Option<usize>,
     /// Synthetic weight seed when no ALF file is given.
     pub seed: u64,
-    /// KV-pool sequence slots; > 1 builds the batched decode graph and
-    /// enables the multi-sequence API (continuous batching).
+    /// Concurrent decode lanes; > 1 builds the batched decode graph
+    /// and enables the multi-sequence API (continuous batching).
     pub batch_slots: usize,
     /// Pin each pool worker to the OS cpu backing its assigned core
     /// (host platform only; best effort — see `hw::affinity`).
     pub pin: bool,
+    /// Tokens per KV page.
+    pub page_size: usize,
+    /// KV arena size in pages; `None` sizes it for `batch_slots`
+    /// full-length sequences.
+    pub kv_pages: Option<usize>,
 }
 
 impl EngineOptions {
@@ -66,17 +78,145 @@ impl Default for EngineOptions {
             seed: 0,
             batch_slots: 1,
             pin: false,
+            page_size: 16,
+            kv_pages: None,
         }
     }
 }
 
-/// Handle to a live sequence: its KV-pool slot index.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub struct SeqId(usize);
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
 
-impl SeqId {
-    pub fn index(&self) -> usize {
-        self.0
+/// One step of the rolling FNV-1a prefix hash. Keyed over the full
+/// token history, so a hash identifies one exact prompt prefix.
+fn fnv_step(h: u64, tok: i32) -> u64 {
+    (h ^ (tok as u32 as u64)).wrapping_mul(FNV_PRIME)
+}
+
+/// Rolling hash after every *completed* page of `tokens`.
+fn page_hashes(tokens: &[i32], page_size: usize) -> Vec<u64> {
+    let mut h = FNV_OFFSET;
+    let mut out = Vec::new();
+    for (i, &t) in tokens.iter().enumerate() {
+        h = fnv_step(h, t);
+        if (i + 1) % page_size == 0 {
+            out.push(h);
+        }
+    }
+    out
+}
+
+/// Per-sequence pager state.
+#[derive(Debug)]
+struct SeqState {
+    table: PageTable,
+    /// Tokens ingested so far (logical length).
+    len: usize,
+    /// Rolling FNV-1a hash of the full token history.
+    hash: u64,
+    /// Pages still promised by the admission reservation.
+    reserved: usize,
+    /// Admission budget: the sequence may ingest at most this many
+    /// tokens (the reservation covers exactly this span).
+    budget: usize,
+    /// Prompt tokens served from shared prefix pages at admission.
+    prefix_hit: usize,
+    alive: bool,
+}
+
+/// Paged-KV bookkeeping shared between the engine and every live
+/// [`SeqHandle`] (which releases its pages through it on drop).
+#[derive(Debug)]
+pub struct KvPager {
+    arena: PageArena,
+    seqs: Vec<SeqState>,
+    free_ids: Vec<usize>,
+    /// Bumped by [`Engine::reset`]; handles from an older generation
+    /// no-op on drop instead of corrupting fresh refcounts.
+    generation: u64,
+}
+
+impl KvPager {
+    fn new(pages: usize, page_size: usize) -> KvPager {
+        KvPager {
+            arena: PageArena::new(pages, page_size),
+            seqs: Vec::new(),
+            free_ids: Vec::new(),
+            generation: 0,
+        }
+    }
+
+    fn reset(&mut self) {
+        let (pages, ps) = (self.arena.total_pages(), self.arena.page_size());
+        self.arena = PageArena::new(pages, ps);
+        self.seqs.clear();
+        self.free_ids.clear();
+        self.generation += 1;
+    }
+
+    fn new_seq(&mut self, st: SeqState) -> usize {
+        match self.free_ids.pop() {
+            Some(id) => {
+                self.seqs[id] = st;
+                id
+            }
+            None => {
+                self.seqs.push(st);
+                self.seqs.len() - 1
+            }
+        }
+    }
+
+    fn retire(&mut self, id: usize) {
+        let st = &mut self.seqs[id];
+        if !st.alive {
+            return;
+        }
+        st.alive = false;
+        let table = std::mem::take(&mut st.table);
+        let reserved = std::mem::replace(&mut st.reserved, 0);
+        for p in table {
+            self.arena.release(p);
+        }
+        self.arena.unreserve(reserved);
+        self.free_ids.push(id);
+    }
+
+    fn live(&self) -> usize {
+        self.seqs.iter().filter(|s| s.alive).count()
+    }
+
+    fn state(&self, h: &SeqHandle) -> &SeqState {
+        assert_eq!(h.generation, self.generation, "sequence handle from a reset engine");
+        let st = &self.seqs[h.id];
+        assert!(st.alive, "sequence {} already retired", h.id);
+        st
+    }
+}
+
+/// RAII handle to a live sequence. Dropping it returns the sequence's
+/// pages and the unclaimed remainder of its admission reservation to
+/// the arena, so no error or retire path can leak KV memory.
+#[derive(Debug)]
+pub struct SeqHandle {
+    pager: Arc<Mutex<KvPager>>,
+    id: usize,
+    generation: u64,
+}
+
+impl SeqHandle {
+    /// Pager-internal sequence id (diagnostics only — ids recycle).
+    pub fn id(&self) -> usize {
+        self.id
+    }
+}
+
+impl Drop for SeqHandle {
+    fn drop(&mut self) {
+        let mut pg = self.pager.lock().unwrap();
+        if pg.generation == self.generation {
+            pg.retire(self.id);
+        }
     }
 }
 
@@ -116,12 +256,10 @@ pub struct Engine {
     /// The backend every pass goes through — held as a trait object so
     /// the decode loop is backend-agnostic (`sched::Executor`).
     executor: Box<dyn Executor + Send + Sync>,
-    /// Cursor of the classic single-sequence API (KV-pool slot 0).
+    /// Cursor of the classic single-sequence API (physical span 0..).
     pos: usize,
-    /// KV-pool slot bookkeeping for the multi-sequence API.
-    slots: SlotAllocator,
-    /// Tokens ingested so far per slot.
-    seq_pos: Vec<usize>,
+    /// Paged-KV bookkeeping shared with every live [`SeqHandle`].
+    pager: Arc<Mutex<KvPager>>,
     /// Report of the most recent graph pass (dispatch accounting,
     /// unit counts) — the observability hook the serving metrics and
     /// the one-dispatch-per-pass assertions read.
@@ -168,7 +306,14 @@ impl Engine {
             bail!("batch_slots must be at least 1");
         }
         let total_nodes = opts.platform.topology().n_nodes();
-        let mut spec = opts.strategy.build_spec(cfg, total_nodes).with_batch(opts.batch_slots);
+        let mut spec = opts
+            .strategy
+            .build_spec(cfg, total_nodes)
+            .with_batch(opts.batch_slots)
+            .with_page_size(opts.page_size);
+        if let Some(pages) = opts.kv_pages {
+            spec = spec.with_kv_pages(pages);
+        }
         if let Some(rows) = opts.prefill_rows {
             spec = spec.with_prefill(rows);
         }
@@ -177,14 +322,13 @@ impl Engine {
         let executor =
             opts.strategy.real_executor(pool.clone(), &opts.platform, opts.threads, opts.pin);
         let pinned_workers = executor.threads.pinned_workers();
-        let n_slots = graphs.batch_slots();
+        let pager = Arc::new(Mutex::new(KvPager::new(graphs.kv_pages, graphs.kv_page_size)));
         Ok(Engine {
             graphs,
             pool,
             executor: Box::new(executor),
             pos: 0,
-            slots: SlotAllocator::new(n_slots),
-            seq_pos: vec![0; n_slots],
+            pager,
             last_report: None,
             platform_name: opts.platform.name(),
             pinned_workers,
@@ -218,59 +362,182 @@ impl Engine {
         self.pinned_workers
     }
 
-    /// Clear the KV cache, rewind to position 0 and free every
-    /// sequence slot.
+    /// Clear the KV cache, rewind to position 0 and invalidate every
+    /// live sequence (their handles become inert; dropping them is a
+    /// no-op). The prefix index is cleared too.
     pub fn reset(&mut self) {
         synth::reset_kv(&self.graphs);
         self.pos = 0;
-        let n = self.graphs.batch_slots();
-        self.slots = SlotAllocator::new(n);
-        self.seq_pos = vec![0; n];
+        self.pager.lock().unwrap().reset();
     }
 
     // ---- multi-sequence API (continuous batching) --------------------------
 
-    /// Sequence slots in the KV pool (1 = single-sequence engine).
+    /// Concurrent decode lanes (1 = single-sequence engine).
     pub fn batch_slots(&self) -> usize {
         self.graphs.batch_slots()
     }
 
     /// Live sequences.
     pub fn seqs_in_use(&self) -> usize {
-        self.slots.in_use()
+        self.pager.lock().unwrap().live()
     }
 
-    /// Start a sequence: claim a KV-pool slot. `None` when every slot
-    /// is taken (the scheduler's admission backpressure).
-    pub fn seq_alloc(&mut self) -> Option<SeqId> {
-        self.slots.alloc().map(|s| {
-            self.seq_pos[s] = 0;
-            SeqId(s)
-        })
+    /// Physical pages in the KV arena.
+    pub fn kv_total_pages(&self) -> usize {
+        self.pager.lock().unwrap().arena.total_pages()
     }
 
-    /// Finish a sequence: return its slot to the pool. No bytes move —
-    /// a recycled slot's stale KV is never read (attention spans only
-    /// positions the new sequence has itself stored).
-    pub fn seq_free(&mut self, id: SeqId) {
-        self.slots.free(id.0);
+    /// Pages currently held by sequences or the prefix index.
+    pub fn kv_pages_in_use(&self) -> usize {
+        self.pager.lock().unwrap().arena.in_use_pages()
+    }
+
+    /// Pages a new admission could still claim.
+    pub fn kv_available_pages(&self) -> usize {
+        self.pager.lock().unwrap().arena.available_pages()
+    }
+
+    /// Tokens per KV page.
+    pub fn kv_page_size(&self) -> usize {
+        self.graphs.kv_page_size
+    }
+
+    /// Start a sequence that may ingest up to `max_tokens` tokens,
+    /// reserving every page it could ever need. `None` when the arena
+    /// cannot promise that many pages (admission backpressure — retry
+    /// after other sequences retire).
+    pub fn seq_start(&mut self, max_tokens: usize) -> Option<SeqHandle> {
+        self.seq_start_with_prompt(&[], max_tokens).map(|(h, _)| h)
+    }
+
+    /// [`Engine::seq_start`] with prefix reuse: completed pages whose
+    /// rolling token-hash matches a prior sequence's `prompt` prefix
+    /// are adopted instead of recomputed. Returns the handle plus the
+    /// number of prompt tokens already in cache — the caller feeds
+    /// only `prompt[hit..]` (always at least the last token, so the
+    /// first sampled logits are computed, never stale).
+    pub fn seq_start_with_prompt(
+        &mut self,
+        prompt: &[i32],
+        max_tokens: usize,
+    ) -> Option<(SeqHandle, usize)> {
+        let max_seq = self.cfg().max_seq;
+        assert!(
+            max_tokens >= 1 && max_tokens <= max_seq,
+            "sequence budget {max_tokens} outside the {max_seq}-token KV span"
+        );
+        assert!(prompt.len() <= max_tokens, "prompt longer than the sequence budget");
+        let ps = self.graphs.kv_page_size;
+        let all_hashes = page_hashes(prompt, ps);
+        // adopt strictly less than the whole prompt: the last prompt
+        // token must be fed to produce the first logits
+        let max_adopt = if prompt.is_empty() { 0 } else { (prompt.len() - 1) / ps };
+        let mut pg = self.pager.lock().unwrap();
+        let total = max_tokens.div_ceil(ps);
+        let hits = pg.arena.admit(&all_hashes[..max_adopt.min(all_hashes.len())], total)?;
+        let hit_tokens = hits.len() * ps;
+        let hash = if hits.is_empty() { FNV_OFFSET } else { all_hashes[hits.len() - 1] };
+        let reserved = total - hits.len();
+        let generation = pg.generation;
+        let id = pg.new_seq(SeqState {
+            table: hits,
+            len: hit_tokens,
+            hash,
+            reserved,
+            budget: max_tokens,
+            prefix_hit: hit_tokens,
+            alive: true,
+        });
+        drop(pg);
+        Some((SeqHandle { pager: self.pager.clone(), id, generation }, hit_tokens))
+    }
+
+    /// Fork a live sequence: the child shares every parent page
+    /// (including a partially-filled tail page) and reserves enough
+    /// fresh pages to reach `max_tokens`, counting one for the
+    /// copy-on-write of the shared tail on its first divergent append.
+    pub fn seq_fork(&mut self, parent: &SeqHandle, max_tokens: usize) -> Option<SeqHandle> {
+        let max_seq = self.cfg().max_seq;
+        assert!(
+            max_tokens >= 1 && max_tokens <= max_seq,
+            "fork budget {max_tokens} outside the {max_seq}-token KV span"
+        );
+        let ps = self.graphs.kv_page_size;
+        let mut pg = self.pager.lock().unwrap();
+        let (table, len, hash) = {
+            let st = pg.state(parent);
+            (st.table.clone(), st.len, st.hash)
+        };
+        assert!(len <= max_tokens, "fork budget {max_tokens} below parent length {len}");
+        let reserve = max_tokens.div_ceil(ps) - len / ps;
+        pg.arena.admit(&[], reserve)?;
+        for &p in &table {
+            pg.arena.retain(p);
+        }
+        let generation = pg.generation;
+        let id = pg.new_seq(SeqState {
+            table,
+            len,
+            hash,
+            reserved: reserve,
+            budget: max_tokens,
+            prefix_hit: 0,
+            alive: true,
+        });
+        drop(pg);
+        Some(SeqHandle { pager: self.pager.clone(), id, generation })
     }
 
     /// Tokens ingested so far by a live sequence.
-    pub fn seq_pos(&self, id: SeqId) -> usize {
-        self.seq_pos[id.0]
+    pub fn seq_pos(&self, h: &SeqHandle) -> usize {
+        self.pager.lock().unwrap().state(h).len
+    }
+
+    /// Physical pages a live sequence's table currently names.
+    pub fn seq_pages(&self, h: &SeqHandle) -> usize {
+        self.pager.lock().unwrap().state(h).table.len()
+    }
+
+    /// Prompt tokens this sequence adopted from shared prefix pages.
+    pub fn seq_prefix_hit(&self, h: &SeqHandle) -> usize {
+        self.pager.lock().unwrap().state(h).prefix_hit
+    }
+
+    /// Copy one physical page's rows across every KV cache leaf — the
+    /// byte-moving half of CoW divergence (bookkeeping is the pager's).
+    fn copy_kv_page(&self, src: u32, dst: u32) {
+        let ps = self.graphs.kv_page_size;
+        let graph = &self.graphs.decode;
+        for &id in &self.graphs.kv_ids {
+            let meta = graph.meta(id);
+            let (heads, capacity, hd) = (meta.shape[0], meta.shape[1], meta.shape[2]);
+            let buf = graph.buf(id);
+            let f = unsafe { self.pool.arena(buf.arena).f32s_mut(buf.off, buf.len / 4) };
+            for h in 0..heads {
+                let base = h * capacity * hd;
+                let s0 = base + src as usize * ps * hd;
+                let d0 = base + dst as usize * ps * hd;
+                f.copy_within(s0..s0 + ps * hd, d0);
+            }
+        }
     }
 
     /// One continuous-batching step: each lane feeds `token` to its
     /// sequence at that sequence's next position, all lanes in a single
     /// graph pass. Several lanes may name the *same* sequence — they
     /// ingest consecutive positions of it (chunked prefill inside a
-    /// running batch). Returns next-token logits per lane.
+    /// running batch). A lane crossing into a fresh page claims one
+    /// from its reservation; a lane appending into a page it shares
+    /// with another holder copies it first (CoW). Pages completed this
+    /// step are registered in the prefix index. Returns next-token
+    /// logits per lane.
     ///
     /// Panics when the engine was built without `batch_slots > 1`, when
-    /// more lanes than slots are passed, on a lane for a freed slot, or
-    /// when a lane would overflow its sequence's `max_seq` span.
-    pub fn step_batch(&mut self, lanes: &[(SeqId, i32)]) -> Vec<Vec<f32>> {
+    /// more lanes than slots are passed, on a lane for a retired or
+    /// stale sequence, or when a lane would overflow its sequence's
+    /// admitted token budget.
+    pub fn step_batch(&mut self, lanes: &[(&SeqHandle, i32)]) -> Vec<Vec<f32>> {
         let slots = self.batch_slots();
         let graph = self
             .graphs
@@ -282,23 +549,52 @@ impl Engine {
             "step of {} lanes on a {slots}-slot engine",
             lanes.len()
         );
-        let max_seq = self.cfg().max_seq;
-        let mut kv_base = Vec::with_capacity(lanes.len());
+        let ps = self.graphs.kv_page_size;
+        let mut tables = Vec::with_capacity(lanes.len());
         let mut pos = Vec::with_capacity(lanes.len());
         let mut toks = vec![0i32; slots];
-        for (r, (seq, tok)) in lanes.iter().enumerate() {
-            let s = seq.0;
-            assert!(!self.slots.is_free(s), "lane for freed sequence slot {s}");
-            let p = self.seq_pos[s];
-            assert!(p < max_seq, "sequence slot {s} KV span full ({max_seq})");
-            kv_base.push(s * max_seq);
-            pos.push(p);
-            self.seq_pos[s] = p + 1;
-            toks[r] = *tok;
+        {
+            let mut pg = self.pager.lock().unwrap();
+            for (r, (seq, tok)) in lanes.iter().enumerate() {
+                pg.state(seq); // generation + liveness checks
+                let s = seq.id;
+                let p = pg.seqs[s].len;
+                let budget = pg.seqs[s].budget;
+                assert!(p < budget, "sequence {s} KV span full ({budget})");
+                let pi = p / ps;
+                if p % ps == 0 {
+                    debug_assert_eq!(pg.seqs[s].table.len(), pi, "table out of step with len");
+                    let page = pg.arena.alloc_page();
+                    let st = &mut pg.seqs[s];
+                    st.reserved -= 1;
+                    st.table.push(page);
+                } else {
+                    let page = pg.seqs[s].table[pi];
+                    if pg.arena.holders(page) > 1 {
+                        // first divergent append into a shared page
+                        let fresh = pg.arena.alloc_page();
+                        self.copy_kv_page(page, fresh);
+                        pg.arena.release(page);
+                        let st = &mut pg.seqs[s];
+                        st.reserved -= 1;
+                        st.table[pi] = fresh;
+                    }
+                }
+                let st = &mut pg.seqs[s];
+                st.hash = fnv_step(st.hash, *tok);
+                st.len = p + 1;
+                let (h, page) = (st.hash, st.table[pi]);
+                if st.len % ps == 0 {
+                    pg.arena.register(h, page);
+                }
+                tables.push(pg.seqs[s].table.clone());
+                pos.push(p);
+                toks[r] = *tok;
+            }
         }
         let tokens_id = self.graphs.decode_batch_tokens.expect("batch tokens leaf");
         self.write_tokens(&graph, tokens_id, &toks);
-        let params = ExecParams::batched(BatchView::new(kv_base, pos));
+        let params = ExecParams::batched(BatchView::new(ps, tables, pos));
         self.last_report = Some(self.executor.run(&graph, &params));
         let logits_id = self.graphs.decode_batch_logits.expect("batch logits");
         let all = self.read_logits(&graph, logits_id);
@@ -419,6 +715,8 @@ mod tests {
             seed: 42,
             batch_slots,
             pin: false,
+            page_size: 16,
+            kv_pages: None,
         };
         Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
     }
@@ -428,25 +726,29 @@ mod tests {
     /// decode all of them together until each has `max_new` tokens.
     fn drive_batched(engine: &mut Engine, prompts: &[&[i32]], max_new: usize) -> Vec<Vec<i32>> {
         let n = prompts.len();
-        let seqs: Vec<SeqId> = prompts.iter().map(|_| engine.seq_alloc().unwrap()).collect();
+        let cap = engine.cfg().max_seq;
+        let seqs: Vec<SeqHandle> = prompts
+            .iter()
+            .map(|p| engine.seq_start((p.len() + max_new).min(cap)).unwrap())
+            .collect();
         let sampler = Sampler::greedy();
         let mut fed = vec![0usize; n];
         let mut next_tok = vec![0i32; n];
         let mut done = vec![false; n];
         let mut out: Vec<Vec<i32>> = vec![Vec::new(); n];
         while done.iter().any(|d| !d) {
-            let mut lanes: Vec<(SeqId, i32)> = Vec::new();
+            let mut lanes: Vec<(&SeqHandle, i32)> = Vec::new();
             let mut owners: Vec<(usize, bool)> = Vec::new();
             for i in 0..n {
                 if done[i] || lanes.len() == engine.batch_slots() {
                     continue;
                 }
                 if fed[i] < prompts[i].len() {
-                    lanes.push((seqs[i], prompts[i][fed[i]]));
+                    lanes.push((&seqs[i], prompts[i][fed[i]]));
                     fed[i] += 1;
                     owners.push((i, fed[i] == prompts[i].len()));
                 } else {
-                    lanes.push((seqs[i], next_tok[i]));
+                    lanes.push((&seqs[i], next_tok[i]));
                     owners.push((i, true));
                 }
             }
@@ -458,13 +760,10 @@ mod tests {
                 let t = sampler.sample(&logits[li], out[i].len());
                 out[i].push(t);
                 next_tok[i] = t;
-                if out[i].len() == max_new || engine.seq_pos(seqs[i]) >= engine.cfg().max_seq {
+                if out[i].len() == max_new || engine.seq_pos(&seqs[i]) >= engine.cfg().max_seq {
                     done[i] = true;
                 }
             }
-        }
-        for s in seqs {
-            engine.seq_free(s);
         }
         out
     }
@@ -492,8 +791,8 @@ mod tests {
         assert_eq!(tp.last_step_report().unwrap().dispatches, 1);
         // and the batched graph
         let mut b = tiny_engine_slots(Strategy::arclight_single(), 2, None, 2);
-        let s = b.seq_alloc().unwrap();
-        b.step_batch(&[(s, 7)]);
+        let s = b.seq_start(4).unwrap();
+        b.step_batch(&[(&s, 7)]);
         assert_eq!(b.last_step_report().unwrap().dispatches, 1);
     }
 
@@ -502,18 +801,18 @@ mod tests {
         // plan-cache contract: same (graph, rows) reuses the compiled
         // plan; a batch-shape change recompiles (and re-caches)
         let mut e = tiny_engine_slots(Strategy::arclight_single(), 2, None, 3);
-        let s = e.seq_alloc().unwrap();
-        e.step_batch(&[(s, 1)]);
+        let s = e.seq_start(8).unwrap();
+        e.step_batch(&[(&s, 1)]);
         assert!(!e.last_step_report().unwrap().plan_cached, "first shape must compile");
-        e.step_batch(&[(s, 2)]);
+        e.step_batch(&[(&s, 2)]);
         assert!(e.last_step_report().unwrap().plan_cached, "same shape must reuse the plan");
-        let s2 = e.seq_alloc().unwrap();
-        e.step_batch(&[(s, 3), (s2, 4)]);
+        let s2 = e.seq_start(8).unwrap();
+        e.step_batch(&[(&s, 3), (&s2, 4)]);
         assert!(!e.last_step_report().unwrap().plan_cached, "new batch shape must recompile");
-        e.step_batch(&[(s, 5), (s2, 6)]);
+        e.step_batch(&[(&s, 5), (&s2, 6)]);
         assert!(e.last_step_report().unwrap().plan_cached);
         // dropping back to the old shape hits its retained entry
-        e.step_batch(&[(s2, 7)]);
+        e.step_batch(&[(&s2, 7)]);
         assert!(e.last_step_report().unwrap().plan_cached);
         // the single-sequence decode graph is a distinct cache entry
         let mut d = tiny_engine(Strategy::arclight_single(), 2, None);
@@ -618,29 +917,57 @@ mod tests {
     fn single_lane_step_matches_decode_step() {
         let mut a = tiny_engine_slots(Strategy::arclight_single(), 2, None, 2);
         let mut b = tiny_engine(Strategy::arclight_single(), 2, None);
-        let s = a.seq_alloc().unwrap();
+        let s = a.seq_start(16).unwrap();
         for t in [3i32, 14, 15] {
-            let la = a.step_batch(&[(s, t)]).remove(0);
+            let la = a.step_batch(&[(&s, t)]).remove(0);
             let lb = b.decode_step(t);
             assert_eq!(la, lb, "lane logits diverged at token {t}");
         }
-        assert_eq!(a.seq_pos(s), 3);
+        assert_eq!(a.seq_pos(&s), 3);
     }
 
     #[test]
-    fn slots_exhaust_and_recycle() {
+    fn pages_exhaust_and_recycle_on_drop() {
+        // arena defaults to 2 full-length sequences' worth of pages
         let mut e = tiny_engine_slots(Strategy::arclight_single(), 2, None, 2);
-        let s0 = e.seq_alloc().unwrap();
-        let s1 = e.seq_alloc().unwrap();
-        assert!(e.seq_alloc().is_none(), "third sequence must be refused");
+        let cap = e.cfg().max_seq;
+        let s0 = e.seq_start(cap).unwrap();
+        let s1 = e.seq_start(cap).unwrap();
+        assert!(e.seq_start(1).is_none(), "overcommitted admission must be refused");
         assert_eq!(e.seqs_in_use(), 2);
-        // fill slot 0 a little, free it, re-alloc: position must reset
-        e.step_batch(&[(s0, 1), (s1, 2)]);
-        assert_eq!(e.seq_pos(s0), 1);
-        e.seq_free(s0);
-        let s0b = e.seq_alloc().unwrap();
-        assert_eq!(s0b.index(), s0.index());
-        assert_eq!(e.seq_pos(s0b), 0);
+        e.step_batch(&[(&s0, 1), (&s1, 2)]);
+        assert_eq!(e.seq_pos(&s0), 1);
+        assert_eq!(e.kv_pages_in_use(), 2, "one page claimed per started sequence");
+        // dropping the handle returns pages and reservation (RAII)
+        drop(s0);
+        assert_eq!(e.seqs_in_use(), 1);
+        let s0b = e.seq_start(cap).unwrap();
+        assert_eq!(e.seq_pos(&s0b), 0);
+    }
+
+    #[test]
+    fn identical_prompts_share_prefix_pages() {
+        // page size 16: a 20-token prompt completes one shareable page
+        let mut e = tiny_engine_slots(Strategy::arclight_single(), 2, None, 3);
+        let prompt: Vec<i32> = (0..20).collect();
+        let feed = |e: &mut Engine, s: &SeqHandle, toks: &[i32]| -> Vec<f32> {
+            let mut last = Vec::new();
+            for &t in toks {
+                last = e.step_batch(&[(s, t)]).remove(0);
+            }
+            last
+        };
+        let (s1, h1) = e.seq_start_with_prompt(&prompt, 24).unwrap();
+        assert_eq!(h1, 0, "cold prefix index must not hit");
+        let l1 = feed(&mut e, &s1, &prompt);
+        let used = e.kv_pages_in_use();
+        let (s2, h2) = e.seq_start_with_prompt(&prompt, 24).unwrap();
+        assert_eq!(h2, 16, "second identical prompt adopts the completed page");
+        let l2 = feed(&mut e, &s2, &prompt[h2..]);
+        assert_eq!(l1, l2, "prefix-hit logits must be bit-identical to the cold path");
+        assert_eq!(e.kv_pages_in_use(), used + 1, "only the tail page is new");
+        assert_eq!(e.seq_prefix_hit(&s2), 16);
+        assert_eq!(e.seq_prefix_hit(&s1), 0);
     }
 
     #[test]
@@ -659,11 +986,11 @@ mod tests {
 
     #[test]
     #[should_panic(expected = "KV span full")]
-    fn lane_past_slot_capacity_panics() {
+    fn lane_past_budget_panics() {
         let mut e = tiny_engine_slots(Strategy::arclight_single(), 2, None, 2);
-        let s = e.seq_alloc().unwrap();
+        let s = e.seq_start(e.cfg().max_seq).unwrap();
         for t in 0..(e.cfg().max_seq + 1) {
-            e.step_batch(&[(s, t as i32)]);
+            e.step_batch(&[(&s, t as i32)]);
         }
     }
 

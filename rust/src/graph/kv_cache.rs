@@ -6,19 +6,31 @@
 //! touches its node-local shard, so decode attention never crosses the
 //! NUMA boundary (§3.2: W_k/W_v are head-partitioned).
 //!
-//! For continuous batching the cache is a **pool**: each layer's leaf
-//! holds `slots` logical sequence slots of `max_seq` positions carved
-//! from one arena allocation (`[kv_heads/G, slots·max_seq, head_dim]`).
-//! Slot `s` owns cache positions `[s·max_seq, (s+1)·max_seq)`; the
-//! engine allocates a slot when a request starts and frees it when the
-//! request finishes ([`SlotAllocator`]). Stale bytes in a recycled slot
-//! are harmless: a sequence's attention span only ever covers positions
-//! it has itself stored this lifetime.
+//! For continuous batching the cache is a **paged pool**: each layer's
+//! leaf holds `pages · page_size` token positions carved from one arena
+//! allocation (`[kv_heads/G, pages·page_size, head_dim]`). A *page* is
+//! `page_size` consecutive physical positions; sequences map logical
+//! position `p` to physical position `table[p / P]·P + p % P` through a
+//! per-sequence [`PageTable`]. Page indices address the same offset in
+//! every layer shard, so a page inherits each shard's NUMA placement —
+//! TP keeps a KV head's pages node-local exactly as before. The
+//! [`PageArena`] is the refcounted free-list plus the prefix index that
+//! lets identical prompt prefixes share physical pages across
+//! sequences (copy-on-write happens one level up, in the engine, which
+//! owns the buffers). Stale bytes in a recycled page are harmless: a
+//! sequence's attention gather only ever visits pages its table names,
+//! at offsets it has itself stored this lifetime.
+
+use std::collections::{HashMap, VecDeque};
 
 use crate::numa::Placement;
 use crate::tensor::{TensorBundle, TensorId};
 
 use super::builder::GraphBuilder;
+
+/// A sequence's logical→physical page mapping: entry `i` is the
+/// physical page backing logical positions `[i·P, (i+1)·P)`.
+pub type PageTable = Vec<u32>;
 
 /// The K and V cache bundles of one transformer layer.
 #[derive(Clone, Debug)]
@@ -29,58 +41,120 @@ pub struct LayerKv {
     pub heads_per_part: usize,
 }
 
+/// Everything [`KvCacheSet::create`] needs, replacing the old
+/// seven-positional-argument constructors. Build one with
+/// [`KvSpec::for_model`] and chain the setters:
+///
+/// ```ignore
+/// let spec = KvSpec::for_model(layers, kv_heads, head_dim, max_seq)
+///     .page_size(16)
+///     .pages(64)
+///     .placement(Placement::Node(0));
+/// let kv = KvCacheSet::create(&mut b, &spec);
+/// ```
+#[derive(Clone, Debug)]
+pub struct KvSpec {
+    pub layers: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Longest single sequence (logical positions per sequence).
+    pub max_seq: usize,
+    /// Physical pages in the arena (capacity = `pages · page_size`).
+    pub pages: usize,
+    /// Tokens per page per layer-shard.
+    pub page_size: usize,
+    /// Placement of single-group caches (TP shards always go to their
+    /// part's node).
+    pub placement: Placement,
+}
+
+impl KvSpec {
+    /// Defaults: page size 16, arena sized for exactly one full-length
+    /// sequence, node-0 placement.
+    pub fn for_model(layers: usize, kv_heads: usize, head_dim: usize, max_seq: usize) -> KvSpec {
+        let page_size = 16usize.min(max_seq.max(1));
+        KvSpec {
+            layers,
+            kv_heads,
+            head_dim,
+            max_seq,
+            pages: max_seq.div_ceil(page_size),
+            page_size,
+            placement: Placement::Node(0),
+        }
+    }
+
+    /// Set the page size and re-derive `pages` to keep the current
+    /// whole-sequence capacity.
+    pub fn page_size(mut self, page_size: usize) -> KvSpec {
+        assert!(page_size >= 1, "page size must be at least 1 token");
+        let seqs = (self.pages * self.page_size).div_ceil(self.max_seq.max(1)).max(1);
+        self.page_size = page_size;
+        self.pages = seqs * self.max_seq.div_ceil(page_size);
+        self
+    }
+
+    /// Set the physical page count directly.
+    pub fn pages(mut self, pages: usize) -> KvSpec {
+        assert!(pages >= 1, "a page arena needs at least one page");
+        self.pages = pages;
+        self
+    }
+
+    /// Size the arena for `n` concurrent full-length sequences.
+    pub fn slots(self, n: usize) -> KvSpec {
+        assert!(n >= 1, "a KV pool needs at least one slot");
+        let per_seq = self.max_seq.div_ceil(self.page_size);
+        self.pages(n * per_seq)
+    }
+
+    pub fn placement(mut self, placement: Placement) -> KvSpec {
+        self.placement = placement;
+        self
+    }
+}
+
 /// All layers' caches for one model instance.
 pub struct KvCacheSet {
     pub layers: Vec<LayerKv>,
-    /// Positions per sequence slot.
+    /// Longest single sequence (logical positions per sequence).
     pub max_seq: usize,
-    /// Sequence slots carved from the pool (1 = classic single-sequence).
-    pub slots: usize,
+    /// Physical pages carved from each layer leaf.
+    pub pages: usize,
+    /// Tokens per page.
+    pub page_size: usize,
 }
 
 impl KvCacheSet {
-    /// Create single-sequence caches (`slots == 1`); see
-    /// [`KvCacheSet::create_pooled`].
-    pub fn create(
-        b: &mut GraphBuilder,
-        n_layers: usize,
-        kv_heads: usize,
-        head_dim: usize,
-        max_seq: usize,
-        single_placement: Placement,
-    ) -> KvCacheSet {
-        Self::create_pooled(b, n_layers, kv_heads, head_dim, max_seq, 1, single_placement)
-    }
-
     /// Create caches: one leaf per layer per TP part, shaped
-    /// `[kv_heads/G, slots·max_seq, head_dim]`, placed on the part's
-    /// node. With `G == 1` the placement argument overrides (llama.cpp's
+    /// `[kv_heads/G, pages·page_size, head_dim]`, placed on the part's
+    /// node. With `G == 1` the spec's placement applies (llama.cpp's
     /// interleaved UMA cache vs ArcLight's node-local cache).
-    #[allow(clippy::too_many_arguments)]
-    pub fn create_pooled(
-        b: &mut GraphBuilder,
-        n_layers: usize,
-        kv_heads: usize,
-        head_dim: usize,
-        max_seq: usize,
-        slots: usize,
-        single_placement: Placement,
-    ) -> KvCacheSet {
+    pub fn create(b: &mut GraphBuilder, spec: &KvSpec) -> KvCacheSet {
         let g = b.n_groups();
-        assert!(kv_heads % g == 0, "kv_heads {kv_heads} not divisible by {g} groups");
-        assert!(slots >= 1, "a KV pool needs at least one slot");
-        let hpp = kv_heads / g;
-        let mut layers = Vec::with_capacity(n_layers);
-        for l in 0..n_layers {
+        assert!(spec.kv_heads % g == 0, "kv_heads {} not divisible by {g} groups", spec.kv_heads);
+        assert!(spec.pages >= 1, "a page arena needs at least one page");
+        assert!(spec.page_size >= 1, "page size must be at least 1 token");
+        assert!(
+            spec.pages * spec.page_size >= spec.max_seq,
+            "page arena ({} pages x {}) smaller than one {}-token sequence",
+            spec.pages,
+            spec.page_size,
+            spec.max_seq
+        );
+        let hpp = spec.kv_heads / g;
+        let capacity = spec.pages * spec.page_size;
+        let mut layers = Vec::with_capacity(spec.layers);
+        for l in 0..spec.layers {
             let mut ks = Vec::with_capacity(g);
             let mut vs = Vec::with_capacity(g);
             for part in 0..g {
                 let placement = if g == 1 {
-                    single_placement.clone()
+                    spec.placement.clone()
                 } else {
                     Placement::Node(b.group_node(part))
                 };
-                let shape = vec![hpp, slots * max_seq, head_dim];
+                let shape = vec![hpp, capacity, spec.head_dim];
                 ks.push(b.kv_leaf(&format!("kv.{l}.k.{part}"), shape.clone(), placement.clone()));
                 vs.push(b.kv_leaf(&format!("kv.{l}.v.{part}"), shape, placement));
             }
@@ -90,23 +164,22 @@ impl KvCacheSet {
                 heads_per_part: hpp,
             });
         }
-        KvCacheSet { layers, max_seq, slots }
+        KvCacheSet {
+            layers,
+            max_seq: spec.max_seq,
+            pages: spec.pages,
+            page_size: spec.page_size,
+        }
     }
 
     pub fn layer(&self, l: usize) -> &LayerKv {
         &self.layers[l]
     }
 
-    /// Total cache positions per kv head (`slots · max_seq`) — the
+    /// Total cache positions per kv head (`pages · page_size`) — the
     /// stride every attention/store op over this pool uses.
     pub fn capacity(&self) -> usize {
-        self.slots * self.max_seq
-    }
-
-    /// First cache position of sequence slot `s`.
-    pub fn slot_base(&self, s: usize) -> usize {
-        debug_assert!(s < self.slots);
-        s * self.max_seq
+        self.pages * self.page_size
     }
 
     /// Every cache tensor id (weight-loader / reset iteration).
@@ -118,42 +191,208 @@ impl KvCacheSet {
     }
 }
 
-/// Free-list of sequence slots in the KV pool. Purely bookkeeping — no
-/// bytes move on alloc/free (see the module docs for why recycled slots
-/// need no zeroing).
-#[derive(Clone, Debug)]
-pub struct SlotAllocator {
-    free: Vec<usize>,
-    slots: usize,
+/// Refcounted physical-page allocator with a prefix-sharing index.
+/// Purely bookkeeping — no bytes move on alloc/free (see the module
+/// docs for why recycled pages need no zeroing).
+///
+/// Three kinds of reference hold a page: live sequence tables, the
+/// prefix index (a completed page registered under the rolling hash of
+/// every token up to its end survives its sequences, so later requests
+/// with the same prompt prefix can adopt it), and nothing else. A page
+/// whose only holder is the index is *evictable*: [`PageArena::admit`]
+/// counts `free + evictable` as available capacity and
+/// [`PageArena::alloc_page`] evicts the oldest registration when the
+/// free list runs dry.
+///
+/// Admission is **reservation-based**: a sequence reserves every page
+/// it may ever need up front (minus pages adopted from the index), so
+/// a sequence that was admitted can never hit out-of-memory
+/// mid-decode.
+#[derive(Clone, Debug, Default)]
+pub struct PageArena {
+    page_size: usize,
+    /// Holders per page: sequence tables + 1 if registered in `index`.
+    refs: Vec<u32>,
+    /// Pages with `refs == 0`; pop() hands out low indices first.
+    free: Vec<u32>,
+    /// Pages promised to admitted sequences but not yet allocated.
+    reserved: usize,
+    /// Rolling prefix hash → completed page holding that prefix's last
+    /// `page_size` tokens.
+    index: HashMap<u64, u32>,
+    /// Reverse map of `index` (None = unregistered).
+    hash_of: Vec<Option<u64>>,
+    /// Registration order, for FIFO eviction.
+    fifo: VecDeque<u32>,
 }
 
-impl SlotAllocator {
-    pub fn new(slots: usize) -> Self {
-        // pop() hands out low slot indices first
-        SlotAllocator { free: (0..slots).rev().collect(), slots }
+impl PageArena {
+    pub fn new(pages: usize, page_size: usize) -> PageArena {
+        assert!(pages >= 1 && page_size >= 1, "page arena needs pages and a page size");
+        PageArena {
+            page_size,
+            refs: vec![0; pages],
+            free: (0..pages as u32).rev().collect(),
+            reserved: 0,
+            index: HashMap::new(),
+            hash_of: vec![None; pages],
+            fifo: VecDeque::new(),
+        }
     }
 
-    pub fn alloc(&mut self) -> Option<usize> {
-        self.free.pop()
+    pub fn page_size(&self) -> usize {
+        self.page_size
     }
 
-    pub fn free(&mut self, slot: usize) {
-        assert!(slot < self.slots, "slot {slot} out of range");
-        assert!(!self.free.contains(&slot), "double free of slot {slot}");
-        self.free.push(slot);
+    pub fn total_pages(&self) -> usize {
+        self.refs.len()
     }
 
-    pub fn available(&self) -> usize {
-        self.free.len()
+    /// Pages referenced by at least one holder (sequence or index).
+    pub fn in_use_pages(&self) -> usize {
+        self.refs.len() - self.free.len()
     }
 
-    /// Whether `slot` is currently unallocated.
-    pub fn is_free(&self, slot: usize) -> bool {
-        self.free.contains(&slot)
+    /// Pages held *only* by the prefix index (reclaimable on demand).
+    pub fn cached_pages(&self) -> usize {
+        self.fifo.iter().filter(|&&p| self.refs[p as usize] == 1).count()
     }
 
-    pub fn in_use(&self) -> usize {
-        self.slots - self.free.len()
+    /// Pages an admission could still claim: free + evictable − already
+    /// promised to other admitted sequences.
+    pub fn available_pages(&self) -> usize {
+        (self.free.len() + self.cached_pages()).saturating_sub(self.reserved)
+    }
+
+    /// Admit a sequence needing `total_pages` pages over its lifetime.
+    /// `prefix_hashes[i]` is the rolling hash after logical page `i`
+    /// completed; the longest indexed run is adopted (shared, refcount
+    /// bumped) and only the remainder is reserved. Returns the adopted
+    /// pages, or `None` when the arena cannot promise the remainder —
+    /// the caller should retry after other sequences retire.
+    pub fn admit(&mut self, prefix_hashes: &[u64], total_pages: usize) -> Option<Vec<u32>> {
+        let mut hits: Vec<u32> = Vec::new();
+        for h in prefix_hashes {
+            match self.index.get(h) {
+                Some(&p) if !hits.contains(&p) => hits.push(p),
+                _ => break,
+            }
+        }
+        loop {
+            let fresh = total_pages - hits.len();
+            // adopting an index-only page pins it (no longer evictable)
+            let pinned = hits.iter().filter(|&&p| self.refs[p as usize] == 1).count();
+            if self.free.len() + self.cached_pages() >= self.reserved + fresh + pinned {
+                self.reserved += fresh;
+                for &p in &hits {
+                    self.refs[p as usize] += 1;
+                }
+                return Some(hits);
+            }
+            // a shorter shared run pins fewer cached pages; retry
+            // without hits before giving up entirely
+            if hits.is_empty() {
+                return None;
+            }
+            hits.clear();
+        }
+    }
+
+    /// Claim one page out of an existing reservation. Never fails: the
+    /// reservation accounting guarantees a free or evictable page.
+    pub fn alloc_page(&mut self) -> u32 {
+        assert!(self.reserved > 0, "page allocated without a reservation");
+        self.reserved -= 1;
+        if let Some(p) = self.free.pop() {
+            return p;
+        }
+        // evict the oldest index-only registration
+        let mut scanned = 0;
+        let n = self.fifo.len();
+        while scanned < n {
+            let p = self.fifo.pop_front().expect("fifo tracked registrations");
+            scanned += 1;
+            if self.hash_of[p as usize].is_none() {
+                continue; // stale entry, already unregistered
+            }
+            if self.refs[p as usize] == 1 {
+                self.unregister(p);
+                self.refs[p as usize] = 0;
+                return p;
+            }
+            self.fifo.push_back(p); // still shared by a live sequence
+        }
+        panic!("page reservation accounting violated: no free or evictable page");
+    }
+
+    /// Return pages a dropped sequence promised but never claimed.
+    pub fn unreserve(&mut self, pages: usize) {
+        debug_assert!(pages <= self.reserved, "unreserve of pages never reserved");
+        self.reserved = self.reserved.saturating_sub(pages);
+    }
+
+    /// Add a holder to `page` (prefix adoption outside `admit`, or a
+    /// fork sharing its parent's table).
+    pub fn retain(&mut self, page: u32) {
+        assert!(self.refs[page as usize] > 0, "retain of an unheld page {page}");
+        self.refs[page as usize] += 1;
+    }
+
+    /// Drop one holder of `page`; a page with no holders left returns
+    /// to the free list.
+    pub fn release(&mut self, page: u32) {
+        let r = &mut self.refs[page as usize];
+        assert!(*r > 0, "double free of page {page}");
+        *r -= 1;
+        if *r == 0 {
+            debug_assert!(self.hash_of[page as usize].is_none());
+            self.free.push(page);
+        }
+    }
+
+    /// How many holders `page` currently has (CoW triggers at > 1).
+    pub fn holders(&self, page: u32) -> u32 {
+        self.refs[page as usize]
+    }
+
+    /// Register a just-completed page under the rolling hash of every
+    /// token up to its end. The index becomes a holder, so the page
+    /// survives its sequences until evicted. First registration of a
+    /// hash wins; re-registering a page under a new hash is rejected.
+    pub fn register(&mut self, hash: u64, page: u32) {
+        if self.hash_of[page as usize].is_some() || self.index.contains_key(&hash) {
+            return;
+        }
+        assert!(self.refs[page as usize] > 0, "registering an unheld page {page}");
+        self.refs[page as usize] += 1;
+        self.hash_of[page as usize] = Some(hash);
+        self.index.insert(hash, page);
+        self.fifo.push_back(page);
+    }
+
+    /// Look up a completed-prefix page without adopting it.
+    pub fn lookup(&self, hash: u64) -> Option<u32> {
+        self.index.get(&hash).copied()
+    }
+
+    /// Drop every prefix registration (engine reset).
+    pub fn clear_index(&mut self) {
+        let pages: Vec<u32> = self.index.values().copied().collect();
+        for p in pages {
+            self.unregister(p);
+            let r = &mut self.refs[p as usize];
+            *r -= 1;
+            if *r == 0 {
+                self.free.push(p);
+            }
+        }
+        self.fifo.clear();
+    }
+
+    fn unregister(&mut self, page: u32) {
+        if let Some(h) = self.hash_of[page as usize].take() {
+            self.index.remove(&h);
+        }
     }
 }
 
@@ -163,11 +402,15 @@ mod tests {
     use crate::memory::MemoryPool;
     use crate::tensor::DType;
 
+    fn spec(layers: usize, kv_heads: usize, head_dim: usize, max_seq: usize) -> KvSpec {
+        KvSpec::for_model(layers, kv_heads, head_dim, max_seq)
+    }
+
     #[test]
     fn tp_cache_is_sharded_by_head() {
         let pool = MemoryPool::new(2, 1 << 20, 1 << 20, 1 << 20);
         let mut b = GraphBuilder::new(Some(pool), vec![0, 1], Placement::Node(0));
-        let kv = KvCacheSet::create(&mut b, 2, 4, 16, 32, Placement::Node(0));
+        let kv = KvCacheSet::create(&mut b, &spec(2, 4, 16, 32));
         assert_eq!(kv.layers.len(), 2);
         assert_eq!(kv.layer(0).k.width(), 2);
         assert_eq!(kv.layer(0).heads_per_part, 2);
@@ -181,7 +424,8 @@ mod tests {
     fn single_mode_uses_given_placement() {
         let pool = MemoryPool::new(4, 1 << 20, 1 << 20, 1 << 20);
         let mut b = GraphBuilder::new(Some(pool), vec![0], Placement::Node(0));
-        let kv = KvCacheSet::create(&mut b, 1, 4, 8, 16, Placement::Interleaved(4));
+        let s = spec(1, 4, 8, 16).placement(Placement::Interleaved(4));
+        let kv = KvCacheSet::create(&mut b, &s);
         let m = b.graph.meta(kv.layer(0).k.single());
         assert_eq!(m.placement, Placement::Interleaved(4));
     }
@@ -191,49 +435,95 @@ mod tests {
     fn indivisible_heads_rejected() {
         let pool = MemoryPool::new(2, 1 << 20, 1 << 20, 1 << 20);
         let mut b = GraphBuilder::new(Some(pool), vec![0, 1], Placement::Node(0));
-        KvCacheSet::create(&mut b, 1, 3, 8, 16, Placement::Node(0));
+        KvCacheSet::create(&mut b, &spec(1, 3, 8, 16));
     }
 
     #[test]
     fn all_ids_enumerates_every_shard() {
         let pool = MemoryPool::new(2, 1 << 20, 1 << 20, 1 << 20);
         let mut b = GraphBuilder::new(Some(pool), vec![0, 1], Placement::Node(0));
-        let kv = KvCacheSet::create(&mut b, 3, 2, 8, 16, Placement::Node(0));
+        let kv = KvCacheSet::create(&mut b, &spec(3, 2, 8, 16));
         assert_eq!(kv.all_ids().len(), 3 * 2 * 2);
     }
 
     #[test]
-    fn pooled_cache_carves_slot_spans() {
+    fn pooled_cache_carves_pages() {
         let pool = MemoryPool::new(1, 1 << 20, 1 << 20, 1 << 20);
         let mut b = GraphBuilder::new(Some(pool), vec![0], Placement::Node(0));
-        let kv = KvCacheSet::create_pooled(&mut b, 2, 2, 8, 16, 4, Placement::Node(0));
+        // 4 slots of a 16-token sequence at page size 8 = 8 pages
+        let kv = KvCacheSet::create(&mut b, &spec(2, 2, 8, 16).page_size(8).slots(4));
+        assert_eq!(kv.pages, 8);
         assert_eq!(kv.capacity(), 64);
-        assert_eq!(kv.slot_base(3), 48);
         let m = b.graph.meta(kv.layer(1).k.single());
         assert_eq!(m.shape, vec![2, 64, 8]);
     }
 
     #[test]
-    fn slot_allocator_recycles() {
-        let mut a = SlotAllocator::new(3);
-        assert_eq!(a.available(), 3);
-        let s0 = a.alloc().unwrap();
-        let s1 = a.alloc().unwrap();
-        assert_eq!((s0, s1), (0, 1));
-        assert_eq!(a.in_use(), 2);
-        a.free(s0);
-        assert_eq!(a.alloc().unwrap(), 0);
-        let s2 = a.alloc().unwrap();
-        assert_eq!(s2, 2);
-        assert!(a.alloc().is_none());
+    #[should_panic(expected = "smaller than one")]
+    fn undersized_arena_rejected() {
+        let pool = MemoryPool::new(1, 1 << 20, 1 << 20, 1 << 20);
+        let mut b = GraphBuilder::new(Some(pool), vec![0], Placement::Node(0));
+        KvCacheSet::create(&mut b, &spec(1, 2, 8, 64).page_size(8).pages(2));
+    }
+
+    #[test]
+    fn arena_reserves_allocs_and_recycles() {
+        let mut a = PageArena::new(4, 8);
+        assert_eq!(a.available_pages(), 4);
+        let hits = a.admit(&[], 3).unwrap();
+        assert!(hits.is_empty());
+        assert_eq!(a.available_pages(), 1);
+        let p0 = a.alloc_page();
+        let p1 = a.alloc_page();
+        assert_eq!((p0, p1), (0, 1));
+        assert_eq!(a.in_use_pages(), 2);
+        // a second admission can't overcommit the remaining page
+        assert!(a.admit(&[], 2).is_none());
+        assert!(a.admit(&[], 1).is_some());
+        a.release(p0);
+        a.unreserve(1); // the un-claimed third page of the first admit
+        assert_eq!(a.alloc_page(), 0, "freed page recycles low-first");
+        a.release(p1);
+        a.release(0);
+        assert_eq!(a.in_use_pages(), 0);
+        assert_eq!(a.available_pages(), 4);
     }
 
     #[test]
     #[should_panic(expected = "double free")]
-    fn slot_double_free_rejected() {
-        let mut a = SlotAllocator::new(2);
-        let s = a.alloc().unwrap();
-        a.free(s);
-        a.free(s);
+    fn page_double_free_rejected() {
+        let mut a = PageArena::new(2, 8);
+        a.admit(&[], 1).unwrap();
+        let p = a.alloc_page();
+        a.release(p);
+        a.release(p);
+    }
+
+    #[test]
+    fn prefix_index_shares_and_evicts() {
+        let mut a = PageArena::new(3, 4);
+        a.admit(&[], 2).unwrap();
+        let p = a.alloc_page();
+        a.register(0xfeed, p);
+        assert_eq!(a.holders(p), 2);
+        a.release(p); // sequence retires; index keeps the page alive
+        assert_eq!(a.cached_pages(), 1);
+        assert_eq!(a.lookup(0xfeed), Some(p));
+
+        // a new identical-prefix admission adopts the cached page
+        let hits = a.admit(&[0xfeed], 2).unwrap();
+        assert_eq!(hits, vec![p]);
+        assert_eq!(a.holders(p), 2);
+        assert_eq!(a.cached_pages(), 0, "adopted page is pinned");
+
+        // release everything; demand for the whole arena then evicts
+        // the registration (free pages go first, cached page last)
+        a.release(p);
+        a.unreserve(2); // one unclaimed page from each admission
+        let hits = a.admit(&[], 3).unwrap();
+        assert!(hits.is_empty());
+        let claimed = [a.alloc_page(), a.alloc_page(), a.alloc_page()];
+        assert_eq!(claimed[2], p, "cached page evicted under demand, free pages first");
+        assert_eq!(a.lookup(0xfeed), None);
     }
 }

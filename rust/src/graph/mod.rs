@@ -20,7 +20,7 @@ pub mod kv_cache;
 pub mod node;
 
 pub use builder::GraphBuilder;
-pub use kv_cache::{KvCacheSet, SlotAllocator};
+pub use kv_cache::{KvCacheSet, KvSpec, PageArena, PageTable};
 pub use node::{OpKind, TensorMeta};
 
 use crate::memory::BufRef;

@@ -168,6 +168,8 @@ fn engine_opts(args: &Args) -> Result<EngineOptions> {
         seed: args.usize("seed", 0) as u64,
         batch_slots: args.usize("batch", 1),
         pin,
+        page_size: args.usize("page-size", 16),
+        kv_pages: args.get("kv-pages").and_then(|v| v.parse().ok()),
     })
 }
 
@@ -458,6 +460,8 @@ fn cmd_golden(args: &Args) -> Result<()> {
         seed: 0,
         batch_slots: 1,
         pin: false,
+        page_size: 16,
+        kv_pages: None,
     };
     let mut engine = Engine::from_alf(&dir.join("tiny.alf"), &opts)?;
     let res = engine.generate(&prompt, max_new, &Sampler::greedy());

@@ -24,6 +24,16 @@ pub struct Metrics {
     pub pass_dispatches: AtomicU64,
     /// Workers the serving engine's pool pinned to host cpus.
     pub pinned_workers: AtomicU64,
+    /// High-water mark of concurrently live sequences (paged KV lets
+    /// this exceed the slot count of the dense-era scheduler).
+    pub peak_seqs: AtomicU64,
+    /// Prompt tokens served from prefix-shared KV pages instead of
+    /// being prefilled (summed over all admitted requests).
+    pub prefix_hit_tokens: AtomicU64,
+    /// KV pages held by live sequences after the last batched step.
+    pub kv_pages_used: AtomicU64,
+    /// Total pages in the serving engine's KV arena.
+    pub kv_pages_total: AtomicU64,
     /// Execution platform of the serving engine (`"simulated"` /
     /// `"host"`; empty until a scheduler registers its engine).
     platform: Mutex<&'static str>,
@@ -84,6 +94,37 @@ impl Metrics {
     /// Enqueue → admission latency of one request.
     pub fn record_queue_wait(&self, seconds: f64) {
         self.queue_wait.lock().unwrap().add(seconds);
+    }
+
+    /// Live-sequence count after an admission or batched step; keeps
+    /// the concurrency high-water mark.
+    pub fn record_concurrency(&self, live: usize) {
+        self.peak_seqs.fetch_max(live as u64, Ordering::Relaxed);
+    }
+
+    /// Prompt tokens one admission adopted from prefix-shared pages.
+    pub fn record_prefix_hit(&self, tokens: usize) {
+        self.prefix_hit_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+    }
+
+    /// KV pages held by live sequences (gauge, sampled per step).
+    pub fn record_kv_pages(&self, used: usize) {
+        self.kv_pages_used.store(used as u64, Ordering::Relaxed);
+    }
+
+    /// Arena capacity of the serving engine (set once at serve start).
+    pub fn set_kv_pages_total(&self, total: usize) {
+        self.kv_pages_total.store(total as u64, Ordering::Relaxed);
+    }
+
+    /// Fraction of the KV arena held by live sequences (0 when the
+    /// arena size was never registered).
+    pub fn kv_page_occupancy(&self) -> f64 {
+        let total = self.kv_pages_total.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        self.kv_pages_used.load(Ordering::Relaxed) as f64 / total as f64
     }
 
     /// Mean lanes per batched step since startup (0 when no batched
@@ -149,6 +190,11 @@ impl Metrics {
             ("req_decode_tok_per_s_p50", rate.p50().into()),
             ("decode_steps", load(&self.decode_steps).into()),
             ("batch_occupancy", self.batch_occupancy().into()),
+            ("peak_concurrent_seqs", load(&self.peak_seqs).into()),
+            ("prefix_hit_tokens", load(&self.prefix_hit_tokens).into()),
+            ("kv_pages_used", load(&self.kv_pages_used).into()),
+            ("kv_pages_total", load(&self.kv_pages_total).into()),
+            ("kv_page_occupancy", self.kv_page_occupancy().into()),
             ("pass_dispatches", load(&self.pass_dispatches).into()),
             ("dispatches_per_token", self.dispatches_per_token().into()),
             ("queue_wait_p50_s", qw.p50().into()),
@@ -228,6 +274,27 @@ mod tests {
         assert_eq!(s.get("pass_dispatches").unwrap().as_usize(), Some(3));
         let dpt = s.get("dispatches_per_token").unwrap().as_f64().unwrap();
         assert!((dpt - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paged_kv_gauges_reported() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.get("kv_page_occupancy").unwrap().as_f64(), Some(0.0)); // guarded
+        m.set_kv_pages_total(16);
+        m.record_kv_pages(4);
+        m.record_prefix_hit(32);
+        m.record_prefix_hit(16);
+        m.record_concurrency(3);
+        m.record_concurrency(7);
+        m.record_concurrency(5); // high-water mark keeps 7
+        let s = m.snapshot();
+        assert_eq!(s.get("kv_pages_total").unwrap().as_usize(), Some(16));
+        assert_eq!(s.get("kv_pages_used").unwrap().as_usize(), Some(4));
+        let occ = s.get("kv_page_occupancy").unwrap().as_f64().unwrap();
+        assert!((occ - 0.25).abs() < 1e-9);
+        assert_eq!(s.get("prefix_hit_tokens").unwrap().as_usize(), Some(48));
+        assert_eq!(s.get("peak_concurrent_seqs").unwrap().as_usize(), Some(7));
     }
 
     #[test]

@@ -17,7 +17,7 @@
 
 use std::sync::Arc;
 
-use crate::graph::{Graph, GraphBuilder, KvCacheSet};
+use crate::graph::{Graph, GraphBuilder, KvCacheSet, KvSpec};
 use crate::memory::{MemoryPool, PlanMode};
 use crate::numa::{NodeId, Placement};
 use crate::tensor::{DType, TensorBundle, TensorId};
@@ -78,6 +78,11 @@ pub struct BuildSpec {
     /// is built that processes one token of up to `batch_slots` live
     /// sequences per pass (continuous batching).
     pub batch_slots: usize,
+    /// Tokens per KV page (paged cache granularity).
+    pub page_size: usize,
+    /// KV arena size in pages; `None` sizes it for `batch_slots`
+    /// full-length sequences.
+    pub kv_pages: Option<usize>,
 }
 
 impl BuildSpec {
@@ -96,6 +101,8 @@ impl BuildSpec {
             prefill_rows: None,
             plan_mode: PlanMode::DoubleBuffered,
             batch_slots: 1,
+            page_size: 16,
+            kv_pages: None,
         }
     }
 
@@ -119,6 +126,8 @@ impl BuildSpec {
             prefill_rows: None,
             plan_mode: PlanMode::DoubleBuffered,
             batch_slots: 1,
+            page_size: 16,
+            kv_pages: None,
         }
     }
 
@@ -137,6 +146,27 @@ impl BuildSpec {
         assert!(slots >= 1, "batch_slots must be at least 1");
         self.batch_slots = slots;
         self
+    }
+
+    /// Tokens per KV page.
+    pub fn with_page_size(mut self, page_size: usize) -> Self {
+        assert!(page_size >= 1, "page size must be at least 1 token");
+        self.page_size = page_size;
+        self
+    }
+
+    /// Size the KV arena in pages instead of full-length sequences.
+    pub fn with_kv_pages(mut self, pages: usize) -> Self {
+        assert!(pages >= 1, "a page arena needs at least one page");
+        self.kv_pages = Some(pages);
+        self
+    }
+
+    /// Physical pages the KV arena holds (default: `batch_slots`
+    /// full-length sequences' worth).
+    pub fn kv_pages_total(&self) -> usize {
+        let ps = self.page_size.min(self.cfg.max_seq.max(1));
+        self.kv_pages.unwrap_or_else(|| self.batch_slots * self.cfg.max_seq.div_ceil(ps))
     }
 
     pub fn n_groups(&self) -> usize {
@@ -189,6 +219,10 @@ pub struct ModelGraphs {
     pub weights: Vec<(TensorId, ShardInfo)>,
     /// KV cache leaves (decode-graph ids) for reset between sequences.
     pub kv_ids: Vec<TensorId>,
+    /// Physical pages in the KV arena (capacity = pages · page_size).
+    pub kv_pages: usize,
+    /// Tokens per KV page.
+    pub kv_page_size: usize,
     /// Peak activation bytes the build reserved.
     pub act_footprint: usize,
 }
@@ -215,16 +249,20 @@ impl ModelGraphs {
 
         // ---- weights + caches (decode graph owns the leaves) ----
         let (weights_handles, shard_table) = create_weights(&mut b, &spec);
-        let kv = KvCacheSet::create_pooled(
+        let kv = KvCacheSet::create(
             &mut b,
-            spec.cfg.n_layers,
-            spec.cfg.n_kv_heads,
-            spec.cfg.head_dim,
-            spec.cfg.max_seq,
-            spec.batch_slots,
-            spec.kv_placement.clone(),
+            &KvSpec::for_model(
+                spec.cfg.n_layers,
+                spec.cfg.n_kv_heads,
+                spec.cfg.head_dim,
+                spec.cfg.max_seq,
+            )
+            .page_size(spec.page_size.min(spec.cfg.max_seq.max(1)))
+            .pages(spec.kv_pages_total())
+            .placement(spec.kv_placement.clone()),
         );
         let kv_ids = kv.all_ids();
+        let (kv_pages, kv_page_size) = (kv.pages, kv.page_size);
 
         // ---- decode graph (single sequence, slot 0) ----
         let decode_tokens = b.leaf("input.tokens", DType::I32, vec![1], Placement::Node(0));
@@ -287,6 +325,8 @@ impl ModelGraphs {
             decode_batch_logits,
             weights: shard_table,
             kv_ids,
+            kv_pages,
+            kv_page_size,
             act_footprint,
         }
     }
@@ -308,8 +348,9 @@ impl ModelGraphs {
             + 64 * (c.n_layers * 16 + 8)
             + (spec.prefill_rows.unwrap_or(1) + 1 + batch + 1) * 4 // token buffers
             + slack;
-        // the KV pool holds `batch` sequence slots per layer
-        let kvbytes = c.n_layers * 2 * c.n_kv_heads * batch * c.max_seq * c.head_dim * 4
+        // the KV arena holds `kv_pages_total` pages per layer
+        let ps = spec.page_size.min(c.max_seq.max(1));
+        let kvbytes = c.n_layers * 2 * c.n_kv_heads * spec.kv_pages_total() * ps * c.head_dim * 4
             + 64 * c.n_layers * 4
             + slack;
         // activations: per-parity bound × (decode + prefill + batch rows)
@@ -484,7 +525,8 @@ fn import_kv(pb: &mut GraphBuilder, src: &Graph, kv: &KvCacheSet) -> KvCacheSet 
             })
             .collect(),
         max_seq: kv.max_seq,
-        slots: kv.slots,
+        pages: kv.pages,
+        page_size: kv.page_size,
     }
 }
 

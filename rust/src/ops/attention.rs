@@ -16,6 +16,7 @@
 //! reduction reassociates — the batched == serial determinism contract
 //! (see [`attention_rows`]) holds on every tier.
 
+use crate::sched::BatchView;
 use crate::simd::{self, KernelTier};
 
 /// Decode/prefill attention for query heads `[h0, h1)`.
@@ -141,17 +142,19 @@ pub fn store_kv(
 }
 
 /// Multi-sequence decode attention (continuous batching): row `r` of
-/// `q` is one token of the sequence whose KV slot starts at cache
-/// position `kv_base[r]`; it attends causally to that slot's positions
-/// `[kv_base[r], kv_base[r] + pos[r]]`. The caches span the *whole*
-/// pool: `[kv_heads, capacity, head_dim]` with `capacity` = slots ×
-/// per-sequence max_seq. Partitioned by query head `[h0, h1)`.
+/// `q` is one token of a sequence whose KV lives in the pages named by
+/// `batch.tables[r]`; it attends causally to logical positions
+/// `[0, batch.pos[r]]`, gathered page by page in logical order. The
+/// caches span the *whole* paged pool: `[kv_heads, capacity, head_dim]`
+/// with `capacity` = pages × page_size. Partitioned by query head
+/// `[h0, h1)`.
 ///
 /// Per-row arithmetic (dot order, online-softmax recurrence) is
-/// identical to [`attention`], so a batched step is bit-equal to the
-/// serial single-sequence step — the determinism contract the batcher
-/// tests pin down. Scalar tier — the parity oracle for
-/// [`attention_rows_t`].
+/// identical to [`attention`] — the page indirection changes *where*
+/// each logical position is read from, never the order positions are
+/// visited — so a batched step is bit-equal to the serial
+/// single-sequence step: the determinism contract the batcher tests
+/// pin down. Scalar tier — the parity oracle for [`attention_rows_t`].
 #[allow(clippy::too_many_arguments)]
 pub fn attention_rows(
     q: &[f32],
@@ -162,8 +165,7 @@ pub fn attention_rows(
     kv_heads: usize,
     head_dim: usize,
     capacity: usize,
-    kv_base: &[usize],
-    pos: &[usize],
+    batch: &BatchView,
     h0: usize,
     h1: usize,
 ) {
@@ -177,8 +179,7 @@ pub fn attention_rows(
         kv_heads,
         head_dim,
         capacity,
-        kv_base,
-        pos,
+        batch,
         h0,
         h1,
     );
@@ -198,13 +199,12 @@ pub fn attention_rows_t(
     kv_heads: usize,
     head_dim: usize,
     capacity: usize,
-    kv_base: &[usize],
-    pos: &[usize],
+    batch: &BatchView,
     h0: usize,
     h1: usize,
 ) {
-    let rows = pos.len();
-    debug_assert_eq!(kv_base.len(), rows);
+    let rows = batch.rows();
+    let ps = batch.page_size;
     debug_assert!(q.len() >= rows * heads * head_dim);
     debug_assert_eq!(k_cache.len(), kv_heads * capacity * head_dim);
     debug_assert!(out.len() >= rows * heads * head_dim);
@@ -214,27 +214,40 @@ pub fn attention_rows_t(
 
     let mut acc = vec![0.0f32; head_dim];
     for r in 0..rows {
-        let start = kv_base[r];
-        let kv_len = pos[r] + 1;
-        debug_assert!(start + kv_len <= capacity);
+        let table = &batch.tables[r];
+        let kv_len = batch.pos[r] + 1;
+        debug_assert!(table.len() * ps >= kv_len);
         for h in h0..h1 {
             let kvh = h / rep;
             let qv = &q[r * d + h * head_dim..r * d + (h + 1) * head_dim];
-            let base = kvh * capacity * head_dim + start * head_dim;
+            let head_base = kvh * capacity * head_dim;
 
             let mut m = f32::NEG_INFINITY;
             let mut l = 0.0f32;
             acc.fill(0.0);
-            for t in 0..kv_len {
-                let kv = &k_cache[base + t * head_dim..base + (t + 1) * head_dim];
-                let s = simd::dot_f32(tier, qv, kv) * scale;
-                let m_new = m.max(s);
-                let corr = if m.is_finite() { (m - m_new).exp() } else { 0.0 };
-                let p = (s - m_new).exp();
-                l = l * corr + p;
-                let vv = &v_cache[base + t * head_dim..base + (t + 1) * head_dim];
-                simd::axpy_rescale(tier, &mut acc, corr, p, vv);
-                m = m_new;
+            // page-by-page gather; `t` walks logical positions strictly
+            // in order, so the online-softmax recurrence is identical
+            // to a contiguous cache
+            let mut t = 0usize;
+            for &page in table {
+                if t >= kv_len {
+                    break;
+                }
+                let n = (kv_len - t).min(ps);
+                debug_assert!((page as usize + 1) * ps <= capacity);
+                let base = head_base + page as usize * ps * head_dim;
+                for i in 0..n {
+                    let kv = &k_cache[base + i * head_dim..base + (i + 1) * head_dim];
+                    let s = simd::dot_f32(tier, qv, kv) * scale;
+                    let m_new = m.max(s);
+                    let corr = if m.is_finite() { (m - m_new).exp() } else { 0.0 };
+                    let p = (s - m_new).exp();
+                    l = l * corr + p;
+                    let vv = &v_cache[base + i * head_dim..base + (i + 1) * head_dim];
+                    simd::axpy_rescale(tier, &mut acc, corr, p, vv);
+                    m = m_new;
+                }
+                t += n;
             }
             let inv = if l > 0.0 { 1.0 / l } else { 0.0 };
             let or = &mut out[r * d + h * head_dim..r * d + (h + 1) * head_dim];
@@ -245,9 +258,10 @@ pub fn attention_rows_t(
     }
 }
 
-/// Multi-sequence KV store: row `r` of `src` lands in cache position
-/// `kv_base[r] + pos[r]` of each kv head. Cache layout as in
-/// [`attention_rows`]. Partitioned by kv head `[h0, h1)`.
+/// Multi-sequence KV store: row `r` of `src` lands in the physical
+/// cache position its page table maps `batch.pos[r]` to
+/// ([`BatchView::slot`]). Cache layout as in [`attention_rows`].
+/// Partitioned by kv head `[h0, h1)`.
 #[allow(clippy::too_many_arguments)]
 pub fn store_kv_rows(
     src: &[f32],
@@ -255,17 +269,15 @@ pub fn store_kv_rows(
     kv_heads: usize,
     head_dim: usize,
     capacity: usize,
-    kv_base: &[usize],
-    pos: &[usize],
+    batch: &BatchView,
     h0: usize,
     h1: usize,
 ) {
-    let rows = pos.len();
-    debug_assert_eq!(kv_base.len(), rows);
+    let rows = batch.rows();
     debug_assert!(src.len() >= rows * kv_heads * head_dim);
     let d = kv_heads * head_dim;
     for r in 0..rows {
-        let slot = kv_base[r] + pos[r];
+        let slot = batch.slot(r);
         debug_assert!(slot < capacity);
         for h in h0..h1 {
             let from = &src[r * d + h * head_dim..r * d + (h + 1) * head_dim];
@@ -389,22 +401,27 @@ mod tests {
     }
 
     #[test]
-    fn pooled_slots_match_independent_caches() {
-        // two sequences in one pooled cache (slots of 8 positions) must
-        // reproduce two independent single-sequence caches bit-for-bit
-        let (heads, kvh, hd, seq) = (2, 2, 4, 8);
+    fn paged_sequences_match_independent_caches() {
+        // two sequences scattered across non-contiguous pages of one
+        // pool must reproduce two independent contiguous caches
+        // bit-for-bit (pages of 4 positions; seq 0 = pages [0, 2],
+        // seq 1 = pages [3, 1] — deliberately out of order)
+        let (heads, kvh, hd, seq, ps) = (2, 2, 4, 8, 4);
         let capacity = 2 * seq;
+        let tables = [vec![0u32, 2], vec![3u32, 1]];
         let mut pool_k = vec![0.0f32; kvh * capacity * hd];
         let mut pool_v = vec![0.0f32; kvh * capacity * hd];
         let mut solo_k = [vec![0.0f32; kvh * seq * hd], vec![0.0f32; kvh * seq * hd]];
         let mut solo_v = [vec![0.0f32; kvh * seq * hd], vec![0.0f32; kvh * seq * hd]];
 
-        // interleave 3 tokens of seq 0 with 2 tokens of seq 1
-        let lanes = [(0usize, 0usize), (1, 0), (0, 1), (1, 1), (0, 2)];
+        // interleave tokens of the two sequences, crossing a page
+        // boundary for seq 0 (positions 3 then 4 land on page 0 / 2)
+        let lanes = [(0usize, 0usize), (1, 0), (0, 1), (1, 1), (0, 2), (0, 3), (0, 4)];
         for (li, &(s, p)) in lanes.iter().enumerate() {
             let kv = rand_vec(kvh * hd, 20 + li as u64);
-            store_kv_rows(&kv, &mut pool_k, kvh, hd, capacity, &[s * seq], &[p], 0, kvh);
-            store_kv_rows(&kv, &mut pool_v, kvh, hd, capacity, &[s * seq], &[p], 0, kvh);
+            let view = BatchView::new(ps, vec![tables[s].clone()], vec![p]);
+            store_kv_rows(&kv, &mut pool_k, kvh, hd, capacity, &view, 0, kvh);
+            store_kv_rows(&kv, &mut pool_v, kvh, hd, capacity, &view, 0, kvh);
             store_kv(&kv, &mut solo_k[s], 1, kvh, hd, seq, p, 0, kvh);
             store_kv(&kv, &mut solo_v[s], 1, kvh, hd, seq, p, 0, kvh);
         }
@@ -412,21 +429,11 @@ mod tests {
         // one batched attention step over both sequences at once
         let q = rand_vec(2 * heads * hd, 30);
         let mut batched = vec![0.0f32; 2 * heads * hd];
+        let view = BatchView::new(ps, vec![tables[0].clone(), tables[1].clone()], vec![4, 1]);
         attention_rows(
-            &q,
-            &pool_k,
-            &pool_v,
-            &mut batched,
-            heads,
-            kvh,
-            hd,
-            capacity,
-            &[0, seq],
-            &[2, 1],
-            0,
-            heads,
+            &q, &pool_k, &pool_v, &mut batched, heads, kvh, hd, capacity, &view, 0, heads,
         );
-        for (s, pos) in [(0usize, 2usize), (1, 1)] {
+        for (s, pos) in [(0usize, 4usize), (1, 1)] {
             let mut solo = vec![0.0f32; heads * hd];
             attention(
                 &q[s * heads * hd..(s + 1) * heads * hd],

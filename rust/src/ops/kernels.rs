@@ -568,17 +568,9 @@ impl Kernel for StoreKvKernel {
         let cache = ctx.f32s_mut(ctx.src(1));
         let rows = ctx.graph.meta(ctx.src(0)).rows().min(ctx.params.rows.max(1));
         match &ctx.params.batch {
-            Some(bv) => attention::store_kv_rows(
-                kv,
-                cache,
-                kv_heads,
-                head_dim,
-                max_seq,
-                &bv.kv_base,
-                &bv.pos,
-                u0,
-                u1,
-            ),
+            Some(bv) => {
+                attention::store_kv_rows(kv, cache, kv_heads, head_dim, max_seq, bv, u0, u1)
+            }
             None => attention::store_kv(
                 kv,
                 cache,
@@ -696,8 +688,7 @@ impl Kernel for AttentionKernel {
                 kv_heads,
                 head_dim,
                 max_seq,
-                &bv.kv_base,
-                &bv.pos,
+                bv,
                 u0,
                 u1,
             ),
@@ -1051,8 +1042,8 @@ mod tests {
 
     #[test]
     fn batched_store_kv_targets_per_row_slots() {
-        // pooled cache of 2 slots × 4 positions; two rows land in their
-        // own slot's position (slot 0 pos 2, slot 1 pos 0)
+        // paged cache of 2 pages × 4 positions; two rows land in their
+        // own page's position (page 0 pos 2, page 1 pos 0)
         let pool = MemoryPool::new(1, 1 << 20, 1 << 20, 1 << 20);
         let mut b = GraphBuilder::new(Some(pool), vec![0], Placement::Node(0));
         let kvsrc = b.leaf("kv", DType::F32, vec![2, 4], Placement::Node(0));
@@ -1064,14 +1055,14 @@ mod tests {
             f32s_mut(&pool, &graph, kvsrc)
                 .copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
         }
-        let view = BatchView::new(vec![0, 4], vec![2, 0]);
+        let view = BatchView::new(4, vec![vec![0], vec![1]], vec![2, 0]);
         let params = ExecParams::batched(view);
         run_units(&graph, &pool, stored.single(), &params, 0, 1);
         unsafe {
             let c = f32s(&pool, &graph, cache);
-            // row 0 → slot 0 position 2
+            // row 0 → page 0 position 2
             assert_eq!(&c[2 * 4..3 * 4], &[1.0, 2.0, 3.0, 4.0]);
-            // row 1 → slot 1 (base 4) position 0
+            // row 1 → page 1 (base 4) position 0
             assert_eq!(&c[4 * 4..5 * 4], &[5.0, 6.0, 7.0, 8.0]);
         }
     }

@@ -82,33 +82,50 @@ pub enum SyncMode {
 }
 
 /// Per-row sequence view for a continuous-batching pass: each active
-/// row belongs to some sequence whose KV lives in its own logical slot
-/// of the pooled cache.
+/// row belongs to some sequence whose KV lives in pages of the paged
+/// cache pool named by the row's [`crate::graph::PageTable`].
 ///
-/// Row `r` is the token at position `pos[r]` of the sequence whose slot
-/// starts at cache position `kv_base[r]`; it writes KV slot
-/// `kv_base[r] + pos[r]` and attends to `[kv_base[r], kv_base[r] +
-/// pos[r]]`. Several rows may belong to the same sequence at
-/// consecutive positions (chunked prefill inside a running batch) —
-/// StoreKv entries execute before the Attention entry of each layer, so
-/// causality holds within a pass.
-#[derive(Clone, Debug, Default)]
+/// Row `r` is the token at logical position `pos[r]` of its sequence;
+/// logical position `p` maps to physical cache position
+/// `tables[r][p / page_size] · page_size + p % page_size`. The row
+/// writes KV at the mapped `pos[r]` and attends to logical positions
+/// `[0, pos[r]]`, gathered page by page **in logical order** — the
+/// per-row arithmetic order is identical to a contiguous cache, which
+/// is what keeps batched decode token-identical to serial. Several
+/// rows may belong to the same sequence at consecutive positions
+/// (chunked prefill inside a running batch): each row snapshots its
+/// own table, and StoreKv entries execute before the Attention entry
+/// of each layer, so causality holds within a pass.
+#[derive(Clone, Debug)]
 pub struct BatchView {
-    /// First cache position of each row's sequence slot.
-    pub kv_base: Vec<usize>,
+    /// Tokens per physical page.
+    pub page_size: usize,
+    /// Per-row logical→physical page table (long enough to map
+    /// position `pos[r]`).
+    pub tables: Vec<crate::graph::PageTable>,
     /// Position of each row within its sequence.
     pub pos: Vec<usize>,
 }
 
 impl BatchView {
-    pub fn new(kv_base: Vec<usize>, pos: Vec<usize>) -> Self {
-        assert_eq!(kv_base.len(), pos.len(), "batch view row mismatch");
-        BatchView { kv_base, pos }
+    pub fn new(page_size: usize, tables: Vec<crate::graph::PageTable>, pos: Vec<usize>) -> Self {
+        assert!(page_size >= 1, "batch view needs a positive page size");
+        assert_eq!(tables.len(), pos.len(), "batch view row mismatch");
+        for (r, (t, &p)) in tables.iter().zip(&pos).enumerate() {
+            assert!(t.len() * page_size > p, "row {r}: page table too short for position {p}");
+        }
+        BatchView { page_size, tables, pos }
     }
 
     /// Active rows this pass.
     pub fn rows(&self) -> usize {
         self.pos.len()
+    }
+
+    /// Physical cache position of row `r`'s token.
+    pub fn slot(&self, r: usize) -> usize {
+        let p = self.pos[r];
+        self.tables[r][p / self.page_size] as usize * self.page_size + p % self.page_size
     }
 }
 
@@ -245,15 +262,35 @@ mod tests {
 
     #[test]
     fn batched_params_count_rows() {
-        let p = ExecParams::batched(BatchView::new(vec![0, 64, 128], vec![5, 0, 9]));
+        let view = BatchView::new(64, vec![vec![0], vec![1], vec![2]], vec![5, 0, 9]);
+        assert_eq!(view.slot(0), 5);
+        assert_eq!(view.slot(1), 64);
+        assert_eq!(view.slot(2), 137);
+        let p = ExecParams::batched(view);
         assert_eq!(p.rows, 3);
         assert!(p.batch.is_some());
     }
 
     #[test]
+    fn batch_view_maps_through_page_indirection() {
+        // logical positions 0..8 at page size 4 through a permuted table
+        let view = BatchView::new(4, vec![vec![3, 1]], vec![7]);
+        assert_eq!(view.slot(0), 3 * 4 + 3);
+        let phys: Vec<usize> =
+            (0..8).map(|p| view.tables[0][p / 4] as usize * 4 + p % 4).collect();
+        assert_eq!(phys, vec![12, 13, 14, 15, 4, 5, 6, 7]);
+    }
+
+    #[test]
     #[should_panic(expected = "row mismatch")]
     fn batch_view_rejects_ragged_rows() {
-        BatchView::new(vec![0, 64], vec![1]);
+        BatchView::new(16, vec![vec![0], vec![1]], vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "page table too short")]
+    fn batch_view_rejects_short_tables() {
+        BatchView::new(4, vec![vec![0]], vec![4]);
     }
 
     #[test]

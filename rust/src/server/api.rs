@@ -1,10 +1,19 @@
 //! TCP front door: line-delimited JSON over a socket, plus a client.
 //!
-//! Protocol (one JSON object per line):
+//! Protocol v2 (one JSON object per line):
+//!   → {"op":"hello"}             ← {"proto":2,"features":[…]}
 //!   → {"op":"generate","prompt":"...","max_new":32, ...}
-//!   ← {"id":…, "tokens":[…], "text":"…", "ttft_s":…, …}
+//!   ← {"id":…, "tokens":[…], "text":"…", "ttft_s":…,
+//!      "prefix_hit_tokens":…, "kv_pages_used":…, …}
 //!   → {"op":"metrics"}           ← metrics snapshot
 //!   → {"op":"ping"}              ← {"ok":true}
+//!
+//! Failures are structured objects so clients can branch on a stable
+//! code instead of parsing prose:
+//!   ← {"error":{"code":"unknown_op","message":"…","op":"…"}}
+//!   ← {"error":{"code":"bad_request","message":"…"}}
+//! Proto-1 peers sent a bare string under "error"; the client helper
+//! accepts both shapes.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -91,12 +100,29 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>) {
     let _ = peer;
 }
 
+/// Wire protocol revision reported by the `hello` handshake.
+pub const PROTO_VERSION: usize = 2;
+
+/// Capabilities a v2 server advertises in the `hello` reply.
+pub const PROTO_FEATURES: [&str; 5] = ["generate", "metrics", "ping", "paged_kv", "prefix_cache"];
+
+/// Structured protocol error (`extra` carries op-specific context).
+fn proto_err(code: &str, message: String, extra: Vec<(&str, Json)>) -> Json {
+    let mut body = vec![("code", code.into()), ("message", message.into())];
+    body.extend(extra);
+    obj(vec![("error", obj(body))])
+}
+
 fn dispatch(line: &str, router: &Arc<Router>) -> Json {
     let parsed = match Json::parse(line) {
         Ok(j) => j,
-        Err(e) => return obj(vec![("error", format!("bad json: {e}").into())]),
+        Err(e) => return proto_err("bad_request", format!("bad json: {e}"), vec![]),
     };
     match parsed.get("op").and_then(Json::as_str) {
+        Some("hello") => obj(vec![
+            ("proto", PROTO_VERSION.into()),
+            ("features", Json::Arr(PROTO_FEATURES.iter().map(|&f| f.into()).collect())),
+        ]),
         Some("ping") => obj(vec![("ok", true.into())]),
         Some("metrics") => router.metrics.snapshot(),
         Some("generate") | None => match GenRequest::from_json(&parsed) {
@@ -106,12 +132,14 @@ fn dispatch(line: &str, router: &Arc<Router>) -> Json {
                 }
                 match router.submit(req) {
                     Ok(resp) => resp.to_json(),
-                    Err(e) => obj(vec![("error", e.into())]),
+                    Err(e) => proto_err("rejected", e, vec![]),
                 }
             }
-            Err(e) => obj(vec![("error", e.into())]),
+            Err(e) => proto_err("bad_request", e, vec![]),
         },
-        Some(other) => obj(vec![("error", format!("unknown op '{other}'").into())]),
+        Some(other) => {
+            proto_err("unknown_op", format!("unknown op '{other}'"), vec![("op", other.into())])
+        }
     }
 }
 
@@ -144,14 +172,38 @@ impl ServerClient {
             .unwrap_or(false))
     }
 
+    /// Protocol handshake: `(proto, features)`. A proto-1 server has
+    /// no `hello` op and answers with an error — reported as proto 1
+    /// with no features so callers can downgrade.
+    pub fn hello(&mut self) -> Result<(usize, Vec<String>)> {
+        let j = self.roundtrip(&obj(vec![("op", "hello".into())]))?;
+        if j.get("error").is_some() {
+            return Ok((1, Vec::new()));
+        }
+        let proto = j.get("proto").and_then(Json::as_usize).unwrap_or(1);
+        let features = j
+            .get("features")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_str).map(str::to_string).collect())
+            .unwrap_or_default();
+        Ok((proto, features))
+    }
+
     pub fn metrics(&mut self) -> Result<Json> {
         self.roundtrip(&obj(vec![("op", "metrics".into())]))
     }
 
     pub fn generate(&mut self, req: &GenRequest) -> Result<GenResponse> {
         let j = self.roundtrip(&req.to_json())?;
-        if let Some(e) = j.get("error").and_then(Json::as_str) {
-            anyhow::bail!("server error: {e}");
+        if let Some(e) = j.get("error") {
+            // proto 2 sends {code, message}; proto 1 sent a bare string
+            let code = e.get("code").and_then(Json::as_str).unwrap_or("error");
+            let msg = e
+                .get("message")
+                .and_then(Json::as_str)
+                .or_else(|| e.as_str())
+                .unwrap_or("unknown error");
+            anyhow::bail!("server error ({code}): {msg}");
         }
         GenResponse::from_json(&j).map_err(|e| anyhow::anyhow!(e))
     }

@@ -20,7 +20,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::frontend::{ByteTokenizer, Engine, Sampler, SeqId};
+use crate::frontend::{ByteTokenizer, Engine, Sampler, SeqHandle};
 use crate::metrics::Metrics;
 
 use super::request::{GenRequest, GenResponse};
@@ -135,6 +135,13 @@ impl Router {
         self.queue.lock().unwrap().pop_front()
     }
 
+    /// Put an un-admittable request back at the head of the queue —
+    /// admission backpressure when the KV arena cannot reserve its
+    /// pages yet (FIFO order is preserved).
+    fn push_front(&self, p: Pending) {
+        self.queue.lock().unwrap().push_front(p);
+    }
+
     /// Block until a request is queued; `None` once shut down and
     /// drained.
     fn wait_pending(&self) -> Option<Pending> {
@@ -190,10 +197,14 @@ fn prepare(tokenizer: &ByteTokenizer, req: &GenRequest, cap: usize) -> (Vec<i32>
 /// One in-flight request inside the running batch.
 struct ActiveSeq {
     pending: Pending,
-    seq: SeqId,
+    seq: SeqHandle,
     prompt: Vec<i32>,
-    /// Prompt tokens fed so far (chunked prefill).
+    /// Prompt tokens fed so far (chunked prefill). Starts at the
+    /// prefix-hit count: tokens adopted from shared pages are never
+    /// re-fed.
     fed: usize,
+    /// Prompt tokens served from shared prefix pages at admission.
+    prefix_hit: usize,
     generated: Vec<i32>,
     next_token: i32,
     max_new: usize,
@@ -222,19 +233,29 @@ impl ContinuousBatcher {
     /// drained.
     pub fn serve(mut self, router: Arc<Router>) {
         router.metrics.set_platform(self.engine.platform(), self.engine.pinned_workers());
+        router.metrics.set_kv_pages_total(self.engine.kv_total_pages());
         let slots = self.engine.batch_slots();
         let mut active: Vec<ActiveSeq> = Vec::new();
         loop {
-            // ---- step-boundary admission (FIFO) ----
+            // ---- step-boundary admission (FIFO, bounded by free
+            // lanes AND free KV pages) ----
             if active.is_empty() {
                 match router.wait_pending() {
-                    Some(p) => self.admit(p, &mut active, &router),
+                    // with no live sequences the whole arena is free
+                    // (or evictable), so this admission cannot fail
+                    Some(p) => {
+                        self.admit(p, &mut active, &router);
+                    }
                     None => break, // shut down and drained
                 }
             }
             while active.len() < slots {
                 match router.try_pop() {
-                    Some(p) => self.admit(p, &mut active, &router),
+                    Some(p) => {
+                        if !self.admit(p, &mut active, &router) {
+                            break; // FIFO head's pages don't fit yet
+                        }
+                    }
                     None => break,
                 }
             }
@@ -245,12 +266,14 @@ impl ContinuousBatcher {
         }
     }
 
-    fn admit(&mut self, p: Pending, active: &mut Vec<ActiveSeq>, router: &Router) {
-        router.metrics.record_queue_wait(p.enqueued.elapsed().as_secs_f64());
+    /// Try to admit one request. Returns `false` (and re-queues it at
+    /// the front) when the KV arena cannot reserve its page budget yet.
+    fn admit(&mut self, p: Pending, active: &mut Vec<ActiveSeq>, router: &Router) -> bool {
         let cap = self.engine.cfg().max_seq;
         let (prompt, max_new, sampler) = prepare(&self.tokenizer, &p.req, cap);
         if max_new == 0 {
-            // nothing to generate: answer without occupying a slot
+            // nothing to generate: answer without occupying a lane
+            router.metrics.record_queue_wait(p.enqueued.elapsed().as_secs_f64());
             let resp = GenResponse {
                 id: p.req.id,
                 text: String::new(),
@@ -258,19 +281,31 @@ impl ContinuousBatcher {
                 ttft_s: p.enqueued.elapsed().as_secs_f64(),
                 total_s: p.enqueued.elapsed().as_secs_f64(),
                 decode_tok_per_s: 0.0,
+                prefix_hit_tokens: 0,
+                kv_pages_used: 0,
             };
             router.metrics.record_request(prompt.len(), 0, resp.ttft_s, resp.total_s, 0.0);
             let (lock, cv) = &*p.done;
             *lock.lock().unwrap() = Some(resp);
             cv.notify_all();
-            return;
+            return true;
         }
-        let seq = self.engine.seq_alloc().expect("admission past slot capacity");
+        // reserve every page the sequence could ever need (prompt +
+        // decode budget); prepare() clamped that to max_seq, which the
+        // arena always holds, so the request can never be stuck forever
+        let budget = prompt.len() + max_new;
+        let Some((seq, hit)) = self.engine.seq_start_with_prompt(&prompt, budget) else {
+            router.push_front(p);
+            return false;
+        };
+        router.metrics.record_queue_wait(p.enqueued.elapsed().as_secs_f64());
+        router.metrics.record_prefix_hit(hit);
         active.push(ActiveSeq {
             pending: p,
             seq,
             prompt,
-            fed: 0,
+            fed: hit,
+            prefix_hit: hit,
             generated: Vec::new(),
             next_token: 0,
             max_new,
@@ -278,6 +313,7 @@ impl ContinuousBatcher {
             first_token_at: None,
             prefill_done_at: None,
         });
+        true
     }
 
     /// One batched pass: pack lanes (decode lanes plus chunked-prefill
@@ -285,30 +321,33 @@ impl ContinuousBatcher {
     /// sequences — without ever draining the rest of the batch.
     fn step(&mut self, active: &mut Vec<ActiveSeq>, router: &Router) {
         let slots = self.engine.batch_slots();
-        let mut lanes: Vec<(SeqId, i32)> = Vec::new();
-        // (active index, does this lane's logits row get sampled?)
-        let mut owners: Vec<(usize, bool)> = Vec::new();
+        // (active index, token, does this lane's logits row get sampled?)
+        let mut plan: Vec<(usize, i32, bool)> = Vec::new();
         for (ai, a) in active.iter_mut().enumerate() {
-            if lanes.len() == slots {
+            if plan.len() == slots {
                 break;
             }
             if a.fed < a.prompt.len() {
-                while a.fed < a.prompt.len() && lanes.len() < slots {
-                    lanes.push((a.seq, a.prompt[a.fed]));
+                while a.fed < a.prompt.len() && plan.len() < slots {
+                    let tok = a.prompt[a.fed];
                     a.fed += 1;
-                    owners.push((ai, a.fed == a.prompt.len()));
+                    plan.push((ai, tok, a.fed == a.prompt.len()));
                 }
             } else {
-                lanes.push((a.seq, a.next_token));
-                owners.push((ai, true));
+                plan.push((ai, a.next_token, true));
             }
         }
+        let lanes: Vec<(&SeqHandle, i32)> =
+            plan.iter().map(|&(ai, tok, _)| (&active[ai].seq, tok)).collect();
         let logits = self.engine.step_batch(&lanes);
+        drop(lanes);
         let dispatches = self.engine.last_step_report().map(|r| r.dispatches).unwrap_or(0);
-        router.metrics.record_step(lanes.len(), dispatches);
+        router.metrics.record_step(plan.len(), dispatches);
+        router.metrics.record_concurrency(active.len());
+        router.metrics.record_kv_pages(self.engine.kv_pages_in_use());
 
         let mut finished: Vec<usize> = Vec::new();
-        for (li, &(ai, sample)) in owners.iter().enumerate() {
+        for (li, &(ai, _, sample)) in plan.iter().enumerate() {
             if !sample {
                 continue;
             }
@@ -322,7 +361,7 @@ impl ContinuousBatcher {
             if a.first_token_at.is_none() {
                 a.first_token_at = Some(Instant::now());
             }
-            let kv_full = self.engine.seq_pos(a.seq) >= self.engine.cfg().max_seq;
+            let kv_full = self.engine.seq_pos(&a.seq) >= self.engine.cfg().max_seq;
             if a.generated.len() >= a.max_new || kv_full {
                 finished.push(ai);
             }
@@ -334,7 +373,9 @@ impl ContinuousBatcher {
     }
 
     fn retire(&mut self, a: ActiveSeq, router: &Router) {
-        self.engine.seq_free(a.seq);
+        // read page accounting before the handle drops (RAII: dropping
+        // `a.seq` returns every page to the arena)
+        let kv_pages_used = self.engine.seq_pages(&a.seq);
         let total_s = a.pending.enqueued.elapsed().as_secs_f64();
         let ttft_s = a
             .first_token_at
@@ -350,6 +391,8 @@ impl ContinuousBatcher {
             ttft_s,
             total_s,
             decode_tok_per_s,
+            prefix_hit_tokens: a.prefix_hit,
+            kv_pages_used,
         };
         router.metrics.record_request(
             a.prompt.len(),
@@ -416,6 +459,10 @@ impl EngineSlot {
             ttft_s: queued + res.prefill_seconds,
             total_s: queued + res.prefill_seconds + res.decode_seconds,
             decode_tok_per_s: res.decode_tok_per_s(),
+            // the sequential baseline resets the engine per request, so
+            // it never shares pages across requests
+            prefix_hit_tokens: 0,
+            kv_pages_used: 0,
         }
     }
 }
@@ -438,6 +485,8 @@ mod tests {
             seed: 1,
             batch_slots,
             pin: false,
+            page_size: 16,
+            kv_pages: None,
         }
     }
 
@@ -633,6 +682,64 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn short_requests_overcommit_the_slot_equivalent_arena() {
+        // the arena holds two full-length (64-token) sequences; six
+        // short requests need one page each, so page-granular admission
+        // runs all six concurrently where slot-granular ran two
+        let mut opts = tiny_opts(6);
+        opts.kv_pages = Some(8);
+        let engine = Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap();
+        let batcher = ContinuousBatcher::new(engine);
+        let router = Router::new(BatcherConfig::default());
+        let mut joins = Vec::new();
+        for i in 0..6u64 {
+            let r = router.clone();
+            joins.push(std::thread::spawn(move || {
+                r.submit(GenRequest::text(i + 1, "hi", 4)).unwrap()
+            }));
+        }
+        // fix the queue before serving so admission sees all six
+        while router.queue_len() < 6 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let r2 = router.clone();
+        let h = std::thread::spawn(move || batcher.serve(r2));
+        for j in joins {
+            assert_eq!(j.join().unwrap().tokens.len(), 4);
+        }
+        router.shutdown();
+        h.join().unwrap();
+        assert!(
+            router.metrics.peak_seqs.load(Ordering::Relaxed) >= 6,
+            "page-granular admission must overcommit the 2-sequence arena (peak {})",
+            router.metrics.peak_seqs.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn identical_prompts_report_prefix_hits() {
+        // two requests with the same >page_size prompt: the second must
+        // adopt the first's completed prefix pages
+        let router = Router::new(BatcherConfig::default());
+        let batcher = tiny_continuous(3);
+        let r2 = router.clone();
+        let h = std::thread::spawn(move || batcher.serve(r2));
+        let prompt = "a shared system prompt that spans pages";
+        let first = router.submit(GenRequest::text(1, prompt, 3)).unwrap();
+        assert_eq!(first.prefix_hit_tokens, 0, "cold cache cannot hit");
+        assert!(first.kv_pages_used >= 2, "long prompt spans pages");
+        let second = router.submit(GenRequest::text(2, prompt, 3)).unwrap();
+        assert!(
+            second.prefix_hit_tokens > 0,
+            "identical prompt must reuse prefix pages"
+        );
+        assert_eq!(second.tokens, first.tokens, "prefix reuse must not change tokens");
+        router.shutdown();
+        h.join().unwrap();
+        assert!(router.metrics.prefix_hit_tokens.load(Ordering::Relaxed) > 0);
     }
 
     #[test]

@@ -76,6 +76,11 @@ pub struct GenResponse {
     pub ttft_s: f64,
     pub total_s: f64,
     pub decode_tok_per_s: f64,
+    /// Prompt tokens served from prefix-shared KV pages (0 when the
+    /// prompt matched nothing in the page index).
+    pub prefix_hit_tokens: usize,
+    /// KV pages the sequence held at retirement.
+    pub kv_pages_used: usize,
 }
 
 impl GenResponse {
@@ -87,6 +92,8 @@ impl GenResponse {
             ("ttft_s", self.ttft_s.into()),
             ("total_s", self.total_s.into()),
             ("decode_tok_per_s", self.decode_tok_per_s.into()),
+            ("prefix_hit_tokens", self.prefix_hit_tokens.into()),
+            ("kv_pages_used", self.kv_pages_used.into()),
         ])
     }
 
@@ -102,6 +109,8 @@ impl GenResponse {
             ttft_s: j.get("ttft_s").and_then(Json::as_f64).unwrap_or(0.0),
             total_s: j.get("total_s").and_then(Json::as_f64).unwrap_or(0.0),
             decode_tok_per_s: j.get("decode_tok_per_s").and_then(Json::as_f64).unwrap_or(0.0),
+            prefix_hit_tokens: j.get("prefix_hit_tokens").and_then(Json::as_usize).unwrap_or(0),
+            kv_pages_used: j.get("kv_pages_used").and_then(Json::as_usize).unwrap_or(0),
         })
     }
 }
@@ -141,10 +150,24 @@ mod tests {
             ttft_s: 0.1,
             total_s: 0.5,
             decode_tok_per_s: 20.0,
+            prefix_hit_tokens: 16,
+            kv_pages_used: 3,
         };
         let j = r.to_json();
         let back = GenResponse::from_json(&j).unwrap();
         assert_eq!(back.tokens, vec![5, 6]);
         assert_eq!(back.text, "ab");
+        assert_eq!(back.prefix_hit_tokens, 16);
+        assert_eq!(back.kv_pages_used, 3);
+    }
+
+    #[test]
+    fn response_kv_fields_default_to_zero() {
+        // Proto-1 peers omit the paged-KV fields; the client treats
+        // their absence as "no sharing happened".
+        let j = Json::parse(r#"{"id":2,"tokens":[9],"text":"x"}"#).unwrap();
+        let back = GenResponse::from_json(&j).unwrap();
+        assert_eq!(back.prefix_hit_tokens, 0);
+        assert_eq!(back.kv_pages_used, 0);
     }
 }

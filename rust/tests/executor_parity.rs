@@ -82,16 +82,18 @@ fn batched_decode_token_identical_to_serial_through_trait() {
         seed: 11,
         batch_slots: slots,
         pin: false,
+        page_size: 16,
+        kv_pages: None,
     };
     let mut serial = Engine::new_synthetic(ModelConfig::tiny(), &opts(1)).unwrap();
     let prompt = [5i32, 9, 2, 7];
     let want = serial.generate(&prompt, 6, &Sampler::greedy());
 
     let mut batched = Engine::new_synthetic(ModelConfig::tiny(), &opts(2)).unwrap();
-    let seq = batched.seq_alloc().unwrap();
+    let seq = batched.seq_start(prompt.len() + 6).unwrap();
     let mut logits = Vec::new();
     for &t in &prompt {
-        logits = batched.step_batch(&[(seq, t)]).remove(0);
+        logits = batched.step_batch(&[(&seq, t)]).remove(0);
     }
     let greedy = Sampler::greedy();
     let mut toks = Vec::new();
@@ -99,10 +101,10 @@ fn batched_decode_token_identical_to_serial_through_trait() {
         let next = greedy.sample(&logits, step);
         toks.push(next);
         if step + 1 < 6 {
-            logits = batched.step_batch(&[(seq, next)]).remove(0);
+            logits = batched.step_batch(&[(&seq, next)]).remove(0);
         }
     }
-    batched.seq_free(seq);
+    drop(seq);
     assert_eq!(toks, want.tokens, "batched lane diverged from serial decode");
 }
 
@@ -123,6 +125,8 @@ fn forced_tier_matrix_units_and_logits_invariant() {
         seed: 11,
         batch_slots: 1,
         pin: false,
+        page_size: 16,
+        kv_pages: None,
     };
     let mut baseline: Option<(Vec<usize>, Vec<f32>)> = None;
     for tier in KernelTier::supported_tiers() {

@@ -42,6 +42,8 @@ fn engine(strategy: Strategy, threads: usize, prefill: Option<usize>) -> Engine 
         seed: 0,
         batch_slots: 1,
         pin: false,
+        page_size: 16,
+        kv_pages: None,
     };
     Engine::from_alf(&dir.join("tiny.alf"), &opts).unwrap()
 }

@@ -60,7 +60,7 @@ fn units_table_matches_legacy_values() {
     assert_eq!(units(&meta(OpKind::RmsNorm { eps: 1e-6 }, vec![2, 64]), &p), 2);
 
     // a batch graph built for 8 rows running 3 active lanes
-    let p = ExecParams::batched(BatchView::new(vec![0, 64, 128], vec![5, 0, 9]));
+    let p = ExecParams::batched(BatchView::new(64, vec![vec![0], vec![1], vec![2]], vec![5, 0, 9]));
     assert_eq!(p.rows, 3);
     assert_eq!(units(&meta(OpKind::Embed, vec![8, 64]), &p), 3);
     assert_eq!(units(&meta(OpKind::Add, vec![8, 64]), &p), 3 * 64);
@@ -85,7 +85,7 @@ fn registry_covers_every_graph_op() {
     let param_sets = [
         ExecParams::dense(3, 1),
         ExecParams::dense(0, 5),
-        ExecParams::batched(BatchView::new(vec![0, 64], vec![2, 0])),
+        ExecParams::batched(BatchView::new(64, vec![vec![0], vec![1]], vec![2, 0])),
     ];
     let mut checked = 0usize;
     for spec in specs {

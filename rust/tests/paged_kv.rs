@@ -1,0 +1,232 @@
+//! Paged KV cache: fragmentation, prefix sharing and copy-on-write.
+//!
+//! Three layers of guarantee, bottom-up:
+//! 1. the `PageArena` never strands a page under randomized
+//!    alloc/extend/free/register traffic — every page stays reachable
+//!    through the free list or FIFO eviction;
+//! 2. forking a sequence shares its pages (refcounted) and the first
+//!    divergent append copies exactly one page, with both children
+//!    bit-identical to independently-decoded references;
+//! 3. interleaved decoding on a small arena matches serial decoding
+//!    with page recycling in between, token for token.
+
+use arclight::baseline::Strategy;
+use arclight::frontend::{Engine, EngineOptions};
+use arclight::graph::PageArena;
+use arclight::hw::Platform;
+use arclight::model::ModelConfig;
+use arclight::numa::Topology;
+use arclight::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// 1. arena-level randomized fragmentation
+// ---------------------------------------------------------------------------
+
+const TOTAL: usize = 24;
+const PS: usize = 4;
+
+/// One simulated sequence: pages it holds, tokens stored, token budget.
+struct Sim {
+    table: Vec<u32>,
+    len: usize,
+    budget: usize,
+}
+
+impl Sim {
+    fn reserved(&self) -> usize {
+        self.budget.div_ceil(PS) - self.table.len()
+    }
+}
+
+#[test]
+fn randomized_traffic_strands_no_pages() {
+    let mut arena = PageArena::new(TOTAL, PS);
+    let mut rng = Rng::new(0xA110C);
+    let mut live: Vec<Sim> = Vec::new();
+    let mut next_hash = 1u64;
+    for _ in 0..4000 {
+        match rng.below(10) {
+            // start a sequence (reservation-based admission)
+            0..=3 => {
+                let budget = rng.range(1, 3 * PS + 1);
+                if arena.admit(&[], budget.div_ceil(PS)).is_some() {
+                    live.push(Sim { table: Vec::new(), len: 0, budget });
+                }
+            }
+            // extend a random live sequence by one token
+            4..=8 => {
+                if live.is_empty() {
+                    continue;
+                }
+                let i = rng.below(live.len());
+                let s = &mut live[i];
+                if s.len == s.budget {
+                    continue;
+                }
+                if s.len % PS == 0 {
+                    s.table.push(arena.alloc_page());
+                }
+                s.len += 1;
+                // register half the completed pages (prefix index +
+                // eventual FIFO eviction traffic)
+                if s.len % PS == 0 && rng.below(2) == 0 {
+                    arena.register(next_hash, *s.table.last().unwrap());
+                    next_hash += 1;
+                }
+            }
+            // retire a random live sequence
+            _ => {
+                if live.is_empty() {
+                    continue;
+                }
+                let s = live.swap_remove(rng.below(live.len()));
+                arena.unreserve(s.reserved());
+                for p in s.table {
+                    arena.release(p);
+                }
+            }
+        }
+        // tables never share pages here, so held pages are exactly the
+        // table lengths; everything else in use is index-only cache
+        let live_pages: usize = live.iter().map(|s| s.table.len()).sum();
+        assert_eq!(arena.in_use_pages(), live_pages + arena.cached_pages());
+        let reserved: usize = live.iter().map(Sim::reserved).sum();
+        assert_eq!(arena.available_pages(), TOTAL - live_pages - reserved);
+    }
+    for s in live.drain(..) {
+        arena.unreserve(s.reserved());
+        for p in s.table {
+            arena.release(p);
+        }
+    }
+    // zero stranded pages: with no live sequence every page is free or
+    // evictable, and a full-arena admission can claim all of them
+    assert_eq!(arena.available_pages(), TOTAL);
+    assert!(arena.admit(&[], TOTAL).is_some());
+    let mut claimed: Vec<u32> = (0..TOTAL).map(|_| arena.alloc_page()).collect();
+    claimed.sort_unstable();
+    claimed.dedup();
+    assert_eq!(claimed.len(), TOTAL, "every physical page must be reachable");
+}
+
+// ---------------------------------------------------------------------------
+// 2–3. engine-level: CoW divergence and interleaved-vs-serial
+// ---------------------------------------------------------------------------
+
+fn paged_engine(batch_slots: usize, kv_pages: usize) -> Engine {
+    let opts = EngineOptions {
+        strategy: Strategy::arclight_single(),
+        threads: 2,
+        platform: Platform::Simulated(Topology::uniform(2, 2, 100.0, 25.0)),
+        prefill_rows: None,
+        seed: 11,
+        batch_slots,
+        pin: false,
+        page_size: PS,
+        kv_pages: Some(kv_pages),
+    };
+    Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
+}
+
+/// Feed `tokens` through one lane and return the logits of the last
+/// step.
+fn feed(engine: &mut Engine, seq: &arclight::frontend::SeqHandle, tokens: &[i32]) -> Vec<f32> {
+    let mut logits = Vec::new();
+    for &t in tokens {
+        logits = engine.step_batch(&[(seq, t)]).remove(0);
+    }
+    logits
+}
+
+#[test]
+fn fork_shares_pages_and_copies_once_on_divergence() {
+    let prefix = [5i32, 6, 7, 8, 9, 10, 11, 12, 13, 14]; // 10 tokens
+    let tail_a = [20i32, 21, 22, 23];
+    let tail_b = [30i32, 31, 32, 33];
+
+    let mut engine = paged_engine(4, 16);
+    let parent = engine.seq_start(24).unwrap();
+    feed(&mut engine, &parent, &prefix);
+    let used_before = engine.kv_pages_in_use();
+    assert_eq!(used_before, prefix.len().div_ceil(PS)); // 3 pages
+
+    // fork: all pages shared, no copies yet
+    let child = engine.seq_fork(&parent, 24).unwrap();
+    assert_eq!(engine.seq_pos(&child), prefix.len());
+    assert_eq!(engine.kv_pages_in_use(), used_before, "fork must not copy pages");
+
+    // first divergent append lands mid-page on a shared page: exactly
+    // one CoW copy, whichever lane writes first
+    let mut la = engine.step_batch(&[(&parent, tail_a[0]), (&child, tail_b[0])]);
+    let mut logits_b = la.remove(1);
+    let mut logits_a = la.remove(0);
+    assert_eq!(
+        engine.kv_pages_in_use(),
+        used_before + 1,
+        "divergence must copy exactly the shared tail page"
+    );
+    for i in 1..tail_a.len() {
+        let mut l = engine.step_batch(&[(&parent, tail_a[i]), (&child, tail_b[i])]);
+        logits_b = l.remove(1);
+        logits_a = l.remove(0);
+    }
+
+    // both children must be bit-identical to independent references
+    let mut ref_a = paged_engine(4, 16);
+    let sa = ref_a.seq_start(24).unwrap();
+    let want_a = feed(&mut ref_a, &sa, &[&prefix[..], &tail_a[..]].concat());
+    assert_eq!(logits_a, want_a, "forked parent diverged from serial reference");
+
+    let mut ref_b = paged_engine(4, 16);
+    let sb = ref_b.seq_start(24).unwrap();
+    let want_b = feed(&mut ref_b, &sb, &[&prefix[..], &tail_b[..]].concat());
+    assert_eq!(logits_b, want_b, "forked child diverged from serial reference");
+
+    // RAII teardown returns every page; shared prefix pages survive
+    // only as evictable cache
+    let total = engine.kv_total_pages();
+    drop(child);
+    assert!(engine.kv_pages_in_use() >= engine.seq_pages(&parent));
+    drop(parent);
+    assert_eq!(engine.seqs_in_use(), 0);
+    assert_eq!(engine.kv_available_pages(), total, "retired pages must all be reclaimable");
+}
+
+#[test]
+fn interleaved_matches_serial_with_page_recycling() {
+    // three 20-token streams on a 16-page (64-token) arena: serial runs
+    // recycle pages between sequences, the interleaved run holds all
+    // 15 pages at once
+    let streams: [Vec<i32>; 3] = [
+        (0..20).map(|k| 40 + k).collect(),
+        (0..20).map(|k| 80 + 3 * k).collect(),
+        (0..20).map(|k| 140 + 2 * k).collect(),
+    ];
+
+    let mut serial = paged_engine(3, 16);
+    let mut want = Vec::new();
+    for s in &streams {
+        let h = serial.seq_start(s.len()).unwrap();
+        want.push(feed(&mut serial, &h, s));
+        drop(h); // pages recycle before the next sequence starts
+        assert_eq!(serial.seqs_in_use(), 0);
+    }
+
+    let mut inter = paged_engine(3, 16);
+    let seqs: Vec<_> = streams.iter().map(|s| inter.seq_start(s.len()).unwrap()).collect();
+    let mut got: Vec<Vec<f32>> = vec![Vec::new(); 3];
+    for step in 0..20 {
+        let lanes: Vec<_> = seqs.iter().zip(&streams).map(|(h, s)| (h, s[step])).collect();
+        let out = inter.step_batch(&lanes);
+        for (g, o) in got.iter_mut().zip(out) {
+            *g = o;
+        }
+    }
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g, w, "lane {i}: interleaved decode diverged from serial");
+    }
+
+    let total = inter.kv_total_pages();
+    drop(seqs);
+    assert_eq!(inter.kv_available_pages(), total);
+}

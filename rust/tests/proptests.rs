@@ -137,6 +137,8 @@ fn prop_engine_deterministic_across_random_configs() {
             seed: 31,
             batch_slots: 1,
             pin: false,
+            page_size: 16,
+            kv_pages: None,
         };
         let mut e = Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap();
         let res = e.generate(&[5, 9, 2], 10, &arclight::frontend::Sampler::greedy());

@@ -22,6 +22,8 @@ fn tiny_engine(batch_slots: usize) -> Engine {
         seed: 7,
         batch_slots,
         pin: false,
+        page_size: 16,
+        kv_pages: None,
     };
     Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
 }
@@ -122,6 +124,27 @@ fn identical_requests_get_identical_tokens() {
 }
 
 #[test]
+fn hello_reports_proto_and_features() {
+    let (server, router, slots) = start_server(1);
+    let addr = server.addr.to_string();
+
+    let mut c = ServerClient::connect(&addr).unwrap();
+    let (proto, features) = c.hello().unwrap();
+    assert_eq!(proto, 2);
+    assert!(features.iter().any(|f| f == "generate"));
+    assert!(features.iter().any(|f| f == "paged_kv"));
+    assert!(features.iter().any(|f| f == "prefix_cache"));
+    // the handshake leaves the connection usable
+    assert!(c.ping().unwrap());
+
+    server.stop();
+    drop(router);
+    for t in slots {
+        t.join().unwrap();
+    }
+}
+
+#[test]
 fn malformed_requests_get_errors_not_crashes() {
     let (server, router, slots) = start_server(1);
     let addr = server.addr.to_string();
@@ -130,12 +153,29 @@ fn malformed_requests_get_errors_not_crashes() {
     let mut stream = std::net::TcpStream::connect(&addr).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
 
-    for bad in ["not json\n", "{\"op\":\"generate\",\"max_new\":3}\n", "{\"op\":\"nope\"}\n"] {
+    // (request, expected structured error code)
+    let cases = [
+        ("not json\n", "bad_request"),
+        ("{\"op\":\"generate\",\"max_new\":3}\n", "bad_request"),
+        ("{\"op\":\"nope\"}\n", "unknown_op"),
+    ];
+    for (bad, code) in cases {
         stream.write_all(bad.as_bytes()).unwrap();
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("error"), "expected error for {bad:?}, got {line}");
+        let j = arclight::util::json::Json::parse(&line).unwrap();
+        let err = j.get("error").expect("error object");
+        assert_eq!(err.get("code").and_then(|c| c.as_str()), Some(code), "for {bad:?}: {line}");
+        assert!(err.get("message").and_then(|m| m.as_str()).is_some(), "message for {bad:?}");
     }
+    // unknown ops echo the op back for client-side diagnostics
+    stream.write_all(b"{\"op\":\"nope\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = arclight::util::json::Json::parse(&line).unwrap();
+    let op = j.get("error").and_then(|e| e.get("op")).and_then(|o| o.as_str());
+    assert_eq!(op, Some("nope"));
     // the connection still works afterwards
     stream.write_all(b"{\"op\":\"ping\"}\n").unwrap();
     let mut line = String::new();

@@ -18,6 +18,8 @@ fn engine(strategy: Strategy, threads: usize) -> Engine {
         seed: 99,
         batch_slots: 1,
         pin: false,
+        page_size: 16,
+        kv_pages: None,
     };
     Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
 }
@@ -82,6 +84,8 @@ fn four_way_tp_rejected_on_tiny() {
         seed: 99,
         batch_slots: 1,
         pin: false,
+        page_size: 16,
+        kv_pages: None,
     };
     let r = std::panic::catch_unwind(|| Engine::new_synthetic(ModelConfig::tiny(), &opts));
     assert!(r.is_err(), "tiny model must reject 4-way TP (2 kv heads)");
@@ -99,6 +103,8 @@ fn small_model_four_way_tp_agrees() {
             seed: 5,
             batch_slots: 1,
             pin: false,
+            page_size: 16,
+            kv_pages: None,
         };
         Engine::new_synthetic(ModelConfig::small_25m(), &opts).unwrap()
     };

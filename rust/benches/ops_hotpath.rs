@@ -102,6 +102,7 @@ fn engine_opts(
         pin,
         page_size: 16,
         kv_pages: None,
+        base_node: 0,
     }
 }
 

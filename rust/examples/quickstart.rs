@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
         pin: false,
         page_size: 16,
         kv_pages: None,
+        base_node: 0,
     };
     let mut engine = Engine::new_synthetic(cfg, &opts)?;
 
@@ -58,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         pin: false,
         page_size: 16,
         kv_pages: None,
+        base_node: 0,
     };
     let mut engine_tp = Engine::new_synthetic(ModelConfig::small_25m(), &opts_tp)?;
     let res_tp = engine_tp.generate(&prompt, 48, &Sampler::greedy());

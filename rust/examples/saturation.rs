@@ -1,0 +1,253 @@
+//! Open-loop saturation bench for cluster serving.
+//!
+//! Generates a deterministic Poisson-ish arrival schedule (seeded
+//! exponential inter-arrivals) and replays the *same* schedule against
+//! one and then two [`Cluster`] replicas on the simulated two-node
+//! testbed, sweeping the offered load. Open loop means arrivals do not
+//! wait for completions — at rates past the engine's capacity the
+//! queue grows and latency shows it, which is exactly the regime the
+//! placement router exists for.
+//!
+//! The one-replica baseline is a single node-group engine — the unit
+//! the cluster scales by — so the sweep isolates replica scaling from
+//! engine tuning: both phases use identical per-replica geometry
+//! ([`THREADS_PER_REPLICA`] workers, [`BATCH_PER_REPLICA`] lanes).
+//!
+//! Per (replicas, rate) point it reports p50/p99 TTFT, p50/p99 e2e
+//! latency, aggregate tokens/s and tokens/s per node, and asserts the
+//! headline claim: at the saturating rate, two replicas deliver
+//! strictly more aggregate tokens/s than one.
+//!
+//!     cargo run --release --example saturation -- --quick --report out.json
+//!
+//! Flags: `--quick` (CI-sized run), `--report <path>` (JSON report for
+//! the perf-trajectory artifact).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use arclight::baseline::Strategy;
+use arclight::frontend::{Engine, EngineOptions};
+use arclight::hw::Platform;
+use arclight::model::ModelConfig;
+use arclight::numa::Topology;
+use arclight::server::{BatcherConfig, Cluster, ClusterConfig, GenRequest};
+use arclight::util::json::{obj, Json};
+use arclight::util::stats::Summary;
+use arclight::util::Rng;
+
+/// Per-replica engine geometry, identical in both phases.
+const THREADS_PER_REPLICA: usize = 2;
+const BATCH_PER_REPLICA: usize = 4;
+const MAX_NEW: usize = 8;
+
+fn build_replica(base_node: usize) -> anyhow::Result<Engine> {
+    let opts = EngineOptions {
+        strategy: Strategy::arclight_single(),
+        threads: THREADS_PER_REPLICA,
+        platform: Platform::Simulated(Topology::uniform(2, 2, 100.0, 25.0)),
+        prefill_rows: None,
+        seed: 7,
+        batch_slots: BATCH_PER_REPLICA,
+        pin: false,
+        page_size: 16,
+        kv_pages: None,
+        base_node,
+    };
+    Ok(Engine::new_synthetic(ModelConfig::tiny(), &opts)?)
+}
+
+/// One (replica count, offered rate) measurement.
+struct Sweep {
+    replicas: usize,
+    nodes: usize,
+    offered_rps: f64,
+    completed: usize,
+    decoded: usize,
+    wall_s: f64,
+    ttft: Summary,
+    latency: Summary,
+}
+
+impl Sweep {
+    fn tokens_per_s(&self) -> f64 {
+        self.decoded as f64 / self.wall_s
+    }
+
+    fn to_json(&mut self) -> Json {
+        let tok_s = self.tokens_per_s();
+        obj(vec![
+            ("replicas", self.replicas.into()),
+            ("nodes", self.nodes.into()),
+            ("offered_rps", self.offered_rps.into()),
+            ("completed", self.completed.into()),
+            ("decoded_tokens", self.decoded.into()),
+            ("wall_s", self.wall_s.into()),
+            ("ttft_p50_s", self.ttft.p50().into()),
+            ("ttft_p99_s", self.ttft.p99().into()),
+            ("latency_p50_s", self.latency.p50().into()),
+            ("latency_p99_s", self.latency.p99().into()),
+            ("tokens_per_s", tok_s.into()),
+            ("tokens_per_s_per_node", (tok_s / self.nodes as f64).into()),
+        ])
+    }
+}
+
+/// Deterministic arrival offsets: seeded exponential inter-arrivals at
+/// the given rate. The same (rate, n, seed) always yields the same
+/// schedule, so every replica phase faces identical offered load.
+fn schedule(rate_rps: f64, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(1.0 / rate_rps);
+            t
+        })
+        .collect()
+}
+
+fn run_sweep(
+    cluster: &Arc<Cluster>,
+    replicas: usize,
+    nodes: usize,
+    rate: f64,
+    n: usize,
+    seed: u64,
+) -> anyhow::Result<Sweep> {
+    let offsets = schedule(rate, n, seed);
+    // anchor slightly in the future so every client thread is parked
+    // on its arrival time before the first one fires
+    let t0 = Instant::now() + Duration::from_millis(20);
+    let mut workers = Vec::new();
+    for (i, off) in offsets.into_iter().enumerate() {
+        let cluster = cluster.clone();
+        let arrive = t0 + Duration::from_secs_f64(off);
+        workers.push(std::thread::spawn(move || -> Result<(usize, f64, f64), String> {
+            let now = Instant::now();
+            if arrive > now {
+                std::thread::sleep(arrive - now);
+            }
+            let sent = Instant::now();
+            // distinct prompts: no cross-request prefix adoption, so
+            // the sweep measures scheduling rather than cache luck
+            let req = GenRequest::text(i as u64 + 1, &format!("req {i:04} payload"), MAX_NEW);
+            let resp = cluster.submit(req)?;
+            let e2e = sent.elapsed().as_secs_f64();
+            // open-loop TTFT: queue wait (e2e minus the server-side
+            // span) plus the engine's own time-to-first-token
+            let ttft = (e2e - resp.total_s).max(0.0) + resp.ttft_s;
+            Ok((resp.tokens.len(), e2e, ttft))
+        }));
+    }
+    let mut sweep = Sweep {
+        replicas,
+        nodes,
+        offered_rps: rate,
+        completed: 0,
+        decoded: 0,
+        wall_s: 0.0,
+        ttft: Summary::new(),
+        latency: Summary::new(),
+    };
+    for w in workers {
+        match w.join().unwrap() {
+            Ok((toks, e2e, ttft)) => {
+                sweep.completed += 1;
+                sweep.decoded += toks;
+                sweep.latency.add(e2e);
+                sweep.ttft.add(ttft);
+            }
+            Err(e) => anyhow::bail!("open-loop request rejected: {e}"),
+        }
+    }
+    sweep.wall_s = (Instant::now() - t0).as_secs_f64().max(1e-9);
+    Ok(sweep)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let report_path = args
+        .iter()
+        .position(|a| a == "--report")
+        .and_then(|i| args.get(i + 1))
+        .map(PathBuf::from);
+
+    let rates: Vec<f64> = if quick { vec![20.0, 400.0] } else { vec![10.0, 50.0, 200.0, 800.0] };
+    let n = if quick { 10 } else { 24 };
+    let plat = Platform::Simulated(Topology::uniform(2, 2, 100.0, 25.0));
+    let all_groups = plat.node_groups(None); // one group per node
+    println!(
+        "saturation: open-loop sweep{} | {n} requests × {MAX_NEW} new tokens per rate | \
+         rates {rates:?} rps | per replica: {THREADS_PER_REPLICA} threads, \
+         {BATCH_PER_REPLICA} lanes",
+        if quick { " (quick)" } else { "" }
+    );
+
+    let mut sweeps: Vec<Sweep> = Vec::new();
+    for r in [1usize, 2] {
+        let groups = &all_groups[..r];
+        let nodes: usize = groups.iter().map(Vec::len).sum();
+        let cfg = ClusterConfig { batcher: BatcherConfig::default(), load_tolerance: 2 };
+        let cluster = Cluster::start(groups, cfg, |_id, g| build_replica(g[0]))?;
+        for (k, &rate) in rates.iter().enumerate() {
+            let mut s = run_sweep(&cluster, r, nodes, rate, n, 42 + k as u64)?;
+            println!(
+                "[{r} replica{}] {rate:.0} rps offered: {}/{n} done, {:.1} tok/s \
+                 ({:.1}/node) | ttft p50 {:.3}s p99 {:.3}s | e2e p50 {:.3}s p99 {:.3}s",
+                if r == 1 { "" } else { "s" },
+                s.completed,
+                s.tokens_per_s(),
+                s.tokens_per_s() / nodes as f64,
+                s.ttft.p50(),
+                s.ttft.p99(),
+                s.latency.p50(),
+                s.latency.p99()
+            );
+            sweeps.push(s);
+        }
+        cluster.shutdown();
+    }
+
+    // the headline claim: replica scaling pays at saturating load
+    let top = *rates.last().unwrap();
+    let sat = |r: usize| -> f64 {
+        sweeps
+            .iter()
+            .find(|s| s.replicas == r && s.offered_rps == top)
+            .map(Sweep::tokens_per_s)
+            .unwrap()
+    };
+    let (one, two) = (sat(1), sat(2));
+    println!("saturating load ({top:.0} rps): 1 replica {one:.1} tok/s, 2 replicas {two:.1} tok/s");
+
+    if let Some(path) = report_path {
+        let report = obj(vec![
+            ("benchmark", "saturation".into()),
+            ("quick", quick.into()),
+            ("requests_per_rate", n.into()),
+            ("max_new", MAX_NEW.into()),
+            ("threads_per_replica", THREADS_PER_REPLICA.into()),
+            ("batch_per_replica", BATCH_PER_REPLICA.into()),
+            ("rates_rps", Json::Arr(rates.iter().map(|&x| x.into()).collect())),
+            ("saturating_rps", top.into()),
+            ("tok_s_one_replica_saturated", one.into()),
+            ("tok_s_two_replicas_saturated", two.into()),
+            ("sweeps", Json::Arr(sweeps.iter_mut().map(Sweep::to_json).collect())),
+        ]);
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        std::fs::write(&path, report.to_string())?;
+        println!("wrote report to {}", path.display());
+    }
+
+    assert!(
+        two > one,
+        "two replicas ({two:.1} tok/s) must beat one ({one:.1} tok/s) at saturating load"
+    );
+    println!("two replicas beat one replica at saturating load ✓");
+    Ok(())
+}

@@ -88,6 +88,7 @@ fn build_engine(
         pin,
         page_size,
         kv_pages,
+        base_node: 0,
     };
     if let Some(dir) = artifacts_dir() {
         Ok((Engine::from_alf(&dir.join("tiny.alf"), &opts)?, true))

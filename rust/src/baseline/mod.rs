@@ -100,11 +100,22 @@ impl Strategy {
 
     /// Bind `threads` workers to simulated cores.
     pub fn bind_cores(&self, topo: &Topology, threads: usize) -> Vec<Core> {
+        self.bind_cores_at(topo, threads, 0)
+    }
+
+    /// [`Strategy::bind_cores`] with the node window starting at `base`
+    /// — a cluster replica binds onto its own node group instead of
+    /// every engine stacking onto node 0.
+    pub fn bind_cores_at(&self, topo: &Topology, threads: usize, base: usize) -> Vec<Core> {
         match self {
-            Strategy::ArcLight { nodes, .. } => topo.bind_cores(threads, *nodes > 1, *nodes),
-            Strategy::LlamaCpp { numa: LlamaNuma::Isolate } => topo.bind_cores(threads, false, 1),
+            Strategy::ArcLight { nodes, .. } => {
+                topo.bind_cores_at(base, threads, *nodes > 1, *nodes)
+            }
+            Strategy::LlamaCpp { numa: LlamaNuma::Isolate } => {
+                topo.bind_cores_at(base, threads, false, 1)
+            }
             Strategy::LlamaCpp { numa: LlamaNuma::Distribute(n) } => {
-                topo.bind_cores(threads, true, *n)
+                topo.bind_cores_at(base, threads, true, *n)
             }
         }
     }
@@ -141,7 +152,21 @@ impl Strategy {
         threads: usize,
         pin: bool,
     ) -> RealExecutor {
-        let cores = self.bind_cores(platform.topology(), threads);
+        self.real_executor_on(pool, platform, threads, pin, 0)
+    }
+
+    /// [`Strategy::real_executor`] with workers bound starting at NUMA
+    /// node `base` — cluster replicas get disjoint core sets (and thus
+    /// disjoint pin maps) instead of stacking onto node 0.
+    pub fn real_executor_on(
+        &self,
+        pool: Arc<MemoryPool>,
+        platform: &Platform,
+        threads: usize,
+        pin: bool,
+        base: usize,
+    ) -> RealExecutor {
+        let cores = self.bind_cores_at(platform.topology(), threads, base);
         let cpu_map = if pin { platform.cpu_map(&cores) } else { None };
         let (single, tp) = self.organizations(&cores);
         let workers = Arc::new(ThreadPool::with_affinity(cores, cpu_map));

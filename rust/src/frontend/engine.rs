@@ -60,6 +60,11 @@ pub struct EngineOptions {
     /// KV arena size in pages; `None` sizes it for `batch_slots`
     /// full-length sequences.
     pub kv_pages: Option<usize>,
+    /// First NUMA node of this engine's placement window: cores are
+    /// bound and node-addressed tensors placed starting here instead of
+    /// node 0. Cluster replicas use it to claim disjoint node groups on
+    /// one machine; 0 (the default) is the classic whole-machine engine.
+    pub base_node: usize,
 }
 
 impl EngineOptions {
@@ -80,6 +85,7 @@ impl Default for EngineOptions {
             pin: false,
             page_size: 16,
             kv_pages: None,
+            base_node: 0,
         }
     }
 }
@@ -220,6 +226,41 @@ impl Drop for SeqHandle {
     }
 }
 
+/// Read-only, thread-safe view of an engine's prefix-page index —
+/// the cluster router's KV-affinity signal. Cloning is cheap (it
+/// shares the pager behind the engine's own `Arc<Mutex>`), and probing
+/// never mutates the index: unlike admission, a probe must not bump
+/// FIFO recency or take pages.
+#[derive(Clone)]
+pub struct PrefixProbe {
+    pager: Arc<Mutex<KvPager>>,
+    page_size: usize,
+}
+
+impl PrefixProbe {
+    /// Prompt tokens of `tokens` this engine could serve from shared
+    /// prefix pages right now — the longest *leading* run of completed
+    /// pages present in the index, capped (like admission) strictly
+    /// below the whole prompt so the last token is always recomputed.
+    pub fn prefix_run_tokens(&self, tokens: &[i32]) -> usize {
+        if tokens.is_empty() {
+            return 0;
+        }
+        let ps = self.page_size;
+        let hashes = page_hashes(tokens, ps);
+        let max_adopt = (tokens.len() - 1) / ps;
+        let pg = self.pager.lock().unwrap();
+        let mut run = 0usize;
+        for h in &hashes[..max_adopt.min(hashes.len())] {
+            if pg.arena.lookup(*h).is_none() {
+                break;
+            }
+            run += 1;
+        }
+        run * ps
+    }
+}
+
 /// Timing + output of one generation call.
 #[derive(Clone, Debug)]
 pub struct GenerationResult {
@@ -306,11 +347,21 @@ impl Engine {
             bail!("batch_slots must be at least 1");
         }
         let total_nodes = opts.platform.topology().n_nodes();
+        if opts.base_node + opts.strategy.nodes_used() > total_nodes {
+            bail!(
+                "strategy {} spans nodes {}..{} but the machine has only {} node(s)",
+                opts.strategy.name(),
+                opts.base_node,
+                opts.base_node + opts.strategy.nodes_used(),
+                total_nodes
+            );
+        }
         let mut spec = opts
             .strategy
             .build_spec(cfg, total_nodes)
             .with_batch(opts.batch_slots)
-            .with_page_size(opts.page_size);
+            .with_page_size(opts.page_size)
+            .with_base_node(opts.base_node);
         if let Some(pages) = opts.kv_pages {
             spec = spec.with_kv_pages(pages);
         }
@@ -319,8 +370,13 @@ impl Engine {
         }
         let graphs = ModelGraphs::build(spec);
         let pool = graphs.pool.clone().expect("real engine needs buffers");
-        let executor =
-            opts.strategy.real_executor(pool.clone(), &opts.platform, opts.threads, opts.pin);
+        let executor = opts.strategy.real_executor_on(
+            pool.clone(),
+            &opts.platform,
+            opts.threads,
+            opts.pin,
+            opts.base_node,
+        );
         let pinned_workers = executor.threads.pinned_workers();
         let pager = Arc::new(Mutex::new(KvPager::new(graphs.kv_pages, graphs.kv_page_size)));
         Ok(Engine {
@@ -401,6 +457,14 @@ impl Engine {
     /// Tokens per KV page.
     pub fn kv_page_size(&self) -> usize {
         self.graphs.kv_page_size
+    }
+
+    /// A [`PrefixProbe`] over this engine's prefix-page index. The
+    /// probe stays valid (and current) while the engine lives on
+    /// another thread — the cluster router scores replicas with it
+    /// without touching the engines themselves.
+    pub fn prefix_probe(&self) -> PrefixProbe {
+        PrefixProbe { pager: self.pager.clone(), page_size: self.graphs.kv_page_size }
     }
 
     /// Start a sequence that may ingest up to `max_tokens` tokens,
@@ -717,6 +781,7 @@ mod tests {
             pin: false,
             page_size: 16,
             kv_pages: None,
+            base_node: 0,
         };
         Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
     }
@@ -992,6 +1057,59 @@ mod tests {
         for t in 0..(e.cfg().max_seq + 1) {
             e.step_batch(&[(&s, t as i32)]);
         }
+    }
+
+    #[test]
+    fn prefix_probe_sees_registered_pages_without_mutating() {
+        let mut e = tiny_engine_slots(Strategy::arclight_single(), 2, None, 2);
+        let prompt: Vec<i32> = (0..20).collect();
+        let probe = e.prefix_probe();
+        assert_eq!(probe.prefix_run_tokens(&prompt), 0, "cold index must report no run");
+        let (s, _) = e.seq_start_with_prompt(&prompt, 24).unwrap();
+        for &t in &prompt {
+            e.step_batch(&[(&s, t)]);
+        }
+        // one completed 16-token page is registered; the probe reports
+        // exactly what admission would adopt, however often it is asked
+        let used = e.kv_pages_in_use();
+        assert_eq!(probe.prefix_run_tokens(&prompt), 16);
+        assert_eq!(probe.prefix_run_tokens(&prompt), 16);
+        assert_eq!(e.kv_pages_in_use(), used, "probing must not claim pages");
+        // a divergent prompt shares no prefix
+        let other: Vec<i32> = (100..120).collect();
+        assert_eq!(probe.prefix_run_tokens(&other), 0);
+        // short prompts never complete a page
+        assert_eq!(probe.prefix_run_tokens(&prompt[..8]), 0);
+        // reset invalidates the index and the probe follows
+        e.reset();
+        assert_eq!(probe.prefix_run_tokens(&prompt), 0);
+    }
+
+    #[test]
+    fn base_node_engine_matches_node0_tokens() {
+        // the same model built on node 1 of a 4-node machine must
+        // generate identical tokens to the classic node-0 engine
+        let mut a = tiny_engine(Strategy::arclight_single(), 2, None);
+        let opts = EngineOptions {
+            strategy: Strategy::arclight_single(),
+            threads: 2,
+            platform: Platform::Simulated(Topology::uniform(4, 4, 100.0, 25.0)),
+            prefill_rows: None,
+            seed: 42,
+            batch_slots: 1,
+            pin: false,
+            page_size: 16,
+            kv_pages: None,
+            base_node: 1,
+        };
+        let mut b = Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap();
+        let prompt = [4, 8, 15, 16];
+        let ra = a.generate(&prompt, 6, &Sampler::greedy());
+        let rb = b.generate(&prompt, 6, &Sampler::greedy());
+        assert_eq!(ra.tokens, rb.tokens, "placement shift must not change arithmetic");
+        // a window that falls off the machine is refused at build
+        let bad = EngineOptions { base_node: 4, ..opts };
+        assert!(Engine::new_synthetic(ModelConfig::tiny(), &bad).is_err());
     }
 
     #[test]

@@ -7,6 +7,6 @@ pub mod engine;
 pub mod sampler;
 pub mod tokenizer;
 
-pub use engine::{Engine, EngineOptions, GenerationResult, SeqHandle};
+pub use engine::{Engine, EngineOptions, GenerationResult, PrefixProbe, SeqHandle};
 pub use sampler::Sampler;
 pub use tokenizer::ByteTokenizer;

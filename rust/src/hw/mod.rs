@@ -155,6 +155,23 @@ impl Platform {
         }
     }
 
+    /// Partition the machine's NUMA nodes into `replicas` contiguous
+    /// groups — the placement domains of a [`crate::server::Cluster`].
+    /// `None` means one replica per node (`serve --replicas auto`); an
+    /// explicit count is clamped to `[1, n_nodes]`. Every node lands in
+    /// exactly one group; earlier groups get the extra node when the
+    /// split is uneven.
+    pub fn node_groups(&self, replicas: Option<usize>) -> Vec<Vec<usize>> {
+        let n = self.topology().n_nodes();
+        let r = replicas.unwrap_or(n).clamp(1, n);
+        (0..r)
+            .map(|i| {
+                let (s, e) = crate::util::chunk_range(n, r, i);
+                (s..e).collect()
+            })
+            .collect()
+    }
+
     /// Install this platform's first-touch placement map for
     /// [`crate::memory::Arena`] allocation (one representative cpu per
     /// node). Must run **before** the engine is built — arenas are
@@ -221,6 +238,20 @@ mod tests {
         let (p, note) = Platform::host_with_membind(usize::MAX);
         assert_eq!(p.name(), "simulated");
         assert!(note.is_some());
+    }
+
+    #[test]
+    fn node_groups_partition_the_machine() {
+        let p = Platform::simulated(); // 4 nodes
+        assert_eq!(p.node_groups(None), vec![vec![0], vec![1], vec![2], vec![3]]);
+        assert_eq!(p.node_groups(Some(2)), vec![vec![0, 1], vec![2, 3]]);
+        assert_eq!(p.node_groups(Some(3)), vec![vec![0, 1], vec![2], vec![3]]);
+        // clamped to the machine: 0 → 1 group, 99 → one per node
+        assert_eq!(p.node_groups(Some(0)), vec![vec![0, 1, 2, 3]]);
+        assert_eq!(p.node_groups(Some(99)).len(), 4);
+        // every node exactly once, in order
+        let flat: Vec<usize> = p.node_groups(Some(3)).concat();
+        assert_eq!(flat, vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //!   generate  write a synthetic ALF model file
 //!   run       load a model and generate text (quickstart)
 //!   serve     start the TCP serving API (continuous batching by
-//!             default; --mode slots for the sequential baseline)
+//!             default; --mode slots for the sequential baseline;
+//!             --replicas N|auto for per-NUMA-node engine replicas)
 //!   report    regenerate the paper's Table 1 / Figures 10–13
 //!   probe     print the simulated machine + bandwidth matrix
 //!   topo      print the detected host NUMA topology vs the simulated
@@ -37,7 +38,9 @@ use arclight::report;
 use arclight::runtime::PjrtExecutor;
 use arclight::sched::SyncMode;
 use arclight::simd::KernelTier;
-use arclight::server::{BatcherConfig, ContinuousBatcher, EngineSlot, Router, ServerHandle};
+use arclight::server::{
+    BatcherConfig, Cluster, ClusterConfig, ContinuousBatcher, EngineSlot, Router, ServerHandle,
+};
 
 /// Tiny std-only flag parser: `--key value` pairs after the subcommand.
 struct Args {
@@ -170,16 +173,22 @@ fn engine_opts(args: &Args) -> Result<EngineOptions> {
         pin,
         page_size: args.usize("page-size", 16),
         kv_pages: args.get("kv-pages").and_then(|v| v.parse().ok()),
+        base_node: 0,
     })
+}
+
+/// `--model` resolution shared by the single-engine and cluster paths.
+fn build_model(args: &Args, opts: &EngineOptions) -> Result<Engine> {
+    match args.get("model") {
+        Some(path) if path.ends_with(".alf") => Engine::from_alf(&PathBuf::from(path), opts),
+        Some(name) => Engine::new_synthetic(preset(name)?, opts),
+        None => Engine::new_synthetic(ModelConfig::small_25m(), opts),
+    }
 }
 
 fn load_engine(args: &Args) -> Result<Engine> {
     let opts = engine_opts(args)?;
-    match args.get("model") {
-        Some(path) if path.ends_with(".alf") => Engine::from_alf(&PathBuf::from(path), &opts),
-        Some(name) => Engine::new_synthetic(preset(name)?, &opts),
-        None => Engine::new_synthetic(ModelConfig::small_25m(), &opts),
-    }
+    build_model(args, &opts)
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -222,11 +231,18 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:8763");
-    let router = Router::new(BatcherConfig {
+    let bcfg = BatcherConfig {
         queue_capacity: args.usize("queue", 256),
         max_batch: args.usize("max-batch", 8),
         batch_window: std::time::Duration::from_millis(args.usize("window-ms", 2) as u64),
-    });
+    };
+    if args.get("replicas").is_some() {
+        if args.str_or("mode", "continuous") != "continuous" {
+            bail!("--replicas implies --mode continuous");
+        }
+        return serve_cluster(args, addr, bcfg);
+    }
+    let router = Router::new(bcfg);
     match args.str_or("mode", "continuous") {
         "continuous" => {
             // one engine, one KV pool, --batch concurrent sequences
@@ -275,6 +291,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         other => bail!("unknown serve mode '{other}' (continuous|slots)"),
     }
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `serve --replicas N|auto`: one continuous-batching engine per NUMA
+/// node group, behind the cluster's placement router. Each replica is
+/// built with `base_node` at its group's first node, so its workers
+/// (and, with `--pin`, its arenas) live on its own nodes.
+fn serve_cluster(args: &Args, addr: &str, bcfg: BatcherConfig) -> Result<()> {
+    // bare `--replicas` parses as the boolean "true" → auto
+    let want = match args.str_or("replicas", "auto") {
+        "auto" | "true" => None,
+        n => match n.parse::<usize>() {
+            Ok(v) => Some(v),
+            Err(_) => bail!("--replicas takes a count or 'auto', got '{n}'"),
+        },
+    };
+    let batch = args.usize("batch", 8).max(2);
+    let mut opts = engine_opts(args)?;
+    opts.batch_slots = batch;
+    let groups = opts.platform.node_groups(want);
+    let cfg = ClusterConfig { batcher: bcfg, load_tolerance: args.usize("tolerance", 2) };
+    let cluster = Cluster::start(&groups, cfg, |_id, nodes| {
+        let mut o = opts.clone();
+        o.base_node = nodes[0];
+        build_model(args, &o)
+    })?;
+    let server = ServerHandle::start_cluster(addr, cluster.clone())?;
+    println!(
+        "arclight serving on {} ({} replica(s) × {batch} slots over node groups {:?}); \
+         Ctrl-C to stop",
+        server.addr,
+        cluster.n_replicas(),
+        groups
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -462,6 +514,7 @@ fn cmd_golden(args: &Args) -> Result<()> {
         pin: false,
         page_size: 16,
         kv_pages: None,
+        base_node: 0,
     };
     let mut engine = Engine::from_alf(&dir.join("tiny.alf"), &opts)?;
     let res = engine.generate(&prompt, max_new, &Sampler::greedy());

@@ -2,10 +2,91 @@
 //! continuous-batching gauges (queue wait, batch occupancy).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::util::stats::Summary;
+
+/// Per-replica serving gauges — one per [`crate::server::Cluster`]
+/// engine. The cluster's router reads `live_lanes`/`queue_depth` for
+/// placement; the metrics snapshot renders one entry per replica under
+/// `replicas` while the top-level [`Metrics`] fields stay aggregates
+/// across the whole cluster.
+pub struct ReplicaStats {
+    /// Replica index within the cluster (0 for a single engine).
+    pub id: usize,
+    /// NUMA nodes of the replica's placement group.
+    pub nodes: Vec<usize>,
+    /// Lanes decoding in the replica's running batch (gauge).
+    pub live_lanes: AtomicU64,
+    /// Requests waiting in the replica's admission queue (gauge).
+    pub queue_depth: AtomicU64,
+    /// Tokens this replica decoded since serve start.
+    pub tokens_decoded: AtomicU64,
+    /// Prompt tokens this replica served from prefix-shared KV pages.
+    pub prefix_hit_tokens: AtomicU64,
+    /// KV pages held in this replica's arena after its last step.
+    pub kv_pages_used: AtomicU64,
+    /// Total pages in this replica's KV arena.
+    pub kv_pages_total: AtomicU64,
+    started: Instant,
+}
+
+impl ReplicaStats {
+    pub fn new(id: usize, nodes: Vec<usize>) -> Self {
+        ReplicaStats {
+            id,
+            nodes,
+            live_lanes: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            tokens_decoded: AtomicU64::new(0),
+            prefix_hit_tokens: AtomicU64::new(0),
+            kv_pages_used: AtomicU64::new(0),
+            kv_pages_total: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    /// First node of the placement group — the `node` stamped into
+    /// response provenance.
+    pub fn home_node(&self) -> usize {
+        self.nodes.first().copied().unwrap_or(0)
+    }
+
+    /// Instantaneous load the router scores: lanes decoding now plus
+    /// requests already committed to this replica's queue.
+    pub fn load(&self) -> usize {
+        (self.live_lanes.load(Ordering::Relaxed) + self.queue_depth.load(Ordering::Relaxed))
+            as usize
+    }
+
+    /// Decode throughput of this replica since serve start (token/s).
+    pub fn tokens_per_s(&self) -> f64 {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        if elapsed == 0.0 {
+            return 0.0;
+        }
+        self.tokens_decoded.load(Ordering::Relaxed) as f64 / elapsed
+    }
+
+    /// One entry of the snapshot's `replicas` array.
+    pub fn snapshot(&self) -> crate::util::json::Json {
+        use crate::util::json::obj;
+        let load = |c: &AtomicU64| c.load(Ordering::Relaxed) as usize;
+        obj(vec![
+            ("replica", self.id.into()),
+            ("node", self.home_node().into()),
+            ("nodes", self.nodes.clone().into()),
+            ("live_lanes", load(&self.live_lanes).into()),
+            ("queue_depth", load(&self.queue_depth).into()),
+            ("tokens_decoded", load(&self.tokens_decoded).into()),
+            ("tokens_per_s", self.tokens_per_s().into()),
+            ("prefix_hit_tokens", load(&self.prefix_hit_tokens).into()),
+            ("kv_pages_used", load(&self.kv_pages_used).into()),
+            ("kv_pages_total", load(&self.kv_pages_total).into()),
+        ])
+    }
+}
 
 /// Process-wide serving metrics (shared by server workers).
 #[derive(Default)]
@@ -44,6 +125,11 @@ pub struct Metrics {
     /// Per-request decode throughput (token/s), for p50/p95 reporting
     /// next to the process-wide aggregate.
     req_decode_tok_s: Mutex<Summary>,
+    /// Registered cluster replicas, in id order. Empty outside cluster
+    /// serving; when populated, the snapshot's `kv_pages_*` aggregates
+    /// sum over these instead of the process-wide gauges (each replica
+    /// owns its own arena).
+    replicas: Mutex<Vec<Arc<ReplicaStats>>>,
     start: Mutex<Option<Instant>>,
 }
 
@@ -117,6 +203,21 @@ impl Metrics {
         self.kv_pages_total.store(total as u64, Ordering::Relaxed);
     }
 
+    /// Register one cluster replica's gauges. Re-registering an id
+    /// replaces its entry (serve restart in-process); entries stay in
+    /// id order so the snapshot array is deterministic.
+    pub fn register_replica(&self, stats: Arc<ReplicaStats>) {
+        let mut reps = self.replicas.lock().unwrap();
+        reps.retain(|r| r.id != stats.id);
+        reps.push(stats);
+        reps.sort_by_key(|r| r.id);
+    }
+
+    /// Registered replicas, in id order (empty outside cluster serving).
+    pub fn replica_stats(&self) -> Vec<Arc<ReplicaStats>> {
+        self.replicas.lock().unwrap().clone()
+    }
+
     /// Fraction of the KV arena held by live sequences (0 when the
     /// arena size was never registered).
     pub fn kv_page_occupancy(&self) -> f64 {
@@ -164,7 +265,7 @@ impl Metrics {
 
     /// Render a JSON snapshot (the `/metrics`-style endpoint).
     pub fn snapshot(&self) -> crate::util::json::Json {
-        use crate::util::json::obj;
+        use crate::util::json::{obj, Json};
         let mut lat = self.latency.lock().unwrap().clone();
         let mut ttft = self.ttft.lock().unwrap().clone();
         let mut qw = self.queue_wait.lock().unwrap().clone();
@@ -174,6 +275,19 @@ impl Metrics {
         if platform.is_empty() {
             platform = "unset";
         }
+        // KV arenas are per-replica in cluster mode: aggregate over the
+        // registered replicas when there are any, else fall back to the
+        // process-wide gauges the single-engine schedulers maintain.
+        let reps = self.replica_stats();
+        let (kv_used, kv_total) = if reps.is_empty() {
+            (load(&self.kv_pages_used), load(&self.kv_pages_total))
+        } else {
+            let sum = |f: fn(&ReplicaStats) -> &AtomicU64| {
+                reps.iter().map(|r| f(r).load(Ordering::Relaxed) as usize).sum::<usize>()
+            };
+            (sum(|r| &r.kv_pages_used), sum(|r| &r.kv_pages_total))
+        };
+        let kv_occ = if kv_total == 0 { 0.0 } else { kv_used as f64 / kv_total as f64 };
         obj(vec![
             ("platform", platform.into()),
             // SIMD tier the vectorized kernels dispatch on (process-wide)
@@ -192,9 +306,10 @@ impl Metrics {
             ("batch_occupancy", self.batch_occupancy().into()),
             ("peak_concurrent_seqs", load(&self.peak_seqs).into()),
             ("prefix_hit_tokens", load(&self.prefix_hit_tokens).into()),
-            ("kv_pages_used", load(&self.kv_pages_used).into()),
-            ("kv_pages_total", load(&self.kv_pages_total).into()),
-            ("kv_page_occupancy", self.kv_page_occupancy().into()),
+            ("kv_pages_used", kv_used.into()),
+            ("kv_pages_total", kv_total.into()),
+            ("kv_page_occupancy", kv_occ.into()),
+            ("replicas", Json::Arr(reps.iter().map(|r| r.snapshot()).collect())),
             ("pass_dispatches", load(&self.pass_dispatches).into()),
             ("dispatches_per_token", self.dispatches_per_token().into()),
             ("queue_wait_p50_s", qw.p50().into()),
@@ -295,6 +410,50 @@ mod tests {
         assert!((occ - 0.25).abs() < 1e-9);
         assert_eq!(s.get("prefix_hit_tokens").unwrap().as_usize(), Some(48));
         assert_eq!(s.get("peak_concurrent_seqs").unwrap().as_usize(), Some(7));
+    }
+
+    #[test]
+    fn replica_array_reported_and_kv_aggregated() {
+        let m = Metrics::new();
+        // no replicas registered: the array is empty and the legacy
+        // process-wide gauges feed the aggregates
+        m.set_kv_pages_total(16);
+        m.record_kv_pages(4);
+        let s = m.snapshot();
+        assert_eq!(s.get("replicas").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(s.get("kv_pages_total").unwrap().as_usize(), Some(16));
+        // register two replicas out of order; snapshot sorts by id and
+        // sums their arenas instead of the legacy gauges
+        let r1 = Arc::new(ReplicaStats::new(1, vec![2, 3]));
+        let r0 = Arc::new(ReplicaStats::new(0, vec![0, 1]));
+        r0.kv_pages_total.store(32, Ordering::Relaxed);
+        r0.kv_pages_used.store(8, Ordering::Relaxed);
+        r0.live_lanes.store(3, Ordering::Relaxed);
+        r0.queue_depth.store(2, Ordering::Relaxed);
+        r1.kv_pages_total.store(32, Ordering::Relaxed);
+        r1.kv_pages_used.store(24, Ordering::Relaxed);
+        r1.tokens_decoded.store(100, Ordering::Relaxed);
+        m.register_replica(r1.clone());
+        m.register_replica(r0.clone());
+        assert_eq!(r0.load(), 5);
+        assert_eq!(r1.home_node(), 2);
+        let s = m.snapshot();
+        let reps = s.get("replicas").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(reps.len(), 2);
+        assert_eq!(reps[0].get("replica").unwrap().as_usize(), Some(0));
+        assert_eq!(reps[0].get("node").unwrap().as_usize(), Some(0));
+        assert_eq!(reps[0].get("live_lanes").unwrap().as_usize(), Some(3));
+        assert_eq!(reps[0].get("queue_depth").unwrap().as_usize(), Some(2));
+        assert_eq!(reps[1].get("node").unwrap().as_usize(), Some(2));
+        assert_eq!(reps[1].get("tokens_decoded").unwrap().as_usize(), Some(100));
+        assert!(reps[1].get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(s.get("kv_pages_used").unwrap().as_usize(), Some(32));
+        assert_eq!(s.get("kv_pages_total").unwrap().as_usize(), Some(64));
+        let occ = s.get("kv_page_occupancy").unwrap().as_f64().unwrap();
+        assert!((occ - 0.5).abs() < 1e-9);
+        // re-registering an id replaces, never duplicates
+        m.register_replica(Arc::new(ReplicaStats::new(0, vec![0])));
+        assert_eq!(m.replica_stats().len(), 2);
     }
 
     #[test]

@@ -162,6 +162,38 @@ impl BuildSpec {
         self
     }
 
+    /// Shift every node-addressed placement by `base` nodes — how a
+    /// cluster replica claims *its* NUMA node group: the spec is built
+    /// as if for nodes `0..k` and then translated to `base..base+k`.
+    /// `n_nodes` (the arena/placement domain) is unchanged, so the
+    /// shifted ids must stay inside it. OS-managed placements
+    /// (`Interleaved`, `FirstTouch`) are left to the OS as before.
+    pub fn with_base_node(mut self, base: usize) -> Self {
+        if base == 0 {
+            return self;
+        }
+        let shift = |p: Placement| match p {
+            Placement::Node(n) => Placement::Node(n + base),
+            Placement::RowShards(shards) => Placement::RowShards(
+                shards.into_iter().map(|(s, e, n)| (s, e, n + base)).collect(),
+            ),
+            other => other,
+        };
+        self.group_nodes = self.group_nodes.iter().map(|&n| n + base).collect();
+        if let WeightMode::NodeLocal(n) = self.weight_mode {
+            self.weight_mode = WeightMode::NodeLocal(n + base);
+        }
+        self.act_placement = shift(self.act_placement.clone());
+        self.kv_placement = shift(self.kv_placement.clone());
+        let top = self.group_nodes.iter().copied().max().unwrap_or(base);
+        assert!(
+            top < self.n_nodes,
+            "base node {base} pushes group node {top} outside the {}-node machine",
+            self.n_nodes
+        );
+        self
+    }
+
     /// Physical pages the KV arena holds (default: `batch_slots`
     /// full-length sequences' worth).
     pub fn kv_pages_total(&self) -> usize {

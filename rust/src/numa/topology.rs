@@ -151,18 +151,35 @@ impl Topology {
     /// 0 first) or `distribute` (round-robin across nodes, as the paper
     /// describes llama.cpp's even thread binding).
     pub fn bind_cores(&self, n: usize, distribute: bool, n_nodes: usize) -> Vec<Core> {
-        let nodes = n_nodes.min(self.n_nodes()).max(1);
+        self.bind_cores_at(0, n, distribute, n_nodes)
+    }
+
+    /// [`Topology::bind_cores`] with the node window shifted to start at
+    /// `base` — how a cluster replica binds its workers onto *its* node
+    /// group instead of every engine stacking onto node 0.
+    pub fn bind_cores_at(
+        &self,
+        base: usize,
+        n: usize,
+        distribute: bool,
+        n_nodes: usize,
+    ) -> Vec<Core> {
+        assert!(base < self.n_nodes(), "base node {base} outside the machine");
+        let nodes = n_nodes.min(self.n_nodes() - base).max(1);
         let mut out = Vec::with_capacity(n);
         if distribute {
             // equal share per node, contiguous inside each node
-            for node in 0..nodes {
-                let (s, e) = crate::util::chunk_range(n, nodes, node);
+            for g in 0..nodes {
+                let node = base + g;
+                let (s, e) = crate::util::chunk_range(n, nodes, g);
                 for i in 0..(e - s) {
                     out.push(Core { id: node * self.cores_per_node + i, node });
                 }
             }
         } else {
-            for id in 0..n {
+            let first = base * self.cores_per_node;
+            for i in 0..n {
+                let id = first + i;
                 assert!(id < self.n_cores(), "not enough cores");
                 out.push(self.core(id));
             }

@@ -12,73 +12,165 @@
 //! code instead of parsing prose:
 //!   ← {"error":{"code":"unknown_op","message":"…","op":"…"}}
 //!   ← {"error":{"code":"bad_request","message":"…"}}
+//!   ← {"error":{"code":"overloaded","message":"…"}}  (connection cap)
 //! Proto-1 peers sent a bare string under "error"; the client helper
 //! accepts both shapes.
+//!
+//! Each connection runs on its own thread, bounded by a concurrency
+//! cap: over-capacity connects are answered with a structured
+//! `overloaded` error and closed instead of piling up threads. The
+//! connection thread owns stages 1 and 4 of the request pipeline
+//! (tokenize / detokenize); scheduler threads never touch text.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::metrics::Metrics;
 use crate::util::json::{obj, Json};
 
 use super::batcher::Router;
+use super::cluster::Cluster;
 use super::request::{GenRequest, GenResponse};
 
-/// A running server (listener thread + connection threads).
+/// Default cap on concurrent connection threads.
+pub const DEFAULT_MAX_CONNS: usize = 64;
+
+/// What a connection thread submits requests to: the single-engine
+/// router, or the cluster's placement layer.
+#[derive(Clone)]
+enum Target {
+    Single(Arc<Router>),
+    Cluster(Arc<Cluster>),
+}
+
+impl Target {
+    fn submit(&self, req: GenRequest) -> Result<GenResponse, String> {
+        match self {
+            Target::Single(r) => r.submit(req),
+            Target::Cluster(c) => c.submit(req),
+        }
+    }
+
+    fn fresh_id(&self) -> u64 {
+        match self {
+            Target::Single(r) => r.fresh_id(),
+            Target::Cluster(c) => c.fresh_id(),
+        }
+    }
+
+    fn metrics(&self) -> Arc<Metrics> {
+        match self {
+            Target::Single(r) => r.metrics.clone(),
+            Target::Cluster(c) => c.metrics.clone(),
+        }
+    }
+
+    fn shutdown(&self) {
+        match self {
+            Target::Single(r) => r.shutdown(),
+            Target::Cluster(c) => c.shutdown(),
+        }
+    }
+}
+
+/// A running server (listener thread + bounded connection threads).
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
-    router: Arc<Router>,
+    target: Target,
     stopping: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
 }
 
 impl ServerHandle {
-    /// Bind and start accepting. Engine slots must be started
-    /// separately (`EngineSlot::serve`) on the same router.
+    /// Bind and start accepting on a single-engine router. Schedulers
+    /// must be started separately on the same router.
     pub fn start(addr: &str, router: Arc<Router>) -> Result<ServerHandle> {
+        ServerHandle::start_with(addr, Target::Single(router), DEFAULT_MAX_CONNS)
+    }
+
+    /// [`ServerHandle::start`] with an explicit connection cap.
+    pub fn start_with_limit(
+        addr: &str,
+        router: Arc<Router>,
+        max_conns: usize,
+    ) -> Result<ServerHandle> {
+        ServerHandle::start_with(addr, Target::Single(router), max_conns)
+    }
+
+    /// Bind and start accepting on a [`Cluster`] (replica schedulers
+    /// are already running — `Cluster::start` spawned them).
+    pub fn start_cluster(addr: &str, cluster: Arc<Cluster>) -> Result<ServerHandle> {
+        ServerHandle::start_with(addr, Target::Cluster(cluster), DEFAULT_MAX_CONNS)
+    }
+
+    fn start_with(addr: &str, target: Target, max_conns: usize) -> Result<ServerHandle> {
+        assert!(max_conns >= 1, "connection cap must admit at least one connection");
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stopping = Arc::new(AtomicBool::new(false));
         let stop2 = stopping.clone();
-        let router2 = router.clone();
+        let target2 = target.clone();
+        let live = Arc::new(AtomicUsize::new(0));
         let accept_thread = std::thread::Builder::new()
             .name("arclight-accept".into())
             .spawn(move || {
                 while !stop2.load(Ordering::Acquire) {
                     match listener.accept() {
-                        Ok((stream, _)) => {
-                            let r = router2.clone();
-                            std::thread::spawn(move || handle_conn(stream, r));
+                        Ok((mut stream, _)) => {
+                            // bounded connection concurrency: admit or
+                            // reject with a structured error, never
+                            // queue unbounded threads
+                            if live.fetch_add(1, Ordering::AcqRel) >= max_conns {
+                                live.fetch_sub(1, Ordering::AcqRel);
+                                let mut line = proto_err(
+                                    "overloaded",
+                                    format!("connection limit {max_conns} reached"),
+                                    vec![],
+                                )
+                                .to_string();
+                                line.push('\n');
+                                let _ = stream.write_all(line.as_bytes());
+                                continue; // drop the stream: close
+                            }
+                            let t = target2.clone();
+                            let live2 = live.clone();
+                            std::thread::spawn(move || {
+                                handle_conn(stream, t);
+                                live2.fetch_sub(1, Ordering::AcqRel);
+                            });
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
+                            std::thread::sleep(Duration::from_millis(5));
                         }
                         Err(_) => break,
                     }
                 }
             })?;
-        Ok(ServerHandle { addr: local, router, stopping, accept_thread: Some(accept_thread) })
+        Ok(ServerHandle { addr: local, target, stopping, accept_thread: Some(accept_thread) })
     }
 
-    pub fn router(&self) -> Arc<Router> {
-        self.router.clone()
+    /// The metrics sink of whatever this server fronts.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.target.metrics()
     }
 
     pub fn stop(mut self) {
         self.stopping.store(true, Ordering::Release);
-        self.router.shutdown();
+        self.target.shutdown();
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }
     }
 }
 
-fn handle_conn(stream: TcpStream, router: Arc<Router>) {
+fn handle_conn(stream: TcpStream, target: Target) {
     let peer = stream.peer_addr().ok();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -90,7 +182,7 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>) {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = dispatch(&line, &router);
+        let reply = dispatch(&line, &target);
         let mut out = reply.to_string();
         out.push('\n');
         if writer.write_all(out.as_bytes()).is_err() {
@@ -104,7 +196,8 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>) {
 pub const PROTO_VERSION: usize = 2;
 
 /// Capabilities a v2 server advertises in the `hello` reply.
-pub const PROTO_FEATURES: [&str; 5] = ["generate", "metrics", "ping", "paged_kv", "prefix_cache"];
+pub const PROTO_FEATURES: [&str; 6] =
+    ["generate", "metrics", "ping", "paged_kv", "prefix_cache", "cluster"];
 
 /// Structured protocol error (`extra` carries op-specific context).
 fn proto_err(code: &str, message: String, extra: Vec<(&str, Json)>) -> Json {
@@ -113,7 +206,7 @@ fn proto_err(code: &str, message: String, extra: Vec<(&str, Json)>) -> Json {
     obj(vec![("error", obj(body))])
 }
 
-fn dispatch(line: &str, router: &Arc<Router>) -> Json {
+fn dispatch(line: &str, target: &Target) -> Json {
     let parsed = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => return proto_err("bad_request", format!("bad json: {e}"), vec![]),
@@ -124,13 +217,13 @@ fn dispatch(line: &str, router: &Arc<Router>) -> Json {
             ("features", Json::Arr(PROTO_FEATURES.iter().map(|&f| f.into()).collect())),
         ]),
         Some("ping") => obj(vec![("ok", true.into())]),
-        Some("metrics") => router.metrics.snapshot(),
+        Some("metrics") => target.metrics().snapshot(),
         Some("generate") | None => match GenRequest::from_json(&parsed) {
             Ok(mut req) => {
                 if req.id == 0 {
-                    req.id = router.fresh_id();
+                    req.id = target.fresh_id();
                 }
-                match router.submit(req) {
+                match target.submit(req) {
                     Ok(resp) => resp.to_json(),
                     Err(e) => proto_err("rejected", e, vec![]),
                 }
@@ -143,6 +236,14 @@ fn dispatch(line: &str, router: &Arc<Router>) -> Json {
     }
 }
 
+/// Default connect timeout of [`ServerClient::connect`].
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Default read timeout of [`ServerClient::connect`] — generous enough
+/// for a saturated batch to turn a generation around, small enough
+/// that a wedged server cannot hang a client forever.
+pub const READ_TIMEOUT: Duration = Duration::from_secs(120);
+
 /// Blocking client for tests, examples and the CLI.
 pub struct ServerClient {
     reader: BufReader<TcpStream>,
@@ -151,7 +252,26 @@ pub struct ServerClient {
 
 impl ServerClient {
     pub fn connect(addr: &str) -> Result<ServerClient> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        ServerClient::connect_with_timeouts(addr, CONNECT_TIMEOUT, Some(READ_TIMEOUT))
+    }
+
+    /// [`ServerClient::connect`] with explicit connect/read timeouts.
+    /// `read_timeout: None` blocks reads forever (the pre-timeout
+    /// behavior, for debugger-friendly sessions).
+    pub fn connect_with_timeouts(
+        addr: &str,
+        connect_timeout: Duration,
+        read_timeout: Option<Duration>,
+    ) -> Result<ServerClient> {
+        use std::net::ToSocketAddrs;
+        let sockaddr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolve {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("no address for {addr}"))?;
+        let stream = TcpStream::connect_timeout(&sockaddr, connect_timeout)
+            .with_context(|| format!("connect {addr}"))?;
+        stream.set_read_timeout(read_timeout)?;
         let writer = stream.try_clone()?;
         Ok(ServerClient { reader: BufReader::new(stream), writer })
     }

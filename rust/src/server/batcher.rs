@@ -2,7 +2,11 @@
 //! baseline.
 //!
 //! Requests land in a bounded queue (backpressure: `submit` fails when
-//! full). Two schedulers can drain it:
+//! full). The per-request path is staged: **tokenize** (connection
+//! thread) → **enqueue** → **batched steps** (scheduler thread) →
+//! **detokenize** (connection thread again) — the scheduler's step
+//! loop never encodes or decodes text, so slow clients cannot stall
+//! the batch. Two schedulers can drain the queue:
 //!
 //! * [`ContinuousBatcher`] — **the** serving path: one engine whose KV
 //!   pool holds `batch_slots` sequences. Every decode step is a single
@@ -21,9 +25,12 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::frontend::{ByteTokenizer, Engine, Sampler, SeqHandle};
-use crate::metrics::Metrics;
+use crate::metrics::{Metrics, ReplicaStats};
 
 use super::request::{GenRequest, GenResponse};
+
+/// Completion cell a scheduler fills and a submitter blocks on.
+pub(crate) type Done = Arc<(Mutex<Option<GenResponse>>, Condvar)>;
 
 /// Batching/queueing parameters.
 #[derive(Clone, Copy, Debug)]
@@ -47,9 +54,10 @@ impl Default for BatcherConfig {
 
 struct Pending {
     req: GenRequest,
+    /// Prompt ids, tokenized on the connection thread (stage 1).
+    tokens: Vec<i32>,
     enqueued: Instant,
-    #[allow(clippy::type_complexity)]
-    done: Arc<(Mutex<Option<GenResponse>>, Condvar)>,
+    done: Done,
 }
 
 /// Shared state between submitters and schedulers.
@@ -65,11 +73,18 @@ pub struct Router {
 
 impl Router {
     pub fn new(cfg: BatcherConfig) -> Arc<Router> {
+        Router::with_metrics(cfg, Arc::new(Metrics::new()))
+    }
+
+    /// [`Router::new`] with a caller-supplied metrics sink — cluster
+    /// replicas share one [`Metrics`] so the top-level snapshot fields
+    /// stay aggregates across every replica.
+    pub fn with_metrics(cfg: BatcherConfig, metrics: Arc<Metrics>) -> Arc<Router> {
         Arc::new(Router {
             cfg,
             queue: Mutex::new(VecDeque::new()),
             notify: Condvar::new(),
-            metrics: Arc::new(Metrics::new()),
+            metrics,
             stopping: AtomicBool::new(false),
             next_id: AtomicU64::new(1),
             batches_formed: AtomicU64::new(0),
@@ -83,22 +98,56 @@ impl Router {
     /// Enqueue; blocks the caller until the response is ready.
     /// Returns an error immediately when the queue is full (backpressure).
     pub fn submit(&self, req: GenRequest) -> Result<GenResponse, String> {
-        let done = Arc::new((Mutex::new(None), Condvar::new()));
+        let tokens = prepare_tokens(&ByteTokenizer, &req);
+        self.submit_prepared(req, tokens)
+    }
+
+    /// [`Router::submit`] with tokenization already done — stage 2 of
+    /// the pipeline. Blocks until the scheduler fills the completion
+    /// cell, then detokenizes on the *calling* thread (stage 4).
+    pub fn submit_prepared(
+        &self,
+        req: GenRequest,
+        tokens: Vec<i32>,
+    ) -> Result<GenResponse, String> {
+        match self.enqueue(req, tokens) {
+            Ok(done) => Ok(Router::wait_done(&done)),
+            Err(e) => {
+                self.metrics.record_failure();
+                Err(e)
+            }
+        }
+    }
+
+    /// Enqueue without blocking for the response; returns the
+    /// completion cell the scheduler will fill. `Err` on a full queue —
+    /// the caller decides whether that is a hard failure (single
+    /// router) or a failover to another replica (cluster placement),
+    /// so no failure is recorded here.
+    pub(crate) fn enqueue(&self, req: GenRequest, tokens: Vec<i32>) -> Result<Done, String> {
+        let done: Done = Arc::new((Mutex::new(None), Condvar::new()));
         {
             let mut q = self.queue.lock().unwrap();
             if q.len() >= self.cfg.queue_capacity {
-                self.metrics.record_failure();
                 return Err("queue full".into());
             }
-            q.push_back(Pending { req, enqueued: Instant::now(), done: done.clone() });
+            q.push_back(Pending { req, tokens, enqueued: Instant::now(), done: done.clone() });
         }
         self.notify.notify_all();
-        let (lock, cv) = &*done;
+        Ok(done)
+    }
+
+    /// Block on a completion cell, then run stage 4 (detokenize) on
+    /// the calling thread — scheduler threads only ever ship token ids.
+    pub(crate) fn wait_done(done: &Done) -> GenResponse {
+        let (lock, cv) = &**done;
         let mut slot = lock.lock().unwrap();
         while slot.is_none() {
             slot = cv.wait(slot).unwrap();
         }
-        Ok(slot.take().unwrap())
+        let mut resp = slot.take().unwrap();
+        resp.text = ByteTokenizer.decode(&resp.tokens);
+        resp
     }
 
     /// Pull the next batch (blocking). `None` once shut down and drained.
@@ -168,15 +217,20 @@ impl Router {
     }
 }
 
-/// Tokenize, clamp to KV capacity and pick the sampler for a request —
-/// shared by both schedulers so they stay token-for-token comparable.
-fn prepare(tokenizer: &ByteTokenizer, req: &GenRequest, cap: usize) -> (Vec<i32>, usize, Sampler) {
-    let toks: Vec<i32> = match (&req.tokens, &req.prompt) {
+/// Stage 1: tokenize a request on the connection thread — scheduler
+/// threads only ever see token ids.
+pub(crate) fn prepare_tokens(tokenizer: &ByteTokenizer, req: &GenRequest) -> Vec<i32> {
+    match (&req.tokens, &req.prompt) {
         (Some(t), _) => t.clone(),
         (None, Some(text)) => tokenizer.encode(text, true),
         (None, None) => vec![crate::frontend::tokenizer::BOS],
-    };
-    let mut prompt: Vec<i32> = toks.into_iter().take(cap.saturating_sub(2)).collect();
+    }
+}
+
+/// Clamp pre-tokenized ids to KV capacity and pick the sampler —
+/// shared by both schedulers so they stay token-for-token comparable.
+fn prepare(tokens: &[i32], req: &GenRequest, cap: usize) -> (Vec<i32>, usize, Sampler) {
+    let mut prompt: Vec<i32> = tokens.iter().copied().take(cap.saturating_sub(2)).collect();
     if prompt.is_empty() {
         prompt.push(crate::frontend::tokenizer::BOS);
     }
@@ -218,15 +272,25 @@ struct ActiveSeq {
 pub struct ContinuousBatcher {
     pub engine: Engine,
     pub tokenizer: ByteTokenizer,
+    /// Per-replica gauges the cluster router places against; a
+    /// standalone batcher carries its own replica-0 entry.
+    pub stats: Arc<ReplicaStats>,
 }
 
 impl ContinuousBatcher {
     pub fn new(engine: Engine) -> Self {
+        let stats = Arc::new(ReplicaStats::new(0, vec![0]));
+        ContinuousBatcher::with_stats(engine, stats)
+    }
+
+    /// [`ContinuousBatcher::new`] with cluster-assigned replica gauges
+    /// (id + NUMA node group).
+    pub fn with_stats(engine: Engine, stats: Arc<ReplicaStats>) -> Self {
         assert!(
             engine.batch_slots() > 1,
             "continuous batching needs an engine with batch_slots > 1"
         );
-        ContinuousBatcher { engine, tokenizer: ByteTokenizer }
+        ContinuousBatcher { engine, tokenizer: ByteTokenizer, stats }
     }
 
     /// Serve until the router shuts down *and* the queue and batch have
@@ -234,6 +298,8 @@ impl ContinuousBatcher {
     pub fn serve(mut self, router: Arc<Router>) {
         router.metrics.set_platform(self.engine.platform(), self.engine.pinned_workers());
         router.metrics.set_kv_pages_total(self.engine.kv_total_pages());
+        self.stats.kv_pages_total.store(self.engine.kv_total_pages() as u64, Ordering::Relaxed);
+        router.metrics.register_replica(self.stats.clone());
         let slots = self.engine.batch_slots();
         let mut active: Vec<ActiveSeq> = Vec::new();
         loop {
@@ -270,7 +336,7 @@ impl ContinuousBatcher {
     /// the front) when the KV arena cannot reserve its page budget yet.
     fn admit(&mut self, p: Pending, active: &mut Vec<ActiveSeq>, router: &Router) -> bool {
         let cap = self.engine.cfg().max_seq;
-        let (prompt, max_new, sampler) = prepare(&self.tokenizer, &p.req, cap);
+        let (prompt, max_new, sampler) = prepare(&p.tokens, &p.req, cap);
         if max_new == 0 {
             // nothing to generate: answer without occupying a lane
             router.metrics.record_queue_wait(p.enqueued.elapsed().as_secs_f64());
@@ -283,6 +349,8 @@ impl ContinuousBatcher {
                 decode_tok_per_s: 0.0,
                 prefix_hit_tokens: 0,
                 kv_pages_used: 0,
+                replica: self.stats.id,
+                node: self.stats.home_node(),
             };
             router.metrics.record_request(prompt.len(), 0, resp.ttft_s, resp.total_s, 0.0);
             let (lock, cv) = &*p.done;
@@ -300,6 +368,7 @@ impl ContinuousBatcher {
         };
         router.metrics.record_queue_wait(p.enqueued.elapsed().as_secs_f64());
         router.metrics.record_prefix_hit(hit);
+        self.stats.prefix_hit_tokens.fetch_add(hit as u64, Ordering::Relaxed);
         active.push(ActiveSeq {
             pending: p,
             seq,
@@ -345,12 +414,15 @@ impl ContinuousBatcher {
         router.metrics.record_step(plan.len(), dispatches);
         router.metrics.record_concurrency(active.len());
         router.metrics.record_kv_pages(self.engine.kv_pages_in_use());
+        self.stats.kv_pages_used.store(self.engine.kv_pages_in_use() as u64, Ordering::Relaxed);
 
         let mut finished: Vec<usize> = Vec::new();
+        let mut sampled = 0u64;
         for (li, &(ai, _, sample)) in plan.iter().enumerate() {
             if !sample {
                 continue;
             }
+            sampled += 1;
             let a = &mut active[ai];
             if a.prefill_done_at.is_none() {
                 a.prefill_done_at = Some(Instant::now());
@@ -366,10 +438,16 @@ impl ContinuousBatcher {
                 finished.push(ai);
             }
         }
+        self.stats.tokens_decoded.fetch_add(sampled, Ordering::Relaxed);
         for &ai in finished.iter().rev() {
             let done = active.remove(ai);
             self.retire(done, router);
         }
+        // placement gauges the cluster router scores against: lanes
+        // still decoding after this step plus what is committed to the
+        // queue but not yet admitted
+        self.stats.live_lanes.store(active.len() as u64, Ordering::Relaxed);
+        self.stats.queue_depth.store(router.queue_len() as u64, Ordering::Relaxed);
     }
 
     fn retire(&mut self, a: ActiveSeq, router: &Router) {
@@ -386,13 +464,17 @@ impl ContinuousBatcher {
             if decode_s > 0.0 { a.generated.len() as f64 / decode_s } else { 0.0 };
         let resp = GenResponse {
             id: a.pending.req.id,
-            text: self.tokenizer.decode(&a.generated),
+            // stage 4 (detokenize) belongs to the submitter's thread:
+            // the scheduler ships ids only, Router::wait_done fills text
+            text: String::new(),
             tokens: a.generated,
             ttft_s,
             total_s,
             decode_tok_per_s,
             prefix_hit_tokens: a.prefix_hit,
             kv_pages_used,
+            replica: self.stats.id,
+            node: self.stats.home_node(),
         };
         router.metrics.record_request(
             a.prompt.len(),
@@ -449,12 +531,13 @@ impl EngineSlot {
     fn run_one(&mut self, p: &Pending) -> GenResponse {
         let queued = p.enqueued.elapsed().as_secs_f64();
         let cap = self.engine.cfg().max_seq;
-        let (prompt, max_new, sampler) = prepare(&self.tokenizer, &p.req, cap);
+        let (prompt, max_new, sampler) = prepare(&p.tokens, &p.req, cap);
         self.engine.reset();
         let res = self.engine.generate(&prompt, max_new, &sampler);
         GenResponse {
             id: p.req.id,
-            text: self.tokenizer.decode(&res.tokens),
+            // detokenized by the submitter (Router::wait_done)
+            text: String::new(),
             tokens: res.tokens.clone(),
             ttft_s: queued + res.prefill_seconds,
             total_s: queued + res.prefill_seconds + res.decode_seconds,
@@ -463,6 +546,8 @@ impl EngineSlot {
             // it never shares pages across requests
             prefix_hit_tokens: 0,
             kv_pages_used: 0,
+            replica: 0,
+            node: 0,
         }
     }
 }
@@ -487,6 +572,7 @@ mod tests {
             pin: false,
             page_size: 16,
             kv_pages: None,
+            base_node: 0,
         }
     }
 
@@ -763,6 +849,48 @@ mod tests {
         assert_eq!(ok.tokens.len(), 2);
         router.shutdown();
         h.join().unwrap();
+    }
+
+    #[test]
+    fn staged_pipeline_detokenizes_on_the_submitter_thread() {
+        // the scheduler ships ids only; Router::wait_done must fill the
+        // text on the submitting side, identically to decoding the ids
+        let router = Router::new(BatcherConfig::default());
+        let batcher = tiny_continuous(2);
+        let r2 = router.clone();
+        let h = std::thread::spawn(move || batcher.serve(r2));
+        let resp = router.submit(GenRequest::text(1, "staged", 4)).unwrap();
+        assert_eq!(resp.text, ByteTokenizer.decode(&resp.tokens));
+        assert!(!resp.text.is_empty());
+        // pre-tokenized submission takes the same path
+        let req = GenRequest::text(2, "ignored", 4);
+        let tokens = prepare_tokens(&ByteTokenizer, &GenRequest::text(2, "staged", 4));
+        let pre = router.submit_prepared(req, tokens).unwrap();
+        assert_eq!(pre.tokens, resp.tokens, "explicit stage-1 tokens must win");
+        router.shutdown();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn standalone_batcher_reports_replica_zero() {
+        let router = Router::new(BatcherConfig::default());
+        let batcher = tiny_continuous(2);
+        let stats = batcher.stats.clone();
+        let r2 = router.clone();
+        let h = std::thread::spawn(move || batcher.serve(r2));
+        let resp = router.submit(GenRequest::text(1, "provenance", 4)).unwrap();
+        assert_eq!(resp.replica, 0);
+        assert_eq!(resp.node, 0);
+        assert!(stats.tokens_decoded.load(Ordering::Relaxed) >= 4);
+        assert!(stats.kv_pages_total.load(Ordering::Relaxed) > 0);
+        router.shutdown();
+        h.join().unwrap();
+        // serve registered its gauges: the snapshot carries one replica
+        let snap = router.metrics.snapshot();
+        let reps = snap.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), 1);
+        assert_eq!(reps[0].get("replica").unwrap().as_usize(), Some(0));
+        assert!(reps[0].get("tokens_decoded").unwrap().as_usize().unwrap() >= 4);
     }
 
     #[test]

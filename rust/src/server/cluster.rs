@@ -1,0 +1,219 @@
+//! Cluster serving: one [`ContinuousBatcher`] replica per NUMA node
+//! group behind a placement router.
+//!
+//! The paper's single engine spans the whole machine; at serving
+//! concurrency it is often better to split the machine into replicas —
+//! each engine pinned to its own node group with a node-local KV arena
+//! — and place requests across them. Placement scores every replica by
+//!
+//! * **prefix affinity** — the longest run of the prompt's completed
+//!   pages already in the replica's prefix index (the FNV rolling-hash
+//!   key the paged KV cache registers); routing a warm prompt back to
+//!   the replica that holds its pages skips that much prefill, and
+//! * **load** — lanes decoding now plus requests committed to the
+//!   replica's queue; affinity may override load only inside a small
+//!   tolerance band, so one hot prefix cannot starve the fleet.
+//!
+//! The per-connection path stays staged exactly like the single-router
+//! server: the connection thread tokenizes (stage 1), the cluster
+//! places and enqueues (stage 2), the chosen replica's scheduler runs
+//! batched steps (stage 3), and the connection thread detokenizes the
+//! reply (stage 4). Responses carry `replica`/`node` provenance.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::frontend::{ByteTokenizer, Engine, PrefixProbe};
+use crate::metrics::{Metrics, ReplicaStats};
+
+use super::batcher::{prepare_tokens, BatcherConfig, ContinuousBatcher, Router};
+use super::request::{GenRequest, GenResponse};
+
+/// Cluster-wide serving parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    /// Queue/batch parameters applied to every replica's router.
+    pub batcher: BatcherConfig,
+    /// Prefix affinity may pull a request onto a replica whose load is
+    /// at most `min_load + load_tolerance`; beyond the band, load wins.
+    pub load_tolerance: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { batcher: BatcherConfig::default(), load_tolerance: 2 }
+    }
+}
+
+/// Per-replica inputs to one placement decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicaScore {
+    /// Prompt tokens resident in the replica's prefix index (longest
+    /// completed-page run from the start of the prompt).
+    pub hit_tokens: usize,
+    /// Lanes decoding plus queued requests at scoring time.
+    pub load: usize,
+}
+
+/// The placement policy, pure and deterministic: among replicas whose
+/// load is within `tolerance` of the least-loaded one, pick the
+/// longest prefix run; break ties toward lower load, then lower index.
+/// Cold prompts (no hits anywhere) therefore go to the least-loaded
+/// replica, and a single replica is always index 0.
+pub fn pick_replica(scores: &[ReplicaScore], tolerance: usize) -> usize {
+    assert!(!scores.is_empty(), "placement needs at least one replica");
+    let min_load = scores.iter().map(|s| s.load).min().unwrap();
+    scores
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.load <= min_load + tolerance)
+        .min_by_key(|&(i, s)| (std::cmp::Reverse(s.hit_tokens), s.load, i))
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+struct Replica {
+    router: Arc<Router>,
+    probe: PrefixProbe,
+    stats: Arc<ReplicaStats>,
+}
+
+impl Replica {
+    fn score(&self, tokens: &[i32]) -> ReplicaScore {
+        ReplicaScore {
+            hit_tokens: self.probe.prefix_run_tokens(tokens),
+            // read the queue live rather than the sampled gauge: the
+            // gauge only refreshes at step boundaries, and placement
+            // must see requests committed a microsecond ago
+            load: self.stats.live_lanes.load(Ordering::Relaxed) as usize + self.router.queue_len(),
+        }
+    }
+}
+
+/// A fleet of [`ContinuousBatcher`] replicas, one per NUMA node group,
+/// behind the placement policy. All replicas share one [`Metrics`], so
+/// the top-level snapshot fields aggregate the whole cluster while the
+/// `replicas` array breaks them out per node group.
+pub struct Cluster {
+    replicas: Vec<Replica>,
+    pub metrics: Arc<Metrics>,
+    tolerance: usize,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    next_id: AtomicU64,
+}
+
+impl Cluster {
+    /// Build one engine per node group via `build(replica_id, nodes)`
+    /// and start a scheduler thread for each. The builder is expected
+    /// to pin the engine onto its group (set `base_node` to
+    /// `nodes[0]`); the cluster only wires routers, probes and gauges.
+    pub fn start<F>(groups: &[Vec<usize>], cfg: ClusterConfig, mut build: F) -> Result<Arc<Cluster>>
+    where
+        F: FnMut(usize, &[usize]) -> Result<Engine>,
+    {
+        assert!(!groups.is_empty(), "cluster needs at least one node group");
+        let metrics = Arc::new(Metrics::new());
+        let mut replicas = Vec::with_capacity(groups.len());
+        let mut threads = Vec::with_capacity(groups.len());
+        for (id, nodes) in groups.iter().enumerate() {
+            let engine = build(id, nodes)?;
+            let stats = Arc::new(ReplicaStats::new(id, nodes.clone()));
+            let probe = engine.prefix_probe();
+            let router = Router::with_metrics(cfg.batcher, metrics.clone());
+            let batcher = ContinuousBatcher::with_stats(engine, stats.clone());
+            let r = router.clone();
+            threads.push(std::thread::spawn(move || batcher.serve(r)));
+            replicas.push(Replica { router, probe, stats });
+        }
+        Ok(Arc::new(Cluster {
+            replicas,
+            metrics,
+            tolerance: cfg.load_tolerance,
+            threads: Mutex::new(threads),
+            next_id: AtomicU64::new(1),
+        }))
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Serve one request: tokenize here (stage 1, the caller's thread),
+    /// score and enqueue on the chosen replica (stage 2), block for the
+    /// scheduler's ids (stage 3) and detokenize on the way out (stage
+    /// 4). A full queue fails over to the other replicas in load order
+    /// before reporting backpressure.
+    pub fn submit(&self, req: GenRequest) -> Result<GenResponse, String> {
+        let tokens = prepare_tokens(&ByteTokenizer, &req);
+        let scores: Vec<ReplicaScore> = self.replicas.iter().map(|r| r.score(&tokens)).collect();
+        let first = pick_replica(&scores, self.tolerance);
+        // failover order: the placed replica, then the rest by load
+        let mut order: Vec<usize> = (0..self.replicas.len()).collect();
+        order.sort_by_key(|&i| (i != first, scores[i].load, i));
+        for &i in &order {
+            match self.replicas[i].router.enqueue(req.clone(), tokens.clone()) {
+                Ok(done) => return Ok(Router::wait_done(&done)),
+                Err(_) => continue, // queue full — try the next replica
+            }
+        }
+        self.metrics.record_failure();
+        Err("queue full".into())
+    }
+
+    /// Stop every replica and join its scheduler thread (idempotent).
+    pub fn shutdown(&self) {
+        for r in &self.replicas {
+            r.router.shutdown();
+        }
+        for t in self.threads.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(hit_tokens: usize, load: usize) -> ReplicaScore {
+        ReplicaScore { hit_tokens, load }
+    }
+
+    #[test]
+    fn single_replica_always_wins() {
+        assert_eq!(pick_replica(&[s(0, 7)], 2), 0);
+        assert_eq!(pick_replica(&[s(64, 0)], 0), 0);
+    }
+
+    #[test]
+    fn cold_prompts_go_to_least_loaded() {
+        assert_eq!(pick_replica(&[s(0, 3), s(0, 1), s(0, 2)], 2), 1);
+        // tie on load → lowest index
+        assert_eq!(pick_replica(&[s(0, 2), s(0, 2)], 2), 0);
+    }
+
+    #[test]
+    fn affinity_wins_within_the_tolerance_band() {
+        // replica 1 holds 32 prefix tokens and is only 2 busier than
+        // the least-loaded replica: affinity overrides load
+        assert_eq!(pick_replica(&[s(0, 1), s(32, 3)], 2), 1);
+        // equal hits inside the band → lower load wins
+        assert_eq!(pick_replica(&[s(16, 3), s(16, 1)], 2), 1);
+    }
+
+    #[test]
+    fn load_wins_beyond_the_tolerance_band() {
+        // same 32-token run, but the warm replica is 3 over the
+        // minimum with tolerance 2: it is filtered out
+        assert_eq!(pick_replica(&[s(0, 1), s(32, 4)], 2), 0);
+        // tolerance 0 is strict least-loaded with affinity tie-break
+        assert_eq!(pick_replica(&[s(8, 1), s(32, 1), s(0, 0)], 0), 2);
+    }
+}

@@ -11,11 +11,19 @@
 //! ([`EngineSlot`]) is kept as the benchmark baseline. The wire
 //! protocol is line-delimited JSON over TCP; Python is nowhere on this
 //! path.
+//!
+//! [`Cluster`] scales the same design across the machine: one batcher
+//! replica per NUMA node group, each with its own engine and KV arena,
+//! behind a placement router that scores replicas by load and prefix
+//! affinity. Connection threads tokenize and detokenize; scheduler
+//! threads only ever step batches.
 
 pub mod api;
 pub mod batcher;
+pub mod cluster;
 pub mod request;
 
 pub use api::{ServerClient, ServerHandle};
 pub use batcher::{BatcherConfig, ContinuousBatcher, EngineSlot, Router};
+pub use cluster::{pick_replica, Cluster, ClusterConfig, ReplicaScore};
 pub use request::{GenRequest, GenResponse};

@@ -81,6 +81,11 @@ pub struct GenResponse {
     pub prefix_hit_tokens: usize,
     /// KV pages the sequence held at retirement.
     pub kv_pages_used: usize,
+    /// Cluster replica that served the request (0 outside cluster
+    /// mode).
+    pub replica: usize,
+    /// First NUMA node of that replica's placement group.
+    pub node: usize,
 }
 
 impl GenResponse {
@@ -94,6 +99,8 @@ impl GenResponse {
             ("decode_tok_per_s", self.decode_tok_per_s.into()),
             ("prefix_hit_tokens", self.prefix_hit_tokens.into()),
             ("kv_pages_used", self.kv_pages_used.into()),
+            ("replica", self.replica.into()),
+            ("node", self.node.into()),
         ])
     }
 
@@ -111,6 +118,8 @@ impl GenResponse {
             decode_tok_per_s: j.get("decode_tok_per_s").and_then(Json::as_f64).unwrap_or(0.0),
             prefix_hit_tokens: j.get("prefix_hit_tokens").and_then(Json::as_usize).unwrap_or(0),
             kv_pages_used: j.get("kv_pages_used").and_then(Json::as_usize).unwrap_or(0),
+            replica: j.get("replica").and_then(Json::as_usize).unwrap_or(0),
+            node: j.get("node").and_then(Json::as_usize).unwrap_or(0),
         })
     }
 }
@@ -152,6 +161,8 @@ mod tests {
             decode_tok_per_s: 20.0,
             prefix_hit_tokens: 16,
             kv_pages_used: 3,
+            replica: 1,
+            node: 2,
         };
         let j = r.to_json();
         let back = GenResponse::from_json(&j).unwrap();
@@ -159,6 +170,8 @@ mod tests {
         assert_eq!(back.text, "ab");
         assert_eq!(back.prefix_hit_tokens, 16);
         assert_eq!(back.kv_pages_used, 3);
+        assert_eq!(back.replica, 1);
+        assert_eq!(back.node, 2);
     }
 
     #[test]
@@ -169,5 +182,7 @@ mod tests {
         let back = GenResponse::from_json(&j).unwrap();
         assert_eq!(back.prefix_hit_tokens, 0);
         assert_eq!(back.kv_pages_used, 0);
+        assert_eq!(back.replica, 0);
+        assert_eq!(back.node, 0);
     }
 }

@@ -84,6 +84,7 @@ fn batched_decode_token_identical_to_serial_through_trait() {
         pin: false,
         page_size: 16,
         kv_pages: None,
+        base_node: 0,
     };
     let mut serial = Engine::new_synthetic(ModelConfig::tiny(), &opts(1)).unwrap();
     let prompt = [5i32, 9, 2, 7];
@@ -127,6 +128,7 @@ fn forced_tier_matrix_units_and_logits_invariant() {
         pin: false,
         page_size: 16,
         kv_pages: None,
+        base_node: 0,
     };
     let mut baseline: Option<(Vec<usize>, Vec<f32>)> = None;
     for tier in KernelTier::supported_tiers() {

@@ -44,6 +44,7 @@ fn engine(strategy: Strategy, threads: usize, prefill: Option<usize>) -> Engine 
         pin: false,
         page_size: 16,
         kv_pages: None,
+        base_node: 0,
     };
     Engine::from_alf(&dir.join("tiny.alf"), &opts).unwrap()
 }

@@ -124,6 +124,7 @@ fn paged_engine(batch_slots: usize, kv_pages: usize) -> Engine {
         pin: false,
         page_size: PS,
         kv_pages: Some(kv_pages),
+        base_node: 0,
     };
     Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
 }

@@ -139,6 +139,7 @@ fn prop_engine_deterministic_across_random_configs() {
             pin: false,
             page_size: 16,
             kv_pages: None,
+            base_node: 0,
         };
         let mut e = Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap();
         let res = e.generate(&[5, 9, 2], 10, &arclight::frontend::Sampler::greedy());

@@ -10,10 +10,15 @@ use arclight::frontend::{Engine, EngineOptions};
 use arclight::model::ModelConfig;
 use arclight::numa::Topology;
 use arclight::server::{
-    BatcherConfig, ContinuousBatcher, EngineSlot, GenRequest, Router, ServerClient, ServerHandle,
+    BatcherConfig, Cluster, ClusterConfig, ContinuousBatcher, EngineSlot, GenRequest, Router,
+    ServerClient, ServerHandle,
 };
 
 fn tiny_engine(batch_slots: usize) -> Engine {
+    tiny_engine_at(0, batch_slots)
+}
+
+fn tiny_engine_at(base_node: usize, batch_slots: usize) -> Engine {
     let opts = EngineOptions {
         strategy: Strategy::arclight_single(),
         threads: 2,
@@ -24,6 +29,7 @@ fn tiny_engine(batch_slots: usize) -> Engine {
         pin: false,
         page_size: 16,
         kv_pages: None,
+        base_node,
     };
     Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
 }
@@ -242,6 +248,190 @@ fn continuous_server_matches_slot_server_tokens() {
         t.join().unwrap();
     }
     assert_eq!(a.tokens, b.tokens);
+}
+
+/// One replica per simulated NUMA node group, each engine pinned onto
+/// its group via `base_node`, all behind one TCP front door.
+fn start_cluster_server(replicas: usize) -> (ServerHandle, Arc<Cluster>) {
+    let plat = arclight::hw::Platform::Simulated(Topology::uniform(2, 2, 100.0, 25.0));
+    let groups = plat.node_groups(Some(replicas));
+    let cfg = ClusterConfig { batcher: BatcherConfig::default(), load_tolerance: 2 };
+    let cluster =
+        Cluster::start(&groups, cfg, |_id, nodes| Ok(tiny_engine_at(nodes[0], 3))).unwrap();
+    let server = ServerHandle::start_cluster("127.0.0.1:0", cluster.clone()).unwrap();
+    (server, cluster)
+}
+
+#[test]
+fn cluster_generation_matches_single_engine_serial() {
+    // serial reference: one engine, one prompt at a time
+    let prompts = ["alpha prompt", "beta prompt", "gamma prompt", "delta prompt"];
+    let (s1, r1, t1) = start_continuous(2);
+    let mut c = ServerClient::connect(&s1.addr.to_string()).unwrap();
+    let mut serial = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        serial.push(c.generate(&GenRequest::text(i as u64 + 1, p, 8)).unwrap().tokens);
+    }
+    s1.stop();
+    drop(r1);
+    for t in t1 {
+        t.join().unwrap();
+    }
+
+    // cluster mode: the same prompts interleaved across two replicas
+    let (server, cluster) = start_cluster_server(2);
+    assert_eq!(cluster.n_replicas(), 2);
+    let addr = server.addr.to_string();
+    let mut joins = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let addr = addr.clone();
+        let p = p.to_string();
+        joins.push(std::thread::spawn(move || {
+            let mut c = ServerClient::connect(&addr).unwrap();
+            c.generate(&GenRequest::text(i as u64 + 1, &p, 8)).unwrap()
+        }));
+    }
+    let got: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    for (i, r) in got.iter().enumerate() {
+        // placement must be invisible in the tokens
+        assert_eq!(r.tokens, serial[i], "prompt {i} diverged in cluster mode");
+        // responses carry replica/node provenance within the fleet
+        assert!(r.replica < 2, "replica {} out of range", r.replica);
+        assert!(r.node < 2, "node {} out of range", r.node);
+    }
+    server.stop();
+}
+
+#[test]
+fn single_replica_cluster_degrades_to_continuous() {
+    let (server, cluster) = start_cluster_server(1);
+    assert_eq!(cluster.n_replicas(), 1);
+    let mut c = ServerClient::connect(&server.addr.to_string()).unwrap();
+    let a = c.generate(&GenRequest::text(1, "degenerate fleet", 8)).unwrap();
+    assert_eq!((a.replica, a.node), (0, 0));
+    server.stop();
+
+    let (s2, r2, t2) = start_continuous(3);
+    let mut c2 = ServerClient::connect(&s2.addr.to_string()).unwrap();
+    let b = c2.generate(&GenRequest::text(1, "degenerate fleet", 8)).unwrap();
+    s2.stop();
+    drop(r2);
+    for t in t2 {
+        t.join().unwrap();
+    }
+    assert_eq!(a.tokens, b.tokens);
+}
+
+#[test]
+fn warm_prompts_route_back_to_their_replica() {
+    let (server, _cluster) = start_cluster_server(2);
+    let addr = server.addr.to_string();
+    let mut c = ServerClient::connect(&addr).unwrap();
+    // 40 bytes + BOS = 41 tokens: two completed 16-token kv pages
+    let long = "this prompt spans a couple of kv pages!!";
+    let a = c.generate(&GenRequest::text(1, long, 6)).unwrap();
+    let b = c.generate(&GenRequest::text(2, long, 6)).unwrap();
+    assert_eq!(b.replica, a.replica, "warm prompt should return to its pages");
+    assert!(b.prefix_hit_tokens >= 16, "expected a prefix hit, got {}", b.prefix_hit_tokens);
+    assert_eq!(a.tokens, b.tokens);
+    server.stop();
+}
+
+#[test]
+fn cluster_metrics_report_replica_array() {
+    let (server, _cluster) = start_cluster_server(2);
+    let addr = server.addr.to_string();
+    let mut c = ServerClient::connect(&addr).unwrap();
+    for i in 0..4u64 {
+        c.generate(&GenRequest::text(i + 1, "warm the fleet", 4)).unwrap();
+    }
+    let m = c.metrics().unwrap();
+    // top-level fields stay cluster-wide aggregates
+    assert_eq!(m.get("requests_total").unwrap().as_usize(), Some(4));
+    let reps = m.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(reps.len(), 2);
+    let mut decoded = 0;
+    let mut pages_total = 0;
+    for (i, r) in reps.iter().enumerate() {
+        assert_eq!(r.get("replica").unwrap().as_usize(), Some(i));
+        assert!(r.get("node").unwrap().as_usize().unwrap() < 2);
+        assert!(r.get("live_lanes").is_some());
+        assert!(r.get("queue_depth").is_some());
+        assert!(r.get("tokens_per_s").is_some());
+        assert!(r.get("prefix_hit_tokens").is_some());
+        decoded += r.get("tokens_decoded").unwrap().as_usize().unwrap();
+        pages_total += r.get("kv_pages_total").unwrap().as_usize().unwrap();
+    }
+    assert!(decoded >= 16, "fleet decoded only {decoded} tokens");
+    // the aggregate kv gauge is the sum over replicas
+    assert_eq!(m.get("kv_pages_total").unwrap().as_usize(), Some(pages_total));
+    server.stop();
+}
+
+#[test]
+fn over_capacity_connections_get_structured_overloaded() {
+    let router = Router::new(BatcherConfig::default());
+    let batcher = ContinuousBatcher::new(tiny_engine(2));
+    let r = router.clone();
+    let threads = vec![std::thread::spawn(move || batcher.serve(r))];
+    let server = ServerHandle::start_with_limit("127.0.0.1:0", router.clone(), 1).unwrap();
+    let addr = server.addr.to_string();
+
+    let mut first = ServerClient::connect(&addr).unwrap();
+    assert!(first.ping().unwrap()); // the one admitted slot is now held
+
+    // the next connection is over the cap: one structured error, close
+    use std::io::BufRead;
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = std::io::BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = arclight::util::json::Json::parse(&line).unwrap();
+    let code = j.get("error").and_then(|e| e.get("code")).and_then(|c| c.as_str());
+    assert_eq!(code, Some("overloaded"), "got {line}");
+    // the admitted connection is unaffected
+    assert!(first.ping().unwrap());
+
+    // closing the admitted connection frees the slot
+    drop(first);
+    let mut readmitted = false;
+    for _ in 0..200 {
+        std::thread::sleep(Duration::from_millis(5));
+        let mut c = ServerClient::connect(&addr).unwrap();
+        if c.ping().unwrap_or(false) {
+            readmitted = true;
+            break;
+        }
+    }
+    assert!(readmitted, "slot never freed after the first connection closed");
+
+    server.stop();
+    drop(router);
+    for t in threads {
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn client_read_timeout_fires_on_a_silent_server() {
+    // a listener that accepts and then never says anything
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let silent = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        std::thread::sleep(Duration::from_millis(500));
+        drop(stream);
+    });
+    let mut c = ServerClient::connect_with_timeouts(
+        &addr,
+        Duration::from_secs(1),
+        Some(Duration::from_millis(100)),
+    )
+    .unwrap();
+    let start = std::time::Instant::now();
+    assert!(c.ping().is_err(), "read from a silent server must time out");
+    assert!(start.elapsed() < Duration::from_millis(450), "timeout took {:?}", start.elapsed());
+    silent.join().unwrap();
 }
 
 #[test]

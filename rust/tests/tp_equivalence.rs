@@ -20,6 +20,7 @@ fn engine(strategy: Strategy, threads: usize) -> Engine {
         pin: false,
         page_size: 16,
         kv_pages: None,
+        base_node: 0,
     };
     Engine::new_synthetic(ModelConfig::tiny(), &opts).unwrap()
 }
@@ -86,6 +87,7 @@ fn four_way_tp_rejected_on_tiny() {
         pin: false,
         page_size: 16,
         kv_pages: None,
+        base_node: 0,
     };
     let r = std::panic::catch_unwind(|| Engine::new_synthetic(ModelConfig::tiny(), &opts));
     assert!(r.is_err(), "tiny model must reject 4-way TP (2 kv heads)");
@@ -105,6 +107,7 @@ fn small_model_four_way_tp_agrees() {
             pin: false,
             page_size: 16,
             kv_pages: None,
+            base_node: 0,
         };
         Engine::new_synthetic(ModelConfig::small_25m(), &opts).unwrap()
     };

@@ -15,6 +15,7 @@
 //!
 //!     cargo bench --bench ops_hotpath [-- --quick] [-- --json <path>]
 //!         [-- --pin] [-- --tier scalar|avx2|avx512|neon]
+//!         [-- --strategy arclight|llama-isolate|auto] [-- --cache <path>]
 //!
 //! `--quick` shrinks sizes/iterations for the CI bench-smoke leg;
 //! `--json <path>` writes the measured per-iteration seconds as a JSON
@@ -24,11 +25,19 @@
 //! `--tier` forces the SIMD kernel tier (default: auto-detect). The
 //! Q4_0 GEMV section always benches the scalar oracle next to the
 //! active tier so the SIMD speedup is visible in one run.
+//!
+//! `--strategy auto` lets the cost-model auto-tuner pick the
+//! end-to-end engines' strategy; `--cache` points at the calibration
+//! cache (`arclight calibrate`), whose measured matrix — when its
+//! fingerprint matches a detected host platform — replaces the SLIT
+//! placeholder lowering. The JSON report records `strategy_chosen`,
+//! `predicted_step_us` and `bandwidth_source` so roofline fractions
+//! are never silently read against the placeholder scale.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use arclight::baseline::Strategy;
+use arclight::baseline::{tune, Strategy};
 use arclight::frontend::{Engine, EngineOptions, Sampler};
 use arclight::hw::{membind, Platform};
 use arclight::model::ModelConfig;
@@ -87,13 +96,15 @@ fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
 }
 
 fn engine_opts(
+    strategy: Strategy,
+    base_node: usize,
     platform: &Platform,
     pin: bool,
     threads: usize,
     batch_slots: usize,
 ) -> EngineOptions {
     EngineOptions {
-        strategy: Strategy::arclight_single(),
+        strategy,
         threads,
         platform: platform.clone(),
         prefill_rows: None,
@@ -102,7 +113,32 @@ fn engine_opts(
         pin,
         page_size: 16,
         kv_pages: None,
-        base_node: 0,
+        base_node,
+    }
+}
+
+/// `--strategy` resolution for the end-to-end sections: explicit
+/// names, or `auto` through the cost-model tuner (returns the winner's
+/// placement and predicted step µs).
+fn resolve_strategy(
+    name: &str,
+    cfg: &ModelConfig,
+    platform: &Platform,
+    threads: usize,
+) -> (Strategy, usize, Option<f64>) {
+    match name {
+        "auto" => {
+            let topo = platform.topology();
+            let t = tune::auto_select(cfg, topo, threads, 0, topo.n_nodes())
+                .expect("auto-tune: no strategy fits");
+            (t.best.strategy, t.best.base_node, Some(t.best.predicted_us))
+        }
+        "arclight" => (Strategy::arclight_single(), 0, None),
+        "llama-isolate" => (Strategy::llama_isolate(), 0, None),
+        other => {
+            eprintln!("unknown --strategy '{other}' (arclight|llama-isolate|auto)");
+            std::process::exit(2);
+        }
     }
 }
 
@@ -130,6 +166,18 @@ fn main() {
     let tier = KernelTier::active();
     // worker threads the end-to-end engine sections below actually use
     let max_engine_threads = if quick { 2 } else { 4 };
+    let strategy_arg = args
+        .iter()
+        .position(|a| a == "--strategy")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "arclight".to_string());
+    let cache = args
+        .iter()
+        .position(|a| a == "--cache")
+        .and_then(|i| args.get(i + 1))
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(arclight::hw::bench::default_cache_path);
     let platform = if pin {
         let (p, note) = Platform::host_with_membind(max_engine_threads);
         if let Some(why) = note {
@@ -139,6 +187,9 @@ fn main() {
     } else {
         Platform::simulated()
     };
+    // a fingerprint-matched calibration upgrades a host platform's
+    // lowering to the measured matrix (no-op on simulated)
+    let platform = platform.with_cached_calibration(&cache);
     // roofline reference: one node's local memory bandwidth
     let node_bw = platform.topology().bandwidth(0, 0);
     let mut pinned_workers = 0usize;
@@ -276,9 +327,20 @@ fn main() {
     // dispatch tax of a real decode pass: pool dispatches per decoded
     // token (1 under the compiled-pass scheduler)
     let mut dispatches_per_token = 0.0f64;
+    let mut strategy_chosen = String::from("arclight");
+    let mut predicted_step_us: Option<f64> = None;
     for &threads in thread_counts {
-        let mut engine =
-            Engine::new_synthetic(cfg.clone(), &engine_opts(&platform, pin, threads, 1)).unwrap();
+        let (strat, base, predicted) = resolve_strategy(&strategy_arg, &cfg, &platform, threads);
+        strategy_chosen = strat.name();
+        predicted_step_us = predicted;
+        if let Some(us) = predicted {
+            println!("auto strategy @ {threads} thread(s): {strategy_chosen} (predicted {us:.1} µs/step)");
+        }
+        let mut engine = Engine::new_synthetic(
+            cfg.clone(),
+            &engine_opts(strat, base, &platform, pin, threads, 1),
+        )
+        .unwrap();
         pinned_workers = pinned_workers.max(engine.pinned_workers());
         engine.prefill(&[1, 2, 3, 4]);
         let horizon = cfg.max_seq - 24;
@@ -308,8 +370,12 @@ fn main() {
     // --- batched decode step (continuous batching, 4 live sequences) ---------
     {
         let slots = 4usize;
-        let mut engine =
-            Engine::new_synthetic(cfg.clone(), &engine_opts(&platform, pin, 2, slots)).unwrap();
+        let (strat, base, _) = resolve_strategy(&strategy_arg, &cfg, &platform, 2);
+        let mut engine = Engine::new_synthetic(
+            cfg.clone(),
+            &engine_opts(strat, base, &platform, pin, 2, slots),
+        )
+        .unwrap();
         let budget = cfg.max_seq;
         let mut seqs: Vec<_> = (0..slots).map(|_| engine.seq_start(budget).unwrap()).collect();
         let horizon = cfg.max_seq - 24;
@@ -331,7 +397,9 @@ fn main() {
     }
 
     // --- generation sanity ----------------------------------------------------
-    let mut engine = Engine::new_synthetic(cfg, &engine_opts(&platform, pin, 2, 1)).unwrap();
+    let (strat, base, _) = resolve_strategy(&strategy_arg, &cfg, &platform, 2);
+    let mut engine =
+        Engine::new_synthetic(cfg, &engine_opts(strat, base, &platform, pin, 2, 1)).unwrap();
     let res = engine.generate(&[1, 2, 3, 4, 5], if quick { 8 } else { 32 }, &Sampler::greedy());
     println!("\ngenerate {} tokens: {:.1} tok/s decode", res.decode_tokens, res.decode_tok_per_s());
 
@@ -341,6 +409,9 @@ fn main() {
             ("benchmark", "ops_hotpath".into()),
             ("quick", quick.into()),
             ("platform", platform.name().into()),
+            ("strategy_chosen", strategy_chosen.clone().into()),
+            ("predicted_step_us", predicted_step_us.map(Json::from).unwrap_or(Json::Null)),
+            ("bandwidth_source", platform.topology().bw_source.name().into()),
             ("tier", tier.name().into()),
             ("node_bandwidth_gb", (node_bw / 1e9).into()),
             ("pinned_workers", pinned_workers.into()),

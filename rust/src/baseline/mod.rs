@@ -11,6 +11,8 @@
 //! * the synchronization discipline (Sync A/B vs llama.cpp's global
 //!   barrier after every operator).
 
+pub mod tune;
+
 use std::sync::Arc;
 
 use crate::hw::Platform;
@@ -177,7 +179,14 @@ impl Strategy {
     /// the same binding/organization derivation as
     /// [`Strategy::real_executor`], charged to the cost model instead.
     pub fn sim_executor(&self, topo: &Topology, threads: usize) -> SimExecutor {
-        let cores = self.bind_cores(topo, threads);
+        self.sim_executor_at(topo, threads, 0)
+    }
+
+    /// [`Strategy::sim_executor`] with the node window starting at
+    /// `base` — the auto-tuner costs candidate placements anywhere on
+    /// the machine, not just node 0.
+    pub fn sim_executor_at(&self, topo: &Topology, threads: usize, base: usize) -> SimExecutor {
+        let cores = self.bind_cores_at(topo, threads, base);
         let (single, tp) = self.organizations(&cores);
         SimExecutor::new(CostModel::new(topo.clone()), cores, single, tp, self.sync())
     }

@@ -1,0 +1,195 @@
+//! Strategy auto-selection over the virtual-time cost model.
+//!
+//! With a *measured* bandwidth matrix lowered into the topology
+//! (`hw::bench`), `SimExecutor`'s virtual time is trustworthy enough
+//! to rank strategies — so instead of asking the user to guess a TP
+//! width, `--strategy auto` enumerates the candidate space the paper
+//! explores by hand (tensor-parallel width × Sync A/B discipline ×
+//! node-window placement), costs one representative decode step per
+//! candidate through the exact graph-build + binding path the engine
+//! would use, and picks the cheapest.
+//!
+//! The search is deliberately small and exhaustive: a machine has
+//! single-digit NUMA nodes, so the candidate count is O(nodes²) and
+//! each costing is one virtual-time pass over a `sim_only` graph (no
+//! weight buffers are allocated). Determinism: the simulator's jitter
+//! is hash-seeded, so equal inputs always pick the same winner.
+
+use crate::model::{ModelConfig, ModelGraphs};
+use crate::numa::Topology;
+use crate::sched::{ExecParams, Executor, SyncMode};
+
+use super::Strategy;
+
+/// One costed point of the search space.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub strategy: Strategy,
+    /// First NUMA node of the strategy's window.
+    pub base_node: usize,
+    /// Virtual time of one representative decode step, in µs.
+    pub predicted_us: f64,
+}
+
+/// The tuner's verdict: the winner plus the full ranked field (for
+/// `arclight topo` / debugging — the margins matter, not just the
+/// argmin).
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub best: Candidate,
+    /// Every feasible candidate, sorted cheapest-first.
+    pub candidates: Vec<Candidate>,
+}
+
+/// Whether `s` can bind `threads` workers in the `[base, base+width)`
+/// node window of `topo` — mirrors the assertions of
+/// `Topology::bind_cores_at` so infeasible candidates are skipped
+/// instead of panicking mid-search.
+fn fits(topo: &Topology, s: &Strategy, threads: usize, base: usize) -> bool {
+    let w = s.nodes_used();
+    if base + w > topo.n_nodes() || threads < w {
+        return false;
+    }
+    if w > 1 {
+        // distributed binding puts ceil(threads/w) workers on each node
+        threads.div_ceil(w) <= topo.cores_per_node
+    } else {
+        // isolate binding takes consecutive cores from the window start
+        base * topo.cores_per_node + threads <= topo.n_cores()
+    }
+}
+
+/// Virtual time (µs) of one representative decode step of `cfg` under
+/// strategy `s` with `threads` workers based at node `base` — the same
+/// `build_spec`/`bind_cores_at` path `frontend::Engine::build` takes,
+/// so the tuner costs exactly what the engine would run.
+pub fn predict_step_us(
+    cfg: &ModelConfig,
+    topo: &Topology,
+    s: Strategy,
+    threads: usize,
+    base: usize,
+) -> f64 {
+    let spec = s
+        .build_spec(cfg.clone(), topo.n_nodes())
+        .with_sim_only(true)
+        .with_base_node(base);
+    let graphs = ModelGraphs::build(spec);
+    let exec = s.sim_executor_at(topo, threads, base);
+    // cost a mid-context step: attention traffic grows with position,
+    // so position 0 would bias toward strategies that skimp on KV
+    // bandwidth
+    let pos = (cfg.max_seq / 2).clamp(1, cfg.max_seq.saturating_sub(1));
+    let rep = exec.run(&graphs.decode, &ExecParams::dense(pos, 1));
+    rep.elapsed * 1e6
+}
+
+/// Enumerate and cost every feasible strategy for `cfg` with `threads`
+/// workers inside the node window `[base, base + window_nodes)`
+/// (clamped to the machine), returning the cheapest. The window is the
+/// whole machine for `run`/`serve`, or one replica's node group for
+/// cluster serving. Candidates:
+///
+/// * single-node ArcLight at every window offset (threads may spill
+///   past one node — that's the isolate shape);
+/// * ArcLight TP at every width `2..=window` × {Sync B, Sync A} × every
+///   in-window offset.
+///
+/// `Err` when nothing fits (more threads than the window has cores).
+pub fn auto_select(
+    cfg: &ModelConfig,
+    topo: &Topology,
+    threads: usize,
+    base: usize,
+    window_nodes: usize,
+) -> Result<TuneResult, String> {
+    let n = topo.n_nodes();
+    if base >= n {
+        return Err(format!("auto-tune window base {base} out of range (machine has {n} nodes)"));
+    }
+    let window = window_nodes.clamp(1, n - base);
+    let mut candidates = Vec::new();
+    for width in 1..=window {
+        let strategies: &[Strategy] = if width == 1 {
+            &[Strategy::ArcLight { nodes: 1, sync: SyncMode::SyncB }]
+        } else {
+            &[
+                Strategy::ArcLight { nodes: width, sync: SyncMode::SyncB },
+                Strategy::ArcLight { nodes: width, sync: SyncMode::SyncA },
+            ]
+        };
+        for &s in strategies {
+            for off in 0..=(window - width) {
+                let b = base + off;
+                if !fits(topo, &s, threads, b) {
+                    continue;
+                }
+                let predicted_us = predict_step_us(cfg, topo, s, threads, b);
+                candidates.push(Candidate { strategy: s, base_node: b, predicted_us });
+            }
+        }
+    }
+    if candidates.is_empty() {
+        return Err(format!(
+            "no strategy fits {threads} threads in nodes {base}..{} ({} cores/node)",
+            base + window,
+            topo.cores_per_node
+        ));
+    }
+    candidates.sort_by(|a, b| {
+        a.predicted_us
+            .partial_cmp(&b.predicted_us)
+            .expect("virtual times are finite")
+    });
+    Ok(TuneResult { best: candidates[0].clone(), candidates })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_respects_window_and_core_budget() {
+        let topo = Topology::kunpeng920(); // 4 × 48
+        let single = Strategy::arclight_single();
+        let tp2 = Strategy::arclight_tp(2, SyncMode::SyncB);
+        assert!(fits(&topo, &single, 48, 0));
+        assert!(fits(&topo, &single, 96, 2)); // spills node 2 → 3
+        assert!(!fits(&topo, &single, 97, 2)); // past the machine
+        assert!(fits(&topo, &tp2, 96, 2));
+        assert!(!fits(&topo, &tp2, 96, 3)); // window past the machine
+        assert!(!fits(&topo, &tp2, 98, 0)); // 49 > cores_per_node
+        assert!(!fits(&topo, &tp2, 1, 0)); // fewer threads than nodes
+    }
+
+    #[test]
+    fn auto_select_enumerates_and_ranks() {
+        let cfg = ModelConfig::tiny();
+        let topo = Topology::kunpeng920();
+        let t = auto_select(&cfg, &topo, 8, 0, 4).unwrap();
+        // widths 1..=4 at every offset: 4 + 3·2 + 2·2 + 1·2 = 16
+        assert_eq!(t.candidates.len(), 16);
+        // ranked cheapest-first, winner at the head
+        assert!(t.candidates.windows(2).all(|w| w[0].predicted_us <= w[1].predicted_us));
+        assert_eq!(t.best.strategy.name(), t.candidates[0].strategy.name());
+        assert!(t.best.predicted_us.is_finite() && t.best.predicted_us > 0.0);
+        // deterministic: same inputs, same winner and same cost
+        let again = auto_select(&cfg, &topo, 8, 0, 4).unwrap();
+        assert_eq!(again.best.strategy.name(), t.best.strategy.name());
+        assert_eq!(again.best.predicted_us, t.best.predicted_us);
+    }
+
+    #[test]
+    fn auto_select_honors_the_window() {
+        let cfg = ModelConfig::tiny();
+        let topo = Topology::kunpeng920();
+        // a one-node window at node 2: only single-node offsets
+        let t = auto_select(&cfg, &topo, 8, 2, 1).unwrap();
+        assert_eq!(t.candidates.len(), 1);
+        assert_eq!(t.best.base_node, 2);
+        assert_eq!(t.best.strategy.nodes_used(), 1);
+        // windows and bases out of range are errors, not panics
+        assert!(auto_select(&cfg, &topo, 8, 4, 1).is_err());
+        assert!(auto_select(&cfg, &topo, 10_000, 0, 4).is_err());
+    }
+}

@@ -29,6 +29,7 @@ use anyhow::{bail, Result};
 use crate::baseline::Strategy;
 use crate::graph::{PageArena, PageTable};
 use crate::hw::Platform;
+use crate::numa::BandwidthSource;
 use crate::memory::MemoryPool;
 use crate::model::synth;
 use crate::model::{AlfFile, ModelConfig, ModelGraphs};
@@ -309,6 +310,14 @@ pub struct Engine {
     platform_name: &'static str,
     /// Workers the pool successfully pinned to host cpus.
     pinned_workers: usize,
+    /// Name of the strategy the engine was built with — stamped onto
+    /// every [`StepReport`] (executors don't know their strategy).
+    strategy_name: String,
+    /// Provenance of the bandwidth matrix behind the engine's topology.
+    bw_source: BandwidthSource,
+    /// Auto-tuner prediction (µs/step) when `--strategy auto` chose
+    /// the strategy; `None` for explicit strategies.
+    predicted_step_us: Option<f64>,
 }
 
 impl Engine {
@@ -388,6 +397,9 @@ impl Engine {
             last_report: None,
             platform_name: opts.platform.name(),
             pinned_workers,
+            strategy_name: opts.strategy.name(),
+            bw_source: opts.platform.topology().bw_source,
+            predicted_step_us: None,
         })
     }
 
@@ -416,6 +428,41 @@ impl Engine {
     /// simulated platform or when pinning was off/failed).
     pub fn pinned_workers(&self) -> usize {
         self.pinned_workers
+    }
+
+    /// Name of the strategy every pass runs under (e.g.
+    /// `"arclight-tp4-syncB"`) — what `--strategy auto` resolved to,
+    /// or the explicit CLI choice.
+    pub fn strategy_name(&self) -> &str {
+        &self.strategy_name
+    }
+
+    /// Provenance of the bandwidth matrix behind the engine's topology
+    /// (measured / SLIT placeholder / simulated).
+    pub fn bandwidth_source(&self) -> BandwidthSource {
+        self.bw_source
+    }
+
+    /// The auto-tuner's predicted step time (µs) when it chose the
+    /// strategy; `None` for explicit strategies.
+    pub fn predicted_step_us(&self) -> Option<f64> {
+        self.predicted_step_us
+    }
+
+    /// Record the auto-tuner's prediction for the chosen strategy so
+    /// reports and metrics can surface predicted vs measured.
+    pub fn set_predicted_step_us(&mut self, us: Option<f64>) {
+        self.predicted_step_us = us;
+    }
+
+    /// Stamp strategy/bandwidth provenance (and any tuner prediction)
+    /// onto a fresh pass report — executors can't: they see cores and
+    /// organizations, not the strategy that derived them.
+    fn stamp(&self, mut rep: StepReport) -> StepReport {
+        rep.strategy = self.strategy_name.clone();
+        rep.bandwidth_source = self.bw_source;
+        rep.predicted_step_us = self.predicted_step_us;
+        rep
     }
 
     /// Clear the KV cache, rewind to position 0 and invalidate every
@@ -659,7 +706,7 @@ impl Engine {
         let tokens_id = self.graphs.decode_batch_tokens.expect("batch tokens leaf");
         self.write_tokens(&graph, tokens_id, &toks);
         let params = ExecParams::batched(BatchView::new(ps, tables, pos));
-        self.last_report = Some(self.executor.run(&graph, &params));
+        self.last_report = Some(self.stamp(self.executor.run(&graph, &params)));
         let logits_id = self.graphs.decode_batch_logits.expect("batch logits");
         let all = self.read_logits(&graph, logits_id);
         let vocab = self.cfg().vocab;
@@ -689,7 +736,7 @@ impl Engine {
         let graph = self.graphs.decode.clone();
         self.write_tokens(&graph, self.graphs.decode_tokens, &[token]);
         let params = ExecParams::dense(self.pos, 1);
-        self.last_report = Some(self.executor.run(&graph, &params));
+        self.last_report = Some(self.stamp(self.executor.run(&graph, &params)));
         self.pos += 1;
         self.read_logits(&graph, self.graphs.decode_logits)
     }
@@ -709,7 +756,7 @@ impl Engine {
                 let pg = pg.clone();
                 self.write_tokens(&pg, ptoks, tokens);
                 let params = ExecParams::dense(0, rows);
-                self.last_report = Some(self.executor.run(&pg, &params));
+                self.last_report = Some(self.stamp(self.executor.run(&pg, &params)));
                 self.pos = rows;
                 return self.read_logits(&pg, plogits);
             }
@@ -859,6 +906,29 @@ mod tests {
         let s = b.seq_start(4).unwrap();
         b.step_batch(&[(&s, 7)]);
         assert_eq!(b.last_step_report().unwrap().dispatches, 1);
+    }
+
+    #[test]
+    fn reports_carry_strategy_and_bandwidth_provenance() {
+        let mut e = tiny_engine(Strategy::arclight_single(), 2, None);
+        e.decode_step(1);
+        let rep = e.last_step_report().unwrap();
+        assert_eq!(rep.strategy, "arclight");
+        assert_eq!(rep.bandwidth_source, crate::numa::BandwidthSource::Simulated);
+        assert_eq!(rep.predicted_step_us, None);
+        assert_eq!(e.strategy_name(), "arclight");
+        // a tuner prediction propagates to every subsequent report
+        e.set_predicted_step_us(Some(123.5));
+        e.decode_step(2);
+        assert_eq!(e.last_step_report().unwrap().predicted_step_us, Some(123.5));
+        // TP strategies stamp their full name
+        let mut tp = tiny_engine(
+            Strategy::arclight_tp(2, crate::sched::SyncMode::SyncB),
+            4,
+            None,
+        );
+        tp.decode_step(3);
+        assert_eq!(tp.last_step_report().unwrap().strategy, "arclight-tp2-syncB");
     }
 
     #[test]

@@ -1,0 +1,460 @@
+//! STREAM-triad bandwidth measurement + on-disk calibration cache.
+//!
+//! The host lowering in [`super::topology`] gets bandwidth *ratios*
+//! from the SLIT matrix but the absolute scale from the
+//! [`super::topology::DEFAULT_LOCAL_GB`] placeholder — good enough for
+//! "local beats remote", useless for choosing *between* strategies
+//! whose costs differ by tens of percent. This module measures the
+//! real matrix the way the paper's Table 1 does:
+//!
+//! * for every (core node, memory node) pair, probe threads pin onto
+//!   the core node's cpus, first-touch three stream buffers on the
+//!   memory node (pin to a memory-node cpu, write every page, re-pin),
+//!   and run a timed STREAM triad (`a[i] = b[i] + s·c[i]`, 3 streamed
+//!   arrays — 24 bytes per element);
+//! * per-pair GB/s is the sum of per-thread best-of-`reps` rates, i.e.
+//!   the *aggregate* node-to-node bandwidth [`crate::numa::Topology`]
+//!   models (`bw[core_node][mem_node]`), not a single core's.
+//!
+//! Pinning is best effort (the [`super::affinity`] contract): on
+//! builds without host support, or for fixture topologies whose cpu
+//! ids don't exist, the probes simply run unpinned — the numbers lose
+//! node attribution but every code path stays exercised and testable.
+//!
+//! Measurements are cached to disk as a small JSON blob keyed by
+//! [`super::HostTopology::fingerprint`] (node count, cpulists, SLIT
+//! matrix), so repeat runs pay nothing: [`calibrate`] loads the cache,
+//! checks the fingerprint against the live machine, and only streams
+//! when the cache is missing, corrupt, stale, or `force`d.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+use super::affinity;
+use super::topology::HostTopology;
+
+/// Cache-format version; bumping invalidates every existing cache.
+const CACHE_VERSION: usize = 1;
+
+/// Measurement parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    /// Total f64 elements streamed per node pair, split across the
+    /// probe threads (three buffers of this total are allocated, so a
+    /// pair touches `24 · elems` bytes).
+    pub elems: usize,
+    /// Timed repetitions per pair; each thread keeps its best rate.
+    pub reps: usize,
+    /// Probe threads per pair; 0 = one per cpu of the core node (the
+    /// aggregate-bandwidth configuration).
+    pub probe_threads: usize,
+    /// Pin probe threads to node cpus (best effort — see module docs).
+    pub pin: bool,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        // 3 × 64 MiB per pair: far past LLC so the triad streams DRAM
+        BenchOpts { elems: 8 << 20, reps: 3, probe_threads: 0, pin: true }
+    }
+}
+
+impl BenchOpts {
+    /// Tiny buffers, one rep, one probe thread — the CI smoke
+    /// configuration (`arclight calibrate --quick`). Exercises every
+    /// code path in milliseconds; the resulting numbers are cache-hot
+    /// and **not** meaningful bandwidths.
+    pub fn quick() -> Self {
+        BenchOpts { elems: 32 << 10, reps: 1, probe_threads: 1, pin: true }
+    }
+}
+
+/// The STREAM triad over three equal-length f64 slices.
+fn triad(a: &mut [f64], b: &[f64], c: &[f64]) {
+    const S: f64 = 3.0;
+    for ((x, y), z) in a.iter_mut().zip(b).zip(c) {
+        *x = *y + S * *z;
+    }
+}
+
+/// Measure one (core node, memory node) pair: aggregate GB/s of the
+/// core node's probe threads streaming buffers resident on the memory
+/// node.
+fn measure_pair(host: &HostTopology, core_node: usize, mem_node: usize, opts: &BenchOpts) -> f64 {
+    let cpus = &host.nodes[core_node].cpus;
+    let nthreads = match opts.probe_threads {
+        0 => cpus.len(),
+        n => n.min(cpus.len()),
+    }
+    .max(1);
+    let elems_per = (opts.elems / nthreads).max(1 << 10);
+    let mem_cpu = host.nodes[mem_node].cpus[0];
+    let reps = opts.reps.max(1);
+    let pin = opts.pin;
+    let start = Arc::new(Barrier::new(nthreads));
+    let mut handles = Vec::with_capacity(nthreads);
+    for t in 0..nthreads {
+        let cpu = cpus[t % cpus.len()];
+        let start = start.clone();
+        handles.push(std::thread::spawn(move || {
+            // first-touch the stream buffers on the memory node: pages
+            // fault where the writing thread runs
+            if pin {
+                affinity::pin_current_thread(mem_cpu);
+            }
+            let mut a = vec![0.0f64; elems_per];
+            let mut b = vec![0.0f64; elems_per];
+            let mut c = vec![0.0f64; elems_per];
+            for i in 0..elems_per {
+                a[i] = 1.0;
+                b[i] = (i % 97) as f64;
+                c[i] = (i % 89) as f64;
+            }
+            // move onto the probing core node and stream
+            if pin {
+                affinity::pin_current_thread(cpu);
+            }
+            triad(&mut a, &b, &c); // warmup (faults already paid above)
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                start.wait(); // all probes stream simultaneously
+                let t0 = Instant::now();
+                triad(&mut a, &b, &c);
+                best = best.min(t0.elapsed().as_secs_f64().max(1e-9));
+            }
+            std::hint::black_box(a[0] + b[0] + c[0]);
+            // 2 loads + 1 store per element
+            (3 * elems_per * 8) as f64 / best
+        }));
+    }
+    let sum: f64 = handles.into_iter().map(|h| h.join().unwrap_or(0.0)).sum();
+    sum / 1e9
+}
+
+/// Measure the full node-pair bandwidth matrix of `host`, pair by pair
+/// (pairs run sequentially so they never contend with each other).
+/// `matrix[i][j]` is GB/s from cores of node `i` to memory of node `j`.
+pub fn measure_matrix(host: &HostTopology, opts: &BenchOpts) -> Vec<Vec<f64>> {
+    let n = host.n_nodes();
+    let mut m = vec![vec![0.0; n]; n];
+    for (i, row) in m.iter_mut().enumerate() {
+        for (j, cell) in row.iter_mut().enumerate() {
+            *cell = measure_pair(host, i, j, opts);
+        }
+    }
+    m
+}
+
+/// One stored calibration: the measured matrix plus the fingerprint of
+/// the machine it was measured on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Calibration {
+    /// [`HostTopology::fingerprint`] at measurement time.
+    pub fingerprint: String,
+    /// Measured `matrix[core_node][mem_node]` in GB/s.
+    pub matrix_gb: Vec<Vec<f64>>,
+}
+
+impl Calibration {
+    /// Serialize to the cache JSON blob (deterministic key order).
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .matrix_gb
+            .iter()
+            .map(|r| Json::Arr(r.iter().map(|&g| Json::Num(g)).collect()))
+            .collect();
+        obj(vec![
+            ("version", CACHE_VERSION.into()),
+            ("fingerprint", self.fingerprint.as_str().into()),
+            ("matrix_gb", Json::Arr(rows)),
+        ])
+    }
+
+    /// Strict parse of a cache blob. Anything short of a well-formed,
+    /// current-version object with a square matrix of finite positive
+    /// numbers is an error — corrupt or truncated caches must fall
+    /// back to re-measurement, never feed garbage into the cost model.
+    pub fn parse(text: &str) -> Result<Calibration, String> {
+        let j = Json::parse(text)?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or("calibration cache: missing version")?;
+        if version != CACHE_VERSION {
+            return Err(format!("calibration cache: unsupported version {version}"));
+        }
+        let fingerprint = j
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .ok_or("calibration cache: missing fingerprint")?
+            .to_string();
+        let rows = j
+            .get("matrix_gb")
+            .and_then(Json::as_arr)
+            .ok_or("calibration cache: missing matrix_gb")?;
+        let n = rows.len();
+        if n == 0 {
+            return Err("calibration cache: empty matrix".into());
+        }
+        let mut matrix_gb = Vec::with_capacity(n);
+        for row in rows {
+            let row = row.as_arr().ok_or("calibration cache: matrix row is not an array")?;
+            if row.len() != n {
+                return Err("calibration cache: matrix is not square".into());
+            }
+            let mut out = Vec::with_capacity(n);
+            for v in row {
+                let g = v.as_f64().ok_or("calibration cache: non-numeric bandwidth")?;
+                if !g.is_finite() || g <= 0.0 {
+                    return Err(format!("calibration cache: bad bandwidth {g}"));
+                }
+                out.push(g);
+            }
+            matrix_gb.push(out);
+        }
+        Ok(Calibration { fingerprint, matrix_gb })
+    }
+
+    /// Load and parse the cache at `path`.
+    pub fn load(path: &Path) -> Result<Calibration, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Write the cache at `path`, creating parent directories.
+    pub fn store(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+    }
+}
+
+/// Result of [`calibrate`]: the calibration plus whether it came off
+/// disk (`true` ⇒ zero re-measurement this run).
+#[derive(Clone, Debug)]
+pub struct CalibrationOutcome {
+    pub cal: Calibration,
+    pub from_cache: bool,
+}
+
+/// [`calibrate`] with an injectable measurement function — the seam
+/// the cache tests use to count (and fake) measurements.
+pub fn calibrate_with<F>(
+    host: &HostTopology,
+    path: &Path,
+    force: bool,
+    measure: F,
+) -> std::io::Result<CalibrationOutcome>
+where
+    F: FnOnce(&HostTopology) -> Vec<Vec<f64>>,
+{
+    let fingerprint = host.fingerprint();
+    if !force {
+        if let Ok(cal) = Calibration::load(path) {
+            if cal.fingerprint == fingerprint && cal.matrix_gb.len() == host.n_nodes() {
+                return Ok(CalibrationOutcome { cal, from_cache: true });
+            }
+        }
+    }
+    let matrix_gb = measure(host);
+    let cal = Calibration { fingerprint, matrix_gb };
+    cal.store(path)?;
+    Ok(CalibrationOutcome { cal, from_cache: false })
+}
+
+/// The calibrated matrix for `host`, measured at most once: a cache at
+/// `path` whose fingerprint matches the live machine is returned as
+/// is; a missing, corrupt, or stale cache (or `force`) triggers one
+/// streaming measurement whose result is stored back.
+pub fn calibrate(
+    host: &HostTopology,
+    path: &Path,
+    force: bool,
+    opts: &BenchOpts,
+) -> std::io::Result<CalibrationOutcome> {
+    calibrate_with(host, path, force, |h| measure_matrix(h, opts))
+}
+
+/// Load-only lookup: the cached measured matrix for `host`, or `None`
+/// when the cache is absent, unparseable, or fingerprint-stale. Never
+/// measures — this is the startup path of `run`/`serve`, which must
+/// not spend seconds streaming; users run `arclight calibrate` once.
+pub fn cached_matrix(host: &HostTopology, path: &Path) -> Option<Vec<Vec<f64>>> {
+    let cal = Calibration::load(path).ok()?;
+    (cal.fingerprint == host.fingerprint() && cal.matrix_gb.len() == host.n_nodes())
+        .then_some(cal.matrix_gb)
+}
+
+/// Default on-disk cache location: `$ARCLIGHT_CALIBRATION_CACHE`, else
+/// `$XDG_CACHE_HOME/arclight/bandwidth.json`, else
+/// `$HOME/.cache/arclight/bandwidth.json`, else a file in the working
+/// directory.
+pub fn default_cache_path() -> PathBuf {
+    if let Some(p) = std::env::var_os("ARCLIGHT_CALIBRATION_CACHE") {
+        return PathBuf::from(p);
+    }
+    let base = std::env::var_os("XDG_CACHE_HOME")
+        .map(PathBuf::from)
+        .or_else(|| std::env::var_os("HOME").map(|h| PathBuf::from(h).join(".cache")));
+    match base {
+        Some(b) => b.join("arclight").join("bandwidth.json"),
+        None => PathBuf::from("arclight-bandwidth.json"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::topology::HostNode;
+
+    fn fake_host() -> HostTopology {
+        HostTopology {
+            nodes: vec![
+                HostNode { id: 0, cpus: vec![0, 1], mem_total_kb: 1 },
+                HostNode { id: 1, cpus: vec![2, 3], mem_total_kb: 1 },
+            ],
+            distance: vec![vec![10, 20], vec![20, 10]],
+        }
+    }
+
+    fn tiny_opts() -> BenchOpts {
+        // smallest legal measurement: keeps the unit test in the
+        // millisecond range (pinning fails harmlessly off-host)
+        BenchOpts { elems: 1 << 10, reps: 1, probe_threads: 1, pin: true }
+    }
+
+    #[test]
+    fn triad_computes_the_stream_kernel() {
+        let b = [1.0, 2.0, 3.0];
+        let c = [10.0, 20.0, 30.0];
+        let mut a = [0.0; 3];
+        triad(&mut a, &b, &c);
+        assert_eq!(a, [31.0, 62.0, 93.0]);
+    }
+
+    #[test]
+    fn measurement_fills_a_positive_square_matrix() {
+        let m = measure_matrix(&fake_host(), &tiny_opts());
+        assert_eq!(m.len(), 2);
+        assert!(m.iter().all(|r| r.len() == 2));
+        assert!(m.iter().flatten().all(|&g| g.is_finite() && g > 0.0), "{m:?}");
+    }
+
+    #[test]
+    fn calibration_roundtrips_through_json() {
+        let cal = Calibration {
+            fingerprint: "nodes=2;n0=0-1".into(),
+            matrix_gb: vec![vec![101.5, 22.25], vec![23.0, 99.0]],
+        };
+        let text = cal.to_json().to_string();
+        let back = Calibration::parse(&text).unwrap();
+        assert_eq!(back, cal);
+    }
+
+    #[test]
+    fn corrupt_or_truncated_caches_are_rejected() {
+        // outright garbage
+        assert!(Calibration::parse("not json").is_err());
+        // truncated mid-object
+        let good = Calibration {
+            fingerprint: "fp".into(),
+            matrix_gb: vec![vec![100.0, 20.0], vec![20.0, 100.0]],
+        }
+        .to_json()
+        .to_string();
+        assert!(Calibration::parse(&good[..good.len() / 2]).is_err());
+        // structurally valid JSON, wrong shape
+        assert!(Calibration::parse(r#"{"version":1,"fingerprint":"x","matrix_gb":[]}"#).is_err());
+        assert!(Calibration::parse(
+            r#"{"version":1,"fingerprint":"x","matrix_gb":[[100.0,20.0],[20.0]]}"#
+        )
+        .is_err());
+        // non-positive and non-finite bandwidths are poison
+        assert!(Calibration::parse(r#"{"version":1,"fingerprint":"x","matrix_gb":[[0.0]]}"#)
+            .is_err());
+        // unknown version
+        assert!(Calibration::parse(r#"{"version":9,"fingerprint":"x","matrix_gb":[[1.0]]}"#)
+            .is_err());
+        // missing fields
+        assert!(Calibration::parse(r#"{"version":1,"matrix_gb":[[1.0]]}"#).is_err());
+    }
+
+    #[test]
+    fn calibrate_measures_once_then_serves_from_cache() {
+        let dir = std::env::temp_dir().join(format!("arclight-bench-{}", std::process::id()));
+        let path = dir.join("sub").join("bandwidth.json");
+        let host = fake_host();
+        let measured = std::sync::atomic::AtomicUsize::new(0);
+        let fake = |_: &HostTopology| {
+            measured.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            vec![vec![100.0, 10.0], vec![10.0, 100.0]]
+        };
+        // first run measures and stores (creating parent dirs)
+        let first = calibrate_with(&host, &path, false, fake).unwrap();
+        assert!(!first.from_cache);
+        assert_eq!(measured.load(std::sync::atomic::Ordering::Relaxed), 1);
+        // second run is a pure cache hit: zero re-measurement
+        let second = calibrate_with(&host, &path, false, |_| {
+            measured.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            unreachable!("cache hit must not re-measure")
+        })
+        .unwrap();
+        assert!(second.from_cache);
+        assert_eq!(second.cal, first.cal);
+        assert_eq!(measured.load(std::sync::atomic::Ordering::Relaxed), 1);
+        // load-only lookup agrees
+        assert_eq!(cached_matrix(&host, &path), Some(first.cal.matrix_gb.clone()));
+        // force re-measures even with a valid cache
+        let forced = calibrate_with(&host, &path, true, |_| vec![vec![9.0, 9.0], vec![9.0, 9.0]])
+            .unwrap();
+        assert!(!forced.from_cache);
+        assert_eq!(forced.cal.matrix_gb[0][0], 9.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_invalidates_the_cache() {
+        let dir = std::env::temp_dir().join(format!("arclight-bench-fp-{}", std::process::id()));
+        let path = dir.join("bandwidth.json");
+        let host = fake_host();
+        calibrate_with(&host, &path, false, |_| vec![vec![100.0, 10.0], vec![10.0, 100.0]])
+            .unwrap();
+        // same machine minus one cpu: different fingerprint
+        let mut changed = fake_host();
+        changed.nodes[1].cpus.pop();
+        assert_eq!(cached_matrix(&changed, &path), None, "stale cache must not be served");
+        let re = calibrate_with(&changed, &path, false, |_| {
+            vec![vec![50.0, 5.0], vec![5.0, 50.0]]
+        })
+        .unwrap();
+        assert!(!re.from_cache, "fingerprint mismatch must re-measure");
+        // the cache now carries the new machine; the old one is stale
+        assert_eq!(cached_matrix(&host, &path), None);
+        assert!(cached_matrix(&changed, &path).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_cache_file_falls_back_to_measurement() {
+        let dir = std::env::temp_dir().join(format!("arclight-bench-bad-{}", std::process::id()));
+        let path = dir.join("bandwidth.json");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&path, "{\"version\":1,\"finger").unwrap();
+        let host = fake_host();
+        assert_eq!(cached_matrix(&host, &path), None);
+        let out = calibrate_with(&host, &path, false, |_| {
+            vec![vec![80.0, 8.0], vec![8.0, 80.0]]
+        })
+        .unwrap();
+        assert!(!out.from_cache);
+        // and the rewrite repaired the file
+        assert!(cached_matrix(&host, &path).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -13,7 +13,11 @@
 //! * [`affinity`] — `sched_setaffinity` pinning for pool workers (the
 //!   ROADMAP "core pinning" item), best effort, surfaced per worker;
 //! * [`membind`] — first-touch (and optional `mbind`) placement so an
-//!   arena's pages physically live on its tagged node.
+//!   arena's pages physically live on its tagged node;
+//! * [`bench`] — STREAM-triad measurement of the real node-pair
+//!   bandwidth matrix plus its fingerprint-keyed on-disk cache, so the
+//!   lowering can carry *measured* numbers instead of the SLIT-ratio
+//!   placeholder scale.
 //!
 //! The whole layer is gated on the `host` cargo feature and Linux;
 //! feature-off / off-Linux builds compile the same API as no-op stubs
@@ -25,6 +29,7 @@
 //! detected host.
 
 pub mod affinity;
+pub mod bench;
 pub mod membind;
 pub mod topology;
 
@@ -155,21 +160,99 @@ impl Platform {
         }
     }
 
-    /// Partition the machine's NUMA nodes into `replicas` contiguous
-    /// groups — the placement domains of a [`crate::server::Cluster`].
-    /// `None` means one replica per node (`serve --replicas auto`); an
-    /// explicit count is clamped to `[1, n_nodes]`. Every node lands in
-    /// exactly one group; earlier groups get the extra node when the
-    /// split is uneven.
+    /// Partition the machine's NUMA nodes into contiguous groups — the
+    /// placement domains of a [`crate::server::Cluster`] — consulting
+    /// the topology's bandwidth matrix (measured, when a calibration
+    /// has been lowered in) so nodes behind an unusually slow link are
+    /// never grouped with fast ones.
+    ///
+    /// `None` (`serve --replicas auto`): adjacent nodes merge into one
+    /// replica only when the link between them runs at ≥ half local
+    /// bandwidth; on the paper's testbed (remote ≈ ¼ local) and any
+    /// similarly NUMA-sharp machine this stays one replica per node.
+    ///
+    /// `Some(r)` is clamped to `[1, n_nodes]` and picks, among all
+    /// contiguous `r`-way splits, the one maximizing the slowest
+    /// intra-group link (ties keep the even chunk split). Every node
+    /// lands in exactly one group, in order.
     pub fn node_groups(&self, replicas: Option<usize>) -> Vec<Vec<usize>> {
-        let n = self.topology().n_nodes();
-        let r = replicas.unwrap_or(n).clamp(1, n);
-        (0..r)
-            .map(|i| {
-                let (s, e) = crate::util::chunk_range(n, r, i);
-                (s..e).collect()
-            })
-            .collect()
+        let topo = self.topology();
+        let n = topo.n_nodes();
+        // min of both directions: one slow direction is enough to make
+        // co-placement pay the slow lane on every broadcast
+        let link = |a: usize, b: usize| topo.bandwidth(a, b).min(topo.bandwidth(b, a));
+        match replicas {
+            None => {
+                let mut groups: Vec<Vec<usize>> = vec![vec![0]];
+                for node in 1..n {
+                    let prev = *groups.last().unwrap().last().unwrap();
+                    let local = topo.bandwidth(node, node).min(topo.bandwidth(prev, prev));
+                    if link(prev, node) >= 0.5 * local {
+                        groups.last_mut().unwrap().push(node);
+                    } else {
+                        groups.push(vec![node]);
+                    }
+                }
+                groups
+            }
+            Some(r) => {
+                let r = r.clamp(1, n);
+                // a split's score is its slowest intra-group pair
+                // (singletons are unconstrained)
+                let score = |groups: &[Vec<usize>]| {
+                    groups
+                        .iter()
+                        .flat_map(|g| {
+                            (0..g.len()).flat_map(move |i| {
+                                (i + 1..g.len()).map(move |j| link(g[i], g[j]))
+                            })
+                        })
+                        .fold(f64::INFINITY, f64::min)
+                };
+                let chunked: Vec<Vec<usize>> = (0..r)
+                    .map(|i| {
+                        let (s, e) = crate::util::chunk_range(n, r, i);
+                        (s..e).collect()
+                    })
+                    .collect();
+                let mut best_score = score(&chunked);
+                let mut best = chunked;
+                for sizes in compositions(n, r) {
+                    let mut groups = Vec::with_capacity(r);
+                    let mut next = 0;
+                    for sz in sizes {
+                        groups.push((next..next + sz).collect::<Vec<usize>>());
+                        next += sz;
+                    }
+                    let s = score(&groups);
+                    if s > best_score {
+                        best_score = s;
+                        best = groups;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Re-lower a detected host against the calibration cache at
+    /// `cache`: when a measured matrix with a matching fingerprint is
+    /// on disk, the platform's [`Topology`] is rebuilt from it (and
+    /// tagged [`crate::numa::BandwidthSource::Measured`]). Load-only —
+    /// never measures; a missing or stale cache, or a simulated
+    /// platform, passes through unchanged. This is the startup rung of
+    /// the fallback ladder: measured → SLIT placeholder → simulated.
+    pub fn with_cached_calibration(self, cache: &std::path::Path) -> Platform {
+        match self {
+            Platform::Host { host, topo } => match bench::cached_matrix(&host, cache) {
+                Some(m) => {
+                    let topo = host.to_topology_measured(&m);
+                    Platform::Host { host, topo }
+                }
+                None => Platform::Host { host, topo },
+            },
+            p => p,
+        }
     }
 
     /// Install this platform's first-touch placement map for
@@ -194,6 +277,31 @@ impl From<Topology> for Platform {
     fn from(t: Topology) -> Platform {
         Platform::Simulated(t)
     }
+}
+
+/// All ways to write `n` as `r` ordered positive parts — the contiguous
+/// `r`-way node splits [`Platform::node_groups`] scores. `n` is a NUMA
+/// node count (single digits), so exhaustive enumeration is cheap.
+fn compositions(n: usize, r: usize) -> Vec<Vec<usize>> {
+    fn rec(left: usize, parts: usize, prefix: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if parts == 1 {
+            prefix.push(left);
+            out.push(prefix.clone());
+            prefix.pop();
+            return;
+        }
+        // leave at least one node for each remaining part
+        for take in 1..=(left - (parts - 1)) {
+            prefix.push(take);
+            rec(left - take, parts - 1, prefix, out);
+            prefix.pop();
+        }
+    }
+    let mut out = Vec::new();
+    if r >= 1 && n >= r {
+        rec(n, r, &mut Vec::new(), &mut out);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -252,6 +360,68 @@ mod tests {
         // every node exactly once, in order
         let flat: Vec<usize> = p.node_groups(Some(3)).concat();
         assert_eq!(flat, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn node_groups_follow_the_bandwidth_matrix() {
+        // four nodes, fast fabric except a crawling 2↔3 link
+        let mut bw = vec![vec![80.0; 4]; 4];
+        for i in 0..4 {
+            bw[i][i] = 100.0;
+        }
+        bw[2][3] = 5.0;
+        bw[3][2] = 5.0;
+        let p: Platform = Topology::from_bandwidth_gb(bw, 4).into();
+        // auto merges across fast links but splits at the slow one
+        assert_eq!(p.node_groups(None), vec![vec![0, 1, 2], vec![3]]);
+        // an explicit 2-way split avoids co-placing 2 and 3: the even
+        // chunk [01|23] would bottleneck on the 5 GB/s link, so the
+        // tuned split [012|3] wins
+        assert_eq!(p.node_groups(Some(2)), vec![vec![0, 1, 2], vec![3]]);
+        // every node still lands exactly once, in order
+        assert_eq!(p.node_groups(Some(3)).concat(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn compositions_enumerate_contiguous_splits() {
+        assert_eq!(compositions(4, 1), vec![vec![4]]);
+        assert_eq!(compositions(4, 2), vec![vec![1, 3], vec![2, 2], vec![3, 1]]);
+        assert_eq!(compositions(3, 3), vec![vec![1, 1, 1]]);
+        assert!(compositions(2, 3).is_empty());
+        // C(n-1, r-1) splits, all summing to n
+        assert_eq!(compositions(6, 3).len(), 10);
+        assert!(compositions(6, 3).iter().all(|s| s.iter().sum::<usize>() == 6));
+    }
+
+    #[test]
+    fn cached_calibration_relowers_a_host_platform() {
+        use crate::numa::BandwidthSource;
+        let host = HostTopology {
+            nodes: vec![
+                HostNode { id: 0, cpus: vec![0, 1], mem_total_kb: 1 },
+                HostNode { id: 1, cpus: vec![2, 3], mem_total_kb: 1 },
+            ],
+            distance: vec![vec![10, 20], vec![20, 10]],
+        };
+        let dir = std::env::temp_dir().join(format!("arclight-platcal-{}", std::process::id()));
+        let cache = dir.join("bandwidth.json");
+        // no cache on disk: the placeholder lowering passes through
+        let p = Platform::from_host(host.clone()).with_cached_calibration(&cache);
+        assert_eq!(p.topology().bw_source, BandwidthSource::SlitPlaceholder);
+        // with a matching calibration cached, the lowering is measured
+        bench::Calibration {
+            fingerprint: host.fingerprint(),
+            matrix_gb: vec![vec![87.0, 6.5], vec![6.0, 91.0]],
+        }
+        .store(&cache)
+        .unwrap();
+        let p = Platform::from_host(host.clone()).with_cached_calibration(&cache);
+        assert_eq!(p.topology().bw_source, BandwidthSource::Measured);
+        assert_eq!(p.topology().bandwidth(0, 1), 6.5e9);
+        // simulated platforms never consult the cache
+        let s = Platform::simulated().with_cached_calibration(&cache);
+        assert_eq!(s.topology().bw_source, BandwidthSource::Simulated);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

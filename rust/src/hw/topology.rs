@@ -28,7 +28,7 @@
 
 use std::path::Path;
 
-use crate::numa::{Core, NodeId, Topology};
+use crate::numa::{BandwidthSource, Core, NodeId, Topology};
 
 /// Assumed local-node bandwidth (GB/s) when lowering SLIT distances
 /// into a bandwidth matrix. Only the *ratios* are measured (distances);
@@ -144,6 +144,37 @@ impl HostTopology {
             })
             .collect();
         Topology::from_bandwidth_gb(bw_gb, self.cores_per_node())
+            .with_bw_source(BandwidthSource::SlitPlaceholder)
+    }
+
+    /// Lower the detected machine with a **measured** node-pair
+    /// bandwidth matrix (GB/s, `matrix_gb[core_node][mem_node]`) in
+    /// place of the SLIT-ratio placeholder — the calibrated path fed by
+    /// [`crate::hw::bench`]. The matrix must be square over the node
+    /// count; every other constant inherits the Kunpeng-920 defaults
+    /// exactly like [`HostTopology::to_topology`].
+    pub fn to_topology_measured(&self, matrix_gb: &[Vec<f64>]) -> Topology {
+        let n = self.n_nodes();
+        assert_eq!(matrix_gb.len(), n, "measured matrix node count mismatch");
+        assert!(matrix_gb.iter().all(|r| r.len() == n), "measured matrix must be square");
+        Topology::from_bandwidth_gb(matrix_gb.to_vec(), self.cores_per_node())
+            .with_bw_source(BandwidthSource::Measured)
+    }
+
+    /// Stable fingerprint of the machine for keying the calibration
+    /// cache: node count, per-node cpulists and the SLIT matrix. Any
+    /// change (cpus offlined, different machine, BIOS NUMA config)
+    /// produces a different string and invalidates cached measurements.
+    pub fn fingerprint(&self) -> String {
+        let mut s = format!("nodes={}", self.n_nodes());
+        for n in &self.nodes {
+            s.push_str(&format!(";n{}={}", n.id, format_cpulist(&n.cpus)));
+        }
+        for (i, row) in self.distance.iter().enumerate() {
+            let cells: Vec<String> = row.iter().map(|d| d.to_string()).collect();
+            s.push_str(&format!(";d{}={}", i, cells.join(",")));
+        }
+        s
     }
 
     /// The OS cpu backing one simulated core of the lowered topology
@@ -273,5 +304,46 @@ mod tests {
     #[test]
     fn missing_root_is_none() {
         assert!(HostTopology::from_root(Path::new("/definitely/not/here")).is_none());
+    }
+
+    fn two_node_host() -> HostTopology {
+        HostTopology {
+            nodes: vec![
+                HostNode { id: 0, cpus: (0..4).collect(), mem_total_kb: 1 },
+                HostNode { id: 1, cpus: (4..8).collect(), mem_total_kb: 1 },
+            ],
+            distance: vec![vec![10, 20], vec![20, 10]],
+        }
+    }
+
+    #[test]
+    fn lowerings_carry_bandwidth_provenance() {
+        let h = two_node_host();
+        let placeholder = h.to_topology();
+        assert_eq!(placeholder.bw_source, BandwidthSource::SlitPlaceholder);
+        assert_eq!(placeholder.bandwidth(0, 0), DEFAULT_LOCAL_GB * 1e9);
+        let measured =
+            h.to_topology_measured(&[vec![87.0, 5.5], vec![5.0, 91.0]]);
+        assert_eq!(measured.bw_source, BandwidthSource::Measured);
+        assert_eq!(measured.bandwidth(0, 1), 5.5e9);
+        assert_eq!(measured.bandwidth(1, 1), 91e9);
+        assert_eq!(measured.cores_per_node, 4);
+    }
+
+    #[test]
+    fn fingerprint_tracks_cpus_and_distances() {
+        let a = two_node_host();
+        let fp = a.fingerprint();
+        assert!(fp.contains("nodes=2"));
+        assert!(fp.contains("0-3"));
+        assert_eq!(fp, two_node_host().fingerprint(), "fingerprint must be deterministic");
+        // offlining a cpu changes it
+        let mut b = two_node_host();
+        b.nodes[1].cpus.pop();
+        assert_ne!(fp, b.fingerprint());
+        // a different SLIT matrix changes it
+        let mut c = two_node_host();
+        c.distance[0][1] = 21;
+        assert_ne!(fp, c.fingerprint());
     }
 }

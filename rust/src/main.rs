@@ -9,7 +9,12 @@
 //!   report    regenerate the paper's Table 1 / Figures 10–13
 //!   probe     print the simulated machine + bandwidth matrix
 //!   topo      print the detected host NUMA topology vs the simulated
-//!             testbed (host feature; falls back to simulated)
+//!             testbed (host feature; falls back to simulated), plus
+//!             the cached measured bandwidth matrix when one exists
+//!   calibrate measure the host's node-pair bandwidth matrix (STREAM
+//!             triad) and cache it keyed by topology fingerprint
+//!             (--quick for a smoke run, --force to re-measure,
+//!             --root for a sysfs fixture tree)
 //!   trace     export a Chrome-trace of one simulated decode step
 //!   golden    cross-check the native engine against PJRT artifacts
 //!
@@ -17,7 +22,14 @@
 //! sim|host` and `--pin`: `--pin` implies host detection, binds each
 //! pool worker to its core's OS cpu and first-touches arenas onto
 //! their tagged node. Both degrade to the simulated testbed when the
-//! host layer is unavailable or too small for `--threads`.
+//! host layer is unavailable or too small for `--threads`. On a host
+//! platform with a matching calibration cache (`--cache` to override
+//! the location), the lowered cost model carries the *measured*
+//! bandwidth matrix instead of the SLIT-ratio placeholder.
+//!
+//! `--strategy auto` asks the auto-tuner to enumerate candidate
+//! strategies (TP width × sync discipline × node placement) through
+//! the virtual-time cost model and run the cheapest.
 //!
 //! Every subcommand accepts `--tier scalar|avx2|avx512|neon|auto` to
 //! force the SIMD kernel tier (default: auto-detect at startup; scalar
@@ -29,11 +41,11 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use arclight::baseline::Strategy;
+use arclight::baseline::{tune, Strategy};
 use arclight::frontend::{ByteTokenizer, Engine, EngineOptions, Sampler};
 use arclight::hw::{self, Platform};
 use arclight::model::{synth, ModelConfig};
-use arclight::numa::Topology;
+use arclight::numa::{BandwidthSource, Topology};
 use arclight::report;
 use arclight::runtime::PjrtExecutor;
 use arclight::sched::SyncMode;
@@ -122,8 +134,57 @@ fn strategy(args: &Args) -> Result<Strategy> {
         "arclight" => Strategy::arclight_tp(nodes, sync_mode(args)?),
         "llama-isolate" => Strategy::llama_isolate(),
         "llama-distribute" => Strategy::llama_distribute(nodes.max(2)),
-        other => bail!("unknown strategy '{other}'"),
+        "auto" => bail!("--strategy auto is resolved by the caller, not here"),
+        other => bail!("unknown strategy '{other}' (arclight|llama-isolate|llama-distribute|auto)"),
     })
+}
+
+/// Whether the user asked the auto-tuner to pick the strategy.
+fn is_auto(args: &Args) -> bool {
+    args.str_or("strategy", "arclight") == "auto"
+}
+
+/// The model geometry the auto-tuner costs — the same `--model`
+/// resolution as `build_model`, without building an engine.
+fn model_cfg(args: &Args) -> Result<ModelConfig> {
+    match args.get("model") {
+        Some(path) if path.ends_with(".alf") => {
+            let alf = arclight::model::AlfFile::open(&PathBuf::from(path))?;
+            ModelConfig::from_json(&alf.config)
+                .map_err(|e| anyhow::anyhow!("bad ALF config: {e}"))
+        }
+        Some(name) => preset(name),
+        None => Ok(ModelConfig::small_25m()),
+    }
+}
+
+/// The calibration-cache location: `--cache <path>` or the per-user
+/// default.
+fn cache_path(args: &Args) -> PathBuf {
+    args.get("cache").map(PathBuf::from).unwrap_or_else(hw::bench::default_cache_path)
+}
+
+/// Run the auto-tuner over the node window `[base, base+window)` of
+/// `topo` and report the verdict on stderr.
+fn tune_window(
+    args: &Args,
+    topo: &Topology,
+    threads: usize,
+    base: usize,
+    window: usize,
+) -> Result<tune::TuneResult> {
+    let cfg = model_cfg(args)?;
+    let t = tune::auto_select(&cfg, topo, threads, base, window)
+        .map_err(|e| anyhow::anyhow!("--strategy auto: {e}"))?;
+    eprintln!(
+        "auto strategy: {} @ node {} — predicted {:.1} µs/step ({} candidate(s), {} bandwidth)",
+        t.best.strategy.name(),
+        t.best.base_node,
+        t.best.predicted_us,
+        t.candidates.len(),
+        topo.bw_source.name()
+    );
+    Ok(t)
 }
 
 fn sync_mode(args: &Args) -> Result<SyncMode> {
@@ -144,7 +205,18 @@ fn platform_opt(args: &Args, threads: usize) -> Platform {
         return Platform::simulated();
     }
     match Platform::host_for(threads) {
-        Ok(p) => p,
+        Ok(p) => {
+            // a cached measured matrix (fingerprint-matched) upgrades
+            // the lowering; otherwise the SLIT placeholder stands
+            let p = p.with_cached_calibration(&cache_path(args));
+            if p.topology().bw_source == BandwidthSource::Measured {
+                eprintln!(
+                    "note: using measured bandwidth matrix from {}",
+                    cache_path(args).display()
+                );
+            }
+            p
+        }
         Err(why) => {
             eprintln!("note: {why}; using the simulated Kunpeng-920 testbed");
             Platform::simulated()
@@ -152,7 +224,9 @@ fn platform_opt(args: &Args, threads: usize) -> Platform {
     }
 }
 
-fn engine_opts(args: &Args) -> Result<EngineOptions> {
+/// Engine options plus, when `--strategy auto` ran the tuner, the
+/// winner's predicted step time (µs) for reports/metrics.
+fn engine_opts(args: &Args) -> Result<(EngineOptions, Option<f64>)> {
     let threads = args.usize("threads", 4);
     let pin = args.flag("pin");
     let platform = platform_opt(args, threads);
@@ -163,18 +237,28 @@ fn engine_opts(args: &Args) -> Result<EngineOptions> {
         // at build
         platform.install_membind();
     }
-    Ok(EngineOptions {
-        strategy: strategy(args)?,
-        threads,
-        platform,
-        prefill_rows: args.get("prefill-rows").and_then(|v| v.parse().ok()),
-        seed: args.usize("seed", 0) as u64,
-        batch_slots: args.usize("batch", 1),
-        pin,
-        page_size: args.usize("page-size", 16),
-        kv_pages: args.get("kv-pages").and_then(|v| v.parse().ok()),
-        base_node: 0,
-    })
+    let (strategy, base_node, predicted) = if is_auto(args) {
+        let topo = platform.topology();
+        let t = tune_window(args, topo, threads, 0, topo.n_nodes())?;
+        (t.best.strategy, t.best.base_node, Some(t.best.predicted_us))
+    } else {
+        (strategy(args)?, 0, None)
+    };
+    Ok((
+        EngineOptions {
+            strategy,
+            threads,
+            platform,
+            prefill_rows: args.get("prefill-rows").and_then(|v| v.parse().ok()),
+            seed: args.usize("seed", 0) as u64,
+            batch_slots: args.usize("batch", 1),
+            pin,
+            page_size: args.usize("page-size", 16),
+            kv_pages: args.get("kv-pages").and_then(|v| v.parse().ok()),
+            base_node,
+        },
+        predicted,
+    ))
 }
 
 /// `--model` resolution shared by the single-engine and cluster paths.
@@ -187,8 +271,10 @@ fn build_model(args: &Args, opts: &EngineOptions) -> Result<Engine> {
 }
 
 fn load_engine(args: &Args) -> Result<Engine> {
-    let opts = engine_opts(args)?;
-    build_model(args, &opts)
+    let (opts, predicted) = engine_opts(args)?;
+    let mut engine = build_model(args, &opts)?;
+    engine.set_predicted_step_us(predicted);
+    Ok(engine)
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -310,14 +396,30 @@ fn serve_cluster(args: &Args, addr: &str, bcfg: BatcherConfig) -> Result<()> {
         },
     };
     let batch = args.usize("batch", 8).max(2);
-    let mut opts = engine_opts(args)?;
+    let (mut opts, predicted) = engine_opts(args)?;
     opts.batch_slots = batch;
+    // grouping consults the (possibly measured) bandwidth matrix, so
+    // nodes behind an unusually slow link get their own replica
     let groups = opts.platform.node_groups(want);
+    let auto = is_auto(args);
     let cfg = ClusterConfig { batcher: bcfg, load_tolerance: args.usize("tolerance", 2) };
-    let cluster = Cluster::start(&groups, cfg, |_id, nodes| {
+    let cluster = Cluster::start(&groups, cfg, |id, nodes| {
         let mut o = opts.clone();
         o.base_node = nodes[0];
-        build_model(args, &o)
+        let mut predicted = predicted;
+        if auto {
+            // re-tune inside this replica's node window: the
+            // machine-wide winner may not fit (or be optimal for) a
+            // smaller group
+            let t = tune_window(args, o.platform.topology(), o.threads, nodes[0], nodes.len())
+                .with_context(|| format!("tuning replica {id}"))?;
+            o.strategy = t.best.strategy;
+            o.base_node = t.best.base_node;
+            predicted = Some(t.best.predicted_us);
+        }
+        let mut e = build_model(args, &o)?;
+        e.set_predicted_step_us(predicted);
+        Ok(e)
     })?;
     let server = ServerHandle::start_cluster(addr, cluster.clone())?;
     println!(
@@ -412,16 +514,18 @@ fn cmd_probe(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `arclight topo`: the detected host NUMA machine next to the
-/// simulated testbed the figures run on.
-fn cmd_topo(_args: &Args) -> Result<()> {
+/// `arclight topo`: the detected host NUMA machine (with its measured
+/// bandwidth matrix, when calibrated) next to the simulated testbed
+/// the figures run on.
+fn cmd_topo(args: &Args) -> Result<()> {
     println!("host pinning support compiled in: {}", hw::affinity::available());
     println!(
         "kernel tier: {} active ({} detected)",
         KernelTier::active(),
         KernelTier::detect()
     );
-    let detected = Platform::detect();
+    let cache = cache_path(args);
+    let detected = Platform::detect().with_cached_calibration(&cache);
     match &detected {
         Platform::Host { host, topo } => {
             println!(
@@ -444,12 +548,31 @@ fn cmd_topo(_args: &Args) -> Result<()> {
                 println!("    {}", cells.join(" "));
             }
             println!(
-                "  lowered model: {} nodes x {} cores, local bw {:.0} GB/s (distance-ratio \
-                 scale, uncalibrated)",
+                "  lowered model: {} nodes x {} cores, local bw {:.0} GB/s ({} bandwidth)",
                 topo.n_nodes(),
                 topo.cores_per_node,
-                topo.bandwidth(0, 0) / 1e9
+                topo.bandwidth(0, 0) / 1e9,
+                topo.bw_source.name()
             );
+            match hw::bench::Calibration::load(&cache) {
+                Ok(cal) if cal.fingerprint == host.fingerprint() => {
+                    print_matrix("  measured node-pair bandwidth (GB/s)", &cal.matrix_gb);
+                }
+                Ok(_) => {
+                    eprintln!(
+                        "warning: calibration cache {} was measured on a different topology \
+                         (fingerprint mismatch) — re-run `arclight calibrate`",
+                        cache.display()
+                    );
+                }
+                Err(_) => {
+                    println!(
+                        "  no usable calibration cache at {} — run `arclight calibrate` to \
+                         measure real bandwidths",
+                        cache.display()
+                    );
+                }
+            }
         }
         Platform::Simulated(_) => {
             println!(
@@ -468,6 +591,47 @@ fn cmd_topo(_args: &Args) -> Result<()> {
         sim.bandwidth(0, 0) / 1e9,
         sim.bandwidth(0, 1) / 1e9
     );
+    Ok(())
+}
+
+/// Render a node-pair GB/s matrix (rows: core node, cols: mem node).
+fn print_matrix(title: &str, m: &[Vec<f64>]) {
+    println!("{title}:");
+    let header: Vec<String> = (0..m.len()).map(|j| format!("{j:>8}")).collect();
+    println!("    core\\mem {}", header.join(""));
+    for (i, row) in m.iter().enumerate() {
+        let cells: Vec<String> = row.iter().map(|g| format!("{g:8.1}")).collect();
+        println!("    node {i:<4}{}", cells.join(""));
+    }
+}
+
+/// `arclight calibrate`: measure (or load from cache) the node-pair
+/// bandwidth matrix and store it keyed by the topology fingerprint.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let host = match args.get("root") {
+        Some(root) => hw::HostTopology::from_root(std::path::Path::new(root))
+            .ok_or_else(|| anyhow::anyhow!("no NUMA topology under {root}"))?,
+        None => hw::HostTopology::discover().ok_or_else(|| {
+            anyhow::anyhow!(
+                "no host NUMA topology detected (feature `host` off, non-Linux, or no sysfs \
+                 tree); pass --root <dir> to calibrate against a fixture tree"
+            )
+        })?,
+    };
+    let quick = args.flag("quick");
+    let opts = if quick { hw::bench::BenchOpts::quick() } else { hw::bench::BenchOpts::default() };
+    let path = cache_path(args);
+    let out = hw::bench::calibrate(&host, &path, args.flag("force"), &opts)?;
+    println!("topology fingerprint: {}", out.cal.fingerprint);
+    println!(
+        "cache {}: {}",
+        path.display(),
+        if out.from_cache { "hit (zero re-measurement)" } else { "measured and stored" }
+    );
+    if quick && !out.from_cache {
+        eprintln!("note: --quick numbers are cache-hot smoke values, not real bandwidths");
+    }
+    print_matrix("measured node-pair bandwidth (GB/s)", &out.cal.matrix_gb);
     Ok(())
 }
 
@@ -534,7 +698,10 @@ fn cmd_golden(args: &Args) -> Result<()> {
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().map(String::as_str) else {
-        eprintln!("usage: arclight <generate|run|serve|report|probe|topo|trace|golden> [--flags]");
+        eprintln!(
+            "usage: arclight <generate|run|serve|report|probe|topo|calibrate|trace|golden> \
+             [--flags]"
+        );
         std::process::exit(2);
     };
     let rest = Args::parse(&argv[1..])?;
@@ -549,6 +716,7 @@ fn main() -> Result<()> {
         }
         "probe" => cmd_probe(&rest),
         "topo" => cmd_topo(&rest),
+        "calibrate" => cmd_calibrate(&rest),
         "trace" => cmd_trace(&rest),
         "golden" => cmd_golden(&rest),
         other => bail!("unknown command '{other}'"),

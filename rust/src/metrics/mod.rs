@@ -118,6 +118,15 @@ pub struct Metrics {
     /// Execution platform of the serving engine (`"simulated"` /
     /// `"host"`; empty until a scheduler registers its engine).
     platform: Mutex<&'static str>,
+    /// Strategy the serving engine runs (explicit or auto-selected;
+    /// empty until a scheduler registers its engine).
+    strategy_chosen: Mutex<String>,
+    /// Provenance of the bandwidth matrix behind the engine's topology
+    /// (`"measured"` / `"slit-placeholder"` / `"simulated"`).
+    bandwidth_source: Mutex<&'static str>,
+    /// Auto-tuner step-time prediction (µs) when `--strategy auto`
+    /// picked the strategy; `None` otherwise.
+    predicted_step_us: Mutex<Option<f64>>,
     latency: Mutex<Summary>,
     ttft: Mutex<Summary>,
     /// Enqueue → admission into the running batch.
@@ -167,6 +176,20 @@ impl Metrics {
     pub fn set_platform(&self, platform: &'static str, pinned_workers: usize) {
         *self.platform.lock().unwrap() = platform;
         self.pinned_workers.store(pinned_workers as u64, Ordering::Relaxed);
+    }
+
+    /// Register the serving engine's strategy and bandwidth provenance
+    /// (same last-registration-wins contract as
+    /// [`Metrics::set_platform`]).
+    pub fn set_strategy(
+        &self,
+        strategy: &str,
+        bandwidth_source: &'static str,
+        predicted_step_us: Option<f64>,
+    ) {
+        *self.strategy_chosen.lock().unwrap() = strategy.to_string();
+        *self.bandwidth_source.lock().unwrap() = bandwidth_source;
+        *self.predicted_step_us.lock().unwrap() = predicted_step_us;
     }
 
     /// One continuous-batching step that processed `lanes` lanes with
@@ -288,8 +311,25 @@ impl Metrics {
             (sum(|r| &r.kv_pages_used), sum(|r| &r.kv_pages_total))
         };
         let kv_occ = if kv_total == 0 { 0.0 } else { kv_used as f64 / kv_total as f64 };
+        let strategy = {
+            let s = self.strategy_chosen.lock().unwrap();
+            if s.is_empty() { "unset".to_string() } else { s.clone() }
+        };
+        let mut bw_source = *self.bandwidth_source.lock().unwrap();
+        if bw_source.is_empty() {
+            bw_source = "unset";
+        }
+        let predicted = self
+            .predicted_step_us
+            .lock()
+            .unwrap()
+            .map(Json::from)
+            .unwrap_or(Json::Null);
         obj(vec![
             ("platform", platform.into()),
+            ("strategy_chosen", strategy.into()),
+            ("bandwidth_source", bw_source.into()),
+            ("predicted_step_us", predicted),
             // SIMD tier the vectorized kernels dispatch on (process-wide)
             ("kernel_tier", crate::simd::KernelTier::active().name().into()),
             ("pinned_workers", load(&self.pinned_workers).into()),
@@ -354,6 +394,27 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.get("platform").unwrap().as_str(), Some("simulated"));
         assert_eq!(s.get("pinned_workers").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn strategy_fields_reported() {
+        let m = Metrics::new();
+        // unregistered: labeled unset, prediction null
+        let s = m.snapshot();
+        assert_eq!(s.get("strategy_chosen").unwrap().as_str(), Some("unset"));
+        assert_eq!(s.get("bandwidth_source").unwrap().as_str(), Some("unset"));
+        assert_eq!(s.get("predicted_step_us").unwrap(), &crate::util::json::Json::Null);
+        // explicit strategy: name + provenance, no prediction
+        m.set_strategy("arclight-tp4-syncB", "simulated", None);
+        let s = m.snapshot();
+        assert_eq!(s.get("strategy_chosen").unwrap().as_str(), Some("arclight-tp4-syncB"));
+        assert_eq!(s.get("bandwidth_source").unwrap().as_str(), Some("simulated"));
+        assert_eq!(s.get("predicted_step_us").unwrap(), &crate::util::json::Json::Null);
+        // auto-selected: the tuner's prediction is surfaced
+        m.set_strategy("arclight", "measured", Some(412.5));
+        let s = m.snapshot();
+        assert_eq!(s.get("bandwidth_source").unwrap().as_str(), Some("measured"));
+        assert_eq!(s.get("predicted_step_us").unwrap().as_f64(), Some(412.5));
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub mod topology;
 
 pub use cost::CostModel;
 pub use placement::Placement;
-pub use topology::Topology;
+pub use topology::{BandwidthSource, Topology};
 
 /// Identifier of a NUMA node (0-based).
 pub type NodeId = usize;

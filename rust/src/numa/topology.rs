@@ -11,6 +11,34 @@ pub const KUNPENG920_BW: [[f64; 4]; 4] = [
     [23.0, 22.0, 26.0, 101.0],
 ];
 
+/// Where a topology's bandwidth matrix came from — carried end-to-end
+/// so roofline fractions and strategy choices are never silently
+/// computed against the 100 GB/s placeholder scale.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BandwidthSource {
+    /// Streamed per node pair on the live machine (`hw::bench`).
+    Measured,
+    /// SLIT-distance ratios × the `DEFAULT_LOCAL_GB` placeholder scale
+    /// (`hw::topology::HostTopology::to_topology`) — ratios are real,
+    /// the absolute numbers are not.
+    SlitPlaceholder,
+    /// A hand-written testbed matrix (the paper's Table 1, `uniform`,
+    /// or an explicit test matrix).
+    #[default]
+    Simulated,
+}
+
+impl BandwidthSource {
+    /// Stable string used in metrics and bench JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BandwidthSource::Measured => "measured",
+            BandwidthSource::SlitPlaceholder => "slit-placeholder",
+            BandwidthSource::Simulated => "simulated",
+        }
+    }
+}
+
 /// Description of a simulated many-core NUMA machine.
 #[derive(Clone, Debug)]
 pub struct Topology {
@@ -53,6 +81,8 @@ pub struct Topology {
     pub jitter: f64,
     /// Seed for the deterministic jitter hash.
     pub jitter_seed: u64,
+    /// Provenance of `bw` (measured, SLIT placeholder, or simulated).
+    pub bw_source: BandwidthSource,
 }
 
 impl Topology {
@@ -75,6 +105,7 @@ impl Topology {
             bcast_amort: 1.5,
             jitter: 0.04,
             jitter_seed: 0x5eed,
+            bw_source: BandwidthSource::Simulated,
         }
     }
 
@@ -107,6 +138,13 @@ impl Topology {
 
     pub fn with_cores_per_node(mut self, c: usize) -> Self {
         self.cores_per_node = c;
+        self
+    }
+
+    /// Tag the bandwidth matrix's provenance (builder form, used by the
+    /// `hw::topology` lowerings).
+    pub fn with_bw_source(mut self, src: BandwidthSource) -> Self {
+        self.bw_source = src;
         self
     }
 
@@ -251,6 +289,18 @@ mod tests {
         assert_eq!(t.bandwidth(0, 1), 45e9);
         // calibration constants come from the Kunpeng-920 defaults
         assert_eq!(t.core_flops, Topology::kunpeng920().core_flops);
+    }
+
+    #[test]
+    fn bandwidth_source_defaults_to_simulated() {
+        assert_eq!(Topology::kunpeng920().bw_source, BandwidthSource::Simulated);
+        assert_eq!(Topology::uniform(2, 4, 100.0, 25.0).bw_source, BandwidthSource::Simulated);
+        let t = Topology::from_bandwidth_gb(vec![vec![90.0]], 4)
+            .with_bw_source(BandwidthSource::Measured);
+        assert_eq!(t.bw_source, BandwidthSource::Measured);
+        assert_eq!(t.bw_source.name(), "measured");
+        assert_eq!(BandwidthSource::SlitPlaceholder.name(), "slit-placeholder");
+        assert_eq!(BandwidthSource::Simulated.name(), "simulated");
     }
 
     #[test]

@@ -163,6 +163,8 @@ impl Executor for PjrtExecutor {
             // native SIMD tiers don't apply to XLA-compiled execution
             tier: crate::simd::KernelTier::Scalar,
             sim: None,
+            // strategy/bandwidth provenance is engine-stamped
+            ..Default::default()
         }
     }
 }

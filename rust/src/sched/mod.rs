@@ -201,6 +201,16 @@ pub struct StepReport {
     pub tier: crate::simd::KernelTier,
     /// Simulator detail (`None` for real backends).
     pub sim: Option<SimReport>,
+    /// Name of the strategy that executed the pass. Stamped by the
+    /// engine (executors don't know their strategy); empty when an
+    /// executor is driven directly.
+    pub strategy: String,
+    /// The auto-tuner's predicted decode-step time (µs) for the chosen
+    /// strategy; `None` when the strategy was picked explicitly.
+    pub predicted_step_us: Option<f64>,
+    /// Provenance of the bandwidth matrix behind the topology the pass
+    /// ran against (engine-stamped, like `strategy`).
+    pub bandwidth_source: crate::numa::BandwidthSource,
 }
 
 impl StepReport {

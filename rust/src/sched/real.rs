@@ -158,6 +158,8 @@ impl Executor for RealExecutor {
             plan_cached,
             tier: crate::simd::KernelTier::active(),
             sim: None,
+            // strategy/bandwidth provenance is engine-stamped
+            ..Default::default()
         }
     }
 }

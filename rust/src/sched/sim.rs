@@ -291,6 +291,8 @@ impl Executor for SimExecutor {
             plan_cached: false,
             tier: crate::simd::KernelTier::active(),
             sim: Some(rep),
+            // strategy/bandwidth provenance is engine-stamped
+            ..Default::default()
         }
     }
 }

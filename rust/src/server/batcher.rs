@@ -297,6 +297,11 @@ impl ContinuousBatcher {
     /// drained.
     pub fn serve(mut self, router: Arc<Router>) {
         router.metrics.set_platform(self.engine.platform(), self.engine.pinned_workers());
+        router.metrics.set_strategy(
+            self.engine.strategy_name(),
+            self.engine.bandwidth_source().name(),
+            self.engine.predicted_step_us(),
+        );
         router.metrics.set_kv_pages_total(self.engine.kv_total_pages());
         self.stats.kv_pages_total.store(self.engine.kv_total_pages() as u64, Ordering::Relaxed);
         router.metrics.register_replica(self.stats.clone());
@@ -509,6 +514,11 @@ impl EngineSlot {
     /// Serve until the router shuts down.
     pub fn serve(mut self, router: Arc<Router>) {
         router.metrics.set_platform(self.engine.platform(), self.engine.pinned_workers());
+        router.metrics.set_strategy(
+            self.engine.strategy_name(),
+            self.engine.bandwidth_source().name(),
+            self.engine.predicted_step_us(),
+        );
         while let Some(batch) = router.next_batch() {
             for p in batch {
                 let resp = self.run_one(&p);

@@ -1,0 +1,218 @@
+//! Measured-bandwidth calibration, end to end: the disk cache keyed by
+//! the topology fingerprint (measure once, serve every later run from
+//! cache), the lowering of a stored calibration into a host
+//! `Platform`, and the headline **flip test** — the same machine, the
+//! same thread budget, but the auto-tuner picks a *different*
+//! parallelism strategy once an asymmetric measured matrix replaces
+//! the symmetric SLIT placeholder. That flip is the whole point of
+//! `arclight calibrate`: distance ratios say the cross-socket link is
+//! fine, the STREAM measurement says it is dead, and only the measured
+//! model steers the tuner away from tensor parallelism.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use arclight::baseline::tune;
+use arclight::hw::bench::{self, Calibration};
+use arclight::hw::topology::{HostNode, HostTopology};
+use arclight::hw::Platform;
+use arclight::model::ModelConfig;
+use arclight::numa::{BandwidthSource, Topology};
+
+/// A 2-socket machine with wide nodes (96 cpus each) and a SLIT that
+/// claims the cross link is nearly as fast as local (10 vs 11).
+fn wide_two_node_host() -> HostTopology {
+    HostTopology {
+        nodes: vec![
+            HostNode { id: 0, cpus: (0..96).collect(), mem_total_kb: 1 << 20 },
+            HostNode { id: 1, cpus: (96..192).collect(), mem_total_kb: 1 << 20 },
+        ],
+        distance: vec![vec![10, 11], vec![11, 10]],
+    }
+}
+
+/// Strip the non-bandwidth noise terms (jitter, dispatch tax, barrier
+/// protocol) so candidate ranking reflects the bandwidth matrix alone
+/// — the quantity this test pins.
+fn quiet(mut t: Topology) -> Topology {
+    t.jitter = 0.0;
+    t.op_dispatch = 0.0;
+    t.barrier_local = 0.0;
+    t.barrier_per_node = 0.0;
+    t.barrier_per_thread = 0.0;
+    t
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("arclight-calibration-{}-{name}", std::process::id()))
+}
+
+/// The tentpole acceptance test: a dead measured cross link flips the
+/// tuner's choice away from the tensor parallelism the symmetric SLIT
+/// placeholder favours.
+#[test]
+fn measured_matrix_flips_the_tuner_choice() {
+    let host = wide_two_node_host();
+    let cfg = ModelConfig::small_25m();
+    let threads = 96;
+
+    // placeholder lowering: both locals 100 GB/s, cross ≈ 91 GB/s.
+    // 96 workers on one node share one 100 GB/s channel; TP2 streams
+    // each weight shard from its own node (2 × 100 GB/s) and pays the
+    // (placeholder-fast) link only for the small activation traffic —
+    // tensor parallelism wins.
+    let placeholder = quiet(host.to_topology());
+    assert_eq!(placeholder.bw_source, BandwidthSource::SlitPlaceholder);
+    let p = tune::auto_select(&cfg, &placeholder, threads, 0, 2).unwrap();
+    assert_eq!(
+        p.best.strategy.nodes_used(),
+        2,
+        "symmetric placeholder should pick TP2, got {} ({:.1} µs)",
+        p.best.strategy.name(),
+        p.best.predicted_us
+    );
+
+    // measured lowering: same machine, but the STREAM benchmark found
+    // the cross link is dead (and asymmetric) — every TP candidate now
+    // pays ~2500× per activation byte crossing the socket, so the
+    // tuner retreats to a single node.
+    let matrix = vec![vec![100.0, 0.05], vec![0.04, 95.0]];
+    let measured = quiet(host.to_topology_measured(&matrix));
+    assert_eq!(measured.bw_source, BandwidthSource::Measured);
+    let m = tune::auto_select(&cfg, &measured, threads, 0, 2).unwrap();
+    assert_eq!(
+        m.best.strategy.nodes_used(),
+        1,
+        "dead measured link should flip to single-node, got {} ({:.1} µs)",
+        m.best.strategy.name(),
+        m.best.predicted_us
+    );
+    assert_ne!(p.best.strategy.name(), m.best.strategy.name(), "the choice must flip");
+
+    // the flip is structural, not a tie-break: under the measured
+    // model, the placeholder's winner is catastrophically slower than
+    // the measured winner.
+    let placeholder_choice_under_measured = m
+        .candidates
+        .iter()
+        .find(|c| c.strategy.name() == p.best.strategy.name() && c.base_node == p.best.base_node)
+        .expect("the placeholder winner is still in the measured field");
+    assert!(
+        placeholder_choice_under_measured.predicted_us > m.best.predicted_us * 10.0,
+        "measured model must show a decisive margin: {} µs vs {} µs",
+        placeholder_choice_under_measured.predicted_us,
+        m.best.predicted_us
+    );
+}
+
+/// Second `calibrate` run pays nothing: the fingerprint-keyed cache
+/// serves the stored matrix and the measurement closure never runs.
+#[test]
+fn second_calibrate_run_never_remeasures() {
+    let host = wide_two_node_host();
+    let path = tmp("cache-hit");
+    let _ = fs::remove_file(&path);
+    let runs = AtomicUsize::new(0);
+    let measure = |_: &HostTopology| {
+        runs.fetch_add(1, Ordering::SeqCst);
+        vec![vec![90.0, 20.0], vec![19.0, 88.0]]
+    };
+
+    let first = bench::calibrate_with(&host, &path, false, measure).unwrap();
+    assert!(!first.from_cache);
+    assert_eq!(runs.load(Ordering::SeqCst), 1);
+
+    let second = bench::calibrate_with(&host, &path, false, |_: &HostTopology| {
+        unreachable!("a fingerprint-matched cache must serve without re-measuring")
+    })
+    .unwrap();
+    assert!(second.from_cache);
+    assert_eq!(second.cal, first.cal);
+    assert_eq!(runs.load(Ordering::SeqCst), 1, "zero re-measurement on the second run");
+
+    // a different machine (one cpu offlined) invalidates the cache
+    let mut changed = wide_two_node_host();
+    changed.nodes[1].cpus.pop();
+    let third = bench::calibrate_with(&changed, &path, false, |_: &HostTopology| {
+        runs.fetch_add(1, Ordering::SeqCst);
+        vec![vec![80.0, 10.0], vec![10.0, 80.0]]
+    })
+    .unwrap();
+    assert!(!third.from_cache, "fingerprint mismatch must force a fresh measurement");
+    assert_eq!(runs.load(Ordering::SeqCst), 2);
+    let _ = fs::remove_file(&path);
+}
+
+/// Corrupted or truncated cache files are rejected (and fall back to
+/// measurement) rather than lowering garbage into the cost model.
+#[test]
+fn damaged_caches_fall_back_to_measurement() {
+    let host = wide_two_node_host();
+    let path = tmp("damaged");
+    let good = Calibration {
+        fingerprint: host.fingerprint(),
+        matrix_gb: vec![vec![90.0, 20.0], vec![19.0, 88.0]],
+    };
+    good.store(&path).unwrap();
+    let text = fs::read_to_string(&path).unwrap();
+
+    // truncation and bit-rot both fail closed
+    fs::write(&path, &text[..text.len() / 2]).unwrap();
+    assert!(Calibration::load(&path).is_err());
+    assert!(bench::cached_matrix(&host, &path).is_none());
+    fs::write(&path, text.replace("matrix_gb", "matrix_xx")).unwrap();
+    assert!(bench::cached_matrix(&host, &path).is_none());
+
+    let rebuilt = bench::calibrate_with(&host, &path, false, |_: &HostTopology| {
+        good.matrix_gb.clone()
+    })
+    .unwrap();
+    assert!(!rebuilt.from_cache, "a damaged cache must be re-measured, not trusted");
+    assert_eq!(rebuilt.cal, good);
+    let _ = fs::remove_file(&path);
+}
+
+/// A stored calibration re-lowers a host `Platform` to the measured
+/// matrix: the full path `serve`/`run`/the benches take via
+/// `--cache`, from a sysfs fixture tree on disk.
+#[test]
+fn platform_picks_up_a_stored_calibration() {
+    // sysfs-style fixture tree for a small 2-node machine
+    let root = tmp("sysfs-root");
+    let _ = fs::remove_dir_all(&root);
+    for (id, cpulist, dist) in [(0, "0-3", "10 20"), (1, "4-7", "20 10")] {
+        let dir = root.join(format!("node{id}"));
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("cpulist"), format!("{cpulist}\n")).unwrap();
+        fs::write(dir.join("distance"), format!("{dist}\n")).unwrap();
+    }
+    let host = HostTopology::from_root(&root).expect("fixture tree parses");
+
+    let cache = tmp("platform-cache");
+    let _ = fs::remove_file(&cache);
+    let platform = Platform::from_host(host.clone());
+
+    // no cache on disk: the SLIT placeholder stands
+    let before = platform.clone().with_cached_calibration(&cache);
+    assert_eq!(before.topology().bw_source, BandwidthSource::SlitPlaceholder);
+
+    // a fingerprint-matched calibration upgrades the lowering
+    Calibration {
+        fingerprint: host.fingerprint(),
+        matrix_gb: vec![vec![87.0, 6.5], vec![6.0, 91.0]],
+    }
+    .store(&cache)
+    .unwrap();
+    let after = platform.with_cached_calibration(&cache);
+    assert_eq!(after.topology().bw_source, BandwidthSource::Measured);
+    assert_eq!(after.topology().bandwidth(0, 1), 6.5e9);
+    assert_eq!(after.topology().bandwidth(1, 1), 91.0e9);
+
+    // a simulated platform is untouched by the same cache
+    let sim = Platform::simulated().with_cached_calibration(&cache);
+    assert_eq!(sim.topology().bw_source, BandwidthSource::Simulated);
+
+    let _ = fs::remove_file(&cache);
+    let _ = fs::remove_dir_all(&root);
+}

@@ -16,6 +16,7 @@
 //!     cargo bench --bench ops_hotpath [-- --quick] [-- --json <path>]
 //!         [-- --pin] [-- --tier scalar|avx2|avx512|neon]
 //!         [-- --strategy arclight|llama-isolate|auto] [-- --cache <path>]
+//!         [-- --trace <path>]
 //!
 //! `--quick` shrinks sizes/iterations for the CI bench-smoke leg;
 //! `--json <path>` writes the measured per-iteration seconds as a JSON
@@ -33,6 +34,13 @@
 //! placeholder lowering. The JSON report records `strategy_chosen`,
 //! `predicted_step_us` and `bandwidth_source` so roofline fractions
 //! are never silently read against the placeholder scale.
+//!
+//! `--trace <path>` turns the runtime tracer on: the pass-dispatch
+//! section is measured once with tracing off and once on (the
+//! disabled-path overhead check — `pass_us` vs `pass_us_traced` in the
+//! JSON), the end-to-end sections then run traced so the report gains
+//! `barrier_skew_us` and a `drift` block, and a Chrome `trace_event`
+//! JSON of the collected spans is written to `<path>` at exit.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -151,6 +159,11 @@ fn main() {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let trace_path = args
+        .iter()
+        .position(|a| a == "--trace")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     if let Some(name) = args.iter().position(|a| a == "--tier").and_then(|i| args.get(i + 1)) {
         if name != "auto" {
             let t = KernelTier::parse(name).unwrap_or_else(|| {
@@ -258,6 +271,8 @@ fn main() {
     // either as N boxed-job dispatches (send + alloc + latch each, the
     // legacy walk) or as ONE run_pass dispatch whose workers walk N
     // barrier-separated phases themselves (the PassPlan model).
+    let mut pass_us = 0.0f64;
+    let mut pass_us_traced: Option<f64> = None;
     {
         let workers = 4usize;
         let n_ops = if quick { 64usize } else { 256usize };
@@ -287,6 +302,26 @@ fn main() {
             t_old / t_new,
             n_ops
         );
+        pass_us = t_new * 1e6;
+        // the same pass with the tracer live: every barrier arrival
+        // times itself and records a span, so the traced/untraced
+        // ratio bounds the enabled-path cost per wait (the untraced
+        // run above already exercised the disabled path — one relaxed
+        // load per arrival)
+        if trace_path.is_some() {
+            arclight::trace::set_enabled(true);
+            let name_tr = format!("dispatch {n_ops} empty ops, pass path (traced)");
+            let t_tr = bench(rep, &name_tr, disp_iters, None, tier.name(), || {
+                let gb = gb.clone();
+                pool.run_pass(Arc::new(move |_: &WorkerCtx| {
+                    for _ in 0..n_ops {
+                        gb.wait();
+                    }
+                }));
+            });
+            pass_us_traced = Some(t_tr * 1e6);
+            println!("{:42} traced/untraced pass ratio: {:.2}x", "", t_tr / t_new);
+        }
     }
 
     // --- fused attention over the KV cache -----------------------------------
@@ -329,6 +364,11 @@ fn main() {
     let mut dispatches_per_token = 0.0f64;
     let mut strategy_chosen = String::from("arclight");
     let mut predicted_step_us: Option<f64> = None;
+    // straggler/drift gauges off the last traced decode engine
+    let mut barrier_skew_us: Option<f64> = None;
+    let mut drift_measured_us: Option<f64> = None;
+    let mut drift_ratio: Option<f64> = None;
+    let mut retune_recommended = false;
     for &threads in thread_counts {
         let (strat, base, predicted) = resolve_strategy(&strategy_arg, &cfg, &platform, threads);
         strategy_chosen = strat.name();
@@ -359,6 +399,13 @@ fn main() {
             .last_step_report()
             .map(|r| r.dispatches as f64)
             .unwrap_or(0.0);
+        barrier_skew_us = engine
+            .last_step_report()
+            .and_then(|r| r.trace.as_ref().map(|t| t.skew_us))
+            .or(barrier_skew_us);
+        drift_measured_us = engine.step_ewma_us();
+        drift_ratio = engine.drift_ratio();
+        retune_recommended = engine.retune_recommended();
         println!(
             "{:42} {:>8.1} tok/s ({} dispatch/token)",
             "",
@@ -417,6 +464,25 @@ fn main() {
             ("pinned_workers", pinned_workers.into()),
             ("node_local_bytes", (membind::node_local_bytes() as usize).into()),
             ("dispatches_per_token", dispatches_per_token.into()),
+            ("traced", trace_path.is_some().into()),
+            ("pass_us", pass_us.into()),
+            ("pass_us_traced", pass_us_traced.map(Json::from).unwrap_or(Json::Null)),
+            ("barrier_skew_us", barrier_skew_us.map(Json::from).unwrap_or(Json::Null)),
+            (
+                "drift",
+                obj(vec![
+                    (
+                        "measured_step_us",
+                        drift_measured_us.map(Json::from).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "predicted_step_us",
+                        predicted_step_us.map(Json::from).unwrap_or(Json::Null),
+                    ),
+                    ("ratio", drift_ratio.map(Json::from).unwrap_or(Json::Null)),
+                    ("retune_recommended", retune_recommended.into()),
+                ]),
+            ),
             ("results", Json::Arr(entries)),
         ]);
         if let Some(parent) = std::path::Path::new(&path).parent() {
@@ -424,5 +490,14 @@ fn main() {
         }
         std::fs::write(&path, j.to_string()).expect("write json report");
         println!("wrote report to {path}");
+    }
+
+    if let Some(path) = &trace_path {
+        arclight::trace::export_chrome(std::path::Path::new(path)).expect("write chrome trace");
+        println!(
+            "wrote chrome trace ({} spans collected, {} dropped) to {path}",
+            arclight::trace::collected_spans(),
+            arclight::trace::dropped_spans()
+        );
     }
 }

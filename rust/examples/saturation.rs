@@ -21,7 +21,10 @@
 //!     cargo run --release --example saturation -- --quick --report out.json
 //!
 //! Flags: `--quick` (CI-sized run), `--report <path>` (JSON report for
-//! the perf-trajectory artifact).
+//! the perf-trajectory artifact), `--trace <path>` (turn the runtime
+//! tracer on and export a Chrome trace of the decode passes; the
+//! report then folds in the cluster's `barrier_skew` and `drift`
+//! blocks from the metrics snapshot).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -174,6 +177,14 @@ fn main() -> anyhow::Result<()> {
         .position(|a| a == "--report")
         .and_then(|i| args.get(i + 1))
         .map(PathBuf::from);
+    let trace_path = args
+        .iter()
+        .position(|a| a == "--trace")
+        .and_then(|i| args.get(i + 1))
+        .map(PathBuf::from);
+    if trace_path.is_some() {
+        arclight::trace::set_enabled(true);
+    }
 
     let rates: Vec<f64> = if quick { vec![20.0, 400.0] } else { vec![10.0, 50.0, 200.0, 800.0] };
     let n = if quick { 10 } else { 24 };
@@ -187,6 +198,9 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut sweeps: Vec<Sweep> = Vec::new();
+    // the last phase's metrics snapshot: carries the barrier-skew and
+    // drift blocks when the tracer is on
+    let mut metrics_snapshot: Option<Json> = None;
     for r in [1usize, 2] {
         let groups = &all_groups[..r];
         let nodes: usize = groups.iter().map(Vec::len).sum();
@@ -208,6 +222,7 @@ fn main() -> anyhow::Result<()> {
             );
             sweeps.push(s);
         }
+        metrics_snapshot = Some(cluster.metrics.snapshot());
         cluster.shutdown();
     }
 
@@ -235,6 +250,23 @@ fn main() -> anyhow::Result<()> {
             ("saturating_rps", top.into()),
             ("tok_s_one_replica_saturated", one.into()),
             ("tok_s_two_replicas_saturated", two.into()),
+            ("traced", trace_path.is_some().into()),
+            (
+                "barrier_skew",
+                metrics_snapshot
+                    .as_ref()
+                    .and_then(|m| m.get("barrier_skew"))
+                    .cloned()
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "drift",
+                metrics_snapshot
+                    .as_ref()
+                    .and_then(|m| m.get("drift"))
+                    .cloned()
+                    .unwrap_or(Json::Null),
+            ),
             ("sweeps", Json::Arr(sweeps.iter_mut().map(Sweep::to_json).collect())),
         ]);
         if let Some(parent) = path.parent() {
@@ -242,6 +274,16 @@ fn main() -> anyhow::Result<()> {
         }
         std::fs::write(&path, report.to_string())?;
         println!("wrote report to {}", path.display());
+    }
+
+    if let Some(path) = &trace_path {
+        arclight::trace::export_chrome(path)?;
+        println!(
+            "wrote chrome trace ({} spans collected, {} dropped) to {}",
+            arclight::trace::collected_spans(),
+            arclight::trace::dropped_spans(),
+            path.display()
+        );
     }
 
     assert!(

@@ -318,6 +318,13 @@ pub struct Engine {
     /// Auto-tuner prediction (µs/step) when `--strategy auto` chose
     /// the strategy; `None` for explicit strategies.
     predicted_step_us: Option<f64>,
+    /// EWMA of measured decode-step time (µs) — the drift-detection
+    /// input compared against `predicted_step_us`. Prefill passes are
+    /// excluded: the prediction is a decode-step quantity.
+    step_ewma_us: Option<f64>,
+    /// Decode passes folded into the EWMA (a cold EWMA never
+    /// recommends a re-tune).
+    step_samples: usize,
 }
 
 impl Engine {
@@ -400,6 +407,8 @@ impl Engine {
             strategy_name: opts.strategy.name(),
             bw_source: opts.platform.topology().bw_source,
             predicted_step_us: None,
+            step_ewma_us: None,
+            step_samples: 0,
         })
     }
 
@@ -453,6 +462,39 @@ impl Engine {
     /// reports and metrics can surface predicted vs measured.
     pub fn set_predicted_step_us(&mut self, us: Option<f64>) {
         self.predicted_step_us = us;
+    }
+
+    /// EWMA of measured decode-step time (µs); `None` before the first
+    /// decode pass.
+    pub fn step_ewma_us(&self) -> Option<f64> {
+        self.step_ewma_us
+    }
+
+    /// Decode passes folded into the step-time EWMA.
+    pub fn step_samples(&self) -> usize {
+        self.step_samples
+    }
+
+    /// Measured/predicted step-time ratio (`None` without a tuner
+    /// prediction or before the first decode pass).
+    pub fn drift_ratio(&self) -> Option<f64> {
+        crate::trace::drift_verdict(self.step_ewma_us, self.predicted_step_us, self.step_samples).0
+    }
+
+    /// Whether measured decode-step times drifted out of the acceptable
+    /// band around the tuner's `predicted_step_us` — the hook a
+    /// per-phase re-tuner consumes (see [`crate::trace::drift_verdict`]
+    /// for the band and warm-up rules).
+    pub fn retune_recommended(&self) -> bool {
+        crate::trace::drift_verdict(self.step_ewma_us, self.predicted_step_us, self.step_samples).1
+    }
+
+    /// Fold the just-completed decode pass into the step-time EWMA.
+    fn note_decode_step(&mut self) {
+        if let Some(rep) = &self.last_report {
+            self.step_ewma_us = Some(crate::trace::ewma_fold(self.step_ewma_us, rep.elapsed * 1e6));
+            self.step_samples += 1;
+        }
     }
 
     /// Stamp strategy/bandwidth provenance (and any tuner prediction)
@@ -707,6 +749,7 @@ impl Engine {
         self.write_tokens(&graph, tokens_id, &toks);
         let params = ExecParams::batched(BatchView::new(ps, tables, pos));
         self.last_report = Some(self.stamp(self.executor.run(&graph, &params)));
+        self.note_decode_step();
         let logits_id = self.graphs.decode_batch_logits.expect("batch logits");
         let all = self.read_logits(&graph, logits_id);
         let vocab = self.cfg().vocab;
@@ -737,6 +780,7 @@ impl Engine {
         self.write_tokens(&graph, self.graphs.decode_tokens, &[token]);
         let params = ExecParams::dense(self.pos, 1);
         self.last_report = Some(self.stamp(self.executor.run(&graph, &params)));
+        self.note_decode_step();
         self.pos += 1;
         self.read_logits(&graph, self.graphs.decode_logits)
     }

@@ -23,4 +23,5 @@ pub mod server;
 pub mod simd;
 pub mod tensor;
 pub mod threads;
+pub mod trace;
 pub mod util;

@@ -31,6 +31,12 @@
 //! strategies (TP width × sync discipline × node placement) through
 //! the virtual-time cost model and run the cheapest.
 //!
+//! `run` and `serve` accept `--trace <path>`: turn on the runtime
+//! tracer and export a Chrome `trace_event` JSON (open in Perfetto or
+//! chrome://tracing) with per-worker kernel spans and barrier-wait
+//! spans. `run` prints a skew/drift one-liner on exit; `serve`
+//! rewrites the trace file every few seconds while running.
+//!
 //! Every subcommand accepts `--tier scalar|avx2|avx512|neon|auto` to
 //! force the SIMD kernel tier (default: auto-detect at startup; scalar
 //! is the parity oracle). `avx512` additionally needs the
@@ -270,6 +276,37 @@ fn build_model(args: &Args, opts: &EngineOptions) -> Result<Engine> {
     }
 }
 
+/// Resolve `--trace <path>`: turns the process-wide runtime tracer on
+/// and returns where the Chrome trace should be written. Must run
+/// before engines are built so pool workers bind their span rings
+/// while tracing is already live.
+fn trace_out(args: &Args) -> Result<Option<PathBuf>> {
+    match args.get("trace") {
+        None => Ok(None),
+        Some("true") => bail!("--trace needs an output path, e.g. --trace out.json"),
+        Some(p) => {
+            arclight::trace::set_enabled(true);
+            Ok(Some(PathBuf::from(p)))
+        }
+    }
+}
+
+/// Park the serving main thread; with `--trace`, rewrite the Chrome
+/// trace every few seconds so the file tracks the newest spans.
+fn serve_idle(trace_path: Option<PathBuf>) -> ! {
+    loop {
+        match &trace_path {
+            Some(path) => {
+                std::thread::sleep(std::time::Duration::from_secs(10));
+                if let Err(e) = arclight::trace::export_chrome(path) {
+                    eprintln!("warning: trace export failed: {e}");
+                }
+            }
+            None => std::thread::sleep(std::time::Duration::from_secs(3600)),
+        }
+    }
+}
+
 fn load_engine(args: &Args) -> Result<Engine> {
     let (opts, predicted) = engine_opts(args)?;
     let mut engine = build_model(args, &opts)?;
@@ -292,6 +329,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    let trace_path = trace_out(args)?;
     let mut engine = load_engine(args)?;
     let tok = ByteTokenizer;
     let prompt_text = args.str_or("prompt", "The many-core machine hummed");
@@ -312,11 +350,30 @@ fn cmd_run(args: &Args) -> Result<()> {
         res.decode_seconds,
         res.decode_tok_per_s()
     );
+    if let Some(path) = trace_path {
+        arclight::trace::export_chrome(&path)?;
+        let roll = arclight::trace::global_rollup();
+        let ratio = engine
+            .drift_ratio()
+            .map(|r| format!("{r:.2}"))
+            .unwrap_or_else(|| "n/a".into());
+        eprintln!(
+            "trace: {} kernel + {} barrier spans -> {} | worst group skew {:.1} µs \
+             (global {:.1} µs) | drift ratio {ratio} (retune recommended: {})",
+            roll.kernel_spans,
+            roll.barrier_spans,
+            path.display(),
+            roll.skew_us,
+            roll.global_skew_us,
+            engine.retune_recommended()
+        );
+    }
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:8763");
+    let trace_path = trace_out(args)?;
     let bcfg = BatcherConfig {
         queue_capacity: args.usize("queue", 256),
         max_batch: args.usize("max-batch", 8),
@@ -326,7 +383,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if args.str_or("mode", "continuous") != "continuous" {
             bail!("--replicas implies --mode continuous");
         }
-        return serve_cluster(args, addr, bcfg);
+        return serve_cluster(args, addr, bcfg, trace_path);
     }
     let router = Router::new(bcfg);
     match args.str_or("mode", "continuous") {
@@ -377,16 +434,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         other => bail!("unknown serve mode '{other}' (continuous|slots)"),
     }
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
-    }
+    serve_idle(trace_path)
 }
 
 /// `serve --replicas N|auto`: one continuous-batching engine per NUMA
 /// node group, behind the cluster's placement router. Each replica is
 /// built with `base_node` at its group's first node, so its workers
 /// (and, with `--pin`, its arenas) live on its own nodes.
-fn serve_cluster(args: &Args, addr: &str, bcfg: BatcherConfig) -> Result<()> {
+fn serve_cluster(
+    args: &Args,
+    addr: &str,
+    bcfg: BatcherConfig,
+    trace_path: Option<PathBuf>,
+) -> Result<()> {
     // bare `--replicas` parses as the boolean "true" → auto
     let want = match args.str_or("replicas", "auto") {
         "auto" | "true" => None,
@@ -429,9 +489,7 @@ fn serve_cluster(args: &Args, addr: &str, bcfg: BatcherConfig) -> Result<()> {
         cluster.n_replicas(),
         groups
     );
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
-    }
+    serve_idle(trace_path)
 }
 
 fn cmd_report(args: &Args, which: &str) -> Result<()> {

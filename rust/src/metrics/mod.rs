@@ -1,11 +1,18 @@
 //! Serving metrics: latency histograms, token-throughput counters and
 //! continuous-batching gauges (queue wait, batch occupancy).
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::util::stats::Summary;
+
+/// Length of the sliding window behind `tokens_per_s_window` — long
+/// enough to smooth step-boundary jitter, short enough that the gauge
+/// reflects *current* load instead of decaying toward 0 across idle
+/// gaps the way the lifetime rate does.
+pub const TOKENS_WINDOW_S: f64 = 10.0;
 
 /// Per-replica serving gauges — one per [`crate::server::Cluster`]
 /// engine. The cluster's router reads `live_lanes`/`queue_depth` for
@@ -30,6 +37,19 @@ pub struct ReplicaStats {
     /// Total pages in this replica's KV arena.
     pub kv_pages_total: AtomicU64,
     started: Instant,
+    /// `(elapsed_s, total tokens_decoded)` samples taken at step
+    /// boundaries, pruned to [`TOKENS_WINDOW_S`] — the windowed
+    /// throughput gauge.
+    window: Mutex<VecDeque<(f64, u64)>>,
+    /// EWMA of this replica's measured decode-step time (µs), stored
+    /// as f64 bits (NaN = no samples yet). Only the replica's batcher
+    /// thread writes; the snapshot thread reads.
+    step_ewma_bits: AtomicU64,
+    /// Decode steps folded into the EWMA.
+    step_samples: AtomicU64,
+    /// The replica engine's tuner prediction (µs), f64 bits (NaN =
+    /// explicit strategy, no prediction).
+    predicted_bits: AtomicU64,
 }
 
 impl ReplicaStats {
@@ -44,6 +64,10 @@ impl ReplicaStats {
             kv_pages_used: AtomicU64::new(0),
             kv_pages_total: AtomicU64::new(0),
             started: Instant::now(),
+            window: Mutex::new(VecDeque::new()),
+            step_ewma_bits: AtomicU64::new(f64::NAN.to_bits()),
+            step_samples: AtomicU64::new(0),
+            predicted_bits: AtomicU64::new(f64::NAN.to_bits()),
         }
     }
 
@@ -60,7 +84,9 @@ impl ReplicaStats {
             as usize
     }
 
-    /// Decode throughput of this replica since serve start (token/s).
+    /// Lifetime decode rate of this replica (token/s since serve
+    /// start). Decays toward 0 across idle gaps — pair it with
+    /// [`ReplicaStats::tokens_per_s_window`] for current load.
     pub fn tokens_per_s(&self) -> f64 {
         let elapsed = self.started.elapsed().as_secs_f64();
         if elapsed == 0.0 {
@@ -69,10 +95,80 @@ impl ReplicaStats {
         self.tokens_decoded.load(Ordering::Relaxed) as f64 / elapsed
     }
 
+    /// Sample the windowed-throughput gauge (called by the replica's
+    /// batcher at step boundaries): record one `(elapsed, total
+    /// tokens)` point and prune samples that fell out of the window.
+    pub fn sample_window(&self) {
+        let now = self.started.elapsed().as_secs_f64();
+        let total = self.tokens_decoded.load(Ordering::Relaxed);
+        let mut w = self.window.lock().unwrap();
+        w.push_back((now, total));
+        while let Some(&(t, _)) = w.front() {
+            if now - t > TOKENS_WINDOW_S && w.len() > 2 {
+                w.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Decode throughput over the recent sampling window (token/s):
+    /// token delta over time delta of the retained samples. 0 until
+    /// two samples exist.
+    pub fn tokens_per_s_window(&self) -> f64 {
+        let w = self.window.lock().unwrap();
+        match (w.front(), w.back()) {
+            (Some(&(t0, c0)), Some(&(t1, c1))) if t1 > t0 => (c1 - c0) as f64 / (t1 - t0),
+            _ => 0.0,
+        }
+    }
+
+    /// Fold one measured decode-step time (µs) into this replica's
+    /// EWMA and refresh the engine's tuner prediction next to it.
+    /// Called by the replica's batcher thread only.
+    pub fn record_step_time(&self, us: f64, predicted_us: Option<f64>) {
+        let next = crate::trace::ewma_fold(self.step_ewma_us(), us);
+        self.step_ewma_bits.store(next.to_bits(), Ordering::Relaxed);
+        self.step_samples.fetch_add(1, Ordering::Relaxed);
+        self.predicted_bits
+            .store(predicted_us.unwrap_or(f64::NAN).to_bits(), Ordering::Relaxed);
+    }
+
+    /// EWMA of this replica's measured decode-step time (µs); `None`
+    /// before the first recorded step.
+    pub fn step_ewma_us(&self) -> Option<f64> {
+        let v = f64::from_bits(self.step_ewma_bits.load(Ordering::Relaxed));
+        if v.is_nan() {
+            None
+        } else {
+            Some(v)
+        }
+    }
+
+    fn predicted_step_us(&self) -> Option<f64> {
+        let v = f64::from_bits(self.predicted_bits.load(Ordering::Relaxed));
+        if v.is_nan() {
+            None
+        } else {
+            Some(v)
+        }
+    }
+
+    /// This replica's drift verdict: `(measured/predicted ratio,
+    /// retune_recommended)` per [`crate::trace::drift_verdict`].
+    pub fn drift(&self) -> (Option<f64>, bool) {
+        crate::trace::drift_verdict(
+            self.step_ewma_us(),
+            self.predicted_step_us(),
+            self.step_samples.load(Ordering::Relaxed) as usize,
+        )
+    }
+
     /// One entry of the snapshot's `replicas` array.
     pub fn snapshot(&self) -> crate::util::json::Json {
-        use crate::util::json::obj;
+        use crate::util::json::{obj, Json};
         let load = |c: &AtomicU64| c.load(Ordering::Relaxed) as usize;
+        let (drift_ratio, retune) = self.drift();
         obj(vec![
             ("replica", self.id.into()),
             ("node", self.home_node().into()),
@@ -81,9 +177,13 @@ impl ReplicaStats {
             ("queue_depth", load(&self.queue_depth).into()),
             ("tokens_decoded", load(&self.tokens_decoded).into()),
             ("tokens_per_s", self.tokens_per_s().into()),
+            ("tokens_per_s_window", self.tokens_per_s_window().into()),
             ("prefix_hit_tokens", load(&self.prefix_hit_tokens).into()),
             ("kv_pages_used", load(&self.kv_pages_used).into()),
             ("kv_pages_total", load(&self.kv_pages_total).into()),
+            ("step_ewma_us", self.step_ewma_us().map(Json::from).unwrap_or(Json::Null)),
+            ("drift_ratio", drift_ratio.map(Json::from).unwrap_or(Json::Null)),
+            ("retune_recommended", retune.into()),
         ])
     }
 }
@@ -140,6 +240,25 @@ pub struct Metrics {
     /// owns its own arena).
     replicas: Mutex<Vec<Arc<ReplicaStats>>>,
     start: Mutex<Option<Instant>>,
+    /// Aggregate drift state: `(EWMA of measured decode-step time in
+    /// µs, samples folded)` — compared against `predicted_step_us` in
+    /// the snapshot's `drift` block. Per-replica EWMAs live in
+    /// [`ReplicaStats`].
+    step_drift: Mutex<(Option<f64>, usize)>,
+    /// Barrier-skew gauges folded from traced passes (`None` until a
+    /// traced pass reported a rollup).
+    barrier_skew: Mutex<Option<SkewAgg>>,
+}
+
+/// Folded barrier-skew gauges across traced passes (the straggler
+/// gauge feeding the snapshot's `barrier_skew` block).
+#[derive(Clone, Copy, Debug, Default)]
+struct SkewAgg {
+    last_us: f64,
+    max_us: f64,
+    last_global_us: f64,
+    last_barrier_wait_us: f64,
+    samples: u64,
 }
 
 impl Metrics {
@@ -198,6 +317,28 @@ impl Metrics {
         self.decode_steps.fetch_add(1, Ordering::Relaxed);
         self.decode_lanes.fetch_add(lanes as u64, Ordering::Relaxed);
         self.pass_dispatches.fetch_add(dispatches as u64, Ordering::Relaxed);
+    }
+
+    /// Fold one measured decode-step time (µs) into the aggregate
+    /// drift EWMA (the hook the per-phase re-tuner consumes via the
+    /// snapshot's `drift` block).
+    pub fn record_step_time(&self, us: f64) {
+        let mut d = self.step_drift.lock().unwrap();
+        d.0 = Some(crate::trace::ewma_fold(d.0, us));
+        d.1 += 1;
+    }
+
+    /// Fold a traced pass's rollup into the barrier-skew gauges (only
+    /// called when runtime tracing is enabled — untraced serving never
+    /// takes this lock).
+    pub fn record_barrier_skew(&self, rollup: &crate::trace::PassRollup) {
+        let mut s = self.barrier_skew.lock().unwrap();
+        let agg = s.get_or_insert_with(SkewAgg::default);
+        agg.last_us = rollup.skew_us;
+        agg.max_us = agg.max_us.max(rollup.skew_us);
+        agg.last_global_us = rollup.global_skew_us;
+        agg.last_barrier_wait_us = rollup.barrier_wait_us;
+        agg.samples += 1;
     }
 
     /// Enqueue → admission latency of one request.
@@ -319,12 +460,30 @@ impl Metrics {
         if bw_source.is_empty() {
             bw_source = "unset";
         }
-        let predicted = self
-            .predicted_step_us
-            .lock()
-            .unwrap()
-            .map(Json::from)
-            .unwrap_or(Json::Null);
+        let predicted_opt = *self.predicted_step_us.lock().unwrap();
+        let predicted = predicted_opt.map(Json::from).unwrap_or(Json::Null);
+        // drift: measured step-time EWMA vs the tuner's prediction —
+        // the per-phase re-tuner's hook
+        let (drift_ewma, drift_samples) = *self.step_drift.lock().unwrap();
+        let (drift_ratio, retune) =
+            crate::trace::drift_verdict(drift_ewma, predicted_opt, drift_samples);
+        let drift = obj(vec![
+            ("measured_step_ewma_us", drift_ewma.map(Json::from).unwrap_or(Json::Null)),
+            ("predicted_step_us", predicted_opt.map(Json::from).unwrap_or(Json::Null)),
+            ("ratio", drift_ratio.map(Json::from).unwrap_or(Json::Null)),
+            ("samples", drift_samples.into()),
+            ("retune_recommended", retune.into()),
+        ]);
+        let barrier_skew = match *self.barrier_skew.lock().unwrap() {
+            Some(a) => obj(vec![
+                ("last_skew_us", a.last_us.into()),
+                ("max_skew_us", a.max_us.into()),
+                ("last_global_skew_us", a.last_global_us.into()),
+                ("last_barrier_wait_us", a.last_barrier_wait_us.into()),
+                ("samples", (a.samples as usize).into()),
+            ]),
+            None => Json::Null,
+        };
         obj(vec![
             ("platform", platform.into()),
             ("strategy_chosen", strategy.into()),
@@ -352,12 +511,17 @@ impl Metrics {
             ("replicas", Json::Arr(reps.iter().map(|r| r.snapshot()).collect())),
             ("pass_dispatches", load(&self.pass_dispatches).into()),
             ("dispatches_per_token", self.dispatches_per_token().into()),
+            ("drift", drift),
+            ("barrier_skew", barrier_skew),
             ("queue_wait_p50_s", qw.p50().into()),
             ("queue_wait_p95_s", qw.p95().into()),
+            ("queue_wait_p99_s", qw.p99().into()),
             ("latency_p50_s", lat.p50().into()),
             ("latency_p95_s", lat.p95().into()),
+            ("latency_p99_s", lat.p99().into()),
             ("ttft_p50_s", ttft.p50().into()),
             ("ttft_p95_s", ttft.p95().into()),
+            ("ttft_p99_s", ttft.p99().into()),
         ])
     }
 }
@@ -525,5 +689,104 @@ mod tests {
         let s = m.snapshot();
         let p50 = s.get("queue_wait_p50_s").unwrap().as_f64().unwrap();
         assert!((p50 - 0.020).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p99_percentiles_reported() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            let v = (i + 1) as f64 / 100.0;
+            m.record_request(1, 1, v / 2.0, v, 10.0);
+            m.record_queue_wait(v / 10.0);
+        }
+        let s = m.snapshot();
+        let p95 = s.get("latency_p95_s").unwrap().as_f64().unwrap();
+        let p99 = s.get("latency_p99_s").unwrap().as_f64().unwrap();
+        assert!(p99 > p95, "p99 must sit above p95 on a spread sample");
+        assert!(s.get("ttft_p99_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(s.get("queue_wait_p99_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn drift_block_flips_retune_on_synthetic_slowdown() {
+        let m = Metrics::new();
+        // no prediction, no samples: a null verdict, never a retune
+        let s = m.snapshot();
+        let d = s.get("drift").unwrap();
+        assert_eq!(d.get("retune_recommended").unwrap().as_bool(), Some(false));
+        assert_eq!(d.get("ratio").unwrap(), &crate::util::json::Json::Null);
+        // tuner predicted 100 µs, measured plateau is 250 µs: the EWMA
+        // crosses the band once warm and the flag flips
+        m.set_strategy("arclight", "measured", Some(100.0));
+        for _ in 0..10 {
+            m.record_step_time(250.0);
+        }
+        let s = m.snapshot();
+        let d = s.get("drift").unwrap();
+        assert!(d.get("measured_step_ewma_us").unwrap().as_f64().unwrap() > 200.0);
+        assert!(d.get("ratio").unwrap().as_f64().unwrap() > 2.0);
+        assert_eq!(d.get("samples").unwrap().as_usize(), Some(10));
+        assert_eq!(d.get("retune_recommended").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn drift_stays_quiet_when_measured_matches_prediction() {
+        let m = Metrics::new();
+        m.set_strategy("arclight", "measured", Some(100.0));
+        for _ in 0..20 {
+            m.record_step_time(105.0);
+        }
+        let d = m.snapshot();
+        let d = d.get("drift").unwrap().clone();
+        assert!((d.get("ratio").unwrap().as_f64().unwrap() - 1.05).abs() < 0.02);
+        assert_eq!(d.get("retune_recommended").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn barrier_skew_block_folds_traced_rollups() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().get("barrier_skew").unwrap(), &crate::util::json::Json::Null);
+        let roll = crate::trace::PassRollup {
+            skew_us: 12.0,
+            global_skew_us: 3.0,
+            barrier_wait_us: 40.0,
+            ..Default::default()
+        };
+        m.record_barrier_skew(&roll);
+        m.record_barrier_skew(&crate::trace::PassRollup { skew_us: 5.0, ..roll.clone() });
+        let s = m.snapshot();
+        let b = s.get("barrier_skew").unwrap();
+        assert_eq!(b.get("last_skew_us").unwrap().as_f64(), Some(5.0));
+        assert_eq!(b.get("max_skew_us").unwrap().as_f64(), Some(12.0));
+        assert_eq!(b.get("last_global_skew_us").unwrap().as_f64(), Some(3.0));
+        assert_eq!(b.get("samples").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn windowed_tokens_per_s_survives_idle_gaps() {
+        let r = ReplicaStats::new(0, vec![0]);
+        assert_eq!(r.tokens_per_s_window(), 0.0, "no samples yet");
+        r.tokens_decoded.store(0, Ordering::Relaxed);
+        r.sample_window();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        r.tokens_decoded.store(100, Ordering::Relaxed);
+        r.sample_window();
+        let windowed = r.tokens_per_s_window();
+        assert!(windowed > 0.0, "window rate must be positive after decoding");
+        // the snapshot carries both rates plus the drift fields
+        let s = r.snapshot();
+        assert!(s.get("tokens_per_s_window").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(s.get("step_ewma_us").unwrap(), &crate::util::json::Json::Null);
+        assert_eq!(s.get("retune_recommended").unwrap().as_bool(), Some(false));
+        // replica drift flips on a synthetic slowdown, like the aggregate
+        for _ in 0..10 {
+            r.record_step_time(250.0, Some(100.0));
+        }
+        let (ratio, retune) = r.drift();
+        assert!(ratio.unwrap() > 2.0);
+        assert!(retune);
+        let s = r.snapshot();
+        assert_eq!(s.get("retune_recommended").unwrap().as_bool(), Some(true));
+        assert!(s.get("drift_ratio").unwrap().as_f64().unwrap() > 2.0);
     }
 }

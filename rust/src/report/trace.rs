@@ -9,7 +9,7 @@ use crate::ops::kernel::{op_traffic, TrafficEnv};
 use crate::sched::{ExecParams, PassPlan, SyncMode};
 use crate::threads::Organization;
 use crate::util::chunk_range;
-use crate::util::json::{obj, Json};
+use crate::util::json::Json;
 
 /// One traced operator execution.
 #[derive(Clone, Debug)]
@@ -112,26 +112,26 @@ pub fn trace_pass(
     events
 }
 
-/// Serialize as Chrome trace JSON (load in `chrome://tracing`).
+/// Serialize as Chrome trace JSON (load in `chrome://tracing` or
+/// Perfetto). Built on the runtime tracer's shared span schema
+/// ([`crate::trace::chrome_event`]): pid = NUMA node, tid = lane
+/// (0 = whole pool, group g renders as g+1), `args.kind` = "kernel" —
+/// so a virtual-time trace of a pass diffs field-for-field against a
+/// host trace of the same pass.
 pub fn to_chrome_json(events: &[TraceEvent]) -> String {
     let arr: Vec<Json> = events
         .iter()
         .map(|e| {
-            obj(vec![
-                ("name", e.name.as_str().into()),
-                ("ph", "X".into()),
-                ("ts", e.start_us.into()),
-                ("dur", e.dur_us.into()),
-                ("pid", 1usize.into()),
-                (
-                    "tid",
-                    (if e.group == usize::MAX { 0usize } else { e.group + 1 }).into(),
-                ),
-                ("args", obj(vec![("node", e.node.into())])),
-            ])
+            let tid = if e.group == usize::MAX { 0 } else { e.group + 1 };
+            let mut args: Vec<(&str, Json)> =
+                vec![("kind", "kernel".into()), ("virtual", true.into())];
+            if e.group != usize::MAX {
+                args.push(("group", e.group.into()));
+            }
+            crate::trace::chrome_event(&e.name, e.start_us, e.dur_us, e.node, tid, args)
         })
         .collect();
-    obj(vec![("traceEvents", Json::Arr(arr))]).to_string()
+    crate::trace::chrome_doc(arr).to_string()
 }
 
 #[cfg(test)]
@@ -185,5 +185,10 @@ mod tests {
         let arr = j.get("traceEvents").unwrap().as_arr().unwrap();
         assert_eq!(arr[0].get("ph").unwrap().as_str(), Some("X"));
         assert_eq!(arr[0].get("dur").unwrap().as_f64(), Some(12.0));
+        // shared span schema with the runtime tracer: pid = node,
+        // tid = lane (group 1 -> 2), kind tagged in args
+        assert_eq!(arr[0].get("pid").unwrap().as_usize(), Some(2));
+        assert_eq!(arr[0].get("tid").unwrap().as_usize(), Some(2));
+        assert_eq!(arr[0].get("args").unwrap().get("kind").unwrap().as_str(), Some("kernel"));
     }
 }

@@ -211,6 +211,10 @@ pub struct StepReport {
     /// Provenance of the bandwidth matrix behind the topology the pass
     /// ran against (engine-stamped, like `strategy`).
     pub bandwidth_source: crate::numa::BandwidthSource,
+    /// Per-pass tracer rollup (kernel time shares, per-group barrier
+    /// skew); `None` unless runtime tracing was enabled
+    /// ([`crate::trace::set_enabled`]) on a real-executor pass.
+    pub trace: Option<crate::trace::PassRollup>,
 }
 
 impl StepReport {

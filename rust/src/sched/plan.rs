@@ -232,27 +232,59 @@ impl PassPlan {
     ) {
         use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
         let assignment = org_tp.assignment(worker);
+        // one relaxed load per pass; the per-step traced work below is
+        // skipped entirely when off
+        let tracing = crate::trace::enabled();
         let mut deferred: Option<Box<dyn std::any::Any + Send>> = None;
         for step in &self.steps {
             if deferred.is_none() {
+                // resolve this worker's slice of the step up front so
+                // both the compute closure and the trace span agree on
+                // kernel, group and unit range
+                let slice = if step.width == 1 {
+                    let part = &self.parts[step.part0];
+                    let (u0, u1) = chunk_range(part.units, pool_size, worker);
+                    Some((part, u0, u1, u32::MAX))
+                } else if let Some((gi, rank)) = assignment {
+                    let part = &self.parts[step.part0 + gi];
+                    let size = org_tp.groups[gi].size();
+                    let (u0, u1) = chunk_range(part.units, size, rank);
+                    Some((part, u0, u1, gi as u32))
+                } else {
+                    None
+                };
+                let t0 = if tracing { crate::trace::now_ns() } else { 0 };
                 let r = catch_unwind(AssertUnwindSafe(|| {
-                    if step.width == 1 {
-                        let part = &self.parts[step.part0];
-                        let (u0, u1) = chunk_range(part.units, pool_size, worker);
-                        if u0 < u1 {
-                            let op = OpCtx { graph, pool, id: part.id, params };
-                            unsafe { part.kernel.run(&op, u0, u1) };
-                        }
-                    } else if let Some((gi, rank)) = assignment {
-                        let part = &self.parts[step.part0 + gi];
-                        let size = org_tp.groups[gi].size();
-                        let (u0, u1) = chunk_range(part.units, size, rank);
+                    if let Some((part, u0, u1, _)) = slice {
                         if u0 < u1 {
                             let op = OpCtx { graph, pool, id: part.id, params };
                             unsafe { part.kernel.run(&op, u0, u1) };
                         }
                     }
                 }));
+                if tracing {
+                    // every worker records exactly one kernel span per
+                    // step (idle workers included), so spans-per-pass
+                    // is exactly steps × pool size
+                    match slice {
+                        Some((part, u0, u1, group)) => crate::trace::record_kernel(
+                            part.kernel.name(),
+                            t0,
+                            group,
+                            step.entry as u32,
+                            u0 as u32,
+                            u1 as u32,
+                        ),
+                        None => crate::trace::record_kernel(
+                            "idle",
+                            t0,
+                            u32::MAX,
+                            step.entry as u32,
+                            0,
+                            0,
+                        ),
+                    }
+                }
                 if let Err(p) = r {
                     deferred = Some(p);
                 }

@@ -147,9 +147,18 @@ impl Executor for RealExecutor {
         let org = self.org_tp.clone();
         let params = params.clone();
         let global = self.threads.global_barrier();
+        let tracing = crate::trace::enabled();
+        let t_ns = if tracing { crate::trace::now_ns() } else { 0 };
         self.threads.run_pass(Arc::new(move |ctx: &crate::threads::WorkerCtx| {
             plan.run_worker(&graph, &pool, &params, &org, n, ctx.worker, &global);
         }));
+        // the completion latch inside run_pass ordered every worker's
+        // ring writes before this drain
+        let trace = if tracing {
+            Some(crate::trace::finish_pass(self.threads.trace_pool_id(), t_ns))
+        } else {
+            None
+        };
         StepReport {
             elapsed: t0.elapsed().as_secs_f64(),
             ops,
@@ -158,6 +167,7 @@ impl Executor for RealExecutor {
             plan_cached,
             tier: crate::simd::KernelTier::active(),
             sim: None,
+            trace,
             // strategy/bandwidth provenance is engine-stamped
             ..Default::default()
         }
@@ -261,6 +271,35 @@ mod tests {
             assert_eq!(ex.threads.dispatches() - d0, 1, "pass {pass}");
             assert_eq!(rep.dispatches, 1);
         }
+    }
+
+    #[test]
+    fn traced_pass_records_steps_times_workers_kernel_spans() {
+        // serialize against every other test that toggles the
+        // process-global tracer flag
+        let _g = crate::trace::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let (ex, (graph, pool, x, _z, ws)) = executor_for(SyncMode::SyncB);
+        fill(&pool, &graph, x, &[1.0; 4]);
+        fill(&pool, &graph, ws[0], &[0.5; 8]);
+        fill(&pool, &graph, ws[1], &[0.25; 8]);
+        crate::trace::set_enabled(true);
+        let rep = ex.run(&graph, &ExecParams::dense(0, 1));
+        crate::trace::set_enabled(false);
+        let roll = rep.trace.expect("traced pass must carry a rollup");
+        assert_eq!(
+            roll.kernel_spans,
+            graph.exec.len() * ex.threads.len(),
+            "one kernel span per plan step per worker (idle workers included)"
+        );
+        assert!(
+            roll.barrier_spans >= ex.threads.len(),
+            "every worker parks at least at the region-end global barrier"
+        );
+        assert!(!roll.kernels.is_empty());
+        assert!(roll.skew_us >= 0.0 && roll.global_skew_us >= 0.0);
+        // with the flag back off, passes must not attach rollups
+        let rep2 = ex.run(&graph, &ExecParams::dense(0, 1));
+        assert!(rep2.trace.is_none());
     }
 
     #[test]

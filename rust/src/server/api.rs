@@ -196,8 +196,8 @@ fn handle_conn(stream: TcpStream, target: Target) {
 pub const PROTO_VERSION: usize = 2;
 
 /// Capabilities a v2 server advertises in the `hello` reply.
-pub const PROTO_FEATURES: [&str; 6] =
-    ["generate", "metrics", "ping", "paged_kv", "prefix_cache", "cluster"];
+pub const PROTO_FEATURES: [&str; 7] =
+    ["generate", "metrics", "ping", "paged_kv", "prefix_cache", "cluster", "drift"];
 
 /// Structured protocol error (`extra` carries op-specific context).
 fn proto_err(code: &str, message: String, extra: Vec<(&str, Json)>) -> Json {

@@ -420,6 +420,17 @@ impl ContinuousBatcher {
         router.metrics.record_concurrency(active.len());
         router.metrics.record_kv_pages(self.engine.kv_pages_in_use());
         self.stats.kv_pages_used.store(self.engine.kv_pages_in_use() as u64, Ordering::Relaxed);
+        // drift + straggler gauges off the pass that just ran: step
+        // time feeds the aggregate and per-replica EWMAs; a traced
+        // pass's rollup feeds the barrier-skew block
+        if let Some(rep) = self.engine.last_step_report() {
+            let step_us = rep.elapsed * 1e6;
+            router.metrics.record_step_time(step_us);
+            if let Some(roll) = &rep.trace {
+                router.metrics.record_barrier_skew(roll);
+            }
+            self.stats.record_step_time(step_us, self.engine.predicted_step_us());
+        }
 
         let mut finished: Vec<usize> = Vec::new();
         let mut sampled = 0u64;
@@ -444,6 +455,7 @@ impl ContinuousBatcher {
             }
         }
         self.stats.tokens_decoded.fetch_add(sampled, Ordering::Relaxed);
+        self.stats.sample_window();
         for &ai in finished.iter().rev() {
             let done = active.remove(ai);
             self.retire(done, router);

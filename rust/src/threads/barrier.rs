@@ -13,12 +13,23 @@ pub struct SpinBarrier {
     n: usize,
     count: AtomicUsize,
     sense: AtomicBool,
+    /// Trace scope: the TP group id this barrier belongs to, or
+    /// `u32::MAX` for a pool-global (untagged) barrier. Only read when
+    /// the tracer is enabled.
+    tag: u32,
 }
 
 impl SpinBarrier {
     pub fn new(n: usize) -> Self {
+        Self::with_tag(n, u32::MAX)
+    }
+
+    /// A barrier tagged with its trace scope (group id); group-local
+    /// barriers are built with their group id so barrier-wait spans can
+    /// be attributed to the right Sync-B group.
+    pub fn with_tag(n: usize, tag: u32) -> Self {
         assert!(n > 0);
-        SpinBarrier { n, count: AtomicUsize::new(0), sense: AtomicBool::new(false) }
+        SpinBarrier { n, count: AtomicUsize::new(0), sense: AtomicBool::new(false), tag }
     }
 
     pub fn parties(&self) -> usize {
@@ -27,8 +38,21 @@ impl SpinBarrier {
 
     /// Block until all `n` parties arrive. Returns `true` for exactly one
     /// caller per phase (the "serial" thread, llama.cpp's convention for
-    /// post-op bookkeeping).
+    /// post-op bookkeeping). When tracing is enabled ([`crate::trace`])
+    /// the wait is recorded as a barrier span attributed to this
+    /// barrier's scope tag; the disabled path costs one relaxed load.
     pub fn wait(&self) -> bool {
+        if crate::trace::enabled() {
+            let t0 = crate::trace::now_ns();
+            let serial = self.wait_core();
+            crate::trace::record_barrier(self.tag, t0);
+            serial
+        } else {
+            self.wait_core()
+        }
+    }
+
+    fn wait_core(&self) -> bool {
         let my_sense = !self.sense.load(Ordering::Relaxed);
         let arrived = self.count.fetch_add(1, Ordering::AcqRel) + 1;
         if arrived == self.n {

@@ -28,7 +28,7 @@ pub struct GroupView {
 impl GroupView {
     pub fn new(id: usize, workers: Vec<usize>, node: NodeId) -> Self {
         assert!(!workers.is_empty());
-        let barrier = Arc::new(SpinBarrier::new(workers.len()));
+        let barrier = Arc::new(SpinBarrier::with_tag(workers.len(), id as u32));
         GroupView { id, workers, node, barrier }
     }
 

@@ -94,6 +94,10 @@ pub struct ThreadPool {
     /// Per-worker host-pin outcome (`false` everywhere when spawned
     /// without a cpu map or when pinning is unavailable).
     pinned: Vec<bool>,
+    /// Trace identity of this pool: the scope `trace::finish_pass`
+    /// drains. Workers bind their thread-local span rings to it at
+    /// spawn; distinct pools (cluster replicas) never share rings.
+    trace_pool: u64,
 }
 
 impl ThreadPool {
@@ -119,6 +123,7 @@ impl ThreadPool {
         let pin_state: Arc<Vec<AtomicBool>> =
             Arc::new((0..n).map(|_| AtomicBool::new(false)).collect());
         let started = Arc::new(Latch::new(n));
+        let trace_pool = crate::trace::new_pool_id();
         for (i, core) in cores.iter().copied().enumerate() {
             let (tx, rx) = channel::<Msg>();
             senders.push(tx);
@@ -135,6 +140,7 @@ impl ThreadPool {
                                 pin_state[i].store(true, Ordering::Release);
                             }
                         }
+                        crate::trace::bind_worker(trace_pool, i, core.node);
                         started.count_down(false);
                         while let Ok(msg) = rx.recv() {
                             // A panicking job must not kill the worker
@@ -167,7 +173,14 @@ impl ThreadPool {
             jobs_dispatched: AtomicUsize::new(0),
             dispatches: AtomicUsize::new(0),
             pinned,
+            trace_pool,
         }
+    }
+
+    /// Trace identity of this pool (the drain scope of
+    /// [`crate::trace::finish_pass`]).
+    pub fn trace_pool_id(&self) -> u64 {
+        self.trace_pool
     }
 
     pub fn len(&self) -> usize {

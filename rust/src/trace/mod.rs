@@ -1,0 +1,832 @@
+//! Runtime tracing: per-worker span rings, Chrome-trace export and
+//! barrier-skew rollups.
+//!
+//! The repo could observe *outcomes* (tokens/s, `predicted_step_us`)
+//! but never *where a step's time went* — which kernel, which worker,
+//! how long each thread spun at a Sync-B barrier. This module records
+//! exactly that, cheaply enough to stay compiled into every build:
+//!
+//! * **Off by default, one load when off.** Every instrumentation site
+//!   guards on [`enabled`], a single relaxed atomic load. No clock
+//!   read, no ring write, no allocation happens unless tracing was
+//!   switched on ([`set_enabled`]).
+//! * **One fixed-capacity ring per worker thread (plus the pass
+//!   leader).** Each pool worker binds itself at spawn
+//!   ([`bind_worker`]) and records spans into its own single-producer
+//!   ring — no locks, no contention on the hot path. Rings hold the
+//!   newest [`RING_CAP`] spans; overwritten spans are counted in
+//!   [`dropped_spans`], never silently lost.
+//! * **Leader-side drain.** After each pass the executor calls
+//!   [`finish_pass`], which appends the pass-dispatch span, drains the
+//!   pool's rings (safe: the pass completion latch ordered every
+//!   worker write before the drain), folds a [`PassRollup`]
+//!   (per-kernel time share, per-group barrier skew — the straggler
+//!   gauge) and moves the spans into the bounded collected buffer the
+//!   Chrome exporter reads.
+//!
+//! Three span kinds exist, shared with the simulator's virtual-time
+//! trace (`crate::report::trace` emits the same Chrome `trace_event`
+//! schema through [`chrome_event`], so sim and host traces diff
+//! against each other): `pass` (one per pool dispatch), one kernel
+//! span per plan step per worker (name, unit range, entry index), and
+//! `barrier.global` / `barrier.group` wait spans recorded inside
+//! [`crate::threads::SpinBarrier::wait`] itself.
+//!
+//! [`export_chrome`] writes `{"traceEvents": [...]}` with `pid` = NUMA
+//! node and `tid` = worker rank, loadable in Perfetto / `chrome://tracing`.
+//! Export when the engine is quiescent (after generation, after the
+//! bench sections) — the collected buffer is only appended between
+//! passes, so an export mid-run just misses the pass in flight.
+
+use std::cell::{RefCell, UnsafeCell};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+/// Spans retained per worker ring. At one kernel span + one barrier
+/// span per plan step, a ring holds the most recent ~15–20 decode
+/// passes of a 120-op graph — enough for per-pass rollups (drained
+/// every pass) with slack for passes the leader never drained.
+pub const RING_CAP: usize = 4096;
+
+/// Collected-span ceiling across the whole process (~12 MB at 48 B per
+/// span). Beyond it, freshly drained spans are dropped and counted.
+pub const MAX_COLLECTED: usize = 1 << 18;
+
+/// Ring rank recorded for a pass leader (the executor thread).
+pub const LEADER_RANK: u32 = u32::MAX;
+
+/// What a span measured.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One whole pool dispatch (leader-side, wraps the pass).
+    Pass,
+    /// One worker's slice of one plan step (kernel name + unit range).
+    Kernel,
+    /// Time spent waiting at a global or group spin barrier.
+    Barrier,
+}
+
+/// One recorded span. `Copy` and allocation-free: kernel names are the
+/// `&'static str` the registry resolved at graph build, timestamps are
+/// nanoseconds since the process trace epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    /// Span kind (pass / kernel / barrier wait).
+    pub kind: SpanKind,
+    /// Kernel name, `"pass"`, or `"barrier.global"`/`"barrier.group"`.
+    pub name: &'static str,
+    /// Start, nanoseconds since the trace epoch.
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// TP group id (`u32::MAX` when the span is group-less: width-1
+    /// steps, the global barrier, pass spans, idle workers).
+    pub group: u32,
+    /// Execution-list entry index (`u32::MAX` for non-kernel spans).
+    pub entry: u32,
+    /// First unit of the worker's range (kernel spans).
+    pub u0: u32,
+    /// One past the last unit of the worker's range (kernel spans).
+    pub u1: u32,
+}
+
+impl Span {
+    fn empty() -> Span {
+        Span {
+            kind: SpanKind::Kernel,
+            name: "",
+            start_ns: 0,
+            dur_ns: 0,
+            group: u32::MAX,
+            entry: u32::MAX,
+            u0: 0,
+            u1: 0,
+        }
+    }
+}
+
+/// Fixed-capacity single-producer ring. The owning thread is the only
+/// writer; the pass leader is the only reader, and every read happens
+/// after the pool's completion latch ordered the writes (or after the
+/// producer quiesced), so the unsynchronized slot accesses never race.
+struct Ring {
+    cap: u64,
+    /// Total spans ever pushed (monotonic; slot = `head % cap`).
+    head: AtomicU64,
+    /// Total spans ever drained (leader-only).
+    taken: AtomicU64,
+    slots: Box<[UnsafeCell<Span>]>,
+}
+
+// Slots are raw cells, but the producer/consumer protocol above keeps
+// accesses exclusive; `head` is the release/acquire handoff point.
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        assert!(cap > 0);
+        Ring {
+            cap: cap as u64,
+            head: AtomicU64::new(0),
+            taken: AtomicU64::new(0),
+            slots: (0..cap).map(|_| UnsafeCell::new(Span::empty())).collect(),
+        }
+    }
+
+    /// Producer-side push; wraps over the oldest span when full.
+    fn push(&self, s: Span) {
+        let h = self.head.load(Ordering::Relaxed);
+        unsafe {
+            *self.slots[(h % self.cap) as usize].get() = s;
+        }
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Consumer-side drain of everything since the previous drain,
+    /// oldest first, clamped to the ring capacity (wraparound keeps
+    /// the *newest* spans). Returns the overwritten-span count.
+    fn drain(&self, out: &mut Vec<Span>) -> u64 {
+        let head = self.head.load(Ordering::Acquire);
+        let taken = self.taken.load(Ordering::Relaxed);
+        let avail = head - taken;
+        let keep = avail.min(self.cap);
+        for i in (head - keep)..head {
+            out.push(unsafe { *self.slots[(i % self.cap) as usize].get() });
+        }
+        self.taken.store(head, Ordering::Relaxed);
+        avail - keep
+    }
+}
+
+/// A drained span plus the identity of the ring that produced it.
+#[derive(Clone, Copy, Debug)]
+struct CollectedSpan {
+    rank: u32,
+    node: u32,
+    span: Span,
+}
+
+struct RingEntry {
+    pool: u64,
+    rank: u32,
+    node: u32,
+    ring: Arc<Ring>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static POOL_IDS: AtomicU64 = AtomicU64::new(1);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static REGISTRY: Mutex<Vec<RingEntry>> = Mutex::new(Vec::new());
+static COLLECTED: Mutex<Vec<CollectedSpan>> = Mutex::new(Vec::new());
+
+struct TlBind {
+    pool: u64,
+    rank: u32,
+    node: u32,
+    ring: Option<Arc<Ring>>,
+}
+
+thread_local! {
+    // Threads that never called `bind_worker` (tests, the main thread)
+    // record into pool 0, which no executor drains — their spans stay
+    // out of rollups and exports by construction.
+    static TL: RefCell<TlBind> =
+        const { RefCell::new(TlBind { pool: 0, rank: LEADER_RANK, node: 0, ring: None }) };
+}
+
+/// Switch tracing on or off. Enabling pre-warms the trace epoch so the
+/// first span doesn't pay the `OnceLock` initialization.
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The disabled-path guard: a single relaxed atomic load. Every
+/// instrumentation site checks this before touching the clock or a
+/// ring.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Nanoseconds since the process trace epoch (first use anchors it).
+#[inline]
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Allocate a fresh pool identity (the drain scope of `finish_pass`).
+pub fn new_pool_id() -> u64 {
+    POOL_IDS.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Bind the calling thread as worker `rank` (home NUMA node `node`) of
+/// pool `pool`. Called once per worker at spawn; the ring itself is
+/// allocated lazily on the first recorded span, so pools that are
+/// never traced cost nothing beyond this thread-local store.
+pub fn bind_worker(pool: u64, rank: usize, node: usize) {
+    TL.with(|t| {
+        let mut t = t.borrow_mut();
+        t.pool = pool;
+        t.rank = rank as u32;
+        t.node = node as u32;
+        t.ring = None;
+    });
+}
+
+fn tl_push(span: Span) {
+    TL.with(|t| {
+        let mut t = t.borrow_mut();
+        if t.ring.is_none() {
+            let ring = Arc::new(Ring::new(RING_CAP));
+            REGISTRY.lock().unwrap().push(RingEntry {
+                pool: t.pool,
+                rank: t.rank,
+                node: t.node,
+                ring: ring.clone(),
+            });
+            t.ring = Some(ring);
+        }
+        t.ring.as_ref().expect("ring just installed").push(span);
+    });
+}
+
+/// Record one kernel span for the calling worker: step `entry` of the
+/// plan, units `[u0, u1)` (equal for an idle worker), TP group
+/// `group` (`u32::MAX` for width-1 steps). Callers gate on
+/// [`enabled`]; `start_ns` came from [`now_ns`] before the kernel ran.
+pub fn record_kernel(name: &'static str, start_ns: u64, group: u32, entry: u32, u0: u32, u1: u32) {
+    let span = Span {
+        kind: SpanKind::Kernel,
+        name,
+        start_ns,
+        dur_ns: now_ns().saturating_sub(start_ns),
+        group,
+        entry,
+        u0,
+        u1,
+    };
+    tl_push(span);
+}
+
+/// Record the wait at a spin-barrier arrival. `tag` is the barrier's
+/// scope: `u32::MAX` for the pool-global barrier, the group id for a
+/// group-local one ([`crate::threads::SpinBarrier::with_tag`]).
+pub fn record_barrier(tag: u32, start_ns: u64) {
+    let span = Span {
+        kind: SpanKind::Barrier,
+        name: if tag == u32::MAX { "barrier.global" } else { "barrier.group" },
+        start_ns,
+        dur_ns: now_ns().saturating_sub(start_ns),
+        group: tag,
+        entry: u32::MAX,
+        u0: 0,
+        u1: 0,
+    };
+    tl_push(span);
+}
+
+fn leader_ring(pool: u64) -> Arc<Ring> {
+    let mut reg = REGISTRY.lock().unwrap();
+    if let Some(e) = reg.iter().find(|e| e.pool == pool && e.rank == LEADER_RANK) {
+        return e.ring.clone();
+    }
+    let ring = Arc::new(Ring::new(RING_CAP));
+    reg.push(RingEntry { pool, rank: LEADER_RANK, node: 0, ring: ring.clone() });
+    ring
+}
+
+/// Leader-side pass epilogue: append the pass-dispatch span, drain the
+/// pool's worker rings (the completion latch ordered every worker
+/// write before this call), fold the rollup and move the spans into
+/// the collected buffer for export. Called once per pass by the real
+/// executor when tracing is enabled.
+pub fn finish_pass(pool: u64, start_ns: u64) -> PassRollup {
+    let end = now_ns();
+    leader_ring(pool).push(Span {
+        kind: SpanKind::Pass,
+        name: "pass",
+        start_ns,
+        dur_ns: end.saturating_sub(start_ns),
+        group: u32::MAX,
+        entry: u32::MAX,
+        u0: 0,
+        u1: 0,
+    });
+    let mut spans: Vec<CollectedSpan> = Vec::new();
+    let mut lost = 0u64;
+    {
+        let reg = REGISTRY.lock().unwrap();
+        let mut tmp = Vec::new();
+        for e in reg.iter().filter(|e| e.pool == pool) {
+            tmp.clear();
+            lost += e.ring.drain(&mut tmp);
+            let (rank, node) = (e.rank, e.node);
+            spans.extend(tmp.iter().map(|&span| CollectedSpan { rank, node, span }));
+        }
+    }
+    if lost > 0 {
+        DROPPED.fetch_add(lost, Ordering::Relaxed);
+    }
+    let rollup = fold(&spans);
+    collect(spans);
+    rollup
+}
+
+fn collect(spans: Vec<CollectedSpan>) {
+    let mut c = COLLECTED.lock().unwrap();
+    let room = MAX_COLLECTED.saturating_sub(c.len());
+    if spans.len() > room {
+        DROPPED.fetch_add((spans.len() - room) as u64, Ordering::Relaxed);
+    }
+    c.extend(spans.into_iter().take(room));
+}
+
+/// Spans currently held for export.
+pub fn collected_spans() -> usize {
+    COLLECTED.lock().unwrap().len()
+}
+
+/// Spans lost to ring wraparound or the collected-buffer ceiling.
+pub fn dropped_spans() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Clear the collected buffer and the drop counter (bench phases,
+/// tests). Rings keep their cursors; live workers are unaffected.
+pub fn reset_collected() {
+    COLLECTED.lock().unwrap().clear();
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// Drift-detection parameters, shared by the engine (per-engine EWMA)
+/// and the serving metrics (aggregate + per-replica EWMAs): smoothing
+/// factor of the measured-step-time EWMA, minimum samples before a
+/// verdict, and the acceptable measured/predicted ratio band outside
+/// which a re-tune is recommended.
+pub const DRIFT_ALPHA: f64 = 0.2;
+/// Minimum EWMA samples before `retune_recommended` may fire.
+pub const DRIFT_MIN_SAMPLES: usize = 8;
+/// Lower bound of the acceptable measured/predicted ratio band.
+pub const DRIFT_RATIO_LOW: f64 = 0.8;
+/// Upper bound of the acceptable measured/predicted ratio band.
+pub const DRIFT_RATIO_HIGH: f64 = 1.25;
+
+/// Fold one measured step time (µs) into the drift EWMA.
+pub fn ewma_fold(prev: Option<f64>, sample_us: f64) -> f64 {
+    match prev {
+        None => sample_us,
+        Some(e) => e + DRIFT_ALPHA * (sample_us - e),
+    }
+}
+
+/// Drift verdict: `(ratio, retune_recommended)` comparing the measured
+/// EWMA against the tuner's prediction. No verdict (ratio `None`,
+/// recommend `false`) without both sides, and no recommendation before
+/// [`DRIFT_MIN_SAMPLES`] — a cold EWMA is noise, not drift.
+pub fn drift_verdict(
+    ewma_us: Option<f64>,
+    predicted_us: Option<f64>,
+    samples: usize,
+) -> (Option<f64>, bool) {
+    match (ewma_us, predicted_us) {
+        (Some(e), Some(p)) if p > 0.0 => {
+            let ratio = e / p;
+            let retune = samples >= DRIFT_MIN_SAMPLES
+                && !(DRIFT_RATIO_LOW..=DRIFT_RATIO_HIGH).contains(&ratio);
+            (Some(ratio), retune)
+        }
+        _ => (None, false),
+    }
+}
+
+/// Per-kernel share of a rollup's total kernel time.
+#[derive(Clone, Debug)]
+pub struct KernelStat {
+    /// Kernel name (`"idle"` for steps a worker sat out).
+    pub name: &'static str,
+    /// Spans folded into this row.
+    pub spans: usize,
+    /// Summed span time across workers, microseconds.
+    pub total_us: f64,
+    /// `total_us` over the rollup's whole kernel time (0..=1).
+    pub share: f64,
+}
+
+/// Barrier-wait skew of one TP group: the straggler gauge. Each
+/// worker's group-barrier waits are summed over the window; `skew_us`
+/// is the max−min across the group's workers — a large value means
+/// one worker consistently arrives late (its peers burn that time
+/// spinning), which is the measured case for intra-group work
+/// stealing.
+#[derive(Clone, Debug)]
+pub struct GroupSkew {
+    /// TP group id (`u32::MAX` aggregates the pool-global barrier).
+    pub group: u32,
+    /// Workers that recorded waits at this scope.
+    pub workers: usize,
+    /// Smallest per-worker summed wait, microseconds.
+    pub min_wait_us: f64,
+    /// Largest per-worker summed wait, microseconds.
+    pub max_wait_us: f64,
+    /// `max_wait_us - min_wait_us`.
+    pub skew_us: f64,
+}
+
+/// Folded view of a span window (one pass, or everything collected):
+/// per-kernel time share plus the per-group barrier-skew gauges.
+#[derive(Clone, Debug, Default)]
+pub struct PassRollup {
+    /// Kernel spans folded (per pass: plan steps × pool workers).
+    pub kernel_spans: usize,
+    /// Barrier-wait spans folded.
+    pub barrier_spans: usize,
+    /// Per-kernel totals, largest share first.
+    pub kernels: Vec<KernelStat>,
+    /// Per-group barrier skew, group order (global barrier excluded —
+    /// see `global_skew_us`).
+    pub groups: Vec<GroupSkew>,
+    /// Total barrier wait summed across all workers, microseconds.
+    pub barrier_wait_us: f64,
+    /// Max−min summed global-barrier wait across the pool's workers.
+    pub global_skew_us: f64,
+    /// The headline straggler gauge: the largest per-group skew, or
+    /// the global skew when the window had no group barriers.
+    pub skew_us: f64,
+}
+
+impl PassRollup {
+    /// JSON shape shared by the metrics snapshot and the bench reports.
+    pub fn to_json(&self) -> Json {
+        let kernels = self
+            .kernels
+            .iter()
+            .map(|k| {
+                obj(vec![
+                    ("name", k.name.into()),
+                    ("spans", k.spans.into()),
+                    ("total_us", k.total_us.into()),
+                    ("share", k.share.into()),
+                ])
+            })
+            .collect();
+        let groups = self
+            .groups
+            .iter()
+            .map(|g| {
+                obj(vec![
+                    ("group", (g.group as usize).into()),
+                    ("workers", g.workers.into()),
+                    ("min_wait_us", g.min_wait_us.into()),
+                    ("max_wait_us", g.max_wait_us.into()),
+                    ("skew_us", g.skew_us.into()),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("kernel_spans", self.kernel_spans.into()),
+            ("barrier_spans", self.barrier_spans.into()),
+            ("barrier_wait_us", self.barrier_wait_us.into()),
+            ("barrier_skew_us", self.skew_us.into()),
+            ("global_skew_us", self.global_skew_us.into()),
+            ("kernels", Json::Arr(kernels)),
+            ("groups", Json::Arr(groups)),
+        ])
+    }
+}
+
+fn fold(spans: &[CollectedSpan]) -> PassRollup {
+    let mut kernels: BTreeMap<&'static str, (usize, u64)> = BTreeMap::new();
+    let mut waits: BTreeMap<(u32, u32), u64> = BTreeMap::new();
+    let mut kernel_spans = 0;
+    let mut barrier_spans = 0;
+    for c in spans {
+        match c.span.kind {
+            SpanKind::Kernel => {
+                kernel_spans += 1;
+                let e = kernels.entry(c.span.name).or_insert((0, 0));
+                e.0 += 1;
+                e.1 += c.span.dur_ns;
+            }
+            SpanKind::Barrier => {
+                barrier_spans += 1;
+                *waits.entry((c.span.group, c.rank)).or_insert(0) += c.span.dur_ns;
+            }
+            SpanKind::Pass => {}
+        }
+    }
+    let kernel_total: u64 = kernels.values().map(|&(_, ns)| ns).sum();
+    let mut kernel_rows: Vec<KernelStat> = kernels
+        .into_iter()
+        .map(|(name, (spans, ns))| KernelStat {
+            name,
+            spans,
+            total_us: ns as f64 / 1e3,
+            share: if kernel_total > 0 { ns as f64 / kernel_total as f64 } else { 0.0 },
+        })
+        .collect();
+    kernel_rows.sort_by(|a, b| b.total_us.total_cmp(&a.total_us));
+    // per-scope worker wait sums → skew
+    let mut scopes: BTreeMap<u32, Vec<u64>> = BTreeMap::new();
+    for (&(group, _rank), &ns) in &waits {
+        scopes.entry(group).or_default().push(ns);
+    }
+    let barrier_wait_us = waits.values().map(|&ns| ns as f64).sum::<f64>() / 1e3;
+    let mut groups = Vec::new();
+    let mut global_skew_us = 0.0;
+    for (group, per_worker) in scopes {
+        let min = per_worker.iter().copied().min().unwrap_or(0) as f64 / 1e3;
+        let max = per_worker.iter().copied().max().unwrap_or(0) as f64 / 1e3;
+        let skew = GroupSkew {
+            group,
+            workers: per_worker.len(),
+            min_wait_us: min,
+            max_wait_us: max,
+            skew_us: max - min,
+        };
+        if group == u32::MAX {
+            global_skew_us = skew.skew_us;
+        } else {
+            groups.push(skew);
+        }
+    }
+    let group_skew = groups.iter().map(|g| g.skew_us).fold(0.0f64, f64::max);
+    let skew_us = if groups.is_empty() { global_skew_us } else { group_skew };
+    PassRollup {
+        kernel_spans,
+        barrier_spans,
+        kernels: kernel_rows,
+        groups,
+        barrier_wait_us,
+        global_skew_us,
+        skew_us,
+    }
+}
+
+/// Fold everything in the collected buffer (whole-run view for the
+/// bench reports; per-pass rollups come from [`finish_pass`]).
+pub fn global_rollup() -> PassRollup {
+    fold(&COLLECTED.lock().unwrap())
+}
+
+/// One Chrome `trace_event` in the shared span schema: a complete
+/// (`"ph": "X"`) event with microsecond `ts`/`dur`, `pid` = NUMA node,
+/// `tid` = worker (or virtual lane). The simulator's virtual-time
+/// trace emits through the same constructor, so sim and host traces
+/// carry identical keys and diff cleanly.
+pub fn chrome_event(
+    name: &str,
+    ts_us: f64,
+    dur_us: f64,
+    pid: usize,
+    tid: usize,
+    args: Vec<(&str, Json)>,
+) -> Json {
+    obj(vec![
+        ("name", name.into()),
+        ("ph", "X".into()),
+        ("ts", ts_us.into()),
+        ("dur", dur_us.into()),
+        ("pid", pid.into()),
+        ("tid", tid.into()),
+        ("args", obj(args)),
+    ])
+}
+
+/// Wrap events in the Chrome trace-file envelope.
+pub fn chrome_doc(events: Vec<Json>) -> Json {
+    obj(vec![("traceEvents", Json::Arr(events)), ("displayTimeUnit", "ms".into())])
+}
+
+fn kind_str(kind: SpanKind) -> &'static str {
+    match kind {
+        SpanKind::Pass => "pass",
+        SpanKind::Kernel => "kernel",
+        SpanKind::Barrier => "barrier",
+    }
+}
+
+/// Serialize every collected span as Chrome `trace_event` JSON
+/// (pid = NUMA node, tid = worker rank; the pass leader renders as tid
+/// 1000000). Extra top-level keys (`collected_spans`, `dropped_spans`)
+/// ride along — Perfetto ignores unknown keys.
+pub fn chrome_json() -> String {
+    let collected = COLLECTED.lock().unwrap();
+    let mut events = Vec::with_capacity(collected.len());
+    for c in collected.iter() {
+        let s = &c.span;
+        let tid = if c.rank == LEADER_RANK { 1_000_000 } else { c.rank as usize };
+        let mut args: Vec<(&str, Json)> = vec![("kind", kind_str(s.kind).into())];
+        if s.group != u32::MAX {
+            args.push(("group", (s.group as usize).into()));
+        }
+        if s.kind == SpanKind::Kernel && s.entry != u32::MAX {
+            args.push(("entry", (s.entry as usize).into()));
+            args.push(("u0", (s.u0 as usize).into()));
+            args.push(("u1", (s.u1 as usize).into()));
+        }
+        events.push(chrome_event(
+            s.name,
+            s.start_ns as f64 / 1e3,
+            s.dur_ns as f64 / 1e3,
+            c.node as usize,
+            tid,
+            args,
+        ));
+    }
+    let mut doc = chrome_doc(events);
+    if let Json::Obj(m) = &mut doc {
+        m.insert("collected_spans".into(), collected.len().into());
+        m.insert("dropped_spans".into(), (DROPPED.load(Ordering::Relaxed) as usize).into());
+    }
+    doc.to_string()
+}
+
+/// Write [`chrome_json`] to `path` (parent directories created).
+pub fn export_chrome(path: &Path) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+    }
+    std::fs::write(path, chrome_json())?;
+    Ok(())
+}
+
+/// Serializes tests that flip the process-global [`set_enabled`] flag
+/// (the tracer is process-wide state; concurrent toggles would make
+/// span-count assertions racy).
+#[cfg(test)]
+pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(entry: u32, dur_ns: u64) -> Span {
+        Span {
+            kind: SpanKind::Kernel,
+            name: "k",
+            start_ns: 0,
+            dur_ns,
+            group: u32::MAX,
+            entry,
+            u0: 0,
+            u1: 1,
+        }
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_the_newest_spans() {
+        let r = Ring::new(8);
+        for i in 0..20u32 {
+            r.push(span(i, i as u64));
+        }
+        let mut out = Vec::new();
+        let lost = r.drain(&mut out);
+        assert_eq!(lost, 12, "20 pushed into capacity 8 → 12 overwritten");
+        let entries: Vec<u32> = out.iter().map(|s| s.entry).collect();
+        assert_eq!(entries, (12..20).collect::<Vec<u32>>(), "newest spans, oldest first");
+        // nothing new since the drain
+        let mut out2 = Vec::new();
+        assert_eq!(r.drain(&mut out2), 0);
+        assert!(out2.is_empty());
+        // fresh pushes drain incrementally
+        r.push(span(99, 1));
+        let mut out3 = Vec::new();
+        assert_eq!(r.drain(&mut out3), 0);
+        assert_eq!(out3.len(), 1);
+        assert_eq!(out3[0].entry, 99);
+    }
+
+    #[test]
+    fn fold_computes_shares_and_group_skew() {
+        let mk = |rank: u32, kind: SpanKind, name: &'static str, group: u32, dur_ns: u64| {
+            CollectedSpan {
+                rank,
+                node: 0,
+                span: Span { kind, name, start_ns: 0, dur_ns, group, entry: 0, u0: 0, u1: 0 },
+            }
+        };
+        let spans = vec![
+            mk(0, SpanKind::Kernel, "matmul", 0, 3_000),
+            mk(1, SpanKind::Kernel, "matmul", 0, 3_000),
+            mk(0, SpanKind::Kernel, "rmsnorm", 0, 2_000),
+            mk(1, SpanKind::Kernel, "rmsnorm", 0, 2_000),
+            // group 0: worker 0 waits 5 µs, worker 1 waits 1 µs → skew 4
+            mk(0, SpanKind::Barrier, "barrier.group", 0, 5_000),
+            mk(1, SpanKind::Barrier, "barrier.group", 0, 1_000),
+            // global barrier: both wait 2 µs → skew 0
+            mk(0, SpanKind::Barrier, "barrier.global", u32::MAX, 2_000),
+            mk(1, SpanKind::Barrier, "barrier.global", u32::MAX, 2_000),
+        ];
+        let r = fold(&spans);
+        assert_eq!(r.kernel_spans, 4);
+        assert_eq!(r.barrier_spans, 4);
+        assert_eq!(r.kernels[0].name, "matmul", "largest share first");
+        assert!((r.kernels[0].share - 0.6).abs() < 1e-9);
+        assert!((r.kernels[1].share - 0.4).abs() < 1e-9);
+        assert_eq!(r.groups.len(), 1);
+        assert!((r.groups[0].skew_us - 4.0).abs() < 1e-9);
+        assert_eq!(r.groups[0].workers, 2);
+        assert!((r.global_skew_us - 0.0).abs() < 1e-9);
+        assert!((r.skew_us - 4.0).abs() < 1e-9, "headline gauge is the worst group");
+        assert!((r.barrier_wait_us - 10.0).abs() < 1e-9);
+        // the JSON shape the metrics snapshot embeds
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("kernel_spans").unwrap().as_usize(), Some(4));
+        assert!(j.get("barrier_skew_us").unwrap().as_f64().unwrap() > 3.9);
+        assert_eq!(j.get("kernels").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn fold_without_groups_falls_back_to_global_skew() {
+        let spans = vec![
+            CollectedSpan {
+                rank: 0,
+                node: 0,
+                span: Span {
+                    kind: SpanKind::Barrier,
+                    name: "barrier.global",
+                    start_ns: 0,
+                    dur_ns: 7_000,
+                    group: u32::MAX,
+                    entry: u32::MAX,
+                    u0: 0,
+                    u1: 0,
+                },
+            },
+            CollectedSpan {
+                rank: 1,
+                node: 0,
+                span: Span {
+                    kind: SpanKind::Barrier,
+                    name: "barrier.global",
+                    start_ns: 0,
+                    dur_ns: 1_000,
+                    group: u32::MAX,
+                    entry: u32::MAX,
+                    u0: 0,
+                    u1: 0,
+                },
+            },
+        ];
+        let r = fold(&spans);
+        assert!(r.groups.is_empty());
+        assert!((r.global_skew_us - 6.0).abs() < 1e-9);
+        assert!((r.skew_us - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chrome_event_schema_has_the_required_keys() {
+        let ev = chrome_event("matmul", 12.5, 3.25, 1, 4, vec![("entry", 7usize.into())]);
+        let j = Json::parse(&ev.to_string()).unwrap();
+        assert_eq!(j.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(j.get("ts").unwrap().as_f64(), Some(12.5));
+        assert_eq!(j.get("dur").unwrap().as_f64(), Some(3.25));
+        assert_eq!(j.get("pid").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("tid").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("args").unwrap().get("entry").unwrap().as_usize(), Some(7));
+        let doc = chrome_doc(vec![ev]);
+        let d = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(d.get("traceEvents").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn drift_verdict_needs_both_sides_samples_and_band_exit() {
+        assert_eq!(drift_verdict(None, Some(100.0), 20), (None, false));
+        assert_eq!(drift_verdict(Some(110.0), None, 20), (None, false));
+        let (r, retune) = drift_verdict(Some(110.0), Some(100.0), 20);
+        assert!((r.unwrap() - 1.1).abs() < 1e-9);
+        assert!(!retune, "inside the band");
+        let (_, retune) = drift_verdict(Some(250.0), Some(100.0), DRIFT_MIN_SAMPLES - 1);
+        assert!(!retune, "a cold EWMA never recommends");
+        let (r, retune) = drift_verdict(Some(250.0), Some(100.0), DRIFT_MIN_SAMPLES);
+        assert!(retune && r.unwrap() > 2.0, "synthetic slowdown flips the flag");
+        let (_, retune) = drift_verdict(Some(50.0), Some(100.0), 20);
+        assert!(retune, "much faster than predicted is drift too");
+        let mut e = None;
+        for _ in 0..50 {
+            e = Some(ewma_fold(e, 250.0));
+        }
+        assert!((e.unwrap() - 250.0).abs() < 1.0, "EWMA converges to the plateau");
+    }
+
+    #[test]
+    fn disabled_by_default_and_toggles() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(!enabled(), "tracing must be off by default");
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+    }
+}
